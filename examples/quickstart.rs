@@ -1,0 +1,58 @@
+//! Quickstart: the paper's primary experiment in ~30 lines.
+//!
+//! Runs the full CAD flow on the 16x16 systolic array (Artix-7 class,
+//! 100 MHz): synthesis timing -> slack clustering -> quadrant floorplan
+//! -> Algorithm-1 static rails -> Razor-calibrated rails -> the Table II
+//! power comparison. If `artifacts/` exists (run `make artifacts`), it
+//! also pushes one batch of synthetic requests through the AOT-compiled
+//! JAX/Pallas model on the PJRT CPU client to show the serving path.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use vstpu::cadflow::{FlowConfig, VivadoFlow};
+use vstpu::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+use vstpu::report;
+use vstpu::tech::Technology;
+use vstpu::workload::{Batch, FluctuationProfile};
+
+fn main() -> Result<(), vstpu::Error> {
+    // --- The CAD flow (no artifacts needed; pure simulation). ---------
+    let cfg = FlowConfig::paper_default(16, Technology::artix7_28nm());
+    let rep = VivadoFlow::new(cfg).run()?;
+    print!("{}", report::flow_summary(&rep));
+    println!(
+        "\npaper Table II says: 408 mW -> 382 mW (6.37% reduction); \
+         we measured {:.0} mW -> {:.0} mW ({:.2}%)\n",
+        rep.power.baseline_total_mw, rep.power.scaled_total_mw, rep.power.reduction_pct
+    );
+
+    // --- The serving path (needs `make artifacts`). --------------------
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("manifest.tsv").exists() {
+        println!("artifacts/ not built; skipping the PJRT demo (run `make artifacts`)");
+        return Ok(());
+    }
+    let mut coord = Coordinator::open(
+        artifacts,
+        CoordinatorConfig::paper_default(Technology::artix7_28nm()),
+    )?;
+    let data = Batch::synthetic(32, 784, FluctuationProfile::Medium, 42);
+    let reqs: Vec<InferenceRequest> = (0..32)
+        .map(|i| InferenceRequest {
+            id: i as u64,
+            input: data.sample(i).to_vec(),
+        })
+        .collect();
+    let responses = coord.infer_batch(&reqs)?;
+    let snap = coord.snapshot();
+    println!(
+        "served one batch of {} through PJRT: logits[0][0..4] = {:?}, \
+         corrupted={}, power {:.1} mW at rails {:?}",
+        responses.len(),
+        &responses[0].logits[..4],
+        responses[0].corrupted,
+        snap.power_mw,
+        snap.rails.iter().map(|v| format!("{v:.3}")).collect::<Vec<_>>()
+    );
+    Ok(())
+}

@@ -1,0 +1,139 @@
+"""AOT pipeline: lower the L2/L1 jax functions to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via `make artifacts`; the rust binary then loads
+`artifacts/<name>.hlo.txt` through PJRT and python never appears on the
+request path again.
+
+Every artifact is lowered with return_tuple=True, so the rust side
+unwraps with `to_tuple()` / `to_tuple1()`.
+
+A manifest (artifacts/manifest.json) records each artifact's signature so
+the rust runtime can validate shapes at load time instead of crashing
+inside PJRT.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .kernels import activity, systolic
+
+BATCH = model_lib.DEFAULT_BATCH
+# The paper evaluates three systolic-array sizes.
+ARRAY_SIZES = (16, 32, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(args, outs):
+    def one(s):
+        return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+    return {"inputs": [one(a) for a in args], "outputs": [one(o) for o in outs]}
+
+
+def build_artifacts() -> dict[str, dict]:
+    """Return {name: {fn, example_args}} for every artifact we ship."""
+    arts: dict[str, dict] = {}
+
+    # 1. Raw systolic matmul at each array size: the microbenchmark + the
+    #    building block the coordinator uses for single-layer requests.
+    #    x (BATCH, S) @ w (S, S), four (S/2 x S/2) partitions.
+    for s in ARRAY_SIZES:
+        def mm(x, w, s=s):
+            return (systolic.systolic_matmul_for_array(x, w, s),)
+
+        arts[f"systolic_{s}"] = {
+            "fn": mm,
+            "args": (_spec((BATCH, s), jnp.int8), _spec((s, s), jnp.int8)),
+        }
+
+    # 2. Activity measurement over an activation stream (BATCH, S).
+    for s in ARRAY_SIZES:
+        def tog(x, s=s):
+            return (activity.stream_toggle_rates(x),)
+
+        arts[f"activity_{s}"] = {
+            "fn": tog,
+            "args": (_spec((BATCH, s), jnp.int8),),
+        }
+
+    # 3. Full MLP forward: logits + per-layer toggle telemetry. This is the
+    #    artifact on the serving hot path.
+    def fwd(x):
+        return model_lib.mlp_forward_flat(x, array_size=16)
+
+    arts["model_fwd"] = {
+        "fn": fwd,
+        "args": (_spec((BATCH, model_lib.DEFAULT_LAYERS[0]), jnp.int8),),
+    }
+
+    return arts
+
+
+def lower_all(out_dir: pathlib.Path, only: str | None = None) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {}
+    for name, art in build_artifacts().items():
+        if only and name != only:
+            continue
+        lowered = jax.jit(art["fn"]).lower(*art["args"])
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        outs = jax.eval_shape(art["fn"], *art["args"])
+        manifest[name] = _sig(art["args"], list(outs))
+        print(f"wrote {path} ({len(text)} chars)")
+    man_path = out_dir / "manifest.json"
+    existing = json.loads(man_path.read_text()) if man_path.exists() else {}
+    existing.update(manifest)
+    man_path.write_text(json.dumps(existing, indent=2, sort_keys=True))
+    print(f"wrote {man_path}")
+    # TSV twin of the manifest for the rust runtime (vendored-only build:
+    # no JSON parser on the rust side). One line per tensor:
+    #   <artifact> TAB in|out TAB <index> TAB <dtype> TAB d0xd1x...
+    tsv_lines = []
+    for name in sorted(existing):
+        sig = existing[name]
+        for kind, key in (("in", "inputs"), ("out", "outputs")):
+            for i, t in enumerate(sig[key]):
+                dims = "x".join(str(d) for d in t["shape"])
+                tsv_lines.append(f"{name}\t{kind}\t{i}\t{t['dtype']}\t{dims}")
+    tsv_path = out_dir / "manifest.tsv"
+    tsv_path.write_text("\n".join(tsv_lines) + "\n")
+    print(f"wrote {tsv_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    args = ap.parse_args()
+    lower_all(pathlib.Path(args.out_dir), args.only)
+
+
+if __name__ == "__main__":
+    main()

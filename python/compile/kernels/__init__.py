@@ -1,0 +1,8 @@
+"""Pallas kernels (L1) for the voltage-scaled systolic TPU.
+
+`systolic` — weight-stationary int8 matmul, partition-tiled.
+`activity` — switching-activity (bit-toggle) measurement.
+`ref`      — pure-jnp oracles for both.
+"""
+
+from . import activity, ref, systolic  # noqa: F401

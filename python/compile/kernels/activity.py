@@ -1,0 +1,114 @@
+"""L1: switching-activity kernel.
+
+Dynamic power on the FPGA is P = alpha * C * V^2 * f where alpha is the
+toggle rate of each node, and the paper's runtime scheme is driven by the
+observation (after GreenTPU [4]) that *higher fluctuation of input bits
+increases the possibility of timing failure* at near-threshold voltage.
+Neither toggle rates nor bit fluctuation are observable from HLO, so we
+compute them explicitly: this kernel XOR-popcounts consecutive activation
+vectors in the stream entering the systolic array, producing the per-input
+-column toggle count that L3 feeds into the power model and the Razor
+error-probability model.
+
+The kernel is fed the stream twice, shifted by one cycle (prev = x[:-1],
+curr = x[1:]), prepared by L2 — this keeps the kernel a pure elementwise
+XOR + popcount + reduction with no cross-block carries.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _activity_kernel(prev_ref, curr_ref, o_ref):
+    """One (t, k) grid step: o[k] += popcount(prev[t, k] ^ curr[t, k])."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    flips = jax.lax.population_count(
+        jnp.bitwise_xor(
+            prev_ref[...].astype(jnp.uint8), curr_ref[...].astype(jnp.uint8)
+        )
+    )
+    o_ref[...] += jnp.sum(flips.astype(jnp.int32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "tile_k"))
+def toggle_counts(
+    prev: jax.Array, curr: jax.Array, *, tile_t: int = 8, tile_k: int = 8
+) -> jax.Array:
+    """Per-column bit-toggle counts between consecutive stream rows.
+
+    prev, curr: (T, K) int8 — the activation stream shifted by one cycle.
+    Returns (K,) int32 total bit flips per input column over the window.
+    """
+    if prev.shape != curr.shape:
+        raise ValueError(f"shape mismatch {prev.shape} vs {curr.shape}")
+    t, k = prev.shape
+    if t % tile_t != 0 or k % tile_k != 0:
+        raise ValueError(f"(T={t}, K={k}) not multiples of ({tile_t}, {tile_k})")
+
+    grid = (t // tile_t, k // tile_k)
+    return pl.pallas_call(
+        _activity_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, tile_k), lambda ti, ki: (ti, ki)),
+            pl.BlockSpec((tile_t, tile_k), lambda ti, ki: (ti, ki)),
+        ],
+        out_specs=pl.BlockSpec((tile_k,), lambda ti, ki: (ki,)),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.int32),
+        interpret=True,
+    )(prev, curr)
+
+
+def stream_toggle_rates(
+    x: jax.Array, *, tile_t: int | None = None, tile_k: int | None = None
+) -> jax.Array:
+    """Normalised toggle rate in [0, 1] per input column of stream x (T, K).
+
+    Rate = flips / (transitions * bits-per-lane). The first row has no
+    predecessor; T-1 transitions are counted.
+
+    Tile defaults (EXPERIMENTS.md §Perf L1): the whole (padded) time axis
+    in one step and the widest K tile that divides the lane count —
+    serving streams are short (one batch), so one grid step per 16-lane
+    group minimises interpret-mode loop overhead. Pass explicit tiles to
+    exercise the multi-step accumulation path (the tests do).
+    """
+    t = x.shape[0]
+    if t < 2:
+        return jnp.zeros((x.shape[1],), jnp.float32)
+    prev, curr = x[:-1], x[1:]
+    trans = t - 1
+    if tile_t is None:
+        tile_t = min(-(-trans // 8) * 8, 64)  # padded-T single step, capped
+    if tile_k is None:
+        tile_k = 16 if x.shape[1] % 16 == 0 else 8
+    # Pad the transition axis up to a tile multiple with zero-flip rows
+    # (pad both with the same row => XOR is zero, contributing nothing).
+    pad = (-trans) % tile_t
+    if pad:
+        fill = jnp.repeat(curr[-1:], pad, axis=0)
+        prev = jnp.concatenate([prev, fill], axis=0)
+        curr = jnp.concatenate([curr, fill], axis=0)
+    counts = toggle_counts(prev, curr, tile_t=tile_t, tile_k=tile_k)
+    return counts.astype(jnp.float32) / jnp.float32(trans * 8)
+
+
+def mac_activity_map(toggle_rate: jax.Array, w: jax.Array) -> jax.Array:
+    """Per-MAC activity estimate for a weight-stationary array.
+
+    MAC (k, n) multiplies the streaming activation lane k by resident
+    weight w[k, n]; its switching activity scales with the lane's toggle
+    rate and the weight's bit density (a zero weight gates most toggling).
+    Returns (K, N) float32 in [0, 1].
+    """
+    wbits = jax.lax.population_count(w.astype(jnp.uint8)).astype(jnp.float32) / 8.0
+    return toggle_rate[:, None] * (0.25 + 0.75 * wbits)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its reference here; pytest asserts
+bit-exactness (integer kernels) or allclose (float paths). The oracles are
+deliberately written with none of the kernels' tiling machinery so that a
+tiling bug cannot cancel out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """int8 (M, K) @ int8 (K, N) -> int32 (M, N)."""
+    return jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def toggle_counts_ref(prev: jax.Array, curr: jax.Array) -> jax.Array:
+    """Per-column popcount of prev ^ curr summed over rows -> (K,) int32."""
+    flips = jax.lax.population_count(
+        jnp.bitwise_xor(prev.astype(jnp.uint8), curr.astype(jnp.uint8))
+    )
+    return jnp.sum(flips.astype(jnp.int32), axis=0)
+
+
+def stream_toggle_rates_ref(x: jax.Array) -> jax.Array:
+    """Normalised per-column toggle rate of stream x (T, K) in [0, 1]."""
+    t = x.shape[0]
+    if t < 2:
+        return jnp.zeros((x.shape[1],), jnp.float32)
+    counts = toggle_counts_ref(x[:-1], x[1:])
+    return counts.astype(jnp.float32) / jnp.float32((t - 1) * 8)
+
+
+def quantize_ref(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric int8 quantisation oracle: round(x / scale) clipped."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)

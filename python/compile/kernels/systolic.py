@@ -1,0 +1,130 @@
+"""L1: weight-stationary systolic-array matmul as a Pallas kernel.
+
+The paper's TPU systolic array is a K x N grid of int8 MACs: weights stay
+resident in the array (weight-stationary), activations stream in from the
+left, partial sums accumulate downward. On the FPGA the array is split
+into rectangular *partitions* (e.g. a 16x16 array into four 8x8 islands,
+Fig 8 of the paper), each fed by its own Vccint rail.
+
+Hardware adaptation (DESIGN.md section Hardware-Adaptation): the partition
+geometry becomes the Pallas *grid + BlockSpec tiling*. One grid step
+processes one (m-tile, n-partition, k-partition) block:
+
+  - the weight block w[kp, np] is the stationary tile (VMEM-resident, the
+    analog of the weight registers inside one FPGA partition),
+  - the activation block x[m, kp] streams across it,
+  - partial sums accumulate over the k grid dimension, mirroring the
+    downward partial-sum flow that makes bottom-row MAC paths slower
+    (the very effect the paper's clustering exploits).
+
+int8 x int8 -> int32 accumulation matches both the TPU MXU idiom
+(`preferred_element_type`) and the paper's DSP48-based MACs.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (m, n, k) grid step: o[m, n] += x[m, k] @ w[k, n].
+
+    k is the innermost (minormost) grid dimension, so for a fixed output
+    tile the accumulator initialises at k == 0 and accumulates across the
+    k-partitions — the Pallas rendering of partial sums flowing down the
+    systolic columns.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_blk = x_ref[...]
+    w_blk = w_ref[...]
+    o_ref[...] += jax.lax.dot_general(
+        x_blk,
+        w_blk,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_m", "tile_n", "tile_k")
+)
+def systolic_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    tile_m: int = 8,
+    tile_n: int = 8,
+    tile_k: int = 8,
+) -> jax.Array:
+    """int8 (M, K) @ int8 (K, N) -> int32 (M, N), partition-tiled.
+
+    (tile_n, tile_k) is the FPGA partition shape: a 16x16 array split into
+    8x8 partitions is tile_n = tile_k = 8. M is the batch/time dimension of
+    the activation stream; tile_m controls how many activation rows share
+    one pass over the stationary weight tile.
+
+    Shapes must be multiples of the tile sizes — callers (model.py) pad.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x {x.shape} vs w {w.shape}")
+    for dim, tile, name in ((m, tile_m, "M"), (n, tile_n, "N"), (k, tile_k, "K")):
+        if dim % tile != 0:
+            raise ValueError(f"{name}={dim} not a multiple of its tile {tile}")
+
+    grid = (m // tile_m, n // tile_n, k // tile_k)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x, w)
+
+
+def systolic_matmul_for_array(x: jax.Array, w: jax.Array, array_size: int) -> jax.Array:
+    """Matmul through a `array_size x array_size` systolic array split into
+    the paper's four equal partitions (each (array_size/2)^2 MACs).
+
+    Operands whose K/N are not multiples of the partition edge are
+    zero-padded — the hardware analog of idle MAC columns/rows at the
+    matrix boundary. Zero padding cannot change the int32 result.
+    """
+    half = max(array_size // 2, 1)
+    # Perf (EXPERIMENTS.md §Perf L1): the m (batch/stream) dimension is
+    # *not* part of the partition geometry — only (tile_k, tile_n) map to
+    # the FPGA islands — so one grid step covers the whole batch. This
+    # quarters the interpret-mode grid-loop count at batch 32 vs the
+    # original tile_m = 8, with bit-identical results (tiling-
+    # independence is a pytest property). Capped at 128 rows to bound the
+    # per-step VMEM block (128 x 64 int8 = 8 KiB on a real TPU).
+    tile_m = min(x.shape[0], 128)
+    while x.shape[0] % tile_m:
+        tile_m -= 1
+    m, k = x.shape
+    _, n = w.shape
+    pad_k = (-k) % half
+    pad_n = (-n) % half
+    if pad_k:
+        x = jnp.pad(x, ((0, 0), (0, pad_k)))
+        w = jnp.pad(w, ((0, pad_k), (0, 0)))
+    if pad_n:
+        w = jnp.pad(w, ((0, 0), (0, pad_n)))
+    out = systolic_matmul(x, w, tile_m=tile_m, tile_n=half, tile_k=half)
+    return out[:, :n] if pad_n else out

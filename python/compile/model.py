@@ -1,0 +1,116 @@
+"""L2: int8-quantised MLP executed through the systolic-array kernel.
+
+This is the DNN workload the paper's TPU accelerates: every dense layer
+is an int8 x int8 -> int32 matmul performed by the L1 Pallas systolic
+kernel, followed by requantisation — the fixed-point pipeline of a TPU
+class accelerator. Alongside the logits, the forward pass measures the
+per-layer input-stream toggle rates with the L1 activity kernel; these
+are the telemetry the rust coordinator feeds into the power model and
+the Razor error-probability model (high input fluctuation => more NTC
+timing failures, after GreenTPU [4]).
+
+Everything here runs at build time only: `aot.py` lowers the jitted
+functions to HLO text once, and the rust runtime executes the artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import activity, systolic
+
+# Layer widths of the reference workload: an MNIST-class MLP. All widths
+# are multiples of 8 so they tile exactly onto the 8x8 FPGA partitions.
+DEFAULT_LAYERS: tuple[int, ...] = (784, 128, 64, 16)
+DEFAULT_BATCH = 32
+WEIGHT_SEED = 2021  # paper year; fixed so artifacts are reproducible
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedMLP:
+    """Weights of an int8-quantised MLP.
+
+    weights[i]: (K_i, N_i) int8, scales[i]: f32 per-layer output scale.
+    The last layer produces logits left in f32 (descaled, no relu).
+    """
+
+    weights: tuple[jax.Array, ...]
+    scales: tuple[float, ...]
+
+    @property
+    def layer_widths(self) -> tuple[int, ...]:
+        return (self.weights[0].shape[0],) + tuple(w.shape[1] for w in self.weights)
+
+
+def make_model(
+    layers: Sequence[int] = DEFAULT_LAYERS, seed: int = WEIGHT_SEED
+) -> QuantizedMLP:
+    """Deterministic random int8 weights (stand-in for a trained model).
+
+    Weights are drawn from a clipped normal matching a trained layer's
+    weight distribution closely enough to exercise realistic bit
+    densities in the MACs.
+    """
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(layers) - 1)
+    weights = []
+    scales = []
+    for key, k_in, n_out in zip(keys, layers[:-1], layers[1:]):
+        w = jax.random.normal(key, (k_in, n_out), jnp.float32) * 24.0
+        weights.append(jnp.clip(jnp.round(w), -127, 127).astype(jnp.int8))
+        # Output scale chosen so int32 accumulators requantise into int8
+        # without saturating for unit-scale inputs.
+        scales.append(1.0 / (8.0 * float(k_in) ** 0.5 * 24.0))
+    return QuantizedMLP(tuple(weights), tuple(scales))
+
+
+def requantize(acc: jax.Array, scale: float) -> jax.Array:
+    """int32 accumulator -> int8 activation with relu folded in."""
+    y = jnp.maximum(acc, 0).astype(jnp.float32) * jnp.float32(scale)
+    return jnp.clip(jnp.round(y), 0, 127).astype(jnp.int8)
+
+
+def mlp_forward(
+    model: QuantizedMLP, x: jax.Array, *, array_size: int = 16
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Forward pass through the systolic array.
+
+    x: (B, K0) int8. Returns (logits f32 (B, N_last), per-layer toggle
+    rates) where toggle_rates[i] has shape (K_i,) — the switching
+    activity of the activation stream entering layer i's MAC rows.
+    """
+    toggles = []
+    act = x
+    n_layers = len(model.weights)
+    for i, (w, scale) in enumerate(zip(model.weights, model.scales)):
+        toggles.append(activity.stream_toggle_rates(act))
+        acc = systolic.systolic_matmul_for_array(act, w, array_size)
+        if i + 1 < n_layers:
+            act = requantize(acc, scale)
+        else:
+            logits = acc.astype(jnp.float32) * jnp.float32(scale)
+    return logits, tuple(toggles)
+
+
+def mlp_forward_flat(x: jax.Array, *, array_size: int = 16):
+    """Closure over the default model, returning a flat tuple — the form
+    `aot.py` lowers (PJRT artifacts want a fixed flat signature)."""
+    model = make_model()
+    logits, toggles = mlp_forward(model, x, array_size=array_size)
+    return (logits, *toggles)
+
+
+def float_reference(model: QuantizedMLP, x: jax.Array) -> jax.Array:
+    """De-quantised float forward pass — the accuracy oracle used by the
+    tests to bound quantisation error of the systolic pipeline."""
+    act = x.astype(jnp.float32)
+    n_layers = len(model.weights)
+    for i, (w, scale) in enumerate(zip(model.weights, model.scales)):
+        acc = act @ w.astype(jnp.float32)
+        if i + 1 < n_layers:
+            act = jnp.clip(jnp.round(jnp.maximum(acc, 0) * scale), 0, 127)
+        else:
+            return acc * scale

@@ -1,0 +1,70 @@
+"""AOT pipeline tests: lowering produces PJRT-loadable HLO text.
+
+The critical invariants: (a) pallas lowers via interpret=True so the HLO
+contains no Mosaic custom-call (the CPU PJRT plugin cannot run those),
+(b) the text parses as an HLO module with an ENTRY, (c) the manifest
+matches the lowered signatures.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def lowered_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.lower_all(out)
+    return out
+
+
+def test_all_artifacts_emitted(lowered_dir):
+    names = {p.stem.replace(".hlo", "") for p in lowered_dir.glob("*.hlo.txt")}
+    expected = {f"systolic_{s}" for s in aot.ARRAY_SIZES}
+    expected |= {f"activity_{s}" for s in aot.ARRAY_SIZES}
+    expected |= {"model_fwd"}
+    assert names == expected
+
+
+def test_hlo_text_is_parseable_module(lowered_dir):
+    for path in lowered_dir.glob("*.hlo.txt"):
+        text = path.read_text()
+        assert text.startswith("HloModule"), path.name
+        assert "ENTRY" in text, path.name
+
+
+def test_no_mosaic_custom_calls(lowered_dir):
+    """interpret=True must have erased every pallas custom-call."""
+    for path in lowered_dir.glob("*.hlo.txt"):
+        text = path.read_text()
+        assert "tpu_custom_call" not in text, path.name
+        assert "mosaic" not in text.lower(), path.name
+
+
+def test_manifest_signatures(lowered_dir):
+    manifest = json.loads((lowered_dir / "manifest.json").read_text())
+    mm = manifest["systolic_16"]
+    assert mm["inputs"] == [
+        {"shape": [aot.BATCH, 16], "dtype": "int8"},
+        {"shape": [16, 16], "dtype": "int8"},
+    ]
+    assert mm["outputs"] == [{"shape": [aot.BATCH, 16], "dtype": "int32"}]
+    fwd = manifest["model_fwd"]
+    assert fwd["inputs"] == [{"shape": [aot.BATCH, 784], "dtype": "int8"}]
+    # logits + one toggle vector per hidden layer input
+    assert fwd["outputs"][0] == {"shape": [aot.BATCH, 16], "dtype": "float32"}
+    assert [o["shape"] for o in fwd["outputs"][1:]] == [[784], [128], [64]]
+
+
+def test_matmul_artifact_contains_dot(lowered_dir):
+    text = (lowered_dir / "systolic_16.hlo.txt").read_text()
+    assert "dot(" in text or "dot " in text
+
+
+def test_only_flag_lowers_single(tmp_path):
+    aot.lower_all(tmp_path, only="systolic_16")
+    files = list(tmp_path.glob("*.hlo.txt"))
+    assert [f.name for f in files] == ["systolic_16.hlo.txt"]

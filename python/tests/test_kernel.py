@@ -1,0 +1,177 @@
+"""Kernel vs oracle — the core L1 correctness signal.
+
+The systolic matmul and activity kernels are integer kernels, so the
+contract with ref.py is bit-exactness, not allclose. Hypothesis sweeps
+shapes (tile multiples), tile sizes and operand ranges.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import activity, ref, systolic
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _rand_i8(rng, shape, lo=-128, hi=128):
+    return jnp.asarray(rng.integers(lo, hi, size=shape, dtype=np.int64).astype(np.int8))
+
+
+# ---------------------------------------------------------------- systolic
+
+
+class TestSystolicMatmul:
+    def test_matches_ref_16x16(self):
+        rng = np.random.default_rng(0)
+        x = _rand_i8(rng, (32, 16))
+        w = _rand_i8(rng, (16, 16))
+        got = systolic.systolic_matmul(x, w, tile_m=8, tile_n=8, tile_k=8)
+        np.testing.assert_array_equal(got, ref.matmul_ref(x, w))
+
+    def test_matches_ref_64x64_paper_partitions(self):
+        rng = np.random.default_rng(1)
+        x = _rand_i8(rng, (32, 64))
+        w = _rand_i8(rng, (64, 64))
+        got = systolic.systolic_matmul_for_array(x, w, 64)
+        np.testing.assert_array_equal(got, ref.matmul_ref(x, w))
+
+    def test_extreme_values_no_overflow(self):
+        # 128 * (-128) * K accumulations stay within int32 for K <= 131072.
+        x = jnp.full((8, 64), -128, jnp.int8)
+        w = jnp.full((64, 8), 127, jnp.int8)
+        got = systolic.systolic_matmul(x, w, tile_m=8, tile_n=8, tile_k=8)
+        np.testing.assert_array_equal(got, ref.matmul_ref(x, w))
+        assert int(got[0, 0]) == -128 * 127 * 64
+
+    def test_identity_weights(self):
+        rng = np.random.default_rng(2)
+        x = _rand_i8(rng, (16, 16))
+        w = jnp.eye(16, dtype=jnp.int8)
+        got = systolic.systolic_matmul(x, w, tile_m=8, tile_n=8, tile_k=8)
+        np.testing.assert_array_equal(got, x.astype(jnp.int32))
+
+    def test_rejects_non_tile_multiple(self):
+        x = jnp.zeros((10, 16), jnp.int8)
+        w = jnp.zeros((16, 16), jnp.int8)
+        with pytest.raises(ValueError, match="not a multiple"):
+            systolic.systolic_matmul(x, w, tile_m=8, tile_n=8, tile_k=8)
+
+    def test_rejects_contraction_mismatch(self):
+        with pytest.raises(ValueError, match="contraction mismatch"):
+            systolic.systolic_matmul(
+                jnp.zeros((8, 16), jnp.int8), jnp.zeros((8, 8), jnp.int8)
+            )
+
+    @hypothesis.given(
+        mt=st.integers(1, 4),
+        nt=st.integers(1, 4),
+        kt=st.integers(1, 4),
+        tile=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_shape_sweep(self, mt, nt, kt, tile, seed):
+        """Kernel == oracle for every (grid, tile) combination."""
+        rng = np.random.default_rng(seed)
+        x = _rand_i8(rng, (mt * tile, kt * tile))
+        w = _rand_i8(rng, (kt * tile, nt * tile))
+        got = systolic.systolic_matmul(x, w, tile_m=tile, tile_n=tile, tile_k=tile)
+        np.testing.assert_array_equal(got, ref.matmul_ref(x, w))
+
+    @hypothesis.given(
+        tm=st.sampled_from([2, 4, 8]),
+        tn=st.sampled_from([2, 4, 8]),
+        tk=st.sampled_from([2, 4, 8]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_asymmetric_tiles(self, tm, tn, tk, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand_i8(rng, (16, 16))
+        w = _rand_i8(rng, (16, 16))
+        got = systolic.systolic_matmul(x, w, tile_m=tm, tile_n=tn, tile_k=tk)
+        np.testing.assert_array_equal(got, ref.matmul_ref(x, w))
+
+    def test_tiling_independence(self):
+        """Partition geometry must not change the numerics — the FPGA
+        partitioning only affects voltage, never results."""
+        rng = np.random.default_rng(3)
+        x = _rand_i8(rng, (32, 32))
+        w = _rand_i8(rng, (32, 32))
+        a = systolic.systolic_matmul(x, w, tile_m=8, tile_n=8, tile_k=8)
+        b = systolic.systolic_matmul(x, w, tile_m=16, tile_n=16, tile_k=16)
+        c = systolic.systolic_matmul(x, w, tile_m=4, tile_n=32, tile_k=8)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+
+
+# ---------------------------------------------------------------- activity
+
+
+class TestActivityKernel:
+    def test_toggle_counts_match_ref(self):
+        rng = np.random.default_rng(4)
+        prev = _rand_i8(rng, (16, 16))
+        curr = _rand_i8(rng, (16, 16))
+        got = activity.toggle_counts(prev, curr)
+        np.testing.assert_array_equal(got, ref.toggle_counts_ref(prev, curr))
+
+    def test_constant_stream_has_zero_activity(self):
+        x = jnp.full((32, 16), 77, jnp.int8)
+        rates = activity.stream_toggle_rates(x)
+        np.testing.assert_array_equal(rates, jnp.zeros(16, jnp.float32))
+
+    def test_alternating_stream_has_full_activity(self):
+        # 0x00 <-> 0xFF alternation flips all 8 bits every cycle.
+        row0 = jnp.zeros((16,), jnp.int8)
+        row1 = jnp.full((16,), -1, jnp.int8)  # 0xFF
+        x = jnp.stack([row0, row1] * 16)
+        rates = activity.stream_toggle_rates(x)
+        np.testing.assert_allclose(rates, jnp.ones(16, jnp.float32))
+
+    def test_rates_match_ref_with_padding(self):
+        """T-1 = 31 transitions is not a tile multiple — exercises the
+        zero-flip padding path."""
+        rng = np.random.default_rng(5)
+        x = _rand_i8(rng, (32, 16))
+        got = activity.stream_toggle_rates(x)
+        np.testing.assert_allclose(got, ref.stream_toggle_rates_ref(x), rtol=1e-6)
+
+    def test_single_row_stream(self):
+        x = jnp.zeros((1, 16), jnp.int8)
+        np.testing.assert_array_equal(
+            activity.stream_toggle_rates(x), jnp.zeros(16, jnp.float32)
+        )
+
+    def test_rejects_shape_mismatch(self):
+        with pytest.raises(ValueError, match="shape mismatch"):
+            activity.toggle_counts(
+                jnp.zeros((8, 8), jnp.int8), jnp.zeros((8, 16), jnp.int8)
+            )
+
+    @hypothesis.given(
+        t=st.sampled_from([2, 8, 9, 17, 32, 33]),
+        k=st.sampled_from([8, 16, 64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_rates_in_unit_interval_and_match_ref(self, t, k, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand_i8(rng, (t, k))
+        got = activity.stream_toggle_rates(x)
+        want = ref.stream_toggle_rates_ref(x)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        assert bool(jnp.all(got >= 0.0)) and bool(jnp.all(got <= 1.0))
+
+    def test_mac_activity_map_shape_and_gating(self):
+        rates = jnp.array([0.0, 1.0], jnp.float32)
+        w = jnp.array([[0, -1], [0, -1]], jnp.int8)  # 0x00 and 0xFF weights
+        amap = activity.mac_activity_map(rates, w)
+        assert amap.shape == (2, 2)
+        np.testing.assert_allclose(amap[0], jnp.zeros(2))  # dead lane
+        assert float(amap[1, 0]) == pytest.approx(0.25)  # zero weight gates
+        assert float(amap[1, 1]) == pytest.approx(1.0)  # dense weight

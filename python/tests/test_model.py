@@ -1,0 +1,99 @@
+"""L2 model tests: quantised pipeline shape/behaviour + float oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def model():
+    return model_lib.make_model()
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 64, size=(model_lib.DEFAULT_BATCH, 784), dtype=np.int64)
+    return jnp.asarray(x.astype(np.int8))
+
+
+class TestModelStructure:
+    def test_layer_widths(self, model):
+        assert model.layer_widths == model_lib.DEFAULT_LAYERS
+
+    def test_weights_are_int8(self, model):
+        for w in model.weights:
+            assert w.dtype == jnp.int8
+
+    def test_deterministic_weights(self):
+        a = model_lib.make_model()
+        b = model_lib.make_model()
+        for wa, wb in zip(a.weights, b.weights):
+            np.testing.assert_array_equal(wa, wb)
+
+    def test_widths_tile_onto_partitions(self, model):
+        # Every width must map exactly onto the 8x8 FPGA partitions.
+        for width in model.layer_widths:
+            assert width % 8 == 0
+
+
+class TestForward:
+    def test_output_shapes(self, model, batch):
+        logits, toggles = model_lib.mlp_forward(model, batch)
+        assert logits.shape == (model_lib.DEFAULT_BATCH, model_lib.DEFAULT_LAYERS[-1])
+        assert logits.dtype == jnp.float32
+        assert len(toggles) == len(model.weights)
+        for rate, width in zip(toggles, model.layer_widths[:-1]):
+            assert rate.shape == (width,)
+
+    def test_toggle_rates_bounded(self, model, batch):
+        _, toggles = model_lib.mlp_forward(model, batch)
+        for rate in toggles:
+            assert bool(jnp.all(rate >= 0.0)) and bool(jnp.all(rate <= 1.0))
+
+    def test_forward_deterministic(self, model, batch):
+        l1, _ = model_lib.mlp_forward(model, batch)
+        l2, _ = model_lib.mlp_forward(model, batch)
+        np.testing.assert_array_equal(l1, l2)
+
+    def test_array_size_does_not_change_logits(self, model, batch):
+        """The systolic-array (and hence partition) geometry is a pure
+        hardware mapping choice — logits must be identical."""
+        l16, _ = model_lib.mlp_forward(model, batch, array_size=16)
+        l64, _ = model_lib.mlp_forward(model, batch, array_size=64)
+        np.testing.assert_array_equal(l16, l64)
+
+    def test_close_to_float_reference(self, model, batch):
+        """Quantisation noise, not systematic error, separates the int8
+        systolic pipeline from the float oracle."""
+        logits, _ = model_lib.mlp_forward(model, batch)
+        want = model_lib.float_reference(model, batch)
+        # Same argmax on the overwhelming majority of the batch.
+        agree = float(jnp.mean(jnp.argmax(logits, -1) == jnp.argmax(want, -1)))
+        assert agree >= 0.9
+
+    def test_flat_forward_matches(self, batch):
+        out = model_lib.mlp_forward_flat(batch)
+        model = model_lib.make_model()
+        logits, toggles = model_lib.mlp_forward(model, batch)
+        np.testing.assert_array_equal(out[0], logits)
+        for got, want in zip(out[1:], toggles):
+            np.testing.assert_array_equal(got, want)
+
+
+class TestRequantize:
+    def test_relu_and_clip(self):
+        acc = jnp.array([-100, 0, 100, 10**6], jnp.int32)
+        got = model_lib.requantize(acc, 0.01)
+        assert got.dtype == jnp.int8
+        np.testing.assert_array_equal(got, jnp.array([0, 0, 1, 127], jnp.int8))
+
+    def test_quantize_ref_roundtrip(self):
+        x = jnp.linspace(-1.0, 1.0, 32)
+        q = ref.quantize_ref(x, 1.0 / 127)
+        back = q.astype(jnp.float32) * (1.0 / 127)
+        np.testing.assert_allclose(back, x, atol=1.0 / 127)

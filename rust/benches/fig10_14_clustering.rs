@@ -1,0 +1,127 @@
+//! Bench E3-E6 — regenerate **Figs 10-14**: the dendrogram and the four
+//! clustering algorithms over the per-MAC min-slack data, with quality
+//! (silhouette) and runtime at every array size (256 / 1024 / 4096
+//! points) — the quantitative version of paper §IV's complexity
+//! discussion (hierarchical O(n^3) in sklearn vs our O(n log n) exact
+//! 1-D merge; DBSCAN "reasonable time complexity"; mean-shift more
+//! expensive than k-means).
+//!
+//! Run: `cargo bench --bench fig10_14_clustering`
+
+use std::time::Instant;
+
+use vstpu::cluster::{hierarchical, silhouette, Algorithm};
+use vstpu::netlist::SystolicNetlist;
+use vstpu::tech::Technology;
+use vstpu::timing;
+
+fn slacks(size: u32) -> Vec<f64> {
+    let tech = Technology::artix7_28nm();
+    let nl = SystolicNetlist::generate(size, &tech, 100.0, 2021);
+    timing::synthesize(&nl)
+        .min_slack_per_mac(size)
+        .iter()
+        .map(|s| s.min_slack_ns)
+        .collect()
+}
+
+fn time_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+fn main() {
+    // ---------------------------------------------- Fig 10: dendrogram
+    let s16 = slacks(16);
+    let (d, ms) = time_ms(|| hierarchical::dendrogram(&s16));
+    println!("== Fig 10: dendrogram over 256 min-slacks ({ms:.2} ms) ==");
+    println!("top merge heights: {:?}", d.top_merge_heights(6));
+    println!("suggested k from the largest gap: {}\n", d.suggest_k(8));
+
+    // ------------------------------- Fig 11: hierarchical k = 2, 3, 4
+    println!("== Fig 11: hierarchical cuts ==");
+    for k in [2usize, 3, 4] {
+        let c = d.cut(k).unwrap().sorted_by_centroid(&s16);
+        println!(
+            "k={k}: sizes {:?} silhouette {:.3}",
+            c.sizes(),
+            silhouette(&s16, &c)
+        );
+    }
+
+    // ------------------------------------ Fig 12: k-means k = 3, 4, 5
+    println!("\n== Fig 12: k-means ==");
+    for k in [3usize, 4, 5] {
+        let c = Algorithm::KMeans { k, seed: 2021 }.run(&s16).unwrap();
+        println!(
+            "k={k}: sizes {:?} silhouette {:.3}",
+            c.sizes(),
+            silhouette(&s16, &c)
+        );
+    }
+
+    // --------------------------------------- Fig 13: mean-shift r=0.4
+    println!("\n== Fig 13: mean-shift, radius 0.4 ==");
+    let c = Algorithm::MeanShift { bandwidth: 0.4 }.run(&s16).unwrap();
+    println!(
+        "r=0.4 -> k={} (paper: 'yields 4 clusters'); sizes {:?}",
+        c.k,
+        c.sizes()
+    );
+
+    // --------------------------------------------- Fig 14: DBSCAN
+    println!("\n== Fig 14: DBSCAN (the paper's pick) ==");
+    let c = Algorithm::paper_default().run(&s16).unwrap();
+    println!(
+        "k={} sizes {:?} noise {} silhouette {:.3}",
+        c.k,
+        c.sizes(),
+        c.noise_points().len(),
+        silhouette(&s16, &c)
+    );
+
+    // -------------------------------------- runtime scaling comparison
+    println!("\n== algorithm runtime vs input size ==");
+    println!(
+        "{:<14} {:>12} {:>12} {:>12}",
+        "algorithm", "256 pts", "1024 pts", "4096 pts"
+    );
+    let algos: Vec<(&str, Box<dyn Fn(&[f64]) -> usize>)> = vec![
+        (
+            "hierarchical",
+            Box::new(|d: &[f64]| hierarchical::cluster(d, 4).unwrap().k),
+        ),
+        (
+            "kmeans",
+            Box::new(|d: &[f64]| Algorithm::KMeans { k: 4, seed: 1 }.run(d).unwrap().k),
+        ),
+        (
+            "meanshift",
+            Box::new(|d: &[f64]| {
+                Algorithm::MeanShift { bandwidth: 0.4 }.run(d).unwrap().k
+            }),
+        ),
+        (
+            "dbscan",
+            Box::new(|d: &[f64]| Algorithm::paper_default().run(d).unwrap().k),
+        ),
+    ];
+    let datasets: Vec<Vec<f64>> = vec![slacks(16), slacks(32), slacks(64)];
+    for (name, f) in &algos {
+        let mut cells = Vec::new();
+        for data in &datasets {
+            let (_, ms) = time_ms(|| f(data));
+            cells.push(format!("{ms:.2} ms"));
+        }
+        println!(
+            "{:<14} {:>12} {:>12} {:>12}",
+            name, cells[0], cells[1], cells[2]
+        );
+    }
+    // Sanity: every algorithm still recovers the band structure at 64x64.
+    for (name, f) in &algos {
+        let k = f(&datasets[2]);
+        assert!(k >= 2, "{name} degenerated at 4096 points");
+    }
+}

@@ -1,0 +1,181 @@
+//! Hot-path micro-benchmarks — the §Perf baseline/after numbers in
+//! EXPERIMENTS.md come from here.
+//!
+//! Covers every stage that runs repeatedly in the system:
+//!   L3 flow:  netlist generation, synthesis timing, min-slack
+//!             extraction, each clustering algorithm at 4096 points,
+//!             one Razor partition trial, a full Algorithm-2
+//!             calibration, floorplan + constraint emission
+//!   L3 serve: batcher pack, voltage-controller sense/epoch,
+//!             silent-failure scan
+//!   RT:       PJRT execute of systolic_64 and model_fwd (needs
+//!             `make artifacts`; skipped otherwise)
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use vstpu::cadflow::equal_quartile_clustering;
+use vstpu::cluster::{hierarchical, Algorithm};
+use vstpu::coordinator::{Batcher, CoordinatorConfig, InferenceRequest, VoltageController};
+use vstpu::floorplan;
+use vstpu::fpga::Device;
+use vstpu::netlist::SystolicNetlist;
+use vstpu::razor::{trial_partition, RazorConfig, DEFAULT_TOGGLE};
+use vstpu::runtime::{Engine, Tensor};
+use vstpu::tech::Technology;
+use vstpu::timing;
+use vstpu::util::SplitMix64;
+use vstpu::voltage::{runtime_scheme, static_scheme};
+
+/// Time `f` over enough iterations to exceed ~200 ms; print per-op cost.
+fn bench<T>(label: &str, mut f: impl FnMut() -> T) -> f64 {
+    // Warm up + calibrate iteration count.
+    let t0 = Instant::now();
+    black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((0.2 / once) as usize).clamp(1, 10_000);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        black_box(f());
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let (val, unit) = if per >= 1.0 {
+        (per, "s ")
+    } else if per >= 1e-3 {
+        (per * 1e3, "ms")
+    } else {
+        (per * 1e6, "us")
+    };
+    println!("{label:<44} {val:>10.3} {unit}/op   ({iters} iters)");
+    per
+}
+
+fn main() {
+    let tech = Technology::artix7_28nm();
+
+    println!("--- L3 flow substrate ---");
+    bench("netlist::generate 16x16", || {
+        SystolicNetlist::generate(16, &tech, 100.0, 2021)
+    });
+    bench("netlist::generate 64x64", || {
+        SystolicNetlist::generate(64, &tech, 100.0, 2021)
+    });
+    let nl64 = SystolicNetlist::generate(64, &tech, 100.0, 2021);
+    bench("timing::synthesize 64x64 (69k paths)", || {
+        timing::synthesize(&nl64)
+    });
+    let synth64 = timing::synthesize(&nl64);
+    bench("min_slack_per_mac 64x64", || synth64.min_slack_per_mac(64));
+    let slacks64: Vec<f64> = synth64
+        .min_slack_per_mac(64)
+        .iter()
+        .map(|s| s.min_slack_ns)
+        .collect();
+
+    println!("--- clustering at 4096 points ---");
+    bench("hierarchical (dendrogram + cut k=4)", || {
+        hierarchical::cluster(&slacks64, 4).unwrap()
+    });
+    bench("kmeans k=4", || {
+        Algorithm::KMeans { k: 4, seed: 1 }.run(&slacks64).unwrap()
+    });
+    bench("meanshift r=0.4", || {
+        Algorithm::MeanShift { bandwidth: 0.4 }
+            .run(&slacks64)
+            .unwrap()
+    });
+    bench("dbscan (paper default)", || {
+        Algorithm::paper_default().run(&slacks64).unwrap()
+    });
+    bench("equal_quartile_clustering", || {
+        equal_quartile_clustering(&slacks64)
+    });
+
+    println!("--- voltage/razor ---");
+    let clustering = equal_quartile_clustering(&slacks64);
+    let device = Device::for_array(64);
+    let parts = floorplan::quadrants(&device, &clustering, 64).unwrap();
+    let razor = RazorConfig::default();
+    bench("razor trial, one 1024-MAC partition", || {
+        trial_partition(&nl64, &tech, &razor, 0, &parts[0].macs, 0.97, |_| {
+            DEFAULT_TOGGLE
+        })
+    });
+    bench("algorithm-2 full calibration 64x64", || {
+        let mut ps = parts.clone();
+        for p in ps.iter_mut() {
+            p.vccint = 0.97;
+        }
+        runtime_scheme::calibrate(
+            &nl64,
+            &tech,
+            &razor,
+            &mut ps,
+            0.0125,
+            200,
+            tech.v_min,
+            |_| DEFAULT_TOGGLE,
+        )
+    });
+    bench("static scheme assign (4 rails)", || {
+        static_scheme::assign(&clustering, &slacks64, 1.0, 0.95).unwrap()
+    });
+    bench("floorplan::quadrants 64x64", || {
+        floorplan::quadrants(&device, &clustering, 64).unwrap()
+    });
+    bench("constraints::xdc 4096 MACs", || {
+        vstpu::constraints::xdc(&parts, 100.0)
+    });
+
+    println!("--- L3 serving path ---");
+    let batcher = Batcher::new(32, 784);
+    let mut rng = SplitMix64::new(1);
+    let reqs: Vec<InferenceRequest> = (0..32)
+        .map(|i| InferenceRequest {
+            id: i,
+            input: (0..784).map(|_| rng.next_i8()).collect(),
+        })
+        .collect();
+    bench("batcher.pack 32x784", || batcher.pack(&reqs));
+    let cfg = CoordinatorConfig::paper_default(tech.clone());
+    let mut vc = VoltageController::new(&cfg).unwrap();
+    let lane_rates = vec![0.3f32; 784];
+    bench("controller.observe_toggles 784 lanes", || {
+        vc.observe_toggles(&lane_rates)
+    });
+    bench("controller.sense (4 partitions, 16x16)", || vc.sense());
+    bench("controller.silent_now x4", || {
+        (0..4).map(|i| vc.silent_now(i)).collect::<Vec<_>>()
+    });
+
+    println!("--- PJRT runtime (artifacts) ---");
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        println!("artifacts/ missing — skipping PJRT benches (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::open(dir).unwrap();
+    let sys64 = engine.load("systolic_64").unwrap();
+    let x: Vec<i8> = (0..32 * 64).map(|_| rng.next_i8()).collect();
+    let w: Vec<i8> = (0..64 * 64).map(|_| rng.next_i8()).collect();
+    bench("pjrt execute systolic_64 (32x64 @ 64x64)", || {
+        sys64
+            .execute(&[
+                Tensor::I8(x.clone(), vec![32, 64]),
+                Tensor::I8(w.clone(), vec![64, 64]),
+            ])
+            .unwrap()
+    });
+    let fwd = engine.load("model_fwd").unwrap();
+    let input: Vec<i8> = (0..32 * 784).map(|_| rng.next_i8()).collect();
+    let per = bench("pjrt execute model_fwd (batch 32)", || {
+        fwd.execute(&[Tensor::I8(input.clone(), vec![32, 784])])
+            .unwrap()
+    });
+    println!(
+        "=> serving throughput bound: {:.0} req/s at batch 32",
+        32.0 / per
+    );
+}

@@ -1,0 +1,114 @@
+//! Bench E7 — regenerate **Table II** end to end and time the flow.
+//!
+//! For every technology x array size this runs the complete CAD flow
+//! (netlist -> timing -> quartile partitioning -> Algorithm 1 -> power)
+//! and prints the same rows the paper reports, with the paper's numbers
+//! alongside. The fourth instance (critical-region rails) is included,
+//! with the commercial flow's "not supported" refusal.
+//!
+//! Run: `cargo bench --bench table2_power`
+
+use std::time::Instant;
+
+use vstpu::cadflow::{CadFlow, FlowConfig, VivadoFlow, VtrFlow};
+use vstpu::tech::{FlowKind, Technology};
+
+/// (tech, size) -> paper's unscaled mW, scaled mW, reduction %.
+const PAPER: &[(&str, u32, f64, f64, f64)] = &[
+    ("artix7-28nm", 16, 408.0, 382.0, 6.37),
+    ("artix7-28nm", 32, 1538.0, 1434.0, 6.76),
+    ("artix7-28nm", 64, 5920.0, 5534.0, 6.52),
+    ("academic-22nm", 16, 269.0, 263.0, 1.86),
+    ("academic-22nm", 32, 1072.0, 1051.0, 1.95),
+    ("academic-22nm", 64, 4284.0, 4205.0, 1.84),
+    ("academic-45nm", 16, 387.0, 380.0, 1.8),
+    ("academic-45nm", 32, 1549.0, 1520.0, 1.87),
+    ("academic-45nm", 64, 6200.0, 6090.0, 1.77),
+    ("academic-130nm", 16, 1543.0, 1531.0, 0.7),
+    ("academic-130nm", 32, 6172.0, 6125.0, 0.76),
+    ("academic-130nm", 64, 24693.0, 24503.0, 0.77),
+];
+
+fn main() {
+    println!("== Table II: dynamic power without/with voltage scaling ==\n");
+    println!(
+        "{:<16} {:>5} | {:>9} {:>9} {:>6} | {:>9} {:>9} {:>6} | {:>8}",
+        "tech", "array", "base mW", "paper", "", "scaled", "paper", "", "flow ms"
+    );
+    for tech in Technology::paper_suite() {
+        for size in [16u32, 32, 64] {
+            let mut cfg = FlowConfig::paper_default(size, tech.clone());
+            cfg.calibrate = false;
+            let t0 = Instant::now();
+            let rep = CadFlow::new(cfg).run().expect("flow");
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let (_, _, p_base, p_scaled, p_red) = PAPER
+                .iter()
+                .find(|(n, s, ..)| *n == tech.name && *s == size)
+                .unwrap();
+            println!(
+                "{:<16} {:>2}x{:<2} | {:>9.0} {:>9.0} {:>6} | {:>9.0} {:>9.0} {:>5.2}% | {:>8.1}",
+                tech.name,
+                size,
+                size,
+                rep.power.baseline_total_mw,
+                p_base,
+                "",
+                rep.power.scaled_total_mw,
+                p_scaled,
+                rep.power.reduction_pct,
+                ms
+            );
+            let _ = p_red;
+        }
+    }
+
+    println!("\n== Table II fourth instance: rails from the critical region ==\n");
+    for tech in Technology::paper_suite() {
+        let mut cfg = FlowConfig::paper_default(64, tech.clone());
+        // Paper rails {0.7, 0.8, 0.9, 1.0}; the 130nm threshold is 0.7 V
+        // so the range bottom clamps above V_th there.
+        cfg.v_lo = (tech.v_th + 0.05).max(0.65);
+        cfg.v_hi = cfg.v_lo + 0.40;
+        cfg.calibrate = false;
+        match tech.flow {
+            FlowKind::Vivado => match VivadoFlow::new(cfg).run() {
+                Err(e) => println!("{:<16} not supported ({e})", tech.name),
+                Ok(_) => println!("{:<16} UNEXPECTEDLY SUPPORTED", tech.name),
+            },
+            FlowKind::Vtr => {
+                let rep = VtrFlow::new(cfg).run().expect("vtr flow");
+                let paper = match tech.node_nm {
+                    22 => 3.7,
+                    45 => 2.4,
+                    _ => 1.37,
+                };
+                println!(
+                    "{:<16} rails {:?} -> {:>8.0} mW, reduction vs nominal {:>5.2}% (paper ~{paper}% vs 0.9 V baseline)",
+                    tech.name,
+                    rep.static_rails
+                        .iter()
+                        .map(|v| format!("{v:.2}"))
+                        .collect::<Vec<_>>(),
+                    rep.power.scaled_total_mw,
+                    rep.power.reduction_pct
+                );
+            }
+        }
+    }
+
+    // Timing summary of the full calibrated flow (the expensive variant).
+    println!("\n== flow cost with Razor calibration ==\n");
+    for size in [16u32, 32, 64] {
+        let cfg = FlowConfig::paper_default(size, Technology::artix7_28nm());
+        let t0 = Instant::now();
+        let rep = CadFlow::new(cfg).run().expect("flow");
+        println!(
+            "{0}x{0}: {1:.1} ms ({2} calibration trials, converged={3})",
+            size,
+            t0.elapsed().as_secs_f64() * 1e3,
+            rep.calibration_trials,
+            rep.calibration_converged
+        );
+    }
+}

@@ -1,0 +1,128 @@
+//! S15 — Baseline comparators.
+//!
+//! The paper positions its scheme against two prior approaches:
+//!
+//! * **Whole-FPGA underscaling** (Salami et al. [3]): one `Vccint` for
+//!   the entire device, pushed as low as the *worst* MAC allows —
+//!   [`whole_fpga_underscale`]. The paper's critique: "a single Vccint
+//!   for the entire FPGA might not be the most power efficient
+//!   solution".
+//! * **Per-MAC boosting** (GreenTPU [4]): every MAC on its own ideal
+//!   rail — [`per_mac_ideal`]. Infeasible on FPGA ("different Vccint for
+//!   each of the MACs ... will be an absurd implementation") but it
+//!   lower-bounds the achievable power; partitioning approaches it as
+//!   the cluster count grows (the ablation bench measures exactly that
+//!   gap).
+//! * **No scaling**: everything at `v_nom` — [`no_scaling`].
+
+
+use crate::netlist::SystolicNetlist;
+use crate::power::PowerModel;
+use crate::razor::{min_safe_voltage, DEFAULT_TOGGLE};
+use crate::tech::Technology;
+
+/// Power and voltage summary of one baseline configuration.
+#[derive(Debug, Clone)]
+pub struct BaselineResult {
+    pub name: String,
+    /// Rail voltage(s): min and max across the array.
+    pub v_low: f64,
+    pub v_high: f64,
+    pub total_mw: f64,
+}
+
+/// Everything at nominal voltage.
+pub fn no_scaling(model: &PowerModel, netlist: &SystolicNetlist) -> BaselineResult {
+    let v = model.tech.v_nom;
+    BaselineResult {
+        name: "no-scaling".into(),
+        v_low: v,
+        v_high: v,
+        total_mw: model.baseline_mw(netlist.mac_count(), v),
+    }
+}
+
+/// Salami-style single-rail underscaling: the whole device at the lowest
+/// voltage where *no* MAC flags (plus one safety step `vs`).
+pub fn whole_fpga_underscale(
+    model: &PowerModel,
+    netlist: &SystolicNetlist,
+    vs: f64,
+) -> BaselineResult {
+    let macs: Vec<_> = netlist.macs().collect();
+    let v = (min_safe_voltage(netlist, &model.tech, &macs, DEFAULT_TOGGLE) + vs)
+        .min(model.tech.v_nom);
+    BaselineResult {
+        name: "whole-fpga-underscale".into(),
+        v_low: v,
+        v_high: v,
+        total_mw: model.baseline_mw(netlist.mac_count(), v),
+    }
+}
+
+/// GreenTPU-flavoured ideal: every MAC at its own minimum safe voltage.
+/// The unreachable lower bound for any partitioning.
+pub fn per_mac_ideal(model: &PowerModel, netlist: &SystolicNetlist, vs: f64) -> BaselineResult {
+    let tech: &Technology = &model.tech;
+    let mut total = tech.p_overhead_mw * (model.clock_mhz / crate::power::PAPER_CLOCK_MHZ);
+    let mut v_low = f64::INFINITY;
+    let mut v_high: f64 = 0.0;
+    for mac in netlist.macs() {
+        let v = (min_safe_voltage(netlist, tech, &[mac], DEFAULT_TOGGLE) + vs).min(tech.v_nom);
+        v_low = v_low.min(v);
+        v_high = v_high.max(v);
+        total += model.macs_power_mw(1, v, DEFAULT_TOGGLE);
+    }
+    BaselineResult {
+        name: "per-mac-ideal".into(),
+        v_low,
+        v_high,
+        total_mw: total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (PowerModel, SystolicNetlist) {
+        let tech = Technology::artix7_28nm();
+        let nl = SystolicNetlist::generate(16, &tech, 100.0, 1);
+        (PowerModel::new(tech, 100.0), nl)
+    }
+
+    #[test]
+    fn ordering_ideal_below_single_rail_below_nominal() {
+        let (m, nl) = setup();
+        let nom = no_scaling(&m, &nl);
+        let single = whole_fpga_underscale(&m, &nl, 0.0125);
+        let ideal = per_mac_ideal(&m, &nl, 0.0125);
+        assert!(single.total_mw < nom.total_mw);
+        assert!(ideal.total_mw < single.total_mw);
+    }
+
+    #[test]
+    fn single_rail_is_set_by_worst_mac() {
+        let (m, nl) = setup();
+        let single = whole_fpga_underscale(&m, &nl, 0.0);
+        let ideal = per_mac_ideal(&m, &nl, 0.0);
+        // The single rail equals the worst per-MAC requirement.
+        assert!((single.v_low - ideal.v_high).abs() < 1e-9);
+        assert_eq!(single.v_low, single.v_high);
+        assert!(ideal.v_low < ideal.v_high);
+    }
+
+    #[test]
+    fn rails_stay_legal() {
+        let (m, nl) = setup();
+        for r in [
+            no_scaling(&m, &nl),
+            whole_fpga_underscale(&m, &nl, 0.0125),
+            per_mac_ideal(&m, &nl, 0.0125),
+        ] {
+            assert!(r.v_low > m.tech.v_th);
+            assert!(r.v_high <= m.tech.v_nom + 1e-12);
+            assert!(r.total_mw > 0.0);
+        }
+    }
+}

@@ -1,0 +1,494 @@
+//! CLI implementation — hand-rolled argument parsing (fully vendored
+//! build; no clap). `vstpu help` prints the command reference.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use vstpu::cadflow::{CadFlow, FlowConfig, PartitionScheme};
+use vstpu::cluster::{hierarchical, Algorithm};
+use vstpu::config::Config;
+use vstpu::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+use vstpu::netlist::SystolicNetlist;
+use vstpu::report;
+use vstpu::tech::Technology;
+use vstpu::timing;
+use vstpu::voltage::static_scheme;
+use vstpu::workload::{Batch, FluctuationProfile};
+use vstpu::{Error, Result};
+
+const HELP: &str = "\
+vstpu — voltage-scaled systolic-array TPU (Paul et al. 2021 reproduction)
+
+USAGE: vstpu [--config FILE] <command> [options]
+
+COMMANDS
+  flow            run the full CAD flow once and print the summary
+                    --array-size N (16)  --tech NAME (artix7-28nm)
+                    --algo quartiles|hierarchical|kmeans|meanshift|dbscan
+                    --k N (4)  --no-calibrate
+  table2          regenerate Table II (all technologies x all sizes)
+  timing-report   print a Table I fragment
+                    --array-size N (16)  --paths N (10)
+  figs            emit figure CSVs (4,5,11..16) --fig N (0=all) --out DIR
+  cluster         run one clustering algorithm over the min-slack data
+                    --algo NAME  --k N  --bandwidth F (0.4)
+                    --array-size N (16)  --dendrogram
+  calibrate       Razor trial-run calibration (Algorithm 2) details
+                    --array-size N  --tech NAME  --toggle F (0.125)
+  serve           serve synthetic requests through the PJRT artifact
+                    --artifacts DIR (artifacts)  --requests N (256)
+                    --fluctuation low|medium|high (medium)
+  e2e             end-to-end accuracy/power sweep (EXPERIMENTS.md E12)
+                    --artifacts DIR  --requests N (512)
+  tradeoff        partition-count vs power vs accuracy-risk study
+                    (paper future-work item (ii))
+                    --array-size N (16)  --tech NAME (academic-22nm)
+                    --counts 1,2,4,8,16  --shift F (0.45)
+  calibrate-tech  re-fit power constants from the paper's Table II
+  print-config    print the default TOML config
+  help            this text
+";
+
+/// Parsed `--key value` options (plus boolean flags mapping to "true").
+struct Opts(HashMap<String, String>);
+
+impl Opts {
+    fn parse(args: &[String], flags: &[&str]) -> Result<Self> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(Error::Config(format!("unexpected argument '{a}'")));
+            };
+            if flags.contains(&key) {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+                map.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Self(map))
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(String::as_str)
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("bad value for --{key}: '{v}'"))),
+        }
+    }
+
+    fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+}
+
+pub fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = argv.as_slice();
+
+    // Global --config: the file's [flow]/[serve] values become the
+    // defaults every subcommand flag can still override.
+    let mut config = Config::default();
+    if args.first().map(String::as_str) == Some("--config") {
+        let path = args
+            .get(1)
+            .ok_or_else(|| Error::Config("--config needs a path".into()))?;
+        config = Config::load(Path::new(path))?;
+        args = &args[2..];
+    }
+
+    let Some(cmd) = args.first() else {
+        print!("{HELP}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+
+    match cmd.as_str() {
+        "flow" => {
+            let o = Opts::parse(rest, &["no-calibrate"])?;
+            let tech = tech_by_name(&o.str_or("tech", &config.flow.tech))?;
+            let mut cfg =
+                FlowConfig::paper_default(o.num("array-size", config.flow.array_size)?, tech);
+            cfg.clock_mhz = config.flow.clock_mhz;
+            cfg.seed = config.flow.seed;
+            if config.flow.v_lo > 0.0 && config.flow.v_hi > 0.0 {
+                cfg.v_lo = config.flow.v_lo;
+                cfg.v_hi = config.flow.v_hi;
+            }
+            cfg.scheme = scheme_from(&o.str_or("algo", "quartiles"), o.num("k", config.flow.k)?)?;
+            cfg.calibrate = !o.flag("no-calibrate") && config.flow.calibrate;
+            let rep = CadFlow::new(cfg).run()?;
+            print!("{}", report::flow_summary(&rep));
+        }
+        "table2" => {
+            for tech in Technology::paper_suite() {
+                for size in [16u32, 32, 64] {
+                    let cfg = FlowConfig::paper_default(size, tech.clone());
+                    let rep = CadFlow::new(cfg).run()?;
+                    println!("--- {} {}x{}", tech.name, size, size);
+                    print!(
+                        "{}",
+                        report::text_table(&report::TABLE2_HEADERS, &report::table2_block(&rep))
+                    );
+                }
+            }
+        }
+        "timing-report" => {
+            let o = Opts::parse(rest, &[])?;
+            let tech = Technology::artix7_28nm();
+            let nl = SystolicNetlist::generate(o.num("array-size", 16)?, &tech, 100.0, 2021);
+            let rep = timing::synthesize(&nl);
+            print!("{}", report::table1(&rep, o.num("paths", 10)?));
+        }
+        "figs" => {
+            let o = Opts::parse(rest, &[])?;
+            let out = PathBuf::from(o.str_or("out", "out"));
+            std::fs::create_dir_all(&out)?;
+            emit_figs(o.num("fig", 0u32)?, &out)?;
+        }
+        "cluster" => {
+            let o = Opts::parse(rest, &["dendrogram"])?;
+            let size: u32 = o.num("array-size", 16)?;
+            let tech = Technology::artix7_28nm();
+            let nl = SystolicNetlist::generate(size, &tech, 100.0, 2021);
+            let slacks: Vec<f64> = timing::synthesize(&nl)
+                .min_slack_per_mac(size)
+                .iter()
+                .map(|s| s.min_slack_ns)
+                .collect();
+            if o.flag("dendrogram") {
+                let d = hierarchical::dendrogram(&slacks);
+                println!("top merge heights: {:?}", d.top_merge_heights(8));
+                println!("suggested k: {}", d.suggest_k(8));
+            }
+            let algorithm = algo_from(
+                &o.str_or("algo", "dbscan"),
+                o.num("k", 4)?,
+                o.num("bandwidth", 0.4)?,
+            )?;
+            let c = algorithm.run(&slacks)?;
+            println!(
+                "{}: k={} sizes={:?} noise={} silhouette={:.3}",
+                algorithm.name(),
+                c.k,
+                c.sizes(),
+                c.noise_points().len(),
+                vstpu::cluster::silhouette(&slacks, &c)
+            );
+            print!("{}", report::clustering_csv(&slacks, &c));
+        }
+        "calibrate" => {
+            let o = Opts::parse(rest, &[])?;
+            let size: u32 = o.num("array-size", 16)?;
+            let toggle: f64 = o.num("toggle", 0.125)?;
+            let tech = tech_by_name(&o.str_or("tech", "artix7-28nm"))?;
+            let cfg = FlowConfig::paper_default(size, tech.clone());
+            let nl = SystolicNetlist::generate(size, &tech, cfg.clock_mhz, cfg.seed);
+            let rep = CadFlow::new(cfg.clone()).run()?;
+            println!("static rails:     {:?}", rep.static_rails);
+            println!("calibrated rails: {:?}", rep.calibrated_rails);
+            let synth = timing::synthesize(&nl);
+            let slacks: Vec<f64> = synth
+                .min_slack_per_mac(size)
+                .iter()
+                .map(|s| s.min_slack_ns)
+                .collect();
+            let clustering = vstpu::cadflow::equal_quartile_clustering(&slacks);
+            let device = vstpu::fpga::Device::for_array(size);
+            let parts = vstpu::floorplan::quadrants(&device, &clustering, size)?;
+            for p in &parts {
+                let f = vstpu::razor::min_safe_voltage(&nl, &tech, &p.macs, toggle);
+                println!("partition-{} frontier @ toggle {toggle}: {f:.4} V", p.id + 1);
+            }
+            let vs = static_scheme::step(cfg.v_hi, cfg.v_lo, 4);
+            println!("step Vs = {vs:.4} V; flow: {:?}", tech.flow);
+        }
+        "serve" => {
+            let o = Opts::parse(rest, &[])?;
+            let profile = profile_from(&o.str_or("fluctuation", "medium"))?;
+            let requests: usize = o.num("requests", 256)?;
+            let artifacts = PathBuf::from(o.str_or("artifacts", &config.serve.artifacts_dir));
+            let tech = Technology::artix7_28nm();
+            let mut coord =
+                Coordinator::open(&artifacts, CoordinatorConfig::paper_default(tech))?;
+            let batch = coord.config.batch;
+            let data = Batch::synthetic(requests, 784, profile, 7);
+            let mut done = 0usize;
+            while done < requests {
+                let n = batch.min(requests - done);
+                let reqs: Vec<InferenceRequest> = (0..n)
+                    .map(|i| InferenceRequest {
+                        id: (done + i) as u64,
+                        input: data.sample(done + i).to_vec(),
+                    })
+                    .collect();
+                let resp = coord.infer_batch(&reqs)?;
+                done += resp.len();
+            }
+            let snap = coord.snapshot();
+            println!(
+                "served {} requests in {} batches; power {:.1} mW; rails {:?}",
+                snap.requests,
+                snap.batches,
+                snap.power_mw,
+                snap.rails
+                    .iter()
+                    .map(|v| format!("{v:.4}"))
+                    .collect::<Vec<_>>()
+            );
+            println!(
+                "latency: mean {:.0} us, p50 ~{} us, p99 ~{} us",
+                coord.latency.mean_us(),
+                coord.latency.quantile_us(0.5),
+                coord.latency.quantile_us(0.99)
+            );
+        }
+        "e2e" => {
+            let o = Opts::parse(rest, &[])?;
+            let artifacts = PathBuf::from(o.str_or("artifacts", &config.serve.artifacts_dir));
+            vstpu_e2e(&artifacts, o.num("requests", 512)?)?;
+        }
+        "tradeoff" => {
+            let o = Opts::parse(rest, &[])?;
+            let tech = tech_by_name(&o.str_or("tech", "academic-22nm"))?;
+            let mut cfg = vstpu::study::StudyConfig::paper_default(tech);
+            cfg.array_size = o.num("array-size", 16)?;
+            cfg.shifted_toggle = o.num("shift", 0.45)?;
+            let counts: Vec<usize> = o
+                .str_or("counts", "1,2,4,8,16")
+                .split(',')
+                .map(|c| {
+                    c.trim()
+                        .parse::<usize>()
+                        .map_err(|_| Error::Config(format!("bad count '{c}'")))
+                })
+                .collect::<Result<_>>()?;
+            let pts = vstpu::study::partition_count_study(&cfg, &counts)?;
+            println!(
+                "partition-count tradeoff ({}x{} on {}, calib toggle {}, shifted {}):\n",
+                cfg.array_size, cfg.array_size, cfg.tech.name, cfg.calib_toggle, cfg.shifted_toggle
+            );
+            print!("{}", vstpu::study::render(&pts));
+        }
+        "calibrate-tech" => {
+            let table2: [(&str, [(f64, f64); 3]); 4] = [
+                ("artix7-28nm", [(256.0, 408.0), (1024.0, 1538.0), (4096.0, 5920.0)]),
+                ("academic-22nm", [(256.0, 269.0), (1024.0, 1072.0), (4096.0, 4284.0)]),
+                ("academic-45nm", [(256.0, 387.0), (1024.0, 1549.0), (4096.0, 6200.0)]),
+                ("academic-130nm", [(256.0, 1543.0), (1024.0, 6172.0), (4096.0, 24693.0)]),
+            ];
+            for (name, pts) in table2 {
+                let (p_mac, overhead) = vstpu::tech::fit_power(&pts);
+                println!("{name}: p_mac = {p_mac:.4} mW, overhead = {overhead:.1} mW");
+            }
+        }
+        "print-config" => print!("{}", Config::default().to_toml()),
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        other => {
+            print!("{HELP}");
+            return Err(Error::Config(format!("unknown command '{other}'")));
+        }
+    }
+    Ok(())
+}
+
+fn tech_by_name(name: &str) -> Result<Technology> {
+    Technology::by_name(name).ok_or_else(|| Error::Config(format!("unknown tech '{name}'")))
+}
+
+fn scheme_from(algo: &str, k: usize) -> Result<PartitionScheme> {
+    Ok(match algo {
+        "quartiles" => PartitionScheme::PaperQuadrants,
+        other => PartitionScheme::Clustered(algo_from(other, k, 0.4)?),
+    })
+}
+
+fn algo_from(algo: &str, k: usize, bandwidth: f64) -> Result<Algorithm> {
+    Ok(match algo {
+        "hierarchical" => Algorithm::Hierarchical { k },
+        "kmeans" => Algorithm::KMeans { k, seed: 2021 },
+        "meanshift" => Algorithm::MeanShift { bandwidth },
+        "dbscan" => Algorithm::paper_default(),
+        other => return Err(Error::Config(format!("unknown algorithm '{other}'"))),
+    })
+}
+
+fn profile_from(name: &str) -> Result<FluctuationProfile> {
+    Ok(match name {
+        "low" => FluctuationProfile::Low,
+        "medium" => FluctuationProfile::Medium,
+        "high" => FluctuationProfile::High,
+        other => {
+            return Err(Error::Config(format!(
+                "unknown fluctuation profile '{other}'"
+            )))
+        }
+    })
+}
+
+fn emit_figs(fig: u32, out: &Path) -> Result<()> {
+    let tech = Technology::artix7_28nm();
+    let want = |f: u32| fig == 0 || fig == f;
+    if want(4) || want(5) {
+        let cfg = FlowConfig::paper_default(16, tech.clone());
+        let rep = CadFlow::new(cfg).run()?;
+        if want(4) {
+            std::fs::write(out.join("fig4_setup.csv"), report::fig4_5_csv(&rep.fig4_setup_deltas))?;
+            println!("wrote {}", out.join("fig4_setup.csv").display());
+        }
+        if want(5) {
+            std::fs::write(out.join("fig5_hold.csv"), report::fig4_5_csv(&rep.fig5_hold_deltas))?;
+            println!("wrote {}", out.join("fig5_hold.csv").display());
+        }
+    }
+    if (11..=14).any(want) {
+        let nl = SystolicNetlist::generate(16, &tech, 100.0, 2021);
+        let slacks: Vec<f64> = timing::synthesize(&nl)
+            .min_slack_per_mac(16)
+            .iter()
+            .map(|s| s.min_slack_ns)
+            .collect();
+        let runs: Vec<(&str, Algorithm)> = vec![
+            ("fig11_hierarchical_k4", Algorithm::Hierarchical { k: 4 }),
+            ("fig12_kmeans_k4", Algorithm::KMeans { k: 4, seed: 2021 }),
+            ("fig13_meanshift", Algorithm::MeanShift { bandwidth: 0.4 }),
+            ("fig14_dbscan", Algorithm::paper_default()),
+        ];
+        for (i, (name, algo)) in runs.into_iter().enumerate() {
+            if !want(11 + i as u32) {
+                continue;
+            }
+            let c = algo.run(&slacks)?;
+            std::fs::write(
+                out.join(format!("{name}.csv")),
+                report::clustering_csv(&slacks, &c),
+            )?;
+            println!("wrote {}", out.join(format!("{name}.csv")).display());
+        }
+    }
+    if want(15) || want(16) {
+        for t in [
+            Technology::academic_22nm(),
+            Technology::academic_45nm(),
+            Technology::academic_130nm(),
+        ] {
+            let f = if t.node_nm == 130 { 16 } else { 15 };
+            if !want(f) {
+                continue;
+            }
+            let series = vstpu_variants(&t);
+            let name = format!("fig{}_{}.csv", f, t.name);
+            std::fs::write(out.join(&name), report::variants_csv(&series))?;
+            println!("wrote {}", out.join(&name).display());
+        }
+    }
+    Ok(())
+}
+
+/// The Fig 15/16 variant sweep: named 64x64 decompositions at different
+/// partition counts, shapes and rail assignments (see the fig15_16 bench
+/// for the paper-shape assertions).
+pub fn vstpu_variants(tech: &Technology) -> Vec<(String, f64)> {
+    use vstpu::power::PowerModel;
+    // Array-dominated design point for the figure experiments (DESIGN.md
+    // substitution table + EXPERIMENTS.md E8/E9 note).
+    let model = PowerModel::new(tech.clone(), 100.0).with_kappa(0.85);
+    let lo = if tech.node_nm == 130 { 0.7 } else { 0.5 };
+    let variants: Vec<(usize, (u32, u32), Vec<f64>)> = vec![
+        (1, (64, 64), vec![1.0]),
+        (2, (32, 64), vec![lo, lo + 0.1]),
+        (2, (32, 64), vec![lo + 0.2, lo + 0.3]),
+        (4, (32, 32), vec![lo, lo + 0.1, lo + 0.2, lo + 0.3]),
+        (4, (32, 32), vec![lo + 0.1, lo + 0.3, lo + 0.5, lo + 0.6]),
+        (4, (32, 32), vec![0.8, 1.0, 1.2, 1.3]),
+    ];
+    variants
+        .into_iter()
+        .map(|(p, (n, m), volts)| {
+            let macs_per = (n * m) as usize;
+            let total: f64 = volts
+                .iter()
+                .map(|&v| model.macs_power_mw(macs_per, v, vstpu::razor::DEFAULT_TOGGLE))
+                .sum::<f64>()
+                + model.tech.p_overhead_mw;
+            let vs: Vec<String> = volts.iter().map(|v| format!("{v:.1}")).collect();
+            (format!("{p}x({n}x{m}){{{}}}", vs.join(",")), total)
+        })
+        .collect()
+}
+
+/// E12 — end-to-end accuracy/power sweep: serve a fixed workload through
+/// the PJRT artifact at a range of forced rail voltages; report
+/// agreement with the nominal-voltage golden outputs and dynamic power.
+fn vstpu_e2e(artifacts: &Path, requests: usize) -> Result<()> {
+    let tech = Technology::artix7_28nm();
+    let data = Batch::synthetic(requests, 784, FluctuationProfile::Medium, 7);
+    let sweep = [1.00, 0.97, 0.94, 0.90, 0.86, 0.82, 0.78, 0.74];
+
+    let run_at = |v: f64| -> Result<(Vec<usize>, f64)> {
+        let mut cfg = CoordinatorConfig::paper_default(tech.clone());
+        cfg.voltage_epoch = usize::MAX; // hold rails fixed for the sweep
+        let mut coord = Coordinator::open(artifacts, cfg)?;
+        coord.controller.set_rails(v);
+        let batch = coord.config.batch;
+        let mut argmaxes = Vec::with_capacity(requests);
+        let mut done = 0usize;
+        while done < requests {
+            let n = batch.min(requests - done);
+            let reqs: Vec<InferenceRequest> = (0..n)
+                .map(|i| InferenceRequest {
+                    id: (done + i) as u64,
+                    input: data.sample(done + i).to_vec(),
+                })
+                .collect();
+            for r in coord.infer_batch(&reqs)? {
+                let arg = r
+                    .logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                argmaxes.push(arg);
+            }
+            done += n;
+        }
+        Ok((argmaxes, coord.snapshot().power_mw))
+    };
+
+    let (golden, p_nom) = run_at(1.00)?;
+    println!(
+        "{:>8} {:>12} {:>12} {:>10}",
+        "Vccint", "power (mW)", "vs nominal", "accuracy"
+    );
+    for v in sweep {
+        let (preds, power) = run_at(v)?;
+        let agree = preds
+            .iter()
+            .zip(&golden)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / golden.len() as f64;
+        println!(
+            "{v:>8.2} {power:>12.1} {:>11.1}% {:>9.1}%",
+            100.0 * (power - p_nom) / p_nom,
+            100.0 * agree
+        );
+    }
+    Ok(())
+}

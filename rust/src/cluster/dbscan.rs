@@ -1,0 +1,161 @@
+//! DBSCAN (paper §IV-D, citing Ester et al. KDD'96).
+//!
+//! "Two important hyperparameters: **epsilon** — the maximum distance
+//! between two samples for one to be considered in the neighbourhood of
+//! the other — and **minpoints** — the number of samples in a
+//! neighbourhood for a point to be considered a core point. ... The
+//! greatest advantage of DBSCAN is that it can identify outliers as
+//! noise. ... Time complexity O(n) for reasonable epsilon."
+//!
+//! This is the algorithm the paper selects for its flow ("DBSCAN is
+//! found to perform the best in this case"). 1-D neighbourhoods are
+//! ranges in the sorted order, so the region query is a two-pointer
+//! scan and the whole run is O(n log n).
+
+use super::{Clustering, NOISE};
+use crate::error::{Error, Result};
+
+/// DBSCAN over 1-D data.
+///
+/// `min_points` counts the point itself (sklearn's `min_samples`
+/// convention, which the paper's experiments used).
+pub fn cluster(data: &[f64], eps: f64, min_points: usize) -> Result<Clustering> {
+    if !(eps > 0.0) {
+        return Err(Error::Clustering(format!("eps must be positive, got {eps}")));
+    }
+    if min_points == 0 {
+        return Err(Error::Clustering("min_points must be positive".into()));
+    }
+    let n = data.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| data[a].total_cmp(&data[b]));
+    let sorted: Vec<f64> = order.iter().map(|&i| data[i]).collect();
+
+    // Neighbourhood of sorted index i = sorted range within +-eps.
+    let range_of = |i: usize| -> (usize, usize) {
+        let x = sorted[i];
+        let lo = sorted.partition_point(|&v| v < x - eps);
+        let hi = sorted.partition_point(|&v| v <= x + eps);
+        (lo, hi)
+    };
+
+    let core: Vec<bool> = (0..n)
+        .map(|i| {
+            let (lo, hi) = range_of(i);
+            hi - lo >= min_points
+        })
+        .collect();
+
+    // Expand clusters: in 1-D a cluster is a maximal run of points that
+    // are density-reachable; walk sorted order, BFS over core points.
+    let mut labels_sorted = vec![NOISE; n];
+    let mut k = 0usize;
+    let mut stack: Vec<usize> = Vec::new();
+    for i in 0..n {
+        if labels_sorted[i] != NOISE || !core[i] {
+            continue;
+        }
+        let cid = k;
+        k += 1;
+        labels_sorted[i] = cid;
+        stack.push(i);
+        while let Some(j) = stack.pop() {
+            let (lo, hi) = range_of(j);
+            for v in lo..hi {
+                if labels_sorted[v] == NOISE {
+                    labels_sorted[v] = cid;
+                    if core[v] {
+                        stack.push(v);
+                    }
+                }
+            }
+        }
+    }
+
+    // Undo the sort.
+    let mut labels = vec![NOISE; n];
+    for (si, &orig) in order.iter().enumerate() {
+        labels[orig] = labels_sorted[si];
+    }
+    Ok(Clustering { labels, k })
+}
+
+/// Heuristic epsilon from the data scale: median adjacent gap x factor.
+/// The CAD flow uses this when the caller does not pin eps (the paper
+/// tunes eps per design; this automates it for arbitrary array sizes).
+pub fn suggest_eps(data: &[f64], factor: f64) -> f64 {
+    let mut sorted: Vec<f64> = data.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let mut gaps: Vec<f64> = sorted.windows(2).map(|w| w[1] - w[0]).filter(|&g| g > 0.0).collect();
+    if gaps.is_empty() {
+        return 1e-6;
+    }
+    gaps.sort_by(f64::total_cmp);
+    gaps[gaps.len() / 2] * factor
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_dense_blobs_plus_outlier() {
+        let mut data: Vec<f64> = (0..20).map(|i| 0.0 + 0.01 * i as f64).collect();
+        data.extend((0..20).map(|i| 5.0 + 0.01 * i as f64));
+        data.push(50.0); // outlier
+        let c = cluster(&data, 0.1, 3).unwrap();
+        assert_eq!(c.k, 2);
+        assert_eq!(c.labels[40], NOISE, "outlier must be noise");
+        assert_eq!(c.noise_points(), vec![40]);
+    }
+
+    #[test]
+    fn all_noise_when_sparse() {
+        let data: Vec<f64> = (0..10).map(|i| i as f64 * 100.0).collect();
+        let c = cluster(&data, 0.5, 3).unwrap();
+        assert_eq!(c.k, 0);
+        assert_eq!(c.noise_points().len(), 10);
+    }
+
+    #[test]
+    fn border_points_join_a_cluster() {
+        // 5 dense core points + 1 border point within eps of the edge.
+        let data = vec![0.0, 0.01, 0.02, 0.03, 0.04, 0.12];
+        let c = cluster(&data, 0.09, 4).unwrap();
+        assert_eq!(c.k, 1);
+        assert_ne!(c.labels[5], NOISE, "border point must be labelled");
+    }
+
+    #[test]
+    fn min_points_counts_self() {
+        // Exactly min_points-1 neighbours + self = core.
+        let data = vec![0.0, 0.05, 0.1];
+        let c = cluster(&data, 0.06, 3).unwrap();
+        // Point 1 sees 0 and 2 => 3 points incl. self => core.
+        assert_eq!(c.k, 1);
+    }
+
+    #[test]
+    fn label_permutation_invariant_to_input_order() {
+        let data = vec![5.0, 0.0, 5.1, 0.1, 5.2, 0.2];
+        let c = cluster(&data, 0.2, 2).unwrap();
+        assert_eq!(c.k, 2);
+        assert_eq!(c.labels[0], c.labels[2]);
+        assert_eq!(c.labels[1], c.labels[3]);
+        assert_ne!(c.labels[0], c.labels[1]);
+    }
+
+    #[test]
+    fn rejects_bad_hyperparams() {
+        assert!(cluster(&[1.0], 0.0, 1).is_err());
+        assert!(cluster(&[1.0], 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn suggest_eps_positive_and_scales() {
+        let tight: Vec<f64> = (0..100).map(|i| i as f64 * 0.001).collect();
+        let wide: Vec<f64> = (0..100).map(|i| i as f64 * 1.0).collect();
+        assert!(suggest_eps(&tight, 4.0) < suggest_eps(&wide, 4.0));
+        assert!(suggest_eps(&[1.0, 1.0], 4.0) > 0.0);
+    }
+}

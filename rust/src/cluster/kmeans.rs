@@ -1,0 +1,203 @@
+//! K-Means clustering with k-means++ seeding (paper §IV-B, citing
+//! Arthur & Vassilvitskii).
+//!
+//! "At the beginning, k cluster centers are randomly initialized ...
+//! data-points are assigned to the cluster whose center is closest ...
+//! centers are recomputed as the mean ... repeated until cluster centers
+//! do not change significantly."
+
+use super::Clustering;
+use crate::error::{Error, Result};
+use crate::util::SplitMix64;
+
+/// Maximum Lloyd iterations ("a predefined number of steps").
+pub const MAX_ITERS: usize = 100;
+/// Convergence threshold on the largest centre movement.
+pub const TOL: f64 = 1e-9;
+
+/// K-means++ initial centres over 1-D data.
+fn seed_centres(data: &[f64], k: usize, rng: &mut SplitMix64) -> Vec<f64> {
+    let mut centres = Vec::with_capacity(k);
+    centres.push(data[rng.below(data.len() as u64) as usize]);
+    let mut d2: Vec<f64> = data
+        .iter()
+        .map(|&x| (x - centres[0]) * (x - centres[0]))
+        .collect();
+    while centres.len() < k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            // All remaining mass at existing centres: pick uniformly.
+            rng.below(data.len() as u64) as usize
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut idx = data.len() - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                if target < w {
+                    idx = i;
+                    break;
+                }
+                target -= w;
+            }
+            idx
+        };
+        let c = data[pick];
+        centres.push(c);
+        for (i, &x) in data.iter().enumerate() {
+            let nd = (x - c) * (x - c);
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    centres
+}
+
+/// Run Lloyd's algorithm from k-means++ seeds.
+pub fn cluster(data: &[f64], k: usize, seed: u64) -> Result<Clustering> {
+    if k == 0 {
+        return Err(Error::Clustering("k must be positive".into()));
+    }
+    if k > data.len() {
+        return Err(Error::Clustering(format!(
+            "k={k} exceeds {} points",
+            data.len()
+        )));
+    }
+    let mut rng = SplitMix64::new(seed);
+    let mut centres = seed_centres(data, k, &mut rng);
+    let mut labels = vec![0usize; data.len()];
+
+    for _ in 0..MAX_ITERS {
+        // Assignment step.
+        for (i, &x) in data.iter().enumerate() {
+            let mut best = (0usize, f64::INFINITY);
+            for (j, &c) in centres.iter().enumerate() {
+                let d = (x - c).abs();
+                if d < best.1 {
+                    best = (j, d);
+                }
+            }
+            labels[i] = best.0;
+        }
+        // Update step.
+        let mut sum = vec![0.0; k];
+        let mut cnt = vec![0usize; k];
+        for (&l, &x) in labels.iter().zip(data) {
+            sum[l] += x;
+            cnt[l] += 1;
+        }
+        let mut moved = 0.0f64;
+        for j in 0..k {
+            if cnt[j] == 0 {
+                // Empty cluster: re-seed at the point farthest from its
+                // centre (standard k-means repair).
+                let far = data
+                    .iter()
+                    .enumerate()
+                    .max_by(|(_, a), (_, b)| {
+                        let da = (*a - centres[labels_nearest(&centres, **a)]).abs();
+                        let db = (*b - centres[labels_nearest(&centres, **b)]).abs();
+                        da.total_cmp(&db)
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                moved = moved.max((centres[j] - data[far]).abs());
+                centres[j] = data[far];
+                continue;
+            }
+            let new = sum[j] / cnt[j] as f64;
+            moved = moved.max((new - centres[j]).abs());
+            centres[j] = new;
+        }
+        if moved < TOL {
+            break;
+        }
+    }
+    Ok(Clustering { labels, k })
+}
+
+fn labels_nearest(centres: &[f64], x: f64) -> usize {
+    let mut best = (0usize, f64::INFINITY);
+    for (j, &c) in centres.iter().enumerate() {
+        let d = (x - c).abs();
+        if d < best.1 {
+            best = (j, d);
+        }
+    }
+    best.0
+}
+
+/// Within-cluster sum of squares — the objective Lloyd descends; used by
+/// tests and the ablation bench.
+pub fn inertia(data: &[f64], clustering: &Clustering) -> f64 {
+    let cents = clustering.centroids(data);
+    clustering
+        .labels
+        .iter()
+        .zip(data)
+        .filter(|(l, _)| **l != super::NOISE)
+        .map(|(&l, &x)| (x - cents[l]) * (x - cents[l]))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_blobs() -> Vec<f64> {
+        let mut v: Vec<f64> = (0..30).map(|i| 0.0 + 0.01 * i as f64).collect();
+        v.extend((0..30).map(|i| 4.0 + 0.01 * i as f64));
+        v.extend((0..30).map(|i| 9.0 + 0.01 * i as f64));
+        v
+    }
+
+    #[test]
+    fn finds_three_blobs() {
+        let data = three_blobs();
+        let c = cluster(&data, 3, 42).unwrap();
+        assert_eq!(c.k, 3);
+        // Each blob uniform.
+        for blob in 0..3 {
+            let ls = &c.labels[blob * 30..(blob + 1) * 30];
+            assert!(ls.iter().all(|&l| l == ls[0]), "blob {blob} split");
+        }
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let data = three_blobs();
+        let a = cluster(&data, 3, 7).unwrap();
+        let b = cluster(&data, 3, 7).unwrap();
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_clusters() {
+        let data = three_blobs();
+        let i2 = inertia(&data, &cluster(&data, 2, 1).unwrap());
+        let i3 = inertia(&data, &cluster(&data, 3, 1).unwrap());
+        let i5 = inertia(&data, &cluster(&data, 5, 1).unwrap());
+        assert!(i3 < i2);
+        assert!(i5 <= i3 + 1e-9);
+    }
+
+    #[test]
+    fn k_equals_n_gives_zero_inertia() {
+        let data = vec![1.0, 5.0, 9.0];
+        let c = cluster(&data, 3, 3).unwrap();
+        assert!(inertia(&data, &c) < 1e-12);
+    }
+
+    #[test]
+    fn rejects_invalid_k() {
+        assert!(cluster(&[1.0], 0, 1).is_err());
+        assert!(cluster(&[1.0], 2, 1).is_err());
+    }
+
+    #[test]
+    fn survives_identical_points() {
+        let data = vec![2.5; 40];
+        let c = cluster(&data, 3, 11).unwrap();
+        assert_eq!(c.labels.len(), 40);
+    }
+}

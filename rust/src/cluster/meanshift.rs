@@ -1,0 +1,128 @@
+//! Mean-Shift clustering (paper §IV-C, citing Comaniciu & Meer).
+//!
+//! "KDE assumes that the data points are generated from an underlying
+//! distribution ... points iteratively climb the KDE surface and are
+//! shifted to the nearest KDE peaks ... does not need the number of
+//! clusters beforehand ... the selection of the window size/radius r
+//! can be non-trivial. Setting the radius as 0.4 for the slack values
+//! of a 16x16 systolic array yields 4 clusters."
+//!
+//! Flat (uniform) kernel within `bandwidth`, matching sklearn's
+//! `MeanShift` that the paper's experiments used ("the sklearn
+//! implementation"); modes within half a bandwidth are merged.
+
+use super::Clustering;
+use crate::error::{Error, Result};
+
+/// Convergence threshold on the shift step.
+pub const TOL: f64 = 1e-7;
+/// Maximum hill-climb iterations per point.
+pub const MAX_ITERS: usize = 300;
+
+/// Mean-shift over 1-D data with flat kernel of radius `bandwidth`.
+pub fn cluster(data: &[f64], bandwidth: f64) -> Result<Clustering> {
+    if !(bandwidth > 0.0) {
+        return Err(Error::Clustering(format!(
+            "bandwidth must be positive, got {bandwidth}"
+        )));
+    }
+    // Sort once + prefix sums; the window mean is then O(log n) per
+    // shift instead of sklearn's O(n) ball query.
+    let mut sorted: Vec<f64> = data.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let mut prefix = Vec::with_capacity(sorted.len() + 1);
+    prefix.push(0.0);
+    for &v in &sorted {
+        prefix.push(prefix.last().unwrap() + v);
+    }
+
+    let shift_to_mode = |start: f64| -> f64 {
+        let mut x = start;
+        for _ in 0..MAX_ITERS {
+            // Points within [x - h, x + h] (flat kernel support).
+            let lo = sorted.partition_point(|&v| v < x - bandwidth);
+            let hi = sorted.partition_point(|&v| v <= x + bandwidth);
+            if lo >= hi {
+                return x;
+            }
+            let next = (prefix[hi] - prefix[lo]) / (hi - lo) as f64;
+            if (next - x).abs() < TOL {
+                return next;
+            }
+            x = next;
+        }
+        x
+    };
+
+    // Climb from every point, then merge modes within bandwidth / 2.
+    // Grouping is done over the *sorted* modes (single-linkage gaps) so
+    // the clustering is invariant to input order — naive first-seen
+    // chaining would merge or split depending on arrival order.
+    let modes_raw: Vec<f64> = data.iter().map(|&x| shift_to_mode(x)).collect();
+    let mut order: Vec<usize> = (0..modes_raw.len()).collect();
+    order.sort_by(|&a, &b| modes_raw[a].total_cmp(&modes_raw[b]));
+    let mut labels = vec![0usize; data.len()];
+    let mut k = 0usize;
+    let mut prev_mode = f64::NEG_INFINITY;
+    for &i in &order {
+        let m = modes_raw[i];
+        if m - prev_mode > bandwidth * 0.5 {
+            k += 1; // gap between consecutive modes: new cluster
+        }
+        labels[i] = k - 1;
+        prev_mode = m;
+    }
+    Ok(Clustering { labels, k })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_blobs_two_modes() {
+        let mut data: Vec<f64> = (0..40).map(|i| 0.0 + 0.005 * i as f64).collect();
+        data.extend((0..40).map(|i| 3.0 + 0.005 * i as f64));
+        let c = cluster(&data, 0.3).unwrap();
+        assert_eq!(c.k, 2);
+        assert!(c.labels[..40].iter().all(|&l| l == c.labels[0]));
+        assert!(c.labels[40..].iter().all(|&l| l == c.labels[40]));
+    }
+
+    #[test]
+    fn huge_bandwidth_gives_one_cluster() {
+        let data: Vec<f64> = (0..50).map(|i| i as f64 * 0.1).collect();
+        let c = cluster(&data, 100.0).unwrap();
+        assert_eq!(c.k, 1);
+    }
+
+    #[test]
+    fn tiny_bandwidth_gives_many_clusters() {
+        let data: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let c = cluster(&data, 0.05).unwrap();
+        assert_eq!(c.k, 10);
+    }
+
+    #[test]
+    fn rejects_nonpositive_bandwidth() {
+        assert!(cluster(&[1.0, 2.0], 0.0).is_err());
+        assert!(cluster(&[1.0, 2.0], -1.0).is_err());
+    }
+
+    #[test]
+    fn deterministic() {
+        let data: Vec<f64> = (0..60).map(|i| ((i * 37) % 11) as f64 * 0.5).collect();
+        let a = cluster(&data, 0.4).unwrap();
+        let b = cluster(&data, 0.4).unwrap();
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn modes_are_stable_under_point_order() {
+        let data = vec![1.0, 1.1, 1.2, 5.0, 5.1, 5.2];
+        let rev: Vec<f64> = data.iter().rev().cloned().collect();
+        let a = cluster(&data, 0.3).unwrap();
+        let b = cluster(&rev, 0.3).unwrap();
+        assert_eq!(a.k, b.k);
+    }
+}

@@ -1,0 +1,271 @@
+//! S5 — Clustering algorithms (paper §IV).
+//!
+//! The paper groups MACs by their minimum slack with four "commonly-used
+//! clustering algorithms": Hierarchical (agglomerative), K-Means
+//! (k-means++ seeded), Mean-Shift (Gaussian KDE) and DBSCAN. The data is
+//! one-dimensional (a slack value per MAC), which we exploit for exact
+//! O(n log n) agglomerative merging and two-pointer DBSCAN neighbourhood
+//! queries — at 64x64 the input is 4096 points and the naive O(n^3)
+//! dendrogram of the paper's sklearn run would dominate the whole flow.
+//!
+//! All algorithms return a [`Clustering`]; `NOISE` marks DBSCAN outliers
+//! ("the greatest advantage of DBSCAN is that it can identify outliers").
+
+pub mod dbscan;
+pub mod hierarchical;
+pub mod kmeans;
+pub mod meanshift;
+
+
+use crate::error::{Error, Result};
+
+/// Label value for DBSCAN noise points.
+pub const NOISE: usize = usize::MAX;
+
+/// Result of clustering `n` one-dimensional points.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    /// Cluster label per input point; `NOISE` for outliers.
+    pub labels: Vec<usize>,
+    /// Number of clusters (labels are `0..k`).
+    pub k: usize,
+}
+
+impl Clustering {
+    /// Number of points assigned to each cluster.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k];
+        for &l in &self.labels {
+            if l != NOISE {
+                sizes[l] += 1;
+            }
+        }
+        sizes
+    }
+
+    /// Indices of noise points.
+    pub fn noise_points(&self) -> Vec<usize> {
+        (0..self.labels.len())
+            .filter(|&i| self.labels[i] == NOISE)
+            .collect()
+    }
+
+    /// Mean of each cluster over `data` (the per-cluster slack centroid
+    /// used to order partitions by criticality).
+    pub fn centroids(&self, data: &[f64]) -> Vec<f64> {
+        let mut sum = vec![0.0; self.k];
+        let mut cnt = vec![0usize; self.k];
+        for (&l, &x) in self.labels.iter().zip(data) {
+            if l != NOISE {
+                sum[l] += x;
+                cnt[l] += 1;
+            }
+        }
+        sum.iter()
+            .zip(&cnt)
+            .map(|(s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
+            .collect()
+    }
+
+    /// Relabel clusters so cluster 0 has the smallest centroid (most
+    /// critical slack group) — canonical order for voltage assignment.
+    pub fn sorted_by_centroid(mut self, data: &[f64]) -> Self {
+        let cent = self.centroids(data);
+        let mut order: Vec<usize> = (0..self.k).collect();
+        order.sort_by(|&a, &b| cent[a].total_cmp(&cent[b]));
+        let mut remap = vec![0usize; self.k];
+        for (new, &old) in order.iter().enumerate() {
+            remap[old] = new;
+        }
+        for l in &mut self.labels {
+            if *l != NOISE {
+                *l = remap[*l];
+            }
+        }
+        self
+    }
+
+    fn validate(&self, n: usize) -> Result<()> {
+        if self.labels.len() != n {
+            return Err(Error::Clustering(format!(
+                "{} labels for {} points",
+                self.labels.len(),
+                n
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Algorithm selector + hyper-parameters (paper §IV: "algorithms can be
+/// chosen based on the design requirements").
+#[derive(Debug, Clone)]
+pub enum Algorithm {
+    /// Agglomerative with a target cluster count (from the dendrogram).
+    Hierarchical { k: usize },
+    /// K-Means with k-means++ seeding.
+    KMeans { k: usize, seed: u64 },
+    /// Mean-Shift with Gaussian kernel bandwidth (paper: radius 0.4 on
+    /// the 16x16 slack data yields 4 clusters).
+    MeanShift { bandwidth: f64 },
+    /// DBSCAN; the paper picks it as the best fit ("groups together
+    /// data-points close by ... can also identify outliers").
+    Dbscan { eps: f64, min_points: usize },
+}
+
+impl Algorithm {
+    /// Run the selected algorithm over 1-D `data`.
+    pub fn run(&self, data: &[f64]) -> Result<Clustering> {
+        if data.is_empty() {
+            return Err(Error::Clustering("empty input".into()));
+        }
+        if data.iter().any(|x| !x.is_finite()) {
+            return Err(Error::Clustering("non-finite slack value".into()));
+        }
+        let c = match *self {
+            Algorithm::Hierarchical { k } => hierarchical::cluster(data, k)?,
+            Algorithm::KMeans { k, seed } => kmeans::cluster(data, k, seed)?,
+            Algorithm::MeanShift { bandwidth } => meanshift::cluster(data, bandwidth)?,
+            Algorithm::Dbscan { eps, min_points } => dbscan::cluster(data, eps, min_points)?,
+        };
+        c.validate(data.len())?;
+        Ok(c.sorted_by_centroid(data))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Hierarchical { .. } => "hierarchical",
+            Algorithm::KMeans { .. } => "kmeans",
+            Algorithm::MeanShift { .. } => "meanshift",
+            Algorithm::Dbscan { .. } => "dbscan",
+        }
+    }
+
+    /// The paper's default: DBSCAN ("found to perform the best in this
+    /// case"), with eps/min_points tuned for slack data in nanoseconds.
+    pub fn paper_default() -> Self {
+        Algorithm::Dbscan {
+            eps: 0.08,
+            min_points: 4,
+        }
+    }
+}
+
+/// Mean silhouette coefficient of a clustering over 1-D data — the
+/// quality metric used by the ablation bench to compare the four
+/// algorithms (higher is better, range [-1, 1]).
+pub fn silhouette(data: &[f64], clustering: &Clustering) -> f64 {
+    let k = clustering.k;
+    if k < 2 {
+        return 0.0;
+    }
+    let mut by_cluster: Vec<Vec<f64>> = vec![Vec::new(); k];
+    for (&l, &x) in clustering.labels.iter().zip(data) {
+        if l != NOISE {
+            by_cluster[l].push(x);
+        }
+    }
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for (&l, &x) in clustering.labels.iter().zip(data) {
+        if l == NOISE || by_cluster[l].len() < 2 {
+            continue;
+        }
+        let a = by_cluster[l]
+            .iter()
+            .map(|&y| (x - y).abs())
+            .sum::<f64>()
+            / (by_cluster[l].len() - 1) as f64;
+        let b = (0..k)
+            .filter(|&j| j != l && !by_cluster[j].is_empty())
+            .map(|j| {
+                by_cluster[j].iter().map(|&y| (x - y).abs()).sum::<f64>()
+                    / by_cluster[j].len() as f64
+            })
+            .fold(f64::INFINITY, f64::min);
+        if b.is_finite() {
+            total += (b - a) / a.max(b);
+            count += 1;
+        }
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two well-separated 1-D blobs.
+    fn blobs() -> Vec<f64> {
+        let mut v: Vec<f64> = (0..50).map(|i| 1.0 + 0.001 * i as f64).collect();
+        v.extend((0..50).map(|i| 5.0 + 0.001 * i as f64));
+        v
+    }
+
+    #[test]
+    fn all_algorithms_find_two_blobs() {
+        let data = blobs();
+        let algos = [
+            Algorithm::Hierarchical { k: 2 },
+            Algorithm::KMeans { k: 2, seed: 1 },
+            Algorithm::MeanShift { bandwidth: 0.5 },
+            Algorithm::Dbscan {
+                eps: 0.1,
+                min_points: 3,
+            },
+        ];
+        for algo in algos {
+            let c = algo.run(&data).unwrap();
+            assert_eq!(c.k, 2, "{}", algo.name());
+            // Canonical order: cluster 0 = lower centroid.
+            assert!(c.labels[..50].iter().all(|&l| l == 0), "{}", algo.name());
+            assert!(c.labels[50..].iter().all(|&l| l == 1), "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn sorted_by_centroid_is_ascending() {
+        let data = blobs();
+        let c = Algorithm::KMeans { k: 2, seed: 99 }.run(&data).unwrap();
+        let cents = c.centroids(&data);
+        assert!(cents[0] < cents[1]);
+    }
+
+    #[test]
+    fn silhouette_high_for_separated_blobs() {
+        let data = blobs();
+        let c = Algorithm::Hierarchical { k: 2 }.run(&data).unwrap();
+        assert!(silhouette(&data, &c) > 0.9);
+    }
+
+    #[test]
+    fn silhouette_lower_for_overclustering() {
+        let data = blobs();
+        let c2 = Algorithm::Hierarchical { k: 2 }.run(&data).unwrap();
+        let c4 = Algorithm::Hierarchical { k: 4 }.run(&data).unwrap();
+        assert!(silhouette(&data, &c2) > silhouette(&data, &c4));
+    }
+
+    #[test]
+    fn rejects_empty_and_nan() {
+        assert!(Algorithm::paper_default().run(&[]).is_err());
+        assert!(Algorithm::paper_default().run(&[1.0, f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn sizes_and_noise_accounting() {
+        let data = blobs();
+        let c = Algorithm::Dbscan {
+            eps: 0.1,
+            min_points: 3,
+        }
+        .run(&data)
+        .unwrap();
+        let sizes: usize = c.sizes().iter().sum();
+        assert_eq!(sizes + c.noise_points().len(), data.len());
+    }
+}

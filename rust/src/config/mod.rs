@@ -1,0 +1,313 @@
+//! Configuration system: TOML-backed settings for flows and serving.
+//!
+//! `vstpu --config vstpu.toml <cmd>` loads one of these; every field has
+//! a paper-faithful default so an empty file (or none) reproduces the
+//! paper's primary configuration (16x16 array, Artix-7 28nm, 100 MHz,
+//! DBSCAN clustering, guard-band voltage range).
+//!
+//! The parser is a deliberate TOML subset (this build is fully vendored,
+//! no external TOML crate): `[section]` headers, `key = value` lines
+//! with string / number / boolean values, and `#` comments. Unknown
+//! sections or keys are an error — a typo must not silently fall back to
+//! a default.
+
+use std::path::Path;
+
+use crate::cluster::Algorithm;
+use crate::error::{Error, Result};
+use crate::tech::Technology;
+
+/// Top-level configuration file.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub flow: FlowSection,
+    pub serve: ServeSection,
+}
+
+/// `[flow]` — CAD-flow parameters.
+#[derive(Debug, Clone)]
+pub struct FlowSection {
+    /// Systolic-array edge (16 / 32 / 64 in the paper).
+    pub array_size: u32,
+    /// Technology preset name (see `Technology::paper_suite`).
+    pub tech: String,
+    pub clock_mhz: f64,
+    /// Clustering algorithm: "hierarchical" | "kmeans" | "meanshift" | "dbscan".
+    pub algorithm: String,
+    /// Cluster count for hierarchical/kmeans.
+    pub k: usize,
+    /// Bandwidth for meanshift (paper: 0.4).
+    pub bandwidth: f64,
+    /// eps/min_points for dbscan (eps <= 0 means auto).
+    pub eps: f64,
+    pub min_points: usize,
+    /// Algorithm-1 stepping range; 0 = use the tech guard band.
+    pub v_lo: f64,
+    pub v_hi: f64,
+    /// Run the Razor runtime calibration after the static scheme.
+    pub calibrate: bool,
+    /// Netlist process-variation seed.
+    pub seed: u64,
+}
+
+impl Default for FlowSection {
+    fn default() -> Self {
+        Self {
+            array_size: 16,
+            tech: "artix7-28nm".into(),
+            clock_mhz: 100.0,
+            algorithm: "dbscan".into(),
+            k: 4,
+            bandwidth: 0.4,
+            eps: 0.0,
+            min_points: 4,
+            v_lo: 0.0,
+            v_hi: 0.0,
+            calibrate: true,
+            seed: 2021,
+        }
+    }
+}
+
+/// `[serve]` — coordinator parameters.
+#[derive(Debug, Clone)]
+pub struct ServeSection {
+    /// Directory holding `*.hlo.txt` + `manifest.json`.
+    pub artifacts_dir: String,
+    /// Model batch size (must match the lowered artifact).
+    pub batch: usize,
+    /// Max microseconds a partial batch waits before flushing.
+    pub batch_timeout_us: u64,
+    /// Requests between voltage-controller epochs.
+    pub voltage_epoch: usize,
+    /// Razor shadow lag override (0 = default).
+    pub t_del_ns: f64,
+}
+
+impl Default for ServeSection {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            batch: 32,
+            batch_timeout_us: 2_000,
+            voltage_epoch: 8,
+            t_del_ns: 0.0,
+        }
+    }
+}
+
+/// Strip quotes from a TOML string value.
+fn unquote(v: &str) -> String {
+    v.trim().trim_matches('"').to_string()
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, v: &str) -> Result<T> {
+    v.trim()
+        .parse::<T>()
+        .map_err(|_| Error::Config(format!("bad value for {key}: '{v}'")))
+}
+
+fn parse_bool(key: &str, v: &str) -> Result<bool> {
+    match v.trim() {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        other => Err(Error::Config(format!("bad boolean for {key}: '{other}'"))),
+    }
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text).map_err(|e| Error::Config(format!("{path:?}: {e}")))
+    }
+
+    /// Parse the TOML subset described in the module docs.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section != "flow" && section != "serve" {
+                    return Err(Error::Config(format!(
+                        "line {}: unknown section [{section}]",
+                        lineno + 1
+                    )));
+                }
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(Error::Config(format!(
+                    "line {}: expected key = value",
+                    lineno + 1
+                )));
+            };
+            let key = key.trim();
+            cfg.set(&section, key, value).map_err(|e| {
+                Error::Config(format!("line {}: {e}", lineno + 1))
+            })?;
+        }
+        Ok(cfg)
+    }
+
+    fn set(&mut self, section: &str, key: &str, v: &str) -> Result<()> {
+        match (section, key) {
+            ("flow", "array_size") => self.flow.array_size = parse_num(key, v)?,
+            ("flow", "tech") => self.flow.tech = unquote(v),
+            ("flow", "clock_mhz") => self.flow.clock_mhz = parse_num(key, v)?,
+            ("flow", "algorithm") => self.flow.algorithm = unquote(v),
+            ("flow", "k") => self.flow.k = parse_num(key, v)?,
+            ("flow", "bandwidth") => self.flow.bandwidth = parse_num(key, v)?,
+            ("flow", "eps") => self.flow.eps = parse_num(key, v)?,
+            ("flow", "min_points") => self.flow.min_points = parse_num(key, v)?,
+            ("flow", "v_lo") => self.flow.v_lo = parse_num(key, v)?,
+            ("flow", "v_hi") => self.flow.v_hi = parse_num(key, v)?,
+            ("flow", "calibrate") => self.flow.calibrate = parse_bool(key, v)?,
+            ("flow", "seed") => self.flow.seed = parse_num(key, v)?,
+            ("serve", "artifacts_dir") => self.serve.artifacts_dir = unquote(v),
+            ("serve", "batch") => self.serve.batch = parse_num(key, v)?,
+            ("serve", "batch_timeout_us") => self.serve.batch_timeout_us = parse_num(key, v)?,
+            ("serve", "voltage_epoch") => self.serve.voltage_epoch = parse_num(key, v)?,
+            ("serve", "t_del_ns") => self.serve.t_del_ns = parse_num(key, v)?,
+            _ => {
+                return Err(Error::Config(format!(
+                    "unknown key '{key}' in section [{section}]"
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_toml(&self) -> String {
+        format!(
+            "[flow]\n\
+             array_size = {}\n\
+             tech = \"{}\"\n\
+             clock_mhz = {}\n\
+             algorithm = \"{}\"\n\
+             k = {}\n\
+             bandwidth = {}\n\
+             eps = {}\n\
+             min_points = {}\n\
+             v_lo = {}\n\
+             v_hi = {}\n\
+             calibrate = {}\n\
+             seed = {}\n\
+             \n\
+             [serve]\n\
+             artifacts_dir = \"{}\"\n\
+             batch = {}\n\
+             batch_timeout_us = {}\n\
+             voltage_epoch = {}\n\
+             t_del_ns = {}\n",
+            self.flow.array_size,
+            self.flow.tech,
+            self.flow.clock_mhz,
+            self.flow.algorithm,
+            self.flow.k,
+            self.flow.bandwidth,
+            self.flow.eps,
+            self.flow.min_points,
+            self.flow.v_lo,
+            self.flow.v_hi,
+            self.flow.calibrate,
+            self.flow.seed,
+            self.serve.artifacts_dir,
+            self.serve.batch,
+            self.serve.batch_timeout_us,
+            self.serve.voltage_epoch,
+            self.serve.t_del_ns,
+        )
+    }
+
+    /// Resolve the `[flow]` section into concrete flow inputs.
+    pub fn resolve_flow(&self) -> Result<(Technology, Algorithm)> {
+        let tech = Technology::by_name(&self.flow.tech)
+            .ok_or_else(|| Error::Config(format!("unknown tech '{}'", self.flow.tech)))?;
+        let algorithm = match self.flow.algorithm.as_str() {
+            "hierarchical" => Algorithm::Hierarchical { k: self.flow.k },
+            "kmeans" => Algorithm::KMeans {
+                k: self.flow.k,
+                seed: self.flow.seed,
+            },
+            "meanshift" => Algorithm::MeanShift {
+                bandwidth: self.flow.bandwidth,
+            },
+            "dbscan" => {
+                if self.flow.eps > 0.0 {
+                    Algorithm::Dbscan {
+                        eps: self.flow.eps,
+                        min_points: self.flow.min_points,
+                    }
+                } else {
+                    Algorithm::paper_default()
+                }
+            }
+            other => return Err(Error::Config(format!("unknown algorithm '{other}'"))),
+        };
+        Ok((tech, algorithm))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_resolves_to_paper_setup() {
+        let cfg = Config::default();
+        let (tech, algo) = cfg.resolve_flow().unwrap();
+        assert_eq!(tech.name, "artix7-28nm");
+        assert_eq!(algo.name(), "dbscan");
+        assert_eq!(cfg.flow.array_size, 16);
+        assert_eq!(cfg.flow.clock_mhz, 100.0);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = Config::default();
+        let text = cfg.to_toml();
+        let back = Config::parse(&text).unwrap();
+        assert_eq!(back.flow.array_size, cfg.flow.array_size);
+        assert_eq!(back.flow.tech, cfg.flow.tech);
+        assert_eq!(back.serve.batch, cfg.serve.batch);
+        assert_eq!(back.flow.calibrate, cfg.flow.calibrate);
+    }
+
+    #[test]
+    fn partial_toml_fills_defaults() {
+        let cfg = Config::parse(
+            "# comment\n[flow]\narray_size = 32\ntech = \"academic-22nm\"\nalgorithm = \"kmeans\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.flow.array_size, 32);
+        assert_eq!(cfg.serve.batch, 32); // default section
+        assert_eq!(cfg.flow.clock_mhz, 100.0); // default key
+        let (tech, algo) = cfg.resolve_flow().unwrap();
+        assert_eq!(tech.node_nm, 22);
+        assert_eq!(algo.name(), "kmeans");
+    }
+
+    #[test]
+    fn parse_rejects_typos() {
+        assert!(Config::parse("[flwo]\n").is_err());
+        assert!(Config::parse("[flow]\narray_sz = 16\n").is_err());
+        assert!(Config::parse("[flow]\narray_size 16\n").is_err());
+        assert!(Config::parse("[flow]\ncalibrate = maybe\n").is_err());
+        assert!(Config::parse("[flow]\narray_size = sixteen\n").is_err());
+    }
+
+    #[test]
+    fn bad_tech_and_algo_are_rejected() {
+        let mut cfg = Config::default();
+        cfg.flow.tech = "7nm-dreams".into();
+        assert!(cfg.resolve_flow().is_err());
+        let mut cfg = Config::default();
+        cfg.flow.algorithm = "voronoi".into();
+        assert!(cfg.resolve_flow().is_err());
+    }
+}

@@ -1,0 +1,644 @@
+//! S12 — Serving coordinator: the L3 request path.
+//!
+//! ```text
+//!  clients -> router (mpsc) -> Batcher -> PJRT model_fwd artifact
+//!                                |            |
+//!                                |            +-> logits  -> responses
+//!                                |            +-> toggle telemetry
+//!                                v                 |
+//!                        LatencyHistogram          v
+//!                                         VoltageController
+//!                                  (Razor sim + Algorithm 2 epochs)
+//! ```
+//!
+//! The coordinator owns the voltage-scaled systolic array end to end:
+//! requests are batched and executed through the AOT-compiled JAX/Pallas
+//! model (python never runs here), the per-layer toggle telemetry the
+//! model emits (L1 activity kernel) feeds the Razor error model, and
+//! every `voltage_epoch` batches the runtime scheme (paper Algorithm 2)
+//! re-calibrates the partition rails against the *measured* activity —
+//! the paper's future-work item (i) ("grouping input sequences with
+//! similar delay characteristics to predict future timing failures")
+//! falls out of this loop for free.
+//!
+//! Outputs computed while a partition is past its shadow window are
+//! corrupted (deterministically) before being returned — the mechanism
+//! behind the paper's "DNN accuracy near to zero" below `V_crash`, and
+//! the knob the e2e example sweeps.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::cadflow::equal_quartile_clustering;
+use crate::error::{Error, Result};
+use crate::floorplan;
+use crate::fpga::{Device, Partition};
+use crate::metrics::LatencyHistogram;
+use crate::netlist::{MacId, SystolicNetlist};
+use crate::power::PowerModel;
+use crate::razor::{trial_partition, MacOutcome, RazorConfig, DEFAULT_TOGGLE};
+use crate::runtime::{Engine, LoadedModel, Tensor};
+use crate::tech::Technology;
+use crate::timing;
+use crate::util::hash3_unit;
+use crate::voltage::static_scheme;
+
+/// Input width of the model artifact (see `python/compile/model.py`).
+pub const MODEL_INPUT: usize = 784;
+/// Logit width.
+pub const MODEL_OUTPUT: usize = 16;
+/// Hidden-layer input widths whose toggle telemetry the artifact emits.
+pub const TELEMETRY_WIDTHS: [usize; 3] = [784, 128, 64];
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Batch the model artifact was lowered at.
+    pub batch: usize,
+    /// Systolic-array edge the model runs on.
+    pub array_size: u32,
+    pub tech: Technology,
+    pub clock_mhz: f64,
+    pub razor: RazorConfig,
+    /// Batches between voltage-controller epochs.
+    pub voltage_epoch: usize,
+    /// Netlist seed (must match the flow that placed the design).
+    pub seed: u64,
+    /// Start rails at the static scheme over this range.
+    pub v_lo: f64,
+    pub v_hi: f64,
+}
+
+impl CoordinatorConfig {
+    pub fn paper_default(tech: Technology) -> Self {
+        let (v_lo, v_hi) = (tech.v_min, tech.v_nom);
+        Self {
+            batch: 32,
+            array_size: 16,
+            tech,
+            clock_mhz: 100.0,
+            razor: RazorConfig::default(),
+            voltage_epoch: 8,
+            seed: 2021,
+            v_lo,
+            v_hi,
+        }
+    }
+}
+
+/// One inference request: a single 784-wide int8 sample.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub input: Vec<i8>,
+}
+
+/// One response.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// True if a silently-failing partition corrupted these logits.
+    pub corrupted: bool,
+    pub latency_us: u64,
+}
+
+/// Telemetry snapshot after a batch.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    /// EWMA toggle rate per systolic-array row.
+    pub row_toggle: Vec<f64>,
+    /// Current rail per partition.
+    pub rails: Vec<f64>,
+    /// Dynamic power at the current rails/activity (mW).
+    pub power_mw: f64,
+    /// Partitions currently flagged by Razor.
+    pub flagged: Vec<bool>,
+    /// Partitions silently failing.
+    pub silent: Vec<bool>,
+    pub batches: u64,
+    pub requests: u64,
+}
+
+/// Fixed-size batcher: collects single samples into the artifact batch,
+/// padding short batches with zero samples.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    batch: usize,
+    width: usize,
+    pending: Vec<InferenceRequest>,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, width: usize) -> Self {
+        Self {
+            batch,
+            width,
+            pending: Vec::with_capacity(batch),
+        }
+    }
+
+    /// Queue a request; returns a full batch when ready.
+    pub fn push(&mut self, req: InferenceRequest) -> Result<Option<Vec<InferenceRequest>>> {
+        if req.input.len() != self.width {
+            return Err(Error::Serve(format!(
+                "request {}: input width {} != {}",
+                req.id,
+                req.input.len(),
+                self.width
+            )));
+        }
+        self.pending.push(req);
+        if self.pending.len() >= self.batch {
+            Ok(Some(std::mem::take(&mut self.pending)))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Flush a partial batch (timeout path).
+    pub fn flush(&mut self) -> Option<Vec<InferenceRequest>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Pack requests into the artifact's row-major int8 input, padding
+    /// to the fixed batch with zeros.
+    pub fn pack(&self, reqs: &[InferenceRequest]) -> Vec<i8> {
+        let mut data = vec![0i8; self.batch * self.width];
+        for (i, r) in reqs.iter().enumerate().take(self.batch) {
+            data[i * self.width..(i + 1) * self.width].copy_from_slice(&r.input);
+        }
+        data
+    }
+}
+
+/// The voltage controller: owns the partitions and applies Algorithm 2
+/// with *measured* toggle rates each epoch.
+#[derive(Debug, Clone)]
+pub struct VoltageController {
+    pub partitions: Vec<Partition>,
+    netlist: SystolicNetlist,
+    tech: Technology,
+    razor: RazorConfig,
+    vs: f64,
+    v_floor: f64,
+    v_ceil: f64,
+    /// EWMA per-row toggle rate (rows of the systolic array).
+    row_toggle: Vec<f64>,
+    pub flagged: Vec<bool>,
+    pub silent: Vec<bool>,
+}
+
+impl VoltageController {
+    pub fn new(cfg: &CoordinatorConfig) -> Result<Self> {
+        let netlist =
+            SystolicNetlist::generate(cfg.array_size, &cfg.tech, cfg.clock_mhz, cfg.seed);
+        let synth = timing::synthesize(&netlist);
+        let slacks: Vec<f64> = synth
+            .min_slack_per_mac(cfg.array_size)
+            .iter()
+            .map(|s| s.min_slack_ns)
+            .collect();
+        let clustering = equal_quartile_clustering(&slacks);
+        let device = Device::for_array(cfg.array_size);
+        let mut partitions = floorplan::quadrants(&device, &clustering, cfg.array_size)?;
+        let rails = static_scheme::assign(&clustering, &slacks, cfg.v_hi, cfg.v_lo)?;
+        for p in partitions.iter_mut() {
+            p.vccint = rails
+                .iter()
+                .find(|r| r.partition == p.id)
+                .expect("rail")
+                .vccint;
+        }
+        let n = partitions.len();
+        Ok(Self {
+            partitions,
+            netlist,
+            tech: cfg.tech.clone(),
+            razor: cfg.razor.clone(),
+            vs: static_scheme::step(cfg.v_hi, cfg.v_lo, n),
+            v_floor: cfg.v_lo,
+            v_ceil: cfg.tech.v_nom,
+            row_toggle: vec![DEFAULT_TOGGLE; cfg.array_size as usize],
+            flagged: vec![false; n],
+            silent: vec![false; n],
+        })
+    }
+
+    /// Fold a layer's per-lane toggle telemetry into the per-row EWMA
+    /// (lane k streams into array row k mod size).
+    pub fn observe_toggles(&mut self, lane_rates: &[f32]) {
+        let size = self.row_toggle.len();
+        let mut acc = vec![0.0f64; size];
+        let mut cnt = vec![0usize; size];
+        for (k, &r) in lane_rates.iter().enumerate() {
+            acc[k % size] += r as f64;
+            cnt[k % size] += 1;
+        }
+        const ALPHA: f64 = 0.25; // EWMA smoothing
+        for (row, t) in self.row_toggle.iter_mut().enumerate() {
+            if cnt[row] > 0 {
+                let mean = acc[row] / cnt[row] as f64;
+                *t = (1.0 - ALPHA) * *t + ALPHA * mean;
+            }
+        }
+    }
+
+    /// Measured toggle rate the MAC at `mac` currently sees.
+    pub fn toggle_of(&self, mac: MacId) -> f64 {
+        self.row_toggle[mac.row as usize % self.row_toggle.len()]
+    }
+
+    /// Evaluate Razor over every partition at the current rails.
+    pub fn sense(&mut self) {
+        let toggles = self.row_toggle.clone();
+        let size = toggles.len();
+        for (i, p) in self.partitions.iter().enumerate() {
+            let t = trial_partition(
+                &self.netlist,
+                &self.tech,
+                &self.razor,
+                p.id,
+                &p.macs,
+                p.vccint,
+                |m: MacId| toggles[m.row as usize % size],
+            );
+            self.flagged[i] = t.timing_fail;
+            self.silent[i] = t.silent;
+        }
+    }
+
+    /// One Algorithm-2 epoch: sense, then step every rail.
+    pub fn epoch(&mut self) {
+        self.sense();
+        for (i, p) in self.partitions.iter_mut().enumerate() {
+            if self.flagged[i] {
+                p.vccint = (p.vccint + self.vs).min(self.v_ceil);
+            } else {
+                p.vccint = (p.vccint - self.vs).max(self.v_floor);
+            }
+        }
+    }
+
+    /// Force every rail (fault-injection/sweep hook).
+    pub fn set_rails(&mut self, v: f64) {
+        for p in self.partitions.iter_mut() {
+            p.vccint = v;
+        }
+    }
+
+    pub fn rails(&self) -> Vec<f64> {
+        self.partitions.iter().map(|p| p.vccint).collect()
+    }
+
+    /// Column span (inclusive) of a partition's MACs — the logit columns
+    /// a silent failure corrupts.
+    fn col_span(&self, i: usize) -> (u32, u32) {
+        let cols: Vec<u32> = self.partitions[i].macs.iter().map(|m| m.col).collect();
+        (
+            *cols.iter().min().unwrap_or(&0),
+            *cols.iter().max().unwrap_or(&0),
+        )
+    }
+
+    /// Does any arc of this partition run silently past the shadow
+    /// window at the current rail + activity? (Used per batch.)
+    pub fn silent_now(&self, i: usize) -> bool {
+        let p = &self.partitions[i];
+        let toggles = &self.row_toggle;
+        let size = toggles.len();
+        let period = self.netlist.period_ns();
+        let vf = self.tech.delay_factor(p.vccint); // one powf per partition
+        for &mac in &p.macs {
+            let stretch =
+                vf * crate::razor::activity_stretch(toggles[mac.row as usize % size]);
+            for arc in self.netlist.arcs_of(mac) {
+                let d = arc.total_delay_ns() * stretch;
+                if self.razor.classify(d, period) == MacOutcome::Silent {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+/// The coordinator proper.
+pub struct Coordinator {
+    pub config: CoordinatorConfig,
+    model: LoadedModel,
+    batcher: Batcher,
+    pub controller: VoltageController,
+    power_model: PowerModel,
+    pub latency: LatencyHistogram,
+    batches: u64,
+    requests: u64,
+}
+
+impl Coordinator {
+    /// Open artifacts and assemble the serving stack.
+    pub fn open(artifacts_dir: &Path, config: CoordinatorConfig) -> Result<Self> {
+        let engine = Engine::open(artifacts_dir)?;
+        let model = engine.load("model_fwd")?;
+        let controller = VoltageController::new(&config)?;
+        let power_model = PowerModel::new(config.tech.clone(), config.clock_mhz);
+        let batcher = Batcher::new(config.batch, MODEL_INPUT);
+        Ok(Self {
+            config,
+            model,
+            batcher,
+            controller,
+            power_model,
+            latency: LatencyHistogram::default(),
+            batches: 0,
+            requests: 0,
+        })
+    }
+
+    /// Execute one packed batch through the PJRT artifact; returns
+    /// (logits row-major, per-layer toggle telemetry).
+    fn execute(&self, packed: Vec<i8>) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let input = Tensor::I8(packed, vec![self.config.batch, MODEL_INPUT]);
+        let outputs = self.model.execute(&[input])?;
+        let logits = outputs[0].as_f32()?.to_vec();
+        let toggles = outputs[1..]
+            .iter()
+            .map(|t| t.as_f32().map(|s| s.to_vec()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((logits, toggles))
+    }
+
+    /// Serve one slice of requests synchronously (<= batch size).
+    pub fn infer_batch(&mut self, reqs: &[InferenceRequest]) -> Result<Vec<InferenceResponse>> {
+        if reqs.len() > self.config.batch {
+            return Err(Error::Serve(format!(
+                "{} requests exceed batch {}",
+                reqs.len(),
+                self.config.batch
+            )));
+        }
+        let start = Instant::now();
+        let packed = self.batcher.pack(reqs);
+        let (mut logits, toggles) = self.execute(packed)?;
+
+        // Telemetry: fold every layer's lane rates into the row EWMA.
+        for lane_rates in &toggles {
+            self.controller.observe_toggles(lane_rates);
+        }
+
+        // Error injection from silently-failing partitions.
+        let mut corrupted_cols: Vec<(u32, u32)> = Vec::new();
+        for i in 0..self.controller.partitions.len() {
+            if self.controller.silent_now(i) {
+                corrupted_cols.push(self.controller.col_span(i));
+            }
+        }
+        let corrupted = !corrupted_cols.is_empty();
+        if corrupted {
+            for (b, l) in iter_2d(self.config.batch, MODEL_OUTPUT) {
+                let col = l as u32;
+                if corrupted_cols.iter().any(|&(lo, hi)| col >= lo && col <= hi) {
+                    // Deterministic bit-flip-style corruption: the MAC's
+                    // upper accumulator bits latch the previous value.
+                    let idx = b * MODEL_OUTPUT + l;
+                    let noise =
+                        hash3_unit(self.batches, b as u64, l as u64) as f32 * 2.0 - 1.0;
+                    logits[idx] = -logits[idx] + noise;
+                }
+            }
+        }
+
+        self.batches += 1;
+        self.requests += reqs.len() as u64;
+
+        // Voltage epoch (Algorithm 2 with measured activity).
+        if self.batches % self.config.voltage_epoch as u64 == 0 {
+            self.controller.epoch();
+        } else {
+            self.controller.sense();
+        }
+
+        let latency_us = start.elapsed().as_micros() as u64;
+        self.latency.record_us(latency_us);
+
+        Ok(reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| InferenceResponse {
+                id: r.id,
+                logits: logits[i * MODEL_OUTPUT..(i + 1) * MODEL_OUTPUT].to_vec(),
+                corrupted,
+                latency_us,
+            })
+            .collect())
+    }
+
+    /// Current telemetry.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let mean_row: f64 = self.controller.row_toggle.iter().sum::<f64>()
+            / self.controller.row_toggle.len() as f64;
+        TelemetrySnapshot {
+            row_toggle: self.controller.row_toggle.clone(),
+            rails: self.controller.rails(),
+            power_mw: self
+                .power_model
+                .scaled_mw(&self.controller.partitions, |_| mean_row),
+            flagged: self.controller.flagged.clone(),
+            silent: self.controller.silent.clone(),
+            batches: self.batches,
+            requests: self.requests,
+        }
+    }
+
+    /// Serving loop over an mpsc channel; responds through the per-request
+    /// reply sender in each envelope. Flushes partial batches after
+    /// `batch_timeout_us` without new arrivals. Returns the final
+    /// telemetry snapshot when the request channel closes. Run it on a
+    /// dedicated thread:
+    ///
+    /// ```ignore
+    /// let (tx, rx) = std::sync::mpsc::channel();
+    /// let handle = std::thread::spawn(move || coord.serve(rx, 2_000));
+    /// tx.send((request, reply_tx)).unwrap();
+    /// ```
+    pub fn serve(
+        mut self,
+        rx: mpsc::Receiver<(InferenceRequest, mpsc::Sender<InferenceResponse>)>,
+        batch_timeout_us: u64,
+    ) -> Result<TelemetrySnapshot> {
+        let timeout = std::time::Duration::from_micros(batch_timeout_us.max(1));
+        let mut waiting: Vec<mpsc::Sender<InferenceResponse>> = Vec::new();
+        loop {
+            let msg = if self.batcher.pending() == 0 {
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => break, // channel closed
+                }
+            } else {
+                match rx.recv_timeout(timeout) {
+                    Ok(m) => Some(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None, // flush
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            };
+            let full = match msg {
+                Some((req, tx)) => {
+                    waiting.push(tx);
+                    self.batcher.push(req)?
+                }
+                None => self.batcher.flush(),
+            };
+            if let Some(batch) = full {
+                let responses = self.infer_batch(&batch)?;
+                for (resp, tx) in responses.into_iter().zip(waiting.drain(..)) {
+                    let _ = tx.send(resp);
+                }
+            }
+        }
+        // Drain whatever is left.
+        if let Some(batch) = self.batcher.flush() {
+            let responses = self.infer_batch(&batch)?;
+            for (resp, tx) in responses.into_iter().zip(waiting.drain(..)) {
+                let _ = tx.send(resp);
+            }
+        }
+        Ok(self.snapshot())
+    }
+}
+
+fn iter_2d(a: usize, b: usize) -> impl Iterator<Item = (usize, usize)> {
+    (0..a).flat_map(move |i| (0..b).map(move |j| (i, j)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            input: vec![1i8; MODEL_INPUT],
+        }
+    }
+
+    #[test]
+    fn batcher_fills_and_flushes() {
+        let mut b = Batcher::new(4, MODEL_INPUT);
+        assert!(b.push(req(0)).unwrap().is_none());
+        assert!(b.push(req(1)).unwrap().is_none());
+        assert!(b.push(req(2)).unwrap().is_none());
+        let full = b.push(req(3)).unwrap().unwrap();
+        assert_eq!(full.len(), 4);
+        assert_eq!(b.pending(), 0);
+        assert!(b.flush().is_none());
+        b.push(req(4)).unwrap();
+        assert_eq!(b.flush().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn batcher_rejects_wrong_width() {
+        let mut b = Batcher::new(4, MODEL_INPUT);
+        let bad = InferenceRequest {
+            id: 9,
+            input: vec![0i8; 3],
+        };
+        assert!(b.push(bad).is_err());
+    }
+
+    #[test]
+    fn pack_pads_with_zeros() {
+        let b = Batcher::new(4, 8);
+        let reqs = vec![InferenceRequest {
+            id: 0,
+            input: vec![5i8; 8],
+        }];
+        let packed = b.pack(&reqs);
+        assert_eq!(packed.len(), 32);
+        assert!(packed[..8].iter().all(|&x| x == 5));
+        assert!(packed[8..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn controller_starts_at_static_rails() {
+        let cfg = CoordinatorConfig::paper_default(Technology::artix7_28nm());
+        let c = VoltageController::new(&cfg).unwrap();
+        let mut rails = c.rails();
+        rails.sort_by(f64::total_cmp);
+        // Algorithm-1 midpoints over the guard band.
+        let want = [0.95625, 0.96875, 0.98125, 0.99375];
+        for (got, want) in rails.iter().zip(want) {
+            assert!((got - want).abs() < 1e-9, "rails {rails:?}");
+        }
+    }
+
+    #[test]
+    fn controller_epochs_descend_while_clean() {
+        let cfg = CoordinatorConfig::paper_default(Technology::artix7_28nm());
+        let mut c = VoltageController::new(&cfg).unwrap();
+        let before: f64 = c.rails().iter().sum();
+        for _ in 0..3 {
+            c.epoch();
+        }
+        let after: f64 = c.rails().iter().sum();
+        // Guard band is far above the frontier at 100 MHz: rails descend
+        // (clamped at the guard-band floor).
+        assert!(after < before);
+        for v in c.rails() {
+            assert!(v >= cfg.v_lo - 1e-12);
+        }
+    }
+
+    #[test]
+    fn controller_raises_rails_under_flags() {
+        let cfg = CoordinatorConfig::paper_default(Technology::artix7_28nm());
+        let mut c = VoltageController::new(&cfg).unwrap();
+        // Force rails to the floor and activity to max: Razor must flag
+        // and Algorithm 2 must push rails back up.
+        c.set_rails(cfg.v_lo);
+        c.v_floor = 0.80; // loosen the PDU floor for the test
+        c.set_rails(0.80);
+        c.observe_toggles(&vec![1.0f32; 784]);
+        c.observe_toggles(&vec![1.0f32; 784]);
+        c.observe_toggles(&vec![1.0f32; 784]);
+        let before = c.rails();
+        c.epoch();
+        let after = c.rails();
+        assert!(c.flagged.iter().any(|&f| f), "nothing flagged at 0.80 V");
+        for (b, a) in before.iter().zip(&after) {
+            assert!(a >= b, "rail dropped under flags: {b} -> {a}");
+        }
+    }
+
+    #[test]
+    fn observe_toggles_ewma_moves_towards_measurement() {
+        let cfg = CoordinatorConfig::paper_default(Technology::artix7_28nm());
+        let mut c = VoltageController::new(&cfg).unwrap();
+        let t0 = c.row_toggle[0];
+        c.observe_toggles(&vec![1.0f32; 784]);
+        assert!(c.row_toggle[0] > t0);
+        for _ in 0..40 {
+            c.observe_toggles(&vec![1.0f32; 784]);
+        }
+        assert!((c.row_toggle[0] - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn col_span_covers_quadrants() {
+        let cfg = CoordinatorConfig::paper_default(Technology::artix7_28nm());
+        let c = VoltageController::new(&cfg).unwrap();
+        for i in 0..4 {
+            let (lo, hi) = c.col_span(i);
+            assert!(hi >= lo);
+            assert!(hi < 16);
+        }
+    }
+}

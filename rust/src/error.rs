@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+/// Unified error type for every subsystem.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Invalid configuration or parameter combination.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// A clustering algorithm could not produce a valid clustering.
+    #[error("clustering error: {0}")]
+    Clustering(String),
+
+    /// Floorplanning / placement failure (e.g. partitions do not fit).
+    #[error("floorplan error: {0}")]
+    Floorplan(String),
+
+    /// Voltage outside the legal region for the technology.
+    #[error("voltage error: {0}")]
+    Voltage(String),
+
+    /// Timing analysis failure.
+    #[error("timing error: {0}")]
+    Timing(String),
+
+    /// PJRT runtime failure (artifact load, compile or execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact missing or signature mismatch against manifest.json.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Serving-path error (queue closed, request rejected, ...).
+    #[error("serve error: {0}")]
+    Serve(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

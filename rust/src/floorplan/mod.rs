@@ -1,0 +1,229 @@
+//! S10 — Floorplanner: cluster -> rectangular voltage island.
+//!
+//! The paper places each cluster of MACs into one rectangular FPGA
+//! partition by emitting slice-coordinate ranges into the constraint
+//! file ("the clustered MACs are placed in same FPGA partition by
+//! mentioning the slice parameters (Xi, Yi)"). Two strategies:
+//!
+//! * [`quadrants`] — the paper's worked example (Fig 8): four equal
+//!   `(n/2 x n/2)` islands ("for sake of simplicity of implementation
+//!   we have assumed the same partition size (8x8)"). Requires 4
+//!   equal-size clusters.
+//! * [`bands`] — the general case for arbitrary cluster counts/sizes:
+//!   horizontal bands sized proportionally to cluster population, with
+//!   one spare slice row between islands as the rail isolation gap.
+//!
+//! Both return [`Partition`]s that pass
+//! [`crate::fpga::validate_partitions`].
+
+use crate::cluster::{Clustering, NOISE};
+use crate::error::{Error, Result};
+use crate::fpga::{Device, Partition, Rect, SLICES_PER_MAC};
+use crate::netlist::MacId;
+
+/// MAC membership per cluster (noise folded into cluster 0, matching
+/// [`crate::voltage::static_scheme::assign`]).
+pub fn members(clustering: &Clustering, size: u32) -> Vec<Vec<MacId>> {
+    let mut out = vec![Vec::new(); clustering.k.max(1)];
+    for (i, &label) in clustering.labels.iter().enumerate() {
+        let mac = MacId::new(i as u32 / size, i as u32 % size);
+        let l = if label == NOISE { 0 } else { label };
+        out[l].push(mac);
+    }
+    out
+}
+
+/// Fig 8 floorplan: four equal quadrant islands for a 4-cluster result
+/// on an even-sized array. Partition ids follow the canonical cluster
+/// order (0 = most critical cluster).
+pub fn quadrants(device: &Device, clustering: &Clustering, size: u32) -> Result<Vec<Partition>> {
+    if clustering.k != 4 {
+        return Err(Error::Floorplan(format!(
+            "quadrant floorplan needs exactly 4 clusters, got {}",
+            clustering.k
+        )));
+    }
+    if size % 2 != 0 {
+        return Err(Error::Floorplan(format!("array size {size} must be even")));
+    }
+    let mem = members(clustering, size);
+    let half = size / 2;
+    let w = half * SLICES_PER_MAC;
+    let quarter = (half * half) as usize;
+    // Quadrant capacity check: equal islands only fit equal clusters.
+    for (i, m) in mem.iter().enumerate() {
+        if m.len() > quarter {
+            return Err(Error::Floorplan(format!(
+                "cluster {i} has {} MACs; quadrant holds {quarter} — use bands()",
+                m.len()
+            )));
+        }
+    }
+    let parts: Vec<Partition> = mem
+        .into_iter()
+        .enumerate()
+        .map(|(i, macs)| {
+            let (qx, qy) = ((i as u32) % 2, (i as u32) / 2);
+            Partition {
+                id: i,
+                rect: Rect::new(qx * w, qy * w, qx * w + w - 1, qy * w + w - 1),
+                macs,
+                vccint: f64::NAN, // rails assigned by the voltage scheme
+            }
+        })
+        .collect();
+    crate::fpga::validate_partitions(device, &parts)?;
+    Ok(parts)
+}
+
+/// General floorplan: one horizontal band per cluster, height
+/// proportional to the cluster's MAC count, separated by one isolation
+/// row. Always succeeds on a device sized by [`Device::for_array`] for
+/// cluster counts up to ~8.
+pub fn bands(device: &Device, clustering: &Clustering, size: u32) -> Result<Vec<Partition>> {
+    let mem = members(clustering, size);
+    let cols = (device.slice_cols / SLICES_PER_MAC).max(1); // MACs per band row
+    let mut y = 0u32;
+    let mut parts = Vec::with_capacity(mem.len());
+    for (i, macs) in mem.into_iter().enumerate() {
+        if macs.is_empty() {
+            return Err(Error::Floorplan(format!("cluster {i} is empty")));
+        }
+        let rows_needed = (macs.len() as u32).div_ceil(cols);
+        let h = rows_needed * SLICES_PER_MAC;
+        let rect = Rect::new(
+            0,
+            y,
+            device.slice_cols - 1,
+            y + h - 1,
+        );
+        if !device.fits(&rect) {
+            return Err(Error::Floorplan(format!(
+                "band for cluster {i} runs off the fabric (y..{})",
+                y + h - 1
+            )));
+        }
+        parts.push(Partition {
+            id: i,
+            rect,
+            macs,
+            vccint: f64::NAN,
+        });
+        y += h + 1; // isolation row between islands
+    }
+    crate::fpga::validate_partitions(device, &parts)?;
+    Ok(parts)
+}
+
+/// Pick the floorplan the paper would: quadrants when the clustering is
+/// 4-way and balanced enough, bands otherwise.
+pub fn auto(device: &Device, clustering: &Clustering, size: u32) -> Result<Vec<Partition>> {
+    if clustering.k == 4 && size % 2 == 0 {
+        if let Ok(p) = quadrants(device, clustering, size) {
+            return Ok(p);
+        }
+    }
+    bands(device, clustering, size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Clustering;
+
+    /// 4 equal row-band clusters over a 16x16 array (row-major labels).
+    fn four_row_clusters() -> Clustering {
+        let labels: Vec<usize> = (0..256).map(|i| (i / 64) as usize).collect();
+        Clustering { labels, k: 4 }
+    }
+
+    #[test]
+    fn quadrants_build_fig8_geometry() {
+        let device = Device::for_array(16);
+        let parts = quadrants(&device, &four_row_clusters(), 16).unwrap();
+        assert_eq!(parts.len(), 4);
+        for p in &parts {
+            assert_eq!(p.mac_count(), 64);
+            assert_eq!(p.rect.width(), 8 * SLICES_PER_MAC);
+        }
+        // Distinct corners.
+        assert_ne!(parts[0].rect, parts[3].rect);
+    }
+
+    #[test]
+    fn quadrants_reject_wrong_k_or_oversize() {
+        let device = Device::for_array(16);
+        let c3 = Clustering {
+            labels: (0..256).map(|i| if i < 200 { 0 } else { 1 }).collect(),
+            k: 2,
+        };
+        assert!(quadrants(&device, &c3, 16).is_err());
+        // Unbalanced 4-way: one cluster bigger than a quadrant.
+        let unbal = Clustering {
+            labels: (0..256)
+                .map(|i| if i < 100 { 0 } else { 1 + (i % 3) })
+                .collect(),
+            k: 4,
+        };
+        assert!(quadrants(&device, &unbal, 16).is_err());
+    }
+
+    #[test]
+    fn bands_handle_unbalanced_clusters() {
+        let device = Device::for_array(16);
+        let unbal = Clustering {
+            labels: (0..256)
+                .map(|i| if i < 100 { 0 } else if i < 130 { 1 } else { 2 })
+                .collect(),
+            k: 3,
+        };
+        let parts = bands(&device, &unbal, 16).unwrap();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts.iter().map(|p| p.mac_count()).sum::<usize>(), 256);
+        // Bands don't overlap and are vertically ordered.
+        assert!(parts[0].rect.y1 < parts[1].rect.y0);
+        assert!(parts[1].rect.y1 < parts[2].rect.y0);
+    }
+
+    #[test]
+    fn bands_fold_noise_into_partition_zero() {
+        let device = Device::for_array(16);
+        let mut labels: Vec<usize> = (0..256).map(|i| (i / 128) as usize).collect();
+        labels[7] = crate::cluster::NOISE;
+        let c = Clustering { labels, k: 2 };
+        let parts = bands(&device, &c, 16).unwrap();
+        assert!(parts[0].macs.contains(&MacId::new(0, 7)));
+    }
+
+    #[test]
+    fn auto_prefers_quadrants_for_balanced_4way() {
+        let device = Device::for_array(16);
+        let parts = auto(&device, &four_row_clusters(), 16).unwrap();
+        // Quadrant layout: two distinct x origins.
+        let xs: std::collections::HashSet<u32> = parts.iter().map(|p| p.rect.x0).collect();
+        assert_eq!(xs.len(), 2);
+    }
+
+    #[test]
+    fn auto_falls_back_to_bands() {
+        let device = Device::for_array(16);
+        let c5 = Clustering {
+            labels: (0..256).map(|i| i % 5).collect(),
+            k: 5,
+        };
+        let parts = auto(&device, &c5, 16).unwrap();
+        assert_eq!(parts.len(), 5);
+    }
+
+    #[test]
+    fn members_partition_every_mac_exactly_once() {
+        let c = four_row_clusters();
+        let mem = members(&c, 16);
+        let total: usize = mem.iter().map(Vec::len).sum();
+        assert_eq!(total, 256);
+        let mut seen = std::collections::HashSet::new();
+        for m in mem.iter().flatten() {
+            assert!(seen.insert(*m), "duplicate {m:?}");
+        }
+    }
+}

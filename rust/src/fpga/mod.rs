@@ -1,0 +1,263 @@
+//! S2 — FPGA device model.
+//!
+//! A minimal structural model of the reconfigurable fabric: a rectangular
+//! grid of slice sites addressed `SLICE_XxYy` (the Xilinx convention the
+//! paper's XDC constraints use), onto which MACs are placed, and
+//! rectangular [`Rect`] regions that become the voltage-island
+//! partitions. The paper's Fig 8 is exactly this: a device split into 4
+//! rectangular islands, each with its own `Vccint_i` rail pin.
+
+
+use crate::error::{Error, Result};
+use crate::netlist::MacId;
+
+/// Number of slice columns and rows one MAC occupies (int8 multiplier +
+/// adder + pipeline registers + razor shadow — the razor doubles the
+/// arithmetic, paper §II-E).
+pub const SLICES_PER_MAC: u32 = 4;
+
+/// Inclusive rectangle of slice coordinates, `SLICE_X{x0..=x1}Y{y0..=y1}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rect {
+    pub x0: u32,
+    pub y0: u32,
+    pub x1: u32,
+    pub y1: u32,
+}
+
+impl Rect {
+    pub fn new(x0: u32, y0: u32, x1: u32, y1: u32) -> Self {
+        assert!(x0 <= x1 && y0 <= y1, "degenerate rect");
+        Self { x0, y0, x1, y1 }
+    }
+
+    pub fn width(&self) -> u32 {
+        self.x1 - self.x0 + 1
+    }
+
+    pub fn height(&self) -> u32 {
+        self.y1 - self.y0 + 1
+    }
+
+    pub fn area(&self) -> u64 {
+        self.width() as u64 * self.height() as u64
+    }
+
+    pub fn contains(&self, x: u32, y: u32) -> bool {
+        (self.x0..=self.x1).contains(&x) && (self.y0..=self.y1).contains(&y)
+    }
+
+    pub fn overlaps(&self, other: &Rect) -> bool {
+        self.x0 <= other.x1 && other.x0 <= self.x1 && self.y0 <= other.y1 && other.y0 <= self.y1
+    }
+
+    /// Manhattan distance between rect centres, in slice units — the
+    /// routing-distance estimate used for inter-partition net penalties.
+    pub fn centre_distance(&self, other: &Rect) -> f64 {
+        let (cx1, cy1) = self.centre();
+        let (cx2, cy2) = other.centre();
+        (cx1 - cx2).abs() + (cy1 - cy2).abs()
+    }
+
+    pub fn centre(&self) -> (f64, f64) {
+        (
+            (self.x0 + self.x1) as f64 / 2.0,
+            (self.y0 + self.y1) as f64 / 2.0,
+        )
+    }
+
+    /// XDC range string, e.g. `SLICE_X0Y0:SLICE_X31Y31`.
+    pub fn xdc_range(&self) -> String {
+        format!("SLICE_X{}Y{}:SLICE_X{}Y{}", self.x0, self.y0, self.x1, self.y1)
+    }
+}
+
+/// The FPGA fabric: a `slice_cols x slice_rows` grid of slices.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: String,
+    pub slice_cols: u32,
+    pub slice_rows: u32,
+}
+
+impl Device {
+    /// A device just large enough for an `array_size x array_size`
+    /// systolic array plus a 40% routing/isolation margin per edge — the
+    /// board support package the paper's flows target. The margin also
+    /// hosts the per-cluster rounding + isolation rows of the band
+    /// floorplan (up to 8 voltage islands).
+    pub fn for_array(array_size: u32) -> Self {
+        let need = array_size * SLICES_PER_MAC;
+        let margin = (need * 2 / 5).max(8);
+        Self {
+            name: format!("vfpga-{array_size}x{array_size}"),
+            slice_cols: need + margin,
+            slice_rows: need + margin,
+        }
+    }
+
+    pub fn bounds(&self) -> Rect {
+        Rect::new(0, 0, self.slice_cols - 1, self.slice_rows - 1)
+    }
+
+    pub fn total_slices(&self) -> u64 {
+        self.slice_cols as u64 * self.slice_rows as u64
+    }
+
+    /// Does `rect` fit on the fabric?
+    pub fn fits(&self, rect: &Rect) -> bool {
+        rect.x1 < self.slice_cols && rect.y1 < self.slice_rows
+    }
+
+    /// Default (pre-floorplan) site of a MAC: row-major grid placement,
+    /// `SLICES_PER_MAC` slices per MAC in each dimension.
+    pub fn default_site(&self, mac: MacId) -> Rect {
+        let x0 = mac.col * SLICES_PER_MAC;
+        let y0 = mac.row * SLICES_PER_MAC;
+        Rect::new(x0, y0, x0 + SLICES_PER_MAC - 1, y0 + SLICES_PER_MAC - 1)
+    }
+}
+
+/// A voltage island: a rectangle of slices sharing one `Vccint_i` rail.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Partition index (the paper's `partition-1` .. `partition-n`).
+    pub id: usize,
+    pub rect: Rect,
+    /// MACs placed inside this island.
+    pub macs: Vec<MacId>,
+    /// Rail voltage (V) — set by the static scheme, calibrated at runtime.
+    pub vccint: f64,
+}
+
+impl Partition {
+    pub fn mac_count(&self) -> usize {
+        self.macs.len()
+    }
+
+    /// Capacity check: every MAC needs SLICES_PER_MAC^2 slices.
+    pub fn can_hold(&self, n_macs: usize) -> bool {
+        self.rect.area() >= n_macs as u64 * (SLICES_PER_MAC as u64).pow(2)
+    }
+}
+
+/// Validate a floorplan: partitions must be pairwise disjoint, on-fabric,
+/// and big enough for their MACs.
+pub fn validate_partitions(device: &Device, parts: &[Partition]) -> Result<()> {
+    for p in parts {
+        if !device.fits(&p.rect) {
+            return Err(Error::Floorplan(format!(
+                "partition {} rect {:?} exceeds fabric {}x{}",
+                p.id, p.rect, device.slice_cols, device.slice_rows
+            )));
+        }
+        if !p.can_hold(p.macs.len()) {
+            return Err(Error::Floorplan(format!(
+                "partition {} holds {} MACs but area is {} slices",
+                p.id,
+                p.macs.len(),
+                p.rect.area()
+            )));
+        }
+    }
+    for (i, a) in parts.iter().enumerate() {
+        for b in &parts[i + 1..] {
+            if a.rect.overlaps(&b.rect) {
+                return Err(Error::Floorplan(format!(
+                    "partitions {} and {} overlap",
+                    a.id, b.id
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_geometry() {
+        let r = Rect::new(0, 0, 7, 3);
+        assert_eq!(r.width(), 8);
+        assert_eq!(r.height(), 4);
+        assert_eq!(r.area(), 32);
+        assert!(r.contains(7, 3));
+        assert!(!r.contains(8, 3));
+        assert_eq!(r.xdc_range(), "SLICE_X0Y0:SLICE_X7Y3");
+    }
+
+    #[test]
+    fn rect_overlap_cases() {
+        let a = Rect::new(0, 0, 3, 3);
+        assert!(a.overlaps(&Rect::new(3, 3, 5, 5))); // corner touch
+        assert!(!a.overlaps(&Rect::new(4, 0, 6, 3))); // adjacent
+        assert!(a.overlaps(&a));
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn rect_rejects_inverted() {
+        Rect::new(5, 0, 1, 2);
+    }
+
+    #[test]
+    fn device_sizes_scale_with_array() {
+        for s in [16u32, 32, 64] {
+            let d = Device::for_array(s);
+            let need = s * SLICES_PER_MAC;
+            assert!(d.slice_cols > need, "{s}");
+            // All default sites fit.
+            let last = d.default_site(MacId::new(s - 1, s - 1));
+            assert!(d.fits(&last));
+        }
+    }
+
+    #[test]
+    fn default_sites_are_disjoint() {
+        let d = Device::for_array(16);
+        let a = d.default_site(MacId::new(0, 0));
+        let b = d.default_site(MacId::new(0, 1));
+        let c = d.default_site(MacId::new(1, 0));
+        assert!(!a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+        assert!(!b.overlaps(&c));
+    }
+
+    #[test]
+    fn validate_catches_overlap_and_overflow() {
+        let d = Device::for_array(16);
+        let p1 = Partition {
+            id: 0,
+            rect: Rect::new(0, 0, 31, 31),
+            macs: (0..64).map(|i| MacId::new(i / 8, i % 8)).collect(),
+            vccint: 1.0,
+        };
+        let mut p2 = p1.clone();
+        p2.id = 1;
+        assert!(validate_partitions(&d, &[p1.clone()]).is_ok());
+        assert!(matches!(
+            validate_partitions(&d, &[p1.clone(), p2]),
+            Err(Error::Floorplan(_))
+        ));
+        // Too small for its MACs.
+        let tiny = Partition {
+            id: 2,
+            rect: Rect::new(0, 0, 3, 3),
+            macs: (0..8).map(|i| MacId::new(0, i)).collect(),
+            vccint: 1.0,
+        };
+        assert!(matches!(
+            validate_partitions(&d, &[tiny]),
+            Err(Error::Floorplan(_))
+        ));
+    }
+
+    #[test]
+    fn centre_distance_is_manhattan() {
+        let a = Rect::new(0, 0, 1, 1); // centre (0.5, 0.5)
+        let b = Rect::new(4, 6, 5, 7); // centre (4.5, 6.5)
+        assert!((a.centre_distance(&b) - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,77 @@
+//! # vstpu — voltage-scaled systolic-array TPU on a simulated reconfigurable platform
+//!
+//! Production-quality reproduction of *"Towards Power Efficient DNN
+//! Accelerator Design on Reconfigurable Platform"* (Paul et al., 2021).
+//!
+//! The paper partitions the FPGA floor holding a TPU-style systolic array
+//! into islands of MACs with similar minimum timing slack, feeds each
+//! island its own biasing voltage `Vccint_i`, seeds the voltages with a
+//! static stepping scheme (paper Algorithm 1) and calibrates them at
+//! runtime from Razor flip-flop timing-failure flags (Algorithm 2).
+//!
+//! No shipping FPGA supports per-partition core rails, and the original
+//! evaluation itself is a Vivado/VTR *simulation* — so this crate builds
+//! the whole substrate (see `DESIGN.md` for the inventory):
+//!
+//! * [`tech`] — technology libraries (28nm Artix-7 class, 22/45/130nm
+//!   academic) with delay-vs-voltage and power models,
+//! * [`fpga`] — the device grid and partition geometry,
+//! * [`netlist`] — the systolic-array netlist generator (MACs, timing arcs),
+//! * [`timing`] — the synthesis/implementation timing engine (Table I
+//!   schema, per-MAC minimum slack, worst-path reports),
+//! * [`cluster`] — Hierarchical, K-Means, Mean-Shift and DBSCAN over the
+//!   min-slack distribution (paper §IV),
+//! * [`voltage`] — the static and runtime voltage-scaling schemes,
+//! * [`razor`] — the shadow-flip-flop timing-error model,
+//! * [`power`] — dynamic/static power accounting per partition,
+//! * [`floorplan`] + [`constraints`] — cluster placement and XDC/SDC
+//!   emission,
+//! * [`cadflow`] — the end-to-end Vivado-like and VTR-like flows
+//!   (paper Figs 1, 3, 9),
+//! * [`baseline`] — the paper's comparators (no scaling, whole-FPGA
+//!   underscaling after Salami et al., per-MAC boosting after GreenTPU),
+//! * [`workload`] — synthetic int8 DNN workloads with controllable bit
+//!   fluctuation,
+//! * [`runtime`] — the PJRT client executing AOT-lowered JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) on the request path,
+//! * [`coordinator`] — the serving loop: router, batcher, telemetry and
+//!   the runtime voltage controller,
+//! * [`report`] — renderers regenerating every table/figure of the paper.
+//!
+//! Quick start (library):
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries do not inherit the rpath to
+//! # // libxla_extension.so (see .cargo/config.toml); the same snippet
+//! # // runs as examples/quickstart.rs.
+//! use vstpu::cadflow::{FlowConfig, VivadoFlow};
+//! use vstpu::tech::Technology;
+//!
+//! let cfg = FlowConfig::paper_default(16, Technology::artix7_28nm());
+//! let report = VivadoFlow::new(cfg).run().unwrap();
+//! assert!(report.power.scaled_total_mw < report.power.baseline_total_mw);
+//! ```
+
+pub mod baseline;
+pub mod cadflow;
+pub mod cluster;
+pub mod config;
+pub mod constraints;
+pub mod coordinator;
+pub mod error;
+pub mod floorplan;
+pub mod fpga;
+pub mod metrics;
+pub mod netlist;
+pub mod power;
+pub mod razor;
+pub mod report;
+pub mod runtime;
+pub mod study;
+pub mod tech;
+pub mod timing;
+pub mod util;
+pub mod voltage;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,23 @@
+//! `vstpu` — CLI for the voltage-scaled systolic-array TPU reproduction.
+//!
+//! Subcommands map to the experiments in DESIGN.md §4:
+//!
+//! * `flow`          — run the full CAD flow once and print the summary
+//! * `table2`        — regenerate Table II across all technologies/sizes
+//! * `timing-report` — print a Table I fragment (E1)
+//! * `figs`          — emit CSV series for Figs 4/5, 10-14, 15/16
+//! * `cluster`       — run one clustering algorithm over the min-slacks
+//! * `calibrate`     — run the Razor trial-run calibration and print the
+//!                     rail trajectory (E10/E11)
+//! * `serve`         — start the async coordinator on a synthetic client
+//! * `e2e`           — the end-to-end accuracy/power sweep (E12)
+//! * `calibrate-tech`— re-fit the power constants from Table II numbers
+
+mod cli;
+
+fn main() {
+    if let Err(e) = cli::run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,162 @@
+//! Shared statistics helpers: summaries, percentiles and a fixed-bucket
+//! latency histogram for the serving coordinator.
+
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(data: &[f64]) -> Self {
+        let n = data.len();
+        if n == 0 {
+            return Self {
+                n: 0,
+                mean: f64::NAN,
+                std: f64::NAN,
+                min: f64::NAN,
+                max: f64::NAN,
+            };
+        }
+        let mean = data.iter().sum::<f64>() / n as f64;
+        let var = data.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Self {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: data.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: data.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
+/// Percentile by linear interpolation over a sorted copy (q in [0,100]).
+pub fn percentile(data: &[f64], q: f64) -> f64 {
+    if data.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted: Vec<f64> = data.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let pos = (q / 100.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Pearson correlation of two equal-length samples.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let (ma, mb) = (
+        a.iter().sum::<f64>() / n,
+        b.iter().sum::<f64>() / n,
+    );
+    let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+    for (x, y) in a.iter().zip(b) {
+        let (u, v) = (x - ma, y - mb);
+        num += u * v;
+        da += u * u;
+        db += v * v;
+    }
+    num / (da.sqrt() * db.sqrt())
+}
+
+/// Latency recorder with microsecond buckets (powers of two), lock-free
+/// enough for the single-threaded batcher loop.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHistogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) microseconds.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub total_us: u64,
+}
+
+impl LatencyHistogram {
+    pub fn record_us(&mut self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros()) as usize;
+        if self.buckets.len() <= b {
+            self.buckets.resize(b + 1, 0);
+        }
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.total_us += us;
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.total_us as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (rough p50/p99).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << i;
+            }
+        }
+        1u64 << (self.buckets.len().max(1) - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!(Summary::of(&[]).mean.is_nan());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let d = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&d, 0.0), 10.0);
+        assert_eq!(percentile(&d, 100.0), 40.0);
+        assert!((percentile(&d, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_signs() {
+        let a = [1.0, 2.0, 3.0];
+        let up = [2.0, 4.0, 6.0];
+        let down = [3.0, 2.0, 1.0];
+        assert!((pearson(&a, &up) - 1.0).abs() < 1e-12);
+        assert!((pearson(&a, &down) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles() {
+        let mut h = LatencyHistogram::default();
+        for us in [10u64, 12, 14, 100, 2000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count, 5);
+        assert!(h.mean_us() > 10.0);
+        assert!(h.quantile_us(0.5) <= 32);
+        assert!(h.quantile_us(1.0) >= 1024);
+    }
+}

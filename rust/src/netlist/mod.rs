@@ -1,0 +1,305 @@
+//! S3 — Systolic-array netlist generator.
+//!
+//! Produces the structural netlist the paper synthesizes: an
+//! `N x N` grid of int8 multiply-accumulate cells in weight-stationary
+//! dataflow, each with its pipeline registers and a Razor shadow
+//! register (paper §II-E — razor doubles the multiplier/adder count).
+//!
+//! Each MAC contributes a set of *timing arcs*: one register-to-register
+//! path per output bit of the `sig_mac_out` register (the exact paths
+//! Vivado's Table I reports, e.g.
+//! `GEN_REG_I[0].GEN_REG_J[1].uut/prev_activ_reg[1]/C ->
+//!  GEN_REG_I[1].GEN_REG_J[1].uut/sig_mac_out_reg[14]/D`).
+//!
+//! The delay structure encodes the physics the paper's clustering
+//! exploits:
+//!
+//! * **carry depth** — higher output bits traverse deeper carry chains
+//!   (more logic levels; Table I shows levels 7-9 across bits 11-16);
+//! * **accumulation depth** — partial sums flow *down* the columns, so
+//!   bottom-row MACs close timing later (the paper: "when the partial
+//!   sums are moved to the bottom rows ... the timing error increases
+//!   significantly"; bottom rows get the higher-voltage partitions);
+//! * **process variation** — deterministic per-MAC jitter (hash of the
+//!   MAC identity, so regeneration is bit-stable).
+
+
+use crate::tech::Technology;
+use crate::util::hash3_unit;
+
+/// Output-register width of one MAC: int8 x int8 products accumulated
+/// into a 17-bit `sig_mac_out` register (Table I shows bits up to [16]).
+pub const MAC_OUT_BITS: u32 = 17;
+
+/// Grid coordinate of a MAC inside the systolic array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MacId {
+    pub row: u32,
+    pub col: u32,
+}
+
+impl MacId {
+    pub fn new(row: u32, col: u32) -> Self {
+        Self { row, col }
+    }
+
+    /// Flat index in row-major order.
+    pub fn index(&self, size: u32) -> usize {
+        (self.row * size + self.col) as usize
+    }
+
+    /// RTL hierarchy prefix, mirroring the paper's generate loops.
+    pub fn rtl_path(&self) -> String {
+        format!("GEN_REG_I[{}].GEN_REG_J[{}].uut", self.row, self.col)
+    }
+}
+
+/// One register-to-register timing arc of a MAC (one output bit).
+#[derive(Debug, Clone)]
+pub struct TimingArc {
+    /// MAC that owns the endpoint register.
+    pub mac: MacId,
+    /// Output bit index of `sig_mac_out_reg[bit]`.
+    pub bit: u32,
+    /// Logic levels on the path (LUT + carry stages).
+    pub levels: u32,
+    /// Highest fanout net along the path.
+    pub fanout: u32,
+    /// Combinational (LUT/carry) delay at `v_nom`, ns.
+    pub logic_delay_ns: f64,
+    /// Routing delay at `v_nom`, ns.
+    pub net_delay_ns: f64,
+    /// True if the path's source register is in the MAC one row up
+    /// (a partial-sum arc that may cross a partition boundary).
+    pub crosses_row: bool,
+}
+
+impl TimingArc {
+    pub fn total_delay_ns(&self) -> f64 {
+        self.logic_delay_ns + self.net_delay_ns
+    }
+
+    /// Source register RTL name (the activation register of the upstream
+    /// MAC for partial-sum arcs, own `prev_activ_reg` otherwise).
+    pub fn from_name(&self, _size: u32) -> String {
+        if self.crosses_row && self.mac.row > 0 {
+            let up = MacId::new(self.mac.row - 1, self.mac.col);
+            format!("{}/prev_activ_reg[{}]/C", up.rtl_path(), self.bit % 8)
+        } else {
+            format!("{}/prev_activ_reg[{}]/C", self.mac.rtl_path(), self.bit % 8)
+        }
+    }
+
+    /// Endpoint register RTL name.
+    pub fn to_name(&self) -> String {
+        format!("{}/sig_mac_out_reg[{}]/D", self.mac.rtl_path(), self.bit)
+    }
+}
+
+/// The generated systolic-array netlist.
+#[derive(Debug, Clone)]
+pub struct SystolicNetlist {
+    /// Array edge (16, 32 or 64 in the paper).
+    pub size: u32,
+    /// Target clock, MHz (the paper evaluates at 100 MHz).
+    pub clock_mhz: f64,
+    /// Every timing arc of the array, row-major by MAC, bit-minor.
+    pub arcs: Vec<TimingArc>,
+    /// Seed used for process variation (recorded for reproducibility).
+    pub seed: u64,
+}
+
+impl SystolicNetlist {
+    /// Generate the netlist for `size x size` MACs on `tech`.
+    ///
+    /// Delay model per arc (see module docs for the physics):
+    /// ```text
+    /// levels(bit)    = 6 + bit/4 + carry_jitter               (7..=11)
+    /// logic          = levels * t_logic * rowf * (1 +- 4% var)
+    /// rowf           = 1 + 0.16 * band,  band = row*4/size  (0..=3)
+    /// net            = t_net * fanout^0.75 * (1 +- 8% var)
+    /// ```
+    ///
+    /// The accumulation-depth factor `rowf` is *quantized* into four row
+    /// bands: the partial-sum pipeline adds a register stage every
+    /// size/4 rows, so MACs within a band share their carry depth. This
+    /// is what gives the min-slack distribution the four visible bands
+    /// of the paper's Figs 11-14 (their 16x16 slack scatter) that the
+    /// clustering algorithms recover.
+    pub fn generate(size: u32, tech: &Technology, clock_mhz: f64, seed: u64) -> Self {
+        assert!(size >= 2, "array must be at least 2x2");
+        let mut arcs = Vec::with_capacity((size * size * MAC_OUT_BITS) as usize);
+        for row in 0..size {
+            for col in 0..size {
+                let mac = MacId::new(row, col);
+                let macv = hash3_unit(seed, mac.row as u64, mac.col as u64); // [0,1)
+                // Per-MAC process variation: +-2% logic, +-8% net — the
+                // logic spread is what sets the within-band width of the
+                // min-slack distribution (must stay well below the
+                // 0.16-per-band accumulation step for the paper's banded
+                // scatter to be recoverable by all four algorithms).
+                let logic_var = 0.98 + 0.04 * macv;
+                let band = (row * 4 / size).min(3);
+                let rowf = 1.0 + 0.16 * band as f64;
+                for bit in 0..MAC_OUT_BITS {
+                    let bitv =
+                        hash3_unit(seed ^ 0xA5A5, mac.index(size) as u64, bit as u64);
+                    // The MSB (accumulator carry-out) is the structural
+                    // critical path of every MAC: full carry depth, fixed
+                    // mid fanout. Keeping it deterministic makes each
+                    // MAC's *minimum* slack a clean function of its row
+                    // band + process variation — the banded scatter of
+                    // the paper's Figs 11-14.
+                    let msb = bit == MAC_OUT_BITS - 1;
+                    let levels = if msb {
+                        6 + MAC_OUT_BITS / 4 + 1
+                    } else {
+                        6 + bit / 4 + if bitv > 0.7 { 1 } else { 0 }
+                    };
+                    let fanout = if msb { 8 } else { 4 + (bitv * 7.0) as u32 }; // 4..=10
+                    let logic_delay_ns =
+                        levels as f64 * tech.t_logic_ns * rowf * logic_var;
+                    let net_var = if msb {
+                        1.0
+                    } else {
+                        0.92 + 0.16 * hash3_unit(seed ^ 0x5A5A, mac.index(size) as u64, bit as u64)
+                    };
+                    let net_delay_ns = tech.t_net_ns * (fanout as f64).powf(0.75) * net_var;
+                    arcs.push(TimingArc {
+                        mac,
+                        bit,
+                        levels,
+                        fanout,
+                        logic_delay_ns,
+                        net_delay_ns,
+                        // Partial-sum arcs: the accumulator input comes from
+                        // the row above for every row but the first.
+                        crosses_row: row > 0 && bit >= 8,
+                    });
+                }
+            }
+        }
+        Self {
+            size,
+            clock_mhz,
+            arcs,
+            seed,
+        }
+    }
+
+    pub fn mac_count(&self) -> usize {
+        (self.size * self.size) as usize
+    }
+
+    /// Clock period in ns.
+    pub fn period_ns(&self) -> f64 {
+        1000.0 / self.clock_mhz
+    }
+
+    /// All MACs in row-major order.
+    pub fn macs(&self) -> impl Iterator<Item = MacId> + '_ {
+        let size = self.size;
+        (0..size).flat_map(move |r| (0..size).map(move |c| MacId::new(r, c)))
+    }
+
+    /// Arcs of one MAC.
+    pub fn arcs_of(&self, mac: MacId) -> &[TimingArc] {
+        let start = mac.index(self.size) * MAC_OUT_BITS as usize;
+        &self.arcs[start..start + MAC_OUT_BITS as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn netlist16() -> SystolicNetlist {
+        SystolicNetlist::generate(16, &Technology::artix7_28nm(), 100.0, 1)
+    }
+
+    #[test]
+    fn arc_count_is_size_sq_times_bits() {
+        let n = netlist16();
+        assert_eq!(n.arcs.len(), 16 * 16 * MAC_OUT_BITS as usize);
+        assert_eq!(n.mac_count(), 256);
+        assert!((n.period_ns() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = netlist16();
+        let b = netlist16();
+        for (x, y) in a.arcs.iter().zip(&b.arcs) {
+            assert_eq!(x.logic_delay_ns.to_bits(), y.logic_delay_ns.to_bits());
+            assert_eq!(x.net_delay_ns.to_bits(), y.net_delay_ns.to_bits());
+        }
+    }
+
+    #[test]
+    fn different_seed_changes_delays() {
+        let a = netlist16();
+        let b = SystolicNetlist::generate(16, &Technology::artix7_28nm(), 100.0, 2);
+        let diff = a
+            .arcs
+            .iter()
+            .zip(&b.arcs)
+            .filter(|(x, y)| x.logic_delay_ns != y.logic_delay_ns)
+            .count();
+        assert!(diff > a.arcs.len() / 2);
+    }
+
+    #[test]
+    fn bottom_rows_are_slower() {
+        // Mean total delay of the last row must exceed the first row's —
+        // the accumulation-depth effect the clustering exploits.
+        let n = netlist16();
+        let mean_row = |row: u32| -> f64 {
+            let arcs: Vec<_> = n.arcs.iter().filter(|a| a.mac.row == row).collect();
+            arcs.iter().map(|a| a.total_delay_ns()).sum::<f64>() / arcs.len() as f64
+        };
+        assert!(mean_row(15) > mean_row(0) * 1.15);
+    }
+
+    #[test]
+    fn levels_within_table1_range() {
+        let n = netlist16();
+        for arc in &n.arcs {
+            assert!((6..=11).contains(&arc.levels), "levels {}", arc.levels);
+            assert!((4..=10).contains(&arc.fanout), "fanout {}", arc.fanout);
+        }
+    }
+
+    #[test]
+    fn delays_in_table1_ballpark_at_28nm() {
+        // Table I fragments show total delays ~4.0-4.5 ns for the worst
+        // paths of a 16x16 at 100 MHz on Artix-7. Our worst arcs must
+        // land in the same regime (3.5-6.5 ns) and everything must meet
+        // the 10 ns clock at nominal voltage.
+        let n = netlist16();
+        let max = n.arcs.iter().map(|a| a.total_delay_ns()).fold(0.0, f64::max);
+        assert!(max > 3.5 && max < 6.5, "worst delay {max}");
+    }
+
+    #[test]
+    fn arcs_of_returns_own_bits() {
+        let n = netlist16();
+        let mac = MacId::new(3, 7);
+        let arcs = n.arcs_of(mac);
+        assert_eq!(arcs.len(), MAC_OUT_BITS as usize);
+        for (i, a) in arcs.iter().enumerate() {
+            assert_eq!(a.mac, mac);
+            assert_eq!(a.bit as usize, i);
+        }
+    }
+
+    #[test]
+    fn rtl_names_match_paper_convention() {
+        let n = netlist16();
+        let arc = &n.arcs_of(MacId::new(1, 1))[14];
+        assert_eq!(
+            arc.to_name(),
+            "GEN_REG_I[1].GEN_REG_J[1].uut/sig_mac_out_reg[14]/D"
+        );
+        assert!(arc.from_name(16).starts_with("GEN_REG_I[0].GEN_REG_J[1]"));
+    }
+}

@@ -1,0 +1,317 @@
+//! S8 — Razor flip-flop timing-error model (paper §II-E, after Ernst
+//! et al., MICRO'03).
+//!
+//! Every MAC's output register `R` is shadowed by a register `S` clocked
+//! `T_del` later. Data arriving after `R` samples but *before* `S`
+//! samples raises the error flag `F`; data arriving after even `S`
+//! samples is silent corruption (we call it a crash — the paper's
+//! "DNN accuracy near to zero" regime).
+//!
+//! The voltage dependence comes from
+//! [`Technology::delay_factor`](crate::tech::Technology::delay_factor);
+//! the *data* dependence follows GreenTPU's observation the paper builds
+//! on: "higher fluctuation of input bits increases the possibility of
+//! timing failure in NTC condition". We model the exercised delay of an
+//! arc in a given cycle window as
+//!
+//! ```text
+//! d_eff = d_static * delay_factor(V) * (BASE + SPAN * toggle_rate)
+//! ```
+//!
+//! with `BASE = 0.82`, `SPAN = 0.30`: a quiet stream (toggle ~ 0)
+//! exercises only ~82% of the static worst case (short carries), while a
+//! maximally fluctuating stream (toggle ~ 1) pushes 12% *past* it
+//! (simultaneous switching noise + full-length carries) — the regime
+//! where Razor flags fire first.
+
+
+use crate::netlist::{MacId, SystolicNetlist};
+use crate::tech::Technology;
+
+/// Fraction of the static path delay exercised by a toggle-free stream.
+pub const ACTIVITY_BASE: f64 = 0.82;
+/// Additional fraction exercised per unit toggle rate.
+pub const ACTIVITY_SPAN: f64 = 0.30;
+/// Default toggle rate assumed when no measurement is available (the
+/// value the power model is calibrated at, and a typical int8 DNN
+/// activation stream's bit activity).
+pub const DEFAULT_TOGGLE: f64 = 0.125;
+
+/// Shadow-clock lag `T_del` (ns). One LUT+carry stage beyond the main
+/// edge at nominal voltage — wide enough to catch near-threshold
+/// overshoot, narrow enough to keep the min-delay (hold) constraint of
+/// razor satisfiable (Ernst et al. §2).
+pub const DEFAULT_T_DEL_NS: f64 = 0.60;
+
+/// Outcome of one MAC in one trial window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacOutcome {
+    /// All arcs met the main clock edge.
+    Ok,
+    /// At least one arc missed the main edge but hit the shadow window —
+    /// the Razor flag `F` is raised (recoverable, drives Algorithm 2).
+    Flagged,
+    /// At least one arc missed even the shadow edge — silent corruption.
+    Silent,
+}
+
+/// The Razor shadow-register configuration for an array.
+#[derive(Debug, Clone)]
+pub struct RazorConfig {
+    /// Shadow-clock lag, ns.
+    pub t_del_ns: f64,
+}
+
+impl Default for RazorConfig {
+    fn default() -> Self {
+        Self {
+            t_del_ns: DEFAULT_T_DEL_NS,
+        }
+    }
+}
+
+impl RazorConfig {
+    /// Classify one arc delay (already voltage- and activity-scaled)
+    /// against the clock period.
+    pub fn classify(&self, d_eff_ns: f64, period_ns: f64) -> MacOutcome {
+        let budget = period_ns - crate::timing::CLOCK_UNCERTAINTY_NS;
+        if d_eff_ns <= budget {
+            MacOutcome::Ok
+        } else if d_eff_ns <= budget + self.t_del_ns {
+            MacOutcome::Flagged
+        } else {
+            MacOutcome::Silent
+        }
+    }
+}
+
+/// Effective exercised delay of a static arc delay at voltage `v` under
+/// toggle rate `toggle` (see module docs).
+pub fn effective_delay_ns(tech: &Technology, d_static_ns: f64, v: f64, toggle: f64) -> f64 {
+    d_static_ns * tech.delay_factor(v) * activity_stretch(toggle)
+}
+
+/// The data-dependent stretch factor alone (`BASE + SPAN * toggle`).
+/// Hot loops hoist `tech.delay_factor(v)` (one `powf` per *partition*)
+/// and multiply by this per arc — see EXPERIMENTS.md §Perf iteration 4.
+#[inline]
+pub fn activity_stretch(toggle: f64) -> f64 {
+    ACTIVITY_BASE + ACTIVITY_SPAN * toggle.clamp(0.0, 1.0)
+}
+
+/// Outcome of a whole MAC: the worst outcome over its arcs.
+pub fn mac_outcome(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    mac: MacId,
+    v: f64,
+    toggle: f64,
+) -> MacOutcome {
+    let period = netlist.period_ns();
+    let vf = tech.delay_factor(v); // hoisted: one powf per call
+    let stretch = activity_stretch(toggle);
+    let mut worst = MacOutcome::Ok;
+    for arc in netlist.arcs_of(mac) {
+        let d = arc.total_delay_ns() * vf * stretch;
+        match razor.classify(d, period) {
+            MacOutcome::Silent => return MacOutcome::Silent,
+            MacOutcome::Flagged => worst = MacOutcome::Flagged,
+            MacOutcome::Ok => {}
+        }
+    }
+    worst
+}
+
+/// Per-partition trial-run result: the flag the power-distribution unit
+/// sees (paper Fig 8's `timing_fail-part-i`).
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionTrial {
+    pub partition: usize,
+    /// True iff *any* MAC in the partition flagged or failed. (The
+    /// paper's §III-B prose says the partition flag is the AND of the
+    /// MAC flags, but Algorithm 2 + Fig 8 semantics — any failing MAC
+    /// must raise the partition's rail — require OR; we implement OR
+    /// and note the discrepancy in DESIGN.md §6.)
+    pub timing_fail: bool,
+    /// True iff some MAC corrupted silently (beyond the shadow window).
+    pub silent: bool,
+    /// Smallest timing margin observed (ns; negative = violation).
+    pub worst_margin_ns: f64,
+}
+
+/// Run one trial over a partition's MACs at rail voltage `v`.
+///
+/// `toggle_of(mac)` supplies the measured per-MAC toggle rate — on the
+/// serving path it comes from the L1 activity kernel's telemetry; flows
+/// without measurements pass `|_| DEFAULT_TOGGLE`.
+pub fn trial_partition<F>(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    partition: usize,
+    macs: &[MacId],
+    v: f64,
+    toggle_of: F,
+) -> PartitionTrial
+where
+    F: Fn(MacId) -> f64,
+{
+    let period = netlist.period_ns();
+    let budget = period - crate::timing::CLOCK_UNCERTAINTY_NS;
+    let vf = tech.delay_factor(v); // hoisted: one powf per partition trial
+    let mut fail = false;
+    let mut silent = false;
+    let mut worst_margin = f64::INFINITY;
+    for &mac in macs {
+        let stretch = vf * activity_stretch(toggle_of(mac));
+        for arc in netlist.arcs_of(mac) {
+            let d = arc.total_delay_ns() * stretch;
+            let margin = budget - d;
+            if margin < worst_margin {
+                worst_margin = margin;
+            }
+            match razor.classify(d, period) {
+                MacOutcome::Silent => {
+                    silent = true;
+                    fail = true;
+                }
+                MacOutcome::Flagged => fail = true,
+                MacOutcome::Ok => {}
+            }
+        }
+    }
+    PartitionTrial {
+        partition,
+        timing_fail: fail,
+        silent,
+        worst_margin_ns: worst_margin,
+    }
+}
+
+/// The lowest rail voltage at which `macs` runs without *any* Razor
+/// flag under toggle rate `toggle` — the per-partition crash/safe
+/// frontier, used by baselines and by tests as the oracle Algorithm 2
+/// should converge towards (within one step `Vs`).
+pub fn min_safe_voltage(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    macs: &[MacId],
+    toggle: f64,
+) -> f64 {
+    let budget = netlist.period_ns() - crate::timing::CLOCK_UNCERTAINTY_NS;
+    // Worst activity-scaled static delay over the partition.
+    let worst = macs
+        .iter()
+        .flat_map(|&m| netlist.arcs_of(m))
+        .map(|a| a.total_delay_ns() * (ACTIVITY_BASE + ACTIVITY_SPAN * toggle.clamp(0.0, 1.0)))
+        .fold(0.0, f64::max);
+    if worst <= 0.0 {
+        return tech.v_th + 1e-3;
+    }
+    tech.voltage_for_delay_factor((budget / worst).max(1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (SystolicNetlist, Technology) {
+        let tech = Technology::artix7_28nm();
+        (SystolicNetlist::generate(16, &tech, 100.0, 1), tech)
+    }
+
+    #[test]
+    fn classify_windows() {
+        let r = RazorConfig::default();
+        let t = 10.0;
+        let budget = t - crate::timing::CLOCK_UNCERTAINTY_NS;
+        assert_eq!(r.classify(budget - 0.1, t), MacOutcome::Ok);
+        assert_eq!(r.classify(budget + 0.3, t), MacOutcome::Flagged);
+        assert_eq!(r.classify(budget + r.t_del_ns + 0.01, t), MacOutcome::Silent);
+    }
+
+    #[test]
+    fn nominal_voltage_is_clean() {
+        let (nl, tech) = setup();
+        let razor = RazorConfig::default();
+        for mac in nl.macs() {
+            assert_eq!(
+                mac_outcome(&nl, &tech, &razor, mac, tech.v_nom, DEFAULT_TOGGLE),
+                MacOutcome::Ok
+            );
+        }
+    }
+
+    #[test]
+    fn deep_undervolting_fails() {
+        let (nl, tech) = setup();
+        let razor = RazorConfig::default();
+        let mac = crate::netlist::MacId::new(15, 0); // slowest row
+        let out = mac_outcome(&nl, &tech, &razor, mac, tech.v_th + 0.05, 1.0);
+        assert_eq!(out, MacOutcome::Silent);
+    }
+
+    #[test]
+    fn higher_toggle_fails_earlier() {
+        // GreenTPU effect: the quiet stream survives a voltage at which
+        // the fluctuating stream flags.
+        let (nl, tech) = setup();
+        let macs: Vec<_> = nl.macs().collect();
+        let v_quiet = min_safe_voltage(&nl, &tech, &macs, 0.0);
+        let v_noisy = min_safe_voltage(&nl, &tech, &macs, 1.0);
+        assert!(
+            v_noisy > v_quiet + 0.01,
+            "quiet {v_quiet:.3} noisy {v_noisy:.3}"
+        );
+    }
+
+    #[test]
+    fn effective_delay_monotone_in_toggle_and_voltage() {
+        let tech = Technology::artix7_28nm();
+        let d = 5.0;
+        assert!(
+            effective_delay_ns(&tech, d, 0.9, 0.5) > effective_delay_ns(&tech, d, 1.0, 0.5)
+        );
+        assert!(
+            effective_delay_ns(&tech, d, 0.9, 0.9) > effective_delay_ns(&tech, d, 0.9, 0.1)
+        );
+    }
+
+    #[test]
+    fn trial_partition_margin_consistent_with_flag() {
+        let (nl, tech) = setup();
+        let razor = RazorConfig::default();
+        let macs: Vec<_> = nl.macs().filter(|m| m.row >= 8).collect();
+        let ok = trial_partition(&nl, &tech, &razor, 0, &macs, tech.v_nom, |_| DEFAULT_TOGGLE);
+        assert!(!ok.timing_fail);
+        assert!(ok.worst_margin_ns > 0.0);
+        let bad = trial_partition(&nl, &tech, &razor, 0, &macs, 0.80, |_| 1.0);
+        assert!(bad.timing_fail);
+        assert!(bad.worst_margin_ns < 0.0);
+    }
+
+    #[test]
+    fn min_safe_voltage_is_the_flag_frontier() {
+        let (nl, tech) = setup();
+        let razor = RazorConfig::default();
+        let macs: Vec<_> = nl.macs().filter(|m| m.row < 4).collect();
+        let v = min_safe_voltage(&nl, &tech, &macs, DEFAULT_TOGGLE);
+        let at = trial_partition(&nl, &tech, &razor, 0, &macs, v + 1e-4, |_| DEFAULT_TOGGLE);
+        let below = trial_partition(&nl, &tech, &razor, 0, &macs, v - 5e-3, |_| DEFAULT_TOGGLE);
+        assert!(!at.timing_fail, "margin {}", at.worst_margin_ns);
+        assert!(below.timing_fail);
+    }
+
+    #[test]
+    fn bottom_rows_need_more_voltage() {
+        // The physical basis of the whole paper: bottom-row MACs (lower
+        // slack) need a higher rail than top-row MACs.
+        let (nl, tech) = setup();
+        let top: Vec<_> = nl.macs().filter(|m| m.row < 4).collect();
+        let bottom: Vec<_> = nl.macs().filter(|m| m.row >= 12).collect();
+        let v_top = min_safe_voltage(&nl, &tech, &top, DEFAULT_TOGGLE);
+        let v_bottom = min_safe_voltage(&nl, &tech, &bottom, DEFAULT_TOGGLE);
+        assert!(v_bottom > v_top, "top {v_top:.3} bottom {v_bottom:.3}");
+    }
+}

@@ -1,0 +1,298 @@
+//! S16 — Report renderers: regenerate the paper's tables and figures as
+//! aligned text / CSV. Each function maps 1:1 to an experiment in
+//! DESIGN.md §4.
+
+use std::fmt::Write as _;
+
+use crate::cadflow::FlowReport;
+use crate::cluster::{Clustering, NOISE};
+use crate::timing::{PathRecord, TimingReport};
+
+/// Render a generic aligned text table.
+pub fn text_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut s = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = headers.iter().map(|h| h.to_string()).collect();
+    let _ = writeln!(s, "{}", fmt_row(&head, &widths));
+    let _ = writeln!(s, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        let _ = writeln!(s, "{}", fmt_row(row, &widths));
+    }
+    s
+}
+
+/// CSV with header row.
+pub fn csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{}", headers.join(","));
+    for row in rows {
+        let _ = writeln!(s, "{}", row.join(","));
+    }
+    s
+}
+
+/// One block of Table II from a flow report (without + with scaling).
+pub fn table2_block(rep: &FlowReport) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    rows.push(vec![
+        "without-scaling".into(),
+        format!("{0}x{0}", rep.power.array_size),
+        "NA".into(),
+        format!("{:.2}", rep.power.baseline_v),
+        format!("{:.0}", rep.power.baseline_total_mw),
+    ]);
+    for (id, n_macs, v, _mw) in &rep.power.per_partition {
+        rows.push(vec![
+            "voltage-scaled".into(),
+            format!("{n_macs} MACs"),
+            format!("partition-{}", id + 1),
+            format!("{v:.2}"),
+            String::new(),
+        ]);
+    }
+    rows.push(vec![
+        "voltage-scaled".into(),
+        format!("{0}x{0}", rep.power.array_size),
+        "total".into(),
+        String::new(),
+        format!("{:.0}", rep.power.scaled_total_mw),
+    ]);
+    rows.push(vec![
+        "% of Reduction".into(),
+        String::new(),
+        String::new(),
+        String::new(),
+        format!("{:.2}", rep.power.reduction_pct),
+    ]);
+    rows
+}
+
+/// Table II header (matches the paper's columns, condensed).
+pub const TABLE2_HEADERS: [&str; 5] = [
+    "Scheme",
+    "Dimension",
+    "Partition",
+    "Vccint (V)",
+    "Dynamic power (mW)",
+];
+
+/// Table I fragment: the first `n` worst setup paths in the paper's
+/// 12-column schema.
+pub fn table1(report: &TimingReport, n: usize) -> String {
+    let headers = [
+        "Name", "Slack", "Levels", "HighFanout", "From", "To", "TotalDelay", "LogicDelay",
+        "NetDelay", "Requirement", "SrcClk", "DstClk",
+    ];
+    let rows: Vec<Vec<String>> = report
+        .worst_setup(n)
+        .iter()
+        .map(|p: &PathRecord| {
+            vec![
+                p.name(),
+                format!("{:.2}", p.slack_ns),
+                p.levels.to_string(),
+                p.high_fanout.to_string(),
+                p.from(),
+                p.to(),
+                format!("{:.2}", p.total_delay_ns),
+                format!("{:.2}", p.logic_delay_ns),
+                format!("{:.2}", p.net_delay_ns),
+                format!("{:.2}", p.requirement_ns),
+                p.source_clock().to_string(),
+                p.destination_clock().to_string(),
+            ]
+        })
+        .collect();
+    text_table(&headers, &rows)
+}
+
+/// Fig 4 / Fig 5 CSV: path rank, synthesis delay, implementation delay.
+pub fn fig4_5_csv(deltas: &[(String, f64, f64)]) -> String {
+    let rows: Vec<Vec<String>> = deltas
+        .iter()
+        .enumerate()
+        .map(|(i, (to, synth, impl_))| {
+            vec![
+                (i + 1).to_string(),
+                to.clone(),
+                format!("{synth:.4}"),
+                format!("{impl_:.4}"),
+            ]
+        })
+        .collect();
+    csv(&["rank", "endpoint", "synthesis_ns", "implementation_ns"], &rows)
+}
+
+/// Figs 11-14 CSV: MAC index, min slack, cluster label (colour).
+pub fn clustering_csv(slacks: &[f64], clustering: &Clustering) -> String {
+    let rows: Vec<Vec<String>> = slacks
+        .iter()
+        .zip(&clustering.labels)
+        .enumerate()
+        .map(|(i, (s, &l))| {
+            vec![
+                i.to_string(),
+                format!("{s:.4}"),
+                if l == NOISE {
+                    "noise".into()
+                } else {
+                    l.to_string()
+                },
+            ]
+        })
+        .collect();
+    csv(&["mac", "min_slack_ns", "cluster"], &rows)
+}
+
+/// Figs 15-16 CSV: variant name, dynamic power (mW).
+pub fn variants_csv(series: &[(String, f64)]) -> String {
+    let rows: Vec<Vec<String>> = series
+        .iter()
+        .map(|(name, mw)| vec![name.clone(), format!("{mw:.1}")])
+        .collect();
+    csv(&["variant", "dynamic_power_mw"], &rows)
+}
+
+/// Human summary of one flow run (the CLI's `flow` output).
+pub fn flow_summary(rep: &FlowReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "== vstpu flow: {}", rep.config_summary);
+    let _ = writeln!(
+        s,
+        "synthesis : worst slack {:.3} ns, critical path {:.3} ns",
+        rep.synth_worst_slack_ns, rep.synth_critical_path_ns
+    );
+    let _ = writeln!(
+        s,
+        "implement : worst slack {:.3} ns, critical path {:.3} ns (stage corr {:.4})",
+        rep.impl_worst_slack_ns, rep.impl_critical_path_ns, rep.stage_slack_correlation
+    );
+    let _ = writeln!(
+        s,
+        "clusters  : {} x {} via {} (silhouette {:.3}), sizes {:?}",
+        rep.n_partitions,
+        rep.partition_sizes.iter().sum::<usize>(),
+        rep.algorithm,
+        rep.silhouette,
+        rep.partition_sizes
+    );
+    let _ = writeln!(
+        s,
+        "rails     : static {:?}",
+        rep.static_rails
+            .iter()
+            .map(|v| format!("{v:.4}"))
+            .collect::<Vec<_>>()
+    );
+    let _ = writeln!(
+        s,
+        "calibrated: {:?} ({} trials, converged={})",
+        rep.calibrated_rails
+            .iter()
+            .map(|v| format!("{v:.4}"))
+            .collect::<Vec<_>>(),
+        rep.calibration_trials,
+        rep.calibration_converged
+    );
+    let _ = writeln!(
+        s,
+        "power     : {:.1} mW -> {:.1} mW ({:.2}% reduction, static rails)",
+        rep.power.baseline_total_mw, rep.power.scaled_total_mw, rep.power.reduction_pct
+    );
+    if let Some(pc) = &rep.power_calibrated {
+        let _ = writeln!(
+            s,
+            "            {:.1} mW at calibrated rails ({:.2}% reduction)",
+            pc.scaled_total_mw, pc.reduction_pct
+        );
+    }
+    for b in &rep.baselines {
+        let _ = writeln!(
+            s,
+            "baseline  : {:<22} {:>8.1} mW (V in [{:.3}, {:.3}])",
+            b.name, b.total_mw, b.v_low, b.v_high
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cadflow::{CadFlow, FlowConfig};
+    use crate::tech::Technology;
+
+    fn flow_report() -> FlowReport {
+        CadFlow::new(FlowConfig::paper_default(16, Technology::artix7_28nm()))
+            .run()
+            .unwrap()
+    }
+
+    #[test]
+    fn text_table_aligns_columns() {
+        let t = text_table(
+            &["a", "long-header"],
+            &[vec!["x".into(), "y".into()], vec!["wider-cell".into(), "z".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("long-header"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let c = csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(c, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn table2_block_has_reduction_row() {
+        let rep = flow_report();
+        let rows = table2_block(&rep);
+        assert!(rows.iter().any(|r| r[0] == "% of Reduction"));
+        assert_eq!(rows.iter().filter(|r| r[2].starts_with("partition-")).count(), 4);
+    }
+
+    #[test]
+    fn table1_contains_paper_columns() {
+        let tech = Technology::artix7_28nm();
+        let nl = crate::netlist::SystolicNetlist::generate(16, &tech, 100.0, 1);
+        let rep = crate::timing::synthesize(&nl);
+        let t = table1(&rep, 6);
+        assert!(t.contains("Slack"));
+        assert!(t.contains("sig_mac_out_reg"));
+        assert!(t.contains("Path 1"));
+        assert_eq!(t.lines().count(), 2 + 6);
+    }
+
+    #[test]
+    fn fig_csvs_parse_back() {
+        let rep = flow_report();
+        let f4 = fig4_5_csv(&rep.fig4_setup_deltas);
+        assert_eq!(f4.lines().count(), 101);
+        assert!(f4.starts_with("rank,endpoint"));
+    }
+
+    #[test]
+    fn flow_summary_mentions_everything() {
+        let s = flow_summary(&flow_report());
+        for needle in ["synthesis", "clusters", "rails", "power", "baseline"] {
+            assert!(s.contains(needle), "missing {needle} in summary");
+        }
+    }
+}

@@ -1,0 +1,353 @@
+//! S13 — PJRT runtime: load and execute the AOT-lowered JAX/Pallas
+//! artifacts from the rust request path.
+//!
+//! `python/compile/aot.py` lowers every model/kernel once to HLO *text*
+//! (`artifacts/*.hlo.txt`; text rather than serialized proto because
+//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects) plus a manifest (`manifest.tsv` for this runtime, `manifest.json` for humans) with each artifact's signature. This
+//! module compiles the text on the PJRT CPU client and validates every
+//! call against the manifest, so a shape bug fails with a readable error
+//! instead of an aborted PJRT invocation.
+//!
+//! Python never runs here: after `make artifacts` the binary is
+//! self-contained.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+
+use crate::error::{Error, Result};
+
+/// Tensor signature as recorded by `aot.py`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Artifact signature: input and output tensor lists.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    I8(Vec<i8>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    F32(Vec<f32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::I8(_, s) | Tensor::I32(_, s) | Tensor::F32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::I8(..) => "int8",
+            Tensor::I32(..) => "int32",
+            Tensor::F32(..) => "float32",
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::I8(d, _) => d.len(),
+            Tensor::I32(d, _) => d.len(),
+            Tensor::F32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Unwrap as f32 data.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            other => Err(Error::Runtime(format!("expected f32, got {}", other.dtype()))),
+        }
+    }
+
+    /// Unwrap as i32 data.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            other => Err(Error::Runtime(format!("expected i32, got {}", other.dtype()))),
+        }
+    }
+
+    fn matches(&self, sig: &TensorSig) -> bool {
+        self.shape() == sig.shape.as_slice() && self.dtype() == sig.dtype
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let (bytes, ty, shape): (&[u8], xla::ElementType, &[usize]) = match self {
+            Tensor::I8(data, shape) => (
+                // i8 -> u8 reinterpret: same size, no invalid values.
+                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) },
+                xla::ElementType::S8,
+                shape,
+            ),
+            Tensor::I32(data, shape) => (
+                unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                },
+                xla::ElementType::S32,
+                shape,
+            ),
+            Tensor::F32(data, shape) => (
+                unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                },
+                xla::ElementType::F32,
+                shape,
+            ),
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty, shape, bytes,
+        )?)
+    }
+
+    fn from_literal(lit: &xla::Literal, sig: &TensorSig) -> Result<Self> {
+        let shape = sig.shape.clone();
+        match sig.dtype.as_str() {
+            "int8" => Ok(Tensor::I8(lit.to_vec::<i8>()?, shape)),
+            "int32" => Ok(Tensor::I32(lit.to_vec::<i32>()?, shape)),
+            "float32" => Ok(Tensor::F32(lit.to_vec::<f32>()?, shape)),
+            other => Err(Error::Runtime(format!("unsupported output dtype {other}"))),
+        }
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct LoadedModel {
+    pub name: String,
+    pub sig: ArtifactSig,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute with manifest validation. Inputs must match the signature
+    /// in order, shape and dtype; outputs are unpacked from the 1-tuple
+    /// the AOT pipeline lowers (`return_tuple=True`).
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.sig.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{}: {} inputs given, signature wants {}",
+                self.name,
+                inputs.len(),
+                self.sig.inputs.len()
+            )));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.sig.inputs).enumerate() {
+            if !t.matches(s) {
+                return Err(Error::Artifact(format!(
+                    "{}: input {i} is {}{:?}, signature wants {}{:?}",
+                    self.name,
+                    t.dtype(),
+                    t.shape(),
+                    s.dtype,
+                    s.shape
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.sig.outputs.len() {
+            return Err(Error::Artifact(format!(
+                "{}: {} outputs returned, manifest says {}",
+                self.name,
+                parts.len(),
+                self.sig.outputs.len()
+            )));
+        }
+        parts
+            .iter()
+            .zip(&self.sig.outputs)
+            .map(|(lit, sig)| Tensor::from_literal(lit, sig))
+            .collect()
+    }
+}
+
+/// The artifact registry + PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactSig>,
+}
+
+/// Parse the TSV manifest `aot.py` emits alongside the JSON one
+/// (`<artifact> TAB in|out TAB <index> TAB <dtype> TAB d0xd1x...`).
+pub fn parse_manifest_tsv(text: &str) -> Result<HashMap<String, ArtifactSig>> {
+    let mut manifest: HashMap<String, ArtifactSig> = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        let [name, kind, _idx, dtype, dims] = fields.as_slice() else {
+            return Err(Error::Artifact(format!(
+                "manifest line {}: expected 5 tab-separated fields, got {}",
+                lineno + 1,
+                fields.len()
+            )));
+        };
+        let shape: Vec<usize> = if dims.is_empty() {
+            Vec::new()
+        } else {
+            dims.split('x')
+                .map(|d| {
+                    d.parse::<usize>().map_err(|e| {
+                        Error::Artifact(format!("manifest line {}: bad dim '{d}': {e}", lineno + 1))
+                    })
+                })
+                .collect::<Result<_>>()?
+        };
+        let sig = TensorSig {
+            shape,
+            dtype: dtype.to_string(),
+        };
+        let entry = manifest.entry(name.to_string()).or_insert(ArtifactSig {
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        });
+        match *kind {
+            "in" => entry.inputs.push(sig),
+            "out" => entry.outputs.push(sig),
+            other => {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: kind '{other}' is not in/out",
+                    lineno + 1
+                )))
+            }
+        }
+    }
+    Ok(manifest)
+}
+
+impl Engine {
+    /// Open `dir` (expects `manifest.tsv` + `<name>.hlo.txt` files) on
+    /// the PJRT CPU client.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {manifest_path:?} (run `make artifacts`): {e}"
+            ))
+        })?;
+        let manifest = parse_manifest_tsv(&text)?;
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+            dir: dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    /// Artifact names available in the manifest.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.manifest.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    pub fn signature(&self, name: &str) -> Option<&ArtifactSig> {
+        self.manifest.get(name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, name: &str) -> Result<LoadedModel> {
+        let sig = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("'{name}' not in manifest")))?
+            .clone();
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(LoadedModel {
+            name: name.to_string(),
+            sig,
+            exe,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::I8(vec![1, 2, 3, 4], vec![2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.dtype(), "int8");
+        assert_eq!(t.len(), 4);
+        assert!(t.as_f32().is_err());
+        let f = Tensor::F32(vec![0.5], vec![1]);
+        assert_eq!(f.as_f32().unwrap(), &[0.5]);
+    }
+
+    #[test]
+    fn tensor_signature_matching() {
+        let sig = TensorSig {
+            shape: vec![2, 2],
+            dtype: "int8".into(),
+        };
+        assert!(Tensor::I8(vec![0; 4], vec![2, 2]).matches(&sig));
+        assert!(!Tensor::I8(vec![0; 4], vec![4]).matches(&sig));
+        assert!(!Tensor::F32(vec![0.0; 4], vec![2, 2]).matches(&sig));
+        assert_eq!(sig.element_count(), 4);
+    }
+
+    #[test]
+    fn manifest_tsv_parses() {
+        let tsv = "m\tin\t0\tint8\t32x16\nm\tout\t0\tint32\t32x16\nm\tout\t1\tfloat32\t16\n";
+        let m = parse_manifest_tsv(tsv).unwrap();
+        assert_eq!(m["m"].inputs[0].shape, vec![32, 16]);
+        assert_eq!(m["m"].outputs[0].dtype, "int32");
+        assert_eq!(m["m"].outputs[1].shape, vec![16]);
+    }
+
+    #[test]
+    fn manifest_tsv_rejects_garbage() {
+        assert!(parse_manifest_tsv("m\tin\t0\tint8").is_err()); // 4 fields
+        assert!(parse_manifest_tsv("m\tsideways\t0\tint8\t4").is_err());
+        assert!(parse_manifest_tsv("m\tin\t0\tint8\t4xbanana").is_err());
+        // Blank lines are fine.
+        assert!(parse_manifest_tsv("\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn open_missing_dir_is_a_readable_error() {
+        match Engine::open(Path::new("/nonexistent-vstpu")) {
+            Err(e) => assert!(e.to_string().contains("make artifacts")),
+            Ok(_) => panic!("opening a nonexistent dir must fail"),
+        }
+    }
+}

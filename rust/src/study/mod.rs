@@ -1,0 +1,285 @@
+//! Extension study — the paper's future-work item (ii):
+//!
+//! > "Study the tradeoff between the DNN accuracy estimated in terms of
+//! > timing failures with the no. of partitions and that between no. of
+//! > partitions and dynamic power."
+//!
+//! For each partition count `n` this module:
+//!
+//! 1. clusters the MACs into `n` equal slack quantiles (the
+//!    generalisation of the paper's 4-way Table II setup),
+//! 2. floorplans them as bands, seeds rails with Algorithm 1 and
+//!    calibrates with Algorithm 2 down to the technology's NTC floor,
+//! 3. measures **power** at the calibrated rails,
+//! 4. measures **accuracy risk** by shifting the workload's toggle rate
+//!    upward after calibration (the GreenTPU scenario: rails were tuned
+//!    on a quiet trial run, then a noisy input sequence arrives) and
+//!    counting the fraction of MACs that land beyond the Razor shadow
+//!    window — silent corruption, i.e. lost accuracy.
+//!
+//! The expected shape (and what the tests pin down): power decreases
+//! monotonically with `n` towards the per-MAC ideal bound, with rapidly
+//! diminishing returns; accuracy risk under workload shift *grows* with
+//! `n` because each rail sits closer to its own frontier — the tradeoff
+//! the paper anticipated.
+
+use crate::cluster::Clustering;
+use crate::error::Result;
+use crate::floorplan;
+use crate::fpga::Device;
+use crate::netlist::SystolicNetlist;
+use crate::power::PowerModel;
+use crate::razor::{activity_stretch, RazorConfig};
+use crate::tech::Technology;
+use crate::timing;
+use crate::voltage::{runtime_scheme, static_scheme};
+
+/// One point of the tradeoff curve.
+#[derive(Debug, Clone)]
+pub struct TradeoffPoint {
+    /// Partition count.
+    pub n: usize,
+    /// Calibrated rails (V), partition order (0 = most critical).
+    pub rails: Vec<f64>,
+    /// Dynamic power at the calibrated rails (mW).
+    pub power_mw: f64,
+    /// Power relative to the single-partition (n=1) configuration.
+    pub power_vs_single: f64,
+    /// Mean rail margin above each partition's analytic frontier (V).
+    pub mean_margin_v: f64,
+    /// Fraction of MACs silently corrupting when the workload toggle
+    /// rate shifts from `calib_toggle` to `shifted_toggle` (accuracy
+    /// proxy: corrupted MACs ~ corrupted outputs).
+    pub silent_mac_fraction: f64,
+}
+
+/// Equal-population slack quantiles: the n-way generalisation of
+/// [`crate::cadflow::equal_quartile_clustering`].
+pub fn equal_quantile_clustering(slacks: &[f64], n: usize) -> Clustering {
+    let len = slacks.len();
+    let mut order: Vec<usize> = (0..len).collect();
+    order.sort_by(|&a, &b| slacks[a].total_cmp(&slacks[b]));
+    let mut labels = vec![0usize; len];
+    for (rank, &idx) in order.iter().enumerate() {
+        labels[idx] = (rank * n / len).min(n - 1);
+    }
+    Clustering { labels, k: n }
+}
+
+/// Configuration of the study.
+#[derive(Debug, Clone)]
+pub struct StudyConfig {
+    pub array_size: u32,
+    pub tech: Technology,
+    pub clock_mhz: f64,
+    pub seed: u64,
+    /// Toggle rate the trial-run calibration sees.
+    pub calib_toggle: f64,
+    /// Toggle rate of the post-calibration workload (the shift).
+    pub shifted_toggle: f64,
+    pub razor: RazorConfig,
+}
+
+impl StudyConfig {
+    pub fn paper_default(tech: Technology) -> Self {
+        Self {
+            array_size: 16,
+            tech,
+            clock_mhz: 100.0,
+            seed: 2021,
+            calib_toggle: 0.125,
+            shifted_toggle: 0.45,
+            razor: RazorConfig::default(),
+        }
+    }
+}
+
+/// Run the tradeoff study across `counts` partition counts.
+pub fn partition_count_study(cfg: &StudyConfig, counts: &[usize]) -> Result<Vec<TradeoffPoint>> {
+    let netlist =
+        SystolicNetlist::generate(cfg.array_size, &cfg.tech, cfg.clock_mhz, cfg.seed);
+    let synth = timing::synthesize(&netlist);
+    let slacks: Vec<f64> = synth
+        .min_slack_per_mac(cfg.array_size)
+        .iter()
+        .map(|s| s.min_slack_ns)
+        .collect();
+    let device = Device::for_array(cfg.array_size);
+    let model = PowerModel::new(cfg.tech.clone(), cfg.clock_mhz);
+    let floor = runtime_scheme::physical_floor(&cfg.tech);
+    let period = netlist.period_ns();
+    let budget = period - timing::CLOCK_UNCERTAINTY_NS;
+
+    let mut single_power = f64::NAN;
+    let mut out = Vec::with_capacity(counts.len());
+    for &n in counts {
+        let clustering = equal_quantile_clustering(&slacks, n);
+        let mut parts = floorplan::bands(&device, &clustering, cfg.array_size)?;
+        // Seed with Algorithm 1 over the full usable range, then
+        // calibrate to the frontier (VTR-style NTC floor).
+        let v_lo = (cfg.tech.v_th + 0.1).min(cfg.tech.v_min);
+        let rails = static_scheme::assign(&clustering, &slacks, cfg.tech.v_nom, v_lo)?;
+        for p in parts.iter_mut() {
+            p.vccint = rails
+                .iter()
+                .find(|r| r.partition == p.id)
+                .expect("rail per partition")
+                .vccint;
+        }
+        let vs = static_scheme::step(cfg.tech.v_nom, v_lo, n.max(4));
+        runtime_scheme::calibrate(
+            &netlist,
+            &cfg.tech,
+            &cfg.razor,
+            &mut parts,
+            vs,
+            400,
+            floor,
+            |_| cfg.calib_toggle,
+        );
+
+        // Power at the calibrated rails.
+        let power_mw = model.scaled_mw(&parts, |_| crate::razor::DEFAULT_TOGGLE);
+        if n == 1 || single_power.is_nan() {
+            single_power = if n == 1 { power_mw } else { single_power };
+        }
+
+        // Margin + accuracy risk under the workload shift.
+        let mut margins = Vec::with_capacity(n);
+        let mut silent_macs = 0usize;
+        for p in &parts {
+            let frontier =
+                crate::razor::min_safe_voltage(&netlist, &cfg.tech, &p.macs, cfg.calib_toggle);
+            margins.push(p.vccint - frontier);
+            // Silent check at the shifted activity.
+            let vf = cfg.tech.delay_factor(p.vccint);
+            let stretch = vf * activity_stretch(cfg.shifted_toggle);
+            for &mac in &p.macs {
+                let worst = netlist
+                    .arcs_of(mac)
+                    .iter()
+                    .map(|a| a.total_delay_ns())
+                    .fold(0.0, f64::max)
+                    * stretch;
+                if worst > budget + cfg.razor.t_del_ns {
+                    silent_macs += 1;
+                }
+            }
+        }
+        out.push(TradeoffPoint {
+            n,
+            rails: parts.iter().map(|p| p.vccint).collect(),
+            power_mw,
+            power_vs_single: f64::NAN, // filled below
+            mean_margin_v: margins.iter().sum::<f64>() / margins.len() as f64,
+            silent_mac_fraction: silent_macs as f64 / netlist.mac_count() as f64,
+        });
+    }
+    // Normalise against n=1 (or the first point if 1 was not requested).
+    let base = out
+        .iter()
+        .find(|p| p.n == 1)
+        .map(|p| p.power_mw)
+        .unwrap_or_else(|| out.first().map(|p| p.power_mw).unwrap_or(f64::NAN));
+    for p in &mut out {
+        p.power_vs_single = p.power_mw / base;
+    }
+    Ok(out)
+}
+
+/// Render the study as an aligned text table.
+pub fn render(points: &[TradeoffPoint]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:>4} {:>12} {:>12} {:>14} {:>18}",
+        "n", "power (mW)", "vs n=1", "mean margin V", "silent MACs (shift)"
+    );
+    for p in points {
+        let _ = writeln!(
+            s,
+            "{:>4} {:>12.1} {:>11.1}% {:>14.4} {:>17.1}%",
+            p.n,
+            p.power_mw,
+            100.0 * p.power_vs_single,
+            p.mean_margin_v,
+            100.0 * p.silent_mac_fraction
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn study(counts: &[usize]) -> Vec<TradeoffPoint> {
+        let cfg = StudyConfig::paper_default(Technology::academic_22nm());
+        partition_count_study(&cfg, counts).unwrap()
+    }
+
+    #[test]
+    fn equal_quantiles_generalise_quartiles() {
+        let slacks: Vec<f64> = (0..256).map(|i| i as f64 * 0.01).collect();
+        for n in [1usize, 2, 4, 8, 16] {
+            let c = equal_quantile_clustering(&slacks, n);
+            assert_eq!(c.k, n);
+            let sizes = c.sizes();
+            assert_eq!(sizes.iter().sum::<usize>(), 256);
+            assert!(sizes.iter().all(|&s| s == 256 / n), "n={n}: {sizes:?}");
+            // Quantile order == slack order.
+            let cents = c.centroids(&slacks);
+            for w in cents.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn power_decreases_with_partition_count() {
+        let pts = study(&[1, 2, 4, 8]);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].power_mw <= w[0].power_mw + 1e-9,
+                "power not monotone: n={} {:.1} -> n={} {:.1}",
+                w[0].n,
+                w[0].power_mw,
+                w[1].n,
+                w[1].power_mw
+            );
+        }
+        // And the returns diminish: the 1->2 gain exceeds the 4->8 gain.
+        let g12 = pts[0].power_mw - pts[1].power_mw;
+        let g48 = pts[2].power_mw - pts[3].power_mw;
+        assert!(g12 > g48, "no diminishing returns: {g12} vs {g48}");
+    }
+
+    #[test]
+    fn risk_grows_or_holds_with_partition_count() {
+        // Finer partitioning => rails closer to each group's frontier =>
+        // the same workload shift corrupts at least as many MACs.
+        let pts = study(&[1, 4, 16]);
+        assert!(pts[2].silent_mac_fraction >= pts[0].silent_mac_fraction - 1e-12);
+        // The margin left above the frontier shrinks with n.
+        assert!(pts[2].mean_margin_v <= pts[0].mean_margin_v + 1e-9);
+    }
+
+    #[test]
+    fn rails_ordered_by_criticality() {
+        let pts = study(&[4]);
+        let rails = &pts[0].rails;
+        // Partition 0 = lowest slack = highest rail, descending.
+        for w in rails.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9, "rails not ordered: {rails:?}");
+        }
+    }
+
+    #[test]
+    fn render_contains_every_point() {
+        let pts = study(&[1, 4]);
+        let text = render(&pts);
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.contains("power (mW)"));
+    }
+}

@@ -1,0 +1,519 @@
+//! S4 — Timing engine.
+//!
+//! Reproduces the two timing views the paper's tool flow consumes:
+//!
+//! * [`synthesize`] — the post-synthesis report (paper Table I schema:
+//!   name, slack, levels, high fanout, from, to, total/logic/net delay,
+//!   requirement, source/destination clock). Its per-MAC **minimum
+//!   slack** is the clustering input (paper §II-D).
+//! * [`implement`] — the post-place-and-route view over a floorplan:
+//!   net delays are perturbed by placement, and partial-sum nets that
+//!   cross a partition boundary pay a routing penalty. The paper uses
+//!   this view to show partitioning barely moves the 100 worst
+//!   setup/hold paths (Figs 4-5) so re-clustering is unnecessary.
+//!
+//! Delays here are at nominal voltage; voltage-dependent analysis
+//! composes [`crate::tech::Technology::delay_factor`] on top (see
+//! [`crate::razor`]).
+//!
+//! Performance note (EXPERIMENTS.md §Perf): [`PathRecord`] is a flat
+//! `Copy` struct — the report names and RTL endpoint strings are
+//! *computed on demand* from `(mac, bit, crosses_row, rank)`. The first
+//! implementation materialised two `String`s per record; at 64x64 that
+//! is 139 264 allocations per analysis and dominated the flow (454 ms →
+//! see the §Perf table for the after).
+
+use crate::fpga::Partition;
+use crate::netlist::{MacId, SystolicNetlist};
+use crate::util::hash3_unit;
+
+/// Clock uncertainty (skew + jitter) subtracted from every setup slack,
+/// ns — Vivado's default ~0.3 ns at 100 MHz, visible in Table I where
+/// slack + delay < requirement.
+pub const CLOCK_UNCERTAINTY_NS: f64 = 0.29;
+
+/// Hold requirement margin, ns.
+pub const HOLD_MARGIN_NS: f64 = 0.10;
+
+/// One row of the timing report — Table I schema. Flat and `Copy`;
+/// the textual columns are produced by [`PathRecord::name`],
+/// [`PathRecord::from`] and [`PathRecord::to`] on demand.
+#[derive(Debug, Clone, Copy)]
+pub struct PathRecord {
+    /// Rank after sorting by slack (0 = worst); `name()` renders it.
+    pub rank: u32,
+    pub slack_ns: f64,
+    pub levels: u32,
+    pub high_fanout: u32,
+    pub total_delay_ns: f64,
+    pub logic_delay_ns: f64,
+    pub net_delay_ns: f64,
+    pub requirement_ns: f64,
+    /// Owning MAC (not printed by Vivado, carried for clustering).
+    pub mac: MacId,
+    /// Endpoint register bit (`sig_mac_out_reg[bit]`).
+    pub bit: u32,
+    /// Partial-sum arc sourced from the MAC one row up.
+    pub crosses_row: bool,
+}
+
+impl PathRecord {
+    /// `Path 1`, `Path 2`, ... (rank order, worst first).
+    pub fn name(&self) -> String {
+        format!("Path {}", self.rank + 1)
+    }
+
+    /// Source register RTL name (upstream MAC's activation register for
+    /// partial-sum arcs).
+    pub fn from(&self) -> String {
+        if self.crosses_row && self.mac.row > 0 {
+            let up = MacId::new(self.mac.row - 1, self.mac.col);
+            format!("{}/prev_activ_reg[{}]/C", up.rtl_path(), self.bit % 8)
+        } else {
+            format!("{}/prev_activ_reg[{}]/C", self.mac.rtl_path(), self.bit % 8)
+        }
+    }
+
+    /// Endpoint register RTL name.
+    pub fn to(&self) -> String {
+        format!("{}/sig_mac_out_reg[{}]/D", self.mac.rtl_path(), self.bit)
+    }
+
+    /// Launch clock (single-clock design).
+    pub fn source_clock(&self) -> &'static str {
+        "clk"
+    }
+
+    /// Capture clock.
+    pub fn destination_clock(&self) -> &'static str {
+        "clk"
+    }
+}
+
+/// Minimum setup slack of one MAC over all its arcs — the data point the
+/// clustering algorithms consume.
+#[derive(Debug, Clone, Copy)]
+pub struct MacSlack {
+    pub mac: MacId,
+    pub min_slack_ns: f64,
+}
+
+/// A full timing view (synthesis or implementation).
+#[derive(Debug, Clone)]
+pub struct TimingReport {
+    /// Setup paths, sorted worst (smallest slack) first.
+    pub setup: Vec<PathRecord>,
+    /// Hold paths, sorted worst first.
+    pub hold: Vec<PathRecord>,
+    pub clock_mhz: f64,
+    /// Which stage produced the view.
+    pub stage: Stage,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Synthesis,
+    Implementation,
+}
+
+impl TimingReport {
+    /// Worst `n` setup paths (Fig 4's x-axis).
+    pub fn worst_setup(&self, n: usize) -> &[PathRecord] {
+        &self.setup[..n.min(self.setup.len())]
+    }
+
+    /// Worst `n` hold paths (Fig 5's x-axis).
+    pub fn worst_hold(&self, n: usize) -> &[PathRecord] {
+        &self.hold[..n.min(self.hold.len())]
+    }
+
+    /// Critical-path delay (largest total delay over setup paths).
+    pub fn critical_path_ns(&self) -> f64 {
+        self.setup
+            .iter()
+            .map(|p| p.total_delay_ns)
+            .fold(0.0, f64::max)
+    }
+
+    /// Worst setup slack.
+    pub fn worst_slack_ns(&self) -> f64 {
+        self.setup.first().map(|p| p.slack_ns).unwrap_or(f64::NAN)
+    }
+
+    /// Per-MAC minimum setup slack, row-major order — the clustering
+    /// input (paper §II-D: "clustering is performed on MACs using their
+    /// minimum slack values").
+    pub fn min_slack_per_mac(&self, size: u32) -> Vec<MacSlack> {
+        let mut best = vec![f64::INFINITY; (size * size) as usize];
+        for p in &self.setup {
+            let i = p.mac.index(size);
+            if p.slack_ns < best[i] {
+                best[i] = p.slack_ns;
+            }
+        }
+        (0..size)
+            .flat_map(|r| (0..size).map(move |c| MacId::new(r, c)))
+            .map(|mac| MacSlack {
+                mac,
+                min_slack_ns: best[mac.index(size)],
+            })
+            .collect()
+    }
+}
+
+/// Post-synthesis timing: delays straight from the netlist model, slack
+/// against the clock requirement minus uncertainty.
+pub fn synthesize(netlist: &SystolicNetlist) -> TimingReport {
+    let t = netlist.period_ns();
+    let mut setup: Vec<PathRecord> = Vec::with_capacity(netlist.arcs.len());
+    let mut hold: Vec<PathRecord> = Vec::with_capacity(netlist.arcs.len());
+    for arc in &netlist.arcs {
+        let total = arc.total_delay_ns();
+        setup.push(PathRecord {
+            rank: 0,
+            slack_ns: t - CLOCK_UNCERTAINTY_NS - total,
+            levels: arc.levels,
+            high_fanout: arc.fanout,
+            total_delay_ns: total,
+            logic_delay_ns: arc.logic_delay_ns,
+            net_delay_ns: arc.net_delay_ns,
+            requirement_ns: t,
+            mac: arc.mac,
+            bit: arc.bit,
+            crosses_row: arc.crosses_row,
+        });
+        // Hold analysis: short-path check against the same-edge capture.
+        // The short path of each arc is the direct register-to-register
+        // route bypassing the carry chain (~35% of the net delay).
+        let short = 0.35 * arc.net_delay_ns
+            + 0.10
+            + 0.05
+                * hash3_unit(
+                    netlist.seed ^ 0x701d,
+                    arc.mac.index(netlist.size) as u64,
+                    arc.bit as u64,
+                );
+        hold.push(PathRecord {
+            rank: 0,
+            slack_ns: short - HOLD_MARGIN_NS,
+            levels: 0,
+            high_fanout: arc.fanout,
+            total_delay_ns: short,
+            logic_delay_ns: 0.0,
+            net_delay_ns: short,
+            requirement_ns: HOLD_MARGIN_NS,
+            mac: arc.mac,
+            bit: arc.bit,
+            crosses_row: arc.crosses_row,
+        });
+    }
+
+    sort_and_rank(&mut setup);
+    sort_and_rank(&mut hold);
+    TimingReport {
+        setup,
+        hold,
+        clock_mhz: netlist.clock_mhz,
+        stage: Stage::Synthesis,
+    }
+}
+
+/// Placement/routing effect applied to a synthesis view.
+///
+/// * every net picks up a bounded placement perturbation (+-6%,
+///   deterministic per arc),
+/// * partial-sum arcs whose source MAC landed in a *different* partition
+///   pay a boundary-crossing penalty proportional to the partition
+///   centre distance (long vertical route through the island gap).
+///
+/// The paper's observation (Figs 4-5) is that with MAC-granularity
+/// clustering these effects are small and order-preserving — this
+/// function is where that claim is testable in our reproduction.
+pub fn implement(netlist: &SystolicNetlist, partitions: &[Partition]) -> TimingReport {
+    let synth = synthesize(netlist);
+    let t = netlist.period_ns();
+
+    // MAC -> partition index lookup.
+    let mut part_of = vec![usize::MAX; netlist.mac_count()];
+    for p in partitions {
+        for mac in &p.macs {
+            part_of[mac.index(netlist.size)] = p.id;
+        }
+    }
+    // Pairwise partition centre distances, precomputed (the closure was
+    // two linear scans per path before — §Perf iteration 3).
+    let max_id = partitions.iter().map(|p| p.id).max().unwrap_or(0) + 1;
+    let mut centre = vec![(0.0f64, 0.0f64); max_id];
+    for p in partitions {
+        centre[p.id] = p.rect.centre();
+    }
+
+    let crossing_penalty = |mac: MacId| -> f64 {
+        if mac.row == 0 {
+            return 0.0;
+        }
+        let up = MacId::new(mac.row - 1, mac.col);
+        let (pa, pb) = (
+            part_of[mac.index(netlist.size)],
+            part_of[up.index(netlist.size)],
+        );
+        if pa == usize::MAX || pb == usize::MAX || pa == pb {
+            return 0.0;
+        }
+        let (ax, ay) = centre[pa];
+        let (bx, by) = centre[pb];
+        // ~2 ps per slice of centre distance: a boundary hop costs tens
+        // of ps, never enough to reorder criticality (Fig 4/5 claim).
+        0.002 * ((ax - bx).abs() + (ay - by).abs())
+    };
+
+    let mut setup: Vec<PathRecord> = synth
+        .setup
+        .iter()
+        .map(|p| {
+            let jit = 0.94
+                + 0.12
+                    * hash3_unit(
+                        netlist.seed ^ IMPL_JITTER_SEED,
+                        p.mac.index(netlist.size) as u64,
+                        p.levels as u64 ^ ((p.high_fanout as u64) << 8),
+                    );
+            let net = p.net_delay_ns * jit + crossing_penalty(p.mac);
+            let total = p.logic_delay_ns + net;
+            PathRecord {
+                net_delay_ns: net,
+                total_delay_ns: total,
+                slack_ns: t - CLOCK_UNCERTAINTY_NS - total,
+                ..*p
+            }
+        })
+        .collect();
+
+    let mut hold: Vec<PathRecord> = synth
+        .hold
+        .iter()
+        .map(|p| {
+            let jit = 0.97
+                + 0.06
+                    * hash3_unit(
+                        netlist.seed ^ 0x401d,
+                        p.mac.index(netlist.size) as u64,
+                        p.high_fanout as u64,
+                    );
+            // Hold (short) paths take the direct route; only a sliver of
+            // the island-crossing detour shows up on them.
+            let short = p.total_delay_ns * jit + 0.15 * crossing_penalty(p.mac);
+            PathRecord {
+                net_delay_ns: short,
+                total_delay_ns: short,
+                slack_ns: short - HOLD_MARGIN_NS,
+                ..*p
+            }
+        })
+        .collect();
+
+    sort_and_rank(&mut setup);
+    sort_and_rank(&mut hold);
+    TimingReport {
+        setup,
+        hold,
+        clock_mhz: netlist.clock_mhz,
+        stage: Stage::Implementation,
+    }
+}
+
+/// Seed tweak separating implementation-stage jitter from synthesis.
+const IMPL_JITTER_SEED: u64 = 0x1A9B;
+
+fn sort_and_rank(paths: &mut [PathRecord]) {
+    paths.sort_unstable_by(|a, b| a.slack_ns.total_cmp(&b.slack_ns));
+    for (i, p) in paths.iter_mut().enumerate() {
+        p.rank = i as u32;
+    }
+}
+
+/// Pairwise delay deltas of the worst-`n` paths between two stages —
+/// the data series of Figs 4 and 5. Paths are matched by endpoint (not
+/// rank), mirroring how the paper overlays the two curves.
+pub fn worst_path_deltas(
+    a: &TimingReport,
+    b: &TimingReport,
+    n: usize,
+    hold: bool,
+) -> Vec<(String, f64, f64)> {
+    let (pa, pb) = if hold {
+        (a.worst_hold(n), &b.hold[..])
+    } else {
+        (a.worst_setup(n), &b.setup[..])
+    };
+    pa.iter()
+        .map(|p| {
+            let matched = pb
+                .iter()
+                .find(|q| q.mac == p.mac && q.bit == p.bit)
+                .map(|q| q.total_delay_ns)
+                .unwrap_or(f64::NAN);
+            (p.to(), p.total_delay_ns, matched)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::Rect;
+    use crate::tech::Technology;
+
+    fn netlist16() -> SystolicNetlist {
+        SystolicNetlist::generate(16, &Technology::artix7_28nm(), 100.0, 1)
+    }
+
+    fn four_partitions(size: u32) -> Vec<Partition> {
+        // Fig 8 geometry: quadrants, bottom rows (low slack) in 2 & 3.
+        let half = size / 2;
+        let sl = crate::fpga::SLICES_PER_MAC;
+        let w = half * sl;
+        (0..4)
+            .map(|i| {
+                let (qx, qy) = ((i as u32) % 2, (i as u32) / 2);
+                Partition {
+                    id: i,
+                    rect: Rect::new(qx * w, qy * w, qx * w + w - 1, qy * w + w - 1),
+                    macs: (0..half)
+                        .flat_map(|r| {
+                            (0..half).map(move |c| MacId::new(qy * half + r, qx * half + c))
+                        })
+                        .collect(),
+                    vccint: 1.0,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn synthesis_report_has_table1_schema() {
+        let rep = synthesize(&netlist16());
+        assert_eq!(rep.setup.len(), 16 * 16 * 17);
+        let p = &rep.setup[0];
+        assert_eq!(p.name(), "Path 1");
+        assert_eq!(p.source_clock(), "clk");
+        assert_eq!(p.requirement_ns, 10.0);
+        assert!(p.to().contains("sig_mac_out_reg"));
+        assert!(p.from().contains("prev_activ_reg"));
+        // slack + uncertainty + delay == requirement
+        assert!(
+            (p.slack_ns + CLOCK_UNCERTAINTY_NS + p.total_delay_ns - p.requirement_ns).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn setup_paths_sorted_worst_first() {
+        let rep = synthesize(&netlist16());
+        for w in rep.setup.windows(2) {
+            assert!(w[0].slack_ns <= w[1].slack_ns);
+        }
+        // Ranks follow the sort order.
+        assert_eq!(rep.setup[10].rank, 10);
+        assert_eq!(rep.setup[10].name(), "Path 11");
+    }
+
+    #[test]
+    fn slacks_in_paper_range_at_100mhz() {
+        // Table I worst slacks ~5.3-5.8 ns; our worst slack must land in
+        // a compatible band (3.5-6.5 ns) and all paths must meet timing.
+        let rep = synthesize(&netlist16());
+        let worst = rep.worst_slack_ns();
+        assert!(worst > 3.5 && worst < 6.5, "worst slack {worst}");
+        assert!(rep.setup.iter().all(|p| p.slack_ns > 0.0));
+    }
+
+    #[test]
+    fn min_slack_per_mac_has_row_structure() {
+        let rep = synthesize(&netlist16());
+        let slacks = rep.min_slack_per_mac(16);
+        assert_eq!(slacks.len(), 256);
+        let row_mean = |r: u32| {
+            let xs: Vec<f64> = slacks
+                .iter()
+                .filter(|s| s.mac.row == r)
+                .map(|s| s.min_slack_ns)
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        // Bottom rows have *less* slack (paper §V-C).
+        assert!(row_mean(15) < row_mean(0) - 0.5);
+    }
+
+    #[test]
+    fn implementation_close_to_synthesis_fig4_claim() {
+        let nl = netlist16();
+        let synth = synthesize(&nl);
+        let impl_ = implement(&nl, &four_partitions(16));
+        let deltas = worst_path_deltas(&synth, &impl_, 100, false);
+        assert_eq!(deltas.len(), 100);
+        for (to, before, after) in &deltas {
+            assert!(after.is_finite(), "unmatched path {to}");
+            let rel = (after - before).abs() / before;
+            assert!(rel < 0.15, "path {to} moved {rel:.3}");
+        }
+    }
+
+    #[test]
+    fn implementation_preserves_min_slack_ordering() {
+        // The paper's re-clustering test: partition-induced deltas must
+        // not change which MACs are critical. Rank correlation of
+        // per-MAC min slack between stages stays high.
+        let nl = netlist16();
+        let a = synthesize(&nl).min_slack_per_mac(16);
+        let b = implement(&nl, &four_partitions(16)).min_slack_per_mac(16);
+        let mean_a = a.iter().map(|s| s.min_slack_ns).sum::<f64>() / 256.0;
+        let mean_b = b.iter().map(|s| s.min_slack_ns).sum::<f64>() / 256.0;
+        let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+        for (x, y) in a.iter().zip(&b) {
+            let (u, v) = (x.min_slack_ns - mean_a, y.min_slack_ns - mean_b);
+            num += u * v;
+            da += u * u;
+            db += v * v;
+        }
+        let corr = num / (da.sqrt() * db.sqrt());
+        assert!(corr > 0.95, "rank structure broke: corr={corr}");
+    }
+
+    #[test]
+    fn hold_paths_positive_and_small() {
+        let rep = synthesize(&netlist16());
+        for p in rep.worst_hold(100) {
+            assert!(p.slack_ns > 0.0, "hold violation {}", p.name());
+            assert!(p.slack_ns < 1.0, "implausible hold slack {}", p.slack_ns);
+        }
+    }
+
+    #[test]
+    fn critical_path_scales_with_array_size() {
+        let t = Technology::artix7_28nm();
+        let s16 = synthesize(&SystolicNetlist::generate(16, &t, 100.0, 1));
+        let s64 = synthesize(&SystolicNetlist::generate(64, &t, 100.0, 1));
+        // Same MAC structure => similar critical path (row factor is
+        // normalised); must not explode with size.
+        let (c16, c64) = (s16.critical_path_ns(), s64.critical_path_ns());
+        assert!((c64 - c16).abs() < 1.0, "c16={c16} c64={c64}");
+    }
+
+    #[test]
+    fn endpoint_names_stable_across_stages() {
+        // worst_path_deltas matches by (mac, bit); the rendered RTL
+        // endpoint of the matched pair must be identical.
+        let nl = netlist16();
+        let synth = synthesize(&nl);
+        let impl_ = implement(&nl, &four_partitions(16));
+        let p = &synth.setup[0];
+        let q = impl_
+            .setup
+            .iter()
+            .find(|q| q.mac == p.mac && q.bit == p.bit)
+            .unwrap();
+        assert_eq!(p.to(), q.to());
+        assert_eq!(p.from(), q.from());
+    }
+}

@@ -1,0 +1,133 @@
+//! Deterministic utilities shared across the simulator.
+//!
+//! The timing and workload models must be bit-reproducible across runs
+//! (EXPERIMENTS.md depends on it), so all "randomness" flows from the
+//! SplitMix64 generator below, seeded explicitly — never from the OS.
+
+/// SplitMix64 — tiny, fast, high-quality 64-bit PRNG.
+///
+/// Used for timing jitter, workload synthesis and k-means++ seeding.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's multiply-shift; bias is negligible for our n.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Approximately standard-normal (sum of 4 uniforms, CLT; cheap and
+    /// deterministic — the timing jitter does not need exact tails).
+    #[inline]
+    pub fn gauss(&mut self) -> f64 {
+        let s: f64 = (0..4).map(|_| self.next_f64()).sum();
+        (s - 2.0) * (12.0f64 / 4.0).sqrt()
+    }
+
+    /// Signed int8 sample, uniform.
+    #[inline]
+    pub fn next_i8(&mut self) -> i8 {
+        (self.next_u64() & 0xFF) as u8 as i8
+    }
+}
+
+/// Stable hash of (a, b, c) — deterministic per-entity jitter that does
+/// not depend on iteration order (wire a MAC's identity in, get its
+/// process-variation offset out).
+#[inline]
+pub fn hash3(a: u64, b: u64, c: u64) -> u64 {
+    let mut x = a
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(b.rotate_left(17))
+        .wrapping_add(c.rotate_left(41));
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    x ^ (x >> 33)
+}
+
+/// hash3 folded into [0, 1).
+#[inline]
+pub fn hash3_unit(a: u64, b: u64, c: u64) -> f64 {
+    (hash3(a, b, c) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_unit_range() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn gauss_moments_are_sane() {
+        let mut r = SplitMix64::new(3);
+        let n = 50_000;
+        let samples: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn hash3_is_order_sensitive_and_stable() {
+        assert_eq!(hash3(1, 2, 3), hash3(1, 2, 3));
+        assert_ne!(hash3(1, 2, 3), hash3(3, 2, 1));
+        let u = hash3_unit(5, 6, 7);
+        assert!((0.0..1.0).contains(&u));
+    }
+}

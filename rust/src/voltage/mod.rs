@@ -1,0 +1,68 @@
+//! S6 + S7 — Voltage scaling schemes (paper §III).
+//!
+//! * [`static_scheme`] — Algorithm 1: uniform stepping of per-partition
+//!   `Vccint_i` across the critical region `[V_crash, V_min]`, plus the
+//!   slack-ordered assignment (lowest-slack cluster -> highest voltage).
+//! * [`runtime_scheme`] — Algorithm 2: one-step-up/one-step-down
+//!   calibration from the per-partition Razor timing-failure flags,
+//!   iterated over trial runs until the rails settle.
+//! * [`Region`] — the voltage-region taxonomy of paper Fig 7.
+
+pub mod runtime_scheme;
+pub mod static_scheme;
+
+
+use crate::tech::Technology;
+
+/// Voltage regions of paper Fig 7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    /// Below `v_crash`: timing failure, "DNN accuracy near to zero".
+    Crash,
+    /// `[v_crash, v_min)`: higher efficiency, accuracy at risk — where
+    /// the proposed scheme operates.
+    Critical,
+    /// `[v_min, v_nom]`: vendor guard band — 100% accuracy, least
+    /// power efficiency.
+    GuardBand,
+    /// Above `v_nom`.
+    OverDrive,
+}
+
+/// Classify a rail voltage for `tech` (paper Fig 7).
+pub fn region(tech: &Technology, v: f64) -> Region {
+    if v < tech.v_crash {
+        Region::Crash
+    } else if v < tech.v_min {
+        Region::Critical
+    } else if v <= tech.v_nom {
+        Region::GuardBand
+    } else {
+        Region::OverDrive
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_partition_the_axis() {
+        let mut t = Technology::artix7_28nm();
+        // Give the tech a real critical region for the test.
+        t.v_crash = 0.80;
+        t.v_min = 0.95;
+        assert_eq!(region(&t, 0.70), Region::Crash);
+        assert_eq!(region(&t, 0.85), Region::Critical);
+        assert_eq!(region(&t, 0.97), Region::GuardBand);
+        assert_eq!(region(&t, 1.00), Region::GuardBand);
+        assert_eq!(region(&t, 1.10), Region::OverDrive);
+    }
+
+    #[test]
+    fn paper_guardband_is_guardband() {
+        // §V-C: "the guardband region for Artix-7 FPGA is 0.95 V to 1.00 V".
+        let t = Technology::artix7_28nm();
+        assert_eq!(region(&t, 0.96), Region::GuardBand);
+    }
+}

@@ -1,0 +1,362 @@
+//! Algorithm 2 — Runtime Voltage Scaling (paper §III-B), verbatim:
+//!
+//! ```text
+//! Require: Vccint, Vs
+//! 1: for i = 0 to n-1 do
+//! 2:   if timing_fail-part-i == 1 then
+//! 3:     Vccint_i = Vccint_i + Vs
+//! 4:   else
+//! 5:     Vccint_i = Vccint_i - Vs
+//! 6:   end if
+//! 7: end for
+//! ```
+//!
+//! "Before starting the actual run of the proposed systolic array, if we
+//! have trial run, all the Vccint_i of all partitions will be tuned
+//! accurately by this runtime process." — [`calibrate`] is that trial-run
+//! loop: it repeats Algorithm 2 against the Razor simulation until every
+//! rail oscillates around its frontier, then settles each rail at the
+//! safe side of the oscillation. The final rails are
+//! `Vccint_i + C_i * Vs` for integer `C_i`, exactly the paper's eq. (1)
+//! closing form.
+
+
+use crate::fpga::Partition;
+use crate::netlist::SystolicNetlist;
+use crate::razor::{trial_partition, RazorConfig};
+use crate::tech::Technology;
+use crate::voltage::Region;
+
+/// The lowest electrically meaningful rail voltage for a technology
+/// (just above threshold — below it the delay model diverges).
+pub fn physical_floor(tech: &Technology) -> f64 {
+    tech.v_th + 0.02
+}
+
+/// Trajectory of one calibration run (for reports and the
+/// `runtime_calibration` example).
+#[derive(Debug, Clone)]
+pub struct CalibrationLog {
+    /// Voltage of every partition after every trial (outer: trial).
+    pub trajectory: Vec<Vec<f64>>,
+    /// Razor flags of every partition per trial.
+    pub flags: Vec<Vec<bool>>,
+    /// Trials executed before convergence (or `max_trials`).
+    pub trials: usize,
+    /// True if every rail settled (flag-free and stable).
+    pub converged: bool,
+}
+
+/// One step of Algorithm 2 over all partitions.
+///
+/// `flags[i]` is `timing_fail-part-i`; rails move by exactly one `Vs`
+/// and are clamped to the legal region `[v_floor, v_ceil]` (the power
+/// distribution unit cannot drive rails outside its range — paper [11]).
+pub fn step(vccint: &mut [f64], flags: &[bool], vs: f64, v_floor: f64, v_ceil: f64) {
+    assert_eq!(vccint.len(), flags.len());
+    for (v, &fail) in vccint.iter_mut().zip(flags) {
+        if fail {
+            *v += vs;
+        } else {
+            *v -= vs;
+        }
+        *v = v.clamp(v_floor, v_ceil);
+    }
+}
+
+/// Trial-run calibration loop.
+///
+/// Each trial: simulate Razor over every partition at its current rail
+/// (with per-MAC toggle rates from `toggle_of`), then apply Algorithm 2.
+/// A rail has *settled* once it alternates fail/pass — the frontier is
+/// between the two; we finish it at the passing side (+Vs guard).
+/// Returns the calibrated partitions and the full log.
+///
+/// `v_floor` bounds the power-distribution unit's range: the commercial
+/// flow passes the guard-band bottom (the paper "tested in the guardband
+/// region" because Vivado cannot go lower); the academic flow passes a
+/// near-threshold floor. Pass [`physical_floor`]`(tech)` for no policy
+/// bound.
+pub fn calibrate<F>(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    partitions: &mut [Partition],
+    vs: f64,
+    max_trials: usize,
+    v_floor: f64,
+    toggle_of: F,
+) -> CalibrationLog
+where
+    F: Fn(crate::netlist::MacId) -> f64,
+{
+    let v_floor = v_floor.max(physical_floor(tech));
+    let v_ceil = tech.v_nom;
+    let n = partitions.len();
+    let mut log = CalibrationLog {
+        trajectory: vec![partitions.iter().map(|p| p.vccint).collect()],
+        flags: Vec::new(),
+        trials: 0,
+        converged: false,
+    };
+    // A rail is "locked" after its first fail->pass transition.
+    let mut locked = vec![false; n];
+    let mut last_fail = vec![false; n];
+
+    for trial in 0..max_trials {
+        let mut flags = vec![false; n];
+        for (i, p) in partitions.iter().enumerate() {
+            if locked[i] {
+                continue;
+            }
+            let t = trial_partition(netlist, tech, razor, p.id, &p.macs, p.vccint, &toggle_of);
+            flags[i] = t.timing_fail;
+        }
+        log.flags.push(flags.clone());
+        log.trials = trial + 1;
+
+        let mut all_locked = true;
+        for i in 0..n {
+            if locked[i] {
+                continue;
+            }
+            if trial > 0 && last_fail[i] && !flags[i] {
+                // Crossed the frontier upward last step and now passes:
+                // lock here (the passing side).
+                locked[i] = true;
+                continue;
+            }
+            if !flags[i] && partitions[i].vccint <= v_floor + 1e-12 {
+                // Ran out of range while passing — floor is safe.
+                locked[i] = true;
+                continue;
+            }
+            if flags[i] && partitions[i].vccint >= v_ceil - 1e-12 {
+                // Failing at the ceiling: cannot fix by voltage (clock
+                // too fast for this partition) — lock at ceiling.
+                locked[i] = true;
+                continue;
+            }
+            all_locked = false;
+            // Algorithm 2 on this rail.
+            let mut v = partitions[i].vccint;
+            if flags[i] {
+                v += vs;
+            } else {
+                v -= vs;
+            }
+            partitions[i].vccint = v.clamp(v_floor, v_ceil);
+            last_fail[i] = flags[i];
+        }
+        log.trajectory
+            .push(partitions.iter().map(|p| p.vccint).collect());
+        if all_locked {
+            log.converged = true;
+            break;
+        }
+    }
+
+    // Final safety pass: any partition still flagging gets stepped up
+    // until clean (bounded by the ceiling).
+    for p in partitions.iter_mut() {
+        let mut guard = 0;
+        while guard < 64 {
+            let t = trial_partition(netlist, tech, razor, p.id, &p.macs, p.vccint, &toggle_of);
+            if !t.timing_fail || p.vccint >= v_ceil - 1e-12 {
+                break;
+            }
+            p.vccint = (p.vccint + vs).min(v_ceil);
+            guard += 1;
+        }
+    }
+    log
+}
+
+/// Check a calibrated configuration: every rail flag-free, inside the
+/// legal region, and within one step of its frontier (no wasted margin).
+pub fn audit<F>(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    partitions: &[Partition],
+    vs: f64,
+    toggle_of: F,
+) -> Vec<RailAudit>
+where
+    F: Fn(crate::netlist::MacId) -> f64,
+{
+    partitions
+        .iter()
+        .map(|p| {
+            let now = trial_partition(netlist, tech, razor, p.id, &p.macs, p.vccint, &toggle_of);
+            let below = if p.vccint - vs > tech.v_th + 0.02 {
+                trial_partition(
+                    netlist,
+                    tech,
+                    razor,
+                    p.id,
+                    &p.macs,
+                    p.vccint - vs,
+                    &toggle_of,
+                )
+                .timing_fail
+            } else {
+                true
+            };
+            RailAudit {
+                partition: p.id,
+                vccint: p.vccint,
+                clean: !now.timing_fail,
+                tight: below || p.vccint <= tech.v_th + 0.03,
+                region: crate::voltage::region(tech, p.vccint),
+            }
+        })
+        .collect()
+}
+
+/// Audit row for one rail.
+#[derive(Debug, Clone, Copy)]
+pub struct RailAudit {
+    pub partition: usize,
+    pub vccint: f64,
+    /// No Razor flag at the calibrated voltage.
+    pub clean: bool,
+    /// One step lower would flag (the rail carries no wasted margin).
+    pub tight: bool,
+    pub region: Region,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::Rect;
+    use crate::netlist::MacId;
+    use crate::razor::DEFAULT_TOGGLE;
+
+    fn quadrants(size: u32, v0: f64) -> Vec<Partition> {
+        let half = size / 2;
+        let sl = crate::fpga::SLICES_PER_MAC;
+        let w = half * sl;
+        (0..4usize)
+            .map(|i| {
+                let (qx, qy) = ((i as u32) % 2, (i as u32) / 2);
+                Partition {
+                    id: i,
+                    rect: Rect::new(qx * w, qy * w, qx * w + w - 1, qy * w + w - 1),
+                    macs: (0..half)
+                        .flat_map(|r| {
+                            (0..half).map(move |c| MacId::new(qy * half + r, qx * half + c))
+                        })
+                        .collect(),
+                    vccint: v0,
+                }
+            })
+            .collect()
+    }
+
+    fn setup() -> (SystolicNetlist, Technology, RazorConfig) {
+        let tech = Technology::artix7_28nm();
+        (
+            SystolicNetlist::generate(16, &tech, 100.0, 1),
+            tech,
+            RazorConfig::default(),
+        )
+    }
+
+    #[test]
+    fn step_moves_rails_by_exactly_vs() {
+        let mut v = vec![0.90, 0.90];
+        step(&mut v, &[true, false], 0.01, 0.5, 1.0);
+        assert!((v[0] - 0.91).abs() < 1e-12);
+        assert!((v[1] - 0.89).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_clamps_to_rail_range() {
+        let mut v = vec![0.999, 0.501];
+        step(&mut v, &[true, false], 0.01, 0.5, 1.0);
+        assert!((v[0] - 1.0).abs() < 1e-12);
+        assert!((v[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibrate_converges_and_is_clean() {
+        let (nl, tech, razor) = setup();
+        let mut parts = quadrants(16, 0.97);
+        let log = calibrate(&nl, &tech, &razor, &mut parts, 0.0125, 200, physical_floor(&tech), |_| DEFAULT_TOGGLE);
+        assert!(log.converged, "did not converge in {} trials", log.trials);
+        let audits = audit(&nl, &tech, &razor, &parts, 0.0125, |_| DEFAULT_TOGGLE);
+        for a in &audits {
+            assert!(a.clean, "partition {} flags at {:.4}", a.partition, a.vccint);
+        }
+    }
+
+    #[test]
+    fn calibrated_rails_sit_near_the_frontier() {
+        let (nl, tech, razor) = setup();
+        let mut parts = quadrants(16, 0.97);
+        let vs = 0.0125;
+        calibrate(&nl, &tech, &razor, &mut parts, vs, 200, physical_floor(&tech), |_| DEFAULT_TOGGLE);
+        for p in &parts {
+            let frontier =
+                crate::razor::min_safe_voltage(&nl, &tech, &p.macs, DEFAULT_TOGGLE);
+            assert!(
+                p.vccint >= frontier - 1e-9,
+                "partition {} below frontier",
+                p.id
+            );
+            assert!(
+                p.vccint <= frontier + 2.0 * vs + 1e-9,
+                "partition {} wastes margin: {:.4} vs frontier {:.4}",
+                p.id,
+                p.vccint,
+                frontier
+            );
+        }
+    }
+
+    #[test]
+    fn bottom_partitions_calibrate_higher() {
+        // Quadrants 2/3 hold rows 8..16 (slower); their rails must end
+        // above quadrants 0/1 — the paper's §V-C placement story.
+        let (nl, tech, razor) = setup();
+        let mut parts = quadrants(16, 0.97);
+        calibrate(&nl, &tech, &razor, &mut parts, 0.0125, 200, physical_floor(&tech), |_| DEFAULT_TOGGLE);
+        let top = 0.5 * (parts[0].vccint + parts[1].vccint);
+        let bottom = 0.5 * (parts[2].vccint + parts[3].vccint);
+        assert!(bottom > top, "top {top:.4} bottom {bottom:.4}");
+    }
+
+    #[test]
+    fn high_toggle_calibrates_higher_than_quiet() {
+        let (nl, tech, razor) = setup();
+        let mut quiet = quadrants(16, 0.97);
+        let mut noisy = quadrants(16, 0.97);
+        calibrate(&nl, &tech, &razor, &mut quiet, 0.0125, 200, physical_floor(&tech), |_| 0.02);
+        calibrate(&nl, &tech, &razor, &mut noisy, 0.0125, 200, physical_floor(&tech), |_| 0.95);
+        let mean = |ps: &[Partition]| ps.iter().map(|p| p.vccint).sum::<f64>() / ps.len() as f64;
+        assert!(mean(&noisy) > mean(&quiet) + 0.005);
+    }
+
+    #[test]
+    fn eq1_final_rails_are_integer_steps_from_start() {
+        // Paper eq. (1): final rails are Vccint_i + C_i * Vs, C_i integer.
+        let (nl, tech, razor) = setup();
+        let v0 = 0.97;
+        let vs = 0.0125;
+        let mut parts = quadrants(16, v0);
+        calibrate(&nl, &tech, &razor, &mut parts, vs, 200, physical_floor(&tech), |_| DEFAULT_TOGGLE);
+        for p in &parts {
+            if (p.vccint - tech.v_nom).abs() < 1e-9 || (p.vccint - tech.v_th - 0.02).abs() < 1e-9
+            {
+                continue; // clamped at a rail bound
+            }
+            let c = (p.vccint - v0) / vs;
+            assert!(
+                (c - c.round()).abs() < 1e-6,
+                "partition {}: C = {c} not integer",
+                p.id
+            );
+        }
+    }
+}

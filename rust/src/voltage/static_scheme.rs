@@ -1,0 +1,161 @@
+//! Algorithm 1 — Static Voltage Scaling (paper §III-A), verbatim:
+//!
+//! ```text
+//! Require: Vccint, Vmin, Vcrash & n
+//! 1: Vs = (Vmin - Vcrash) / n
+//! 2: Vl = Vcrash
+//! 3: for i = 0 to n-1 do
+//! 4:   Vccint_i = (Vl + Vl + Vs) / 2
+//! 5:   Vl = Vl + Vs
+//! 6: end for
+//! ```
+//!
+//! i.e. each partition's rail sits at the midpoint of its stripe of the
+//! `[Vcrash, Vmin]` critical region. For the paper's worked example
+//! (n = 4, range [0.95, 1.00]) this yields 0.95625, 0.96875, 0.98125,
+//! 0.99375 — the values the paper rounds to 0.96/0.97/0.98/0.99 in
+//! Table II. (The paper's prose lists "0.985" for partition 3; Algorithm
+//! 1 produces 0.98125, so we follow the algorithm.)
+
+
+use crate::cluster::Clustering;
+use crate::error::{Error, Result};
+
+/// Output of the static scheme for one partition.
+#[derive(Debug, Clone, Copy)]
+pub struct RailAssignment {
+    /// Partition id (== canonical cluster label).
+    pub partition: usize,
+    /// Seed voltage from Algorithm 1 (V).
+    pub vccint: f64,
+    /// Mean min-slack of the MACs in this partition (ns) — recorded so
+    /// reports can show the slack -> voltage mapping.
+    pub mean_min_slack_ns: f64,
+}
+
+/// Algorithm 1: the `n` stepping voltages, ascending from `v_crash`.
+pub fn stepping_voltages(v_min: f64, v_crash: f64, n: usize) -> Result<Vec<f64>> {
+    if n == 0 {
+        return Err(Error::Voltage("need at least one partition".into()));
+    }
+    if !(v_min > v_crash) {
+        return Err(Error::Voltage(format!(
+            "invalid critical region: v_min={v_min} <= v_crash={v_crash}"
+        )));
+    }
+    let vs = (v_min - v_crash) / n as f64;
+    let mut vl = v_crash;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push((vl + vl + vs) / 2.0);
+        vl += vs;
+    }
+    Ok(out)
+}
+
+/// The voltage step `Vs` — also the runtime scheme's calibration step.
+pub fn step(v_min: f64, v_crash: f64, n: usize) -> f64 {
+    (v_min - v_crash) / n as f64
+}
+
+/// Assign Algorithm 1 voltages to slack-ordered clusters.
+///
+/// Canonical cluster order (see [`Clustering::sorted_by_centroid`]) puts
+/// the **lowest**-slack cluster first; it receives the **highest**
+/// voltage ("the MACs which have lower minimum slack path are placed in
+/// higher voltage partitions"). Noise points (DBSCAN) are folded into
+/// cluster 0 — an outlier with anomalous slack is safest on the highest
+/// rail.
+pub fn assign(
+    clustering: &Clustering,
+    min_slacks: &[f64],
+    v_min: f64,
+    v_crash: f64,
+) -> Result<Vec<RailAssignment>> {
+    let n = clustering.k;
+    let volts = stepping_voltages(v_min, v_crash, n)?;
+    let cents = clustering.centroids(min_slacks);
+    Ok((0..n)
+        .map(|part| RailAssignment {
+            partition: part,
+            // Cluster 0 = lowest slack -> last (highest) stepping voltage.
+            vccint: volts[n - 1 - part],
+            mean_min_slack_ns: cents[part],
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Algorithm;
+
+    #[test]
+    fn paper_worked_example_n4_guardband() {
+        // §V-C: n=4, range [0.95, 1.00] => Vs = 0.0125 and rails
+        // 0.95625 / 0.96875 / 0.98125 / 0.99375 (rounded 0.96..0.99).
+        let v = stepping_voltages(1.00, 0.95, 4).unwrap();
+        let want = [0.95625, 0.96875, 0.98125, 0.99375];
+        for (got, want) in v.iter().zip(want) {
+            assert!((got - want).abs() < 1e-12, "got {got} want {want}");
+        }
+        assert!((step(1.00, 0.95, 4) - 0.0125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_fourth_instance_wide_range() {
+        // Table II 4th instance: VTR rails {0.7, 0.8, 0.9, 1.0} arise
+        // from stepping [0.65, 1.05]; verify midpoint structure on the
+        // paper's own range style.
+        let v = stepping_voltages(1.05, 0.65, 4).unwrap();
+        let want = [0.70, 0.80, 0.90, 1.00];
+        for (got, want) in v.iter().zip(want) {
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn voltages_ascend_within_region() {
+        let v = stepping_voltages(1.0, 0.8, 7).unwrap();
+        for w in v.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(v[0] > 0.8 && *v.last().unwrap() < 1.0);
+    }
+
+    #[test]
+    fn single_partition_gets_midpoint() {
+        let v = stepping_voltages(1.0, 0.9, 1).unwrap();
+        assert!((v[0] - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_degenerate_region_or_zero_n() {
+        assert!(stepping_voltages(0.9, 0.9, 4).is_err());
+        assert!(stepping_voltages(0.8, 0.9, 4).is_err());
+        assert!(stepping_voltages(1.0, 0.9, 0).is_err());
+    }
+
+    #[test]
+    fn lowest_slack_cluster_gets_highest_voltage() {
+        // Two obvious slack groups: critical ~4.2 ns, relaxed ~5.8 ns.
+        let mut slacks = vec![4.2; 10];
+        slacks.extend(vec![5.8; 10]);
+        let c = Algorithm::KMeans { k: 2, seed: 1 }.run(&slacks).unwrap();
+        let rails = assign(&c, &slacks, 1.00, 0.95).unwrap();
+        // Cluster 0 (centroid 4.2) must hold the higher voltage.
+        assert!(rails[0].mean_min_slack_ns < rails[1].mean_min_slack_ns);
+        assert!(rails[0].vccint > rails[1].vccint);
+        // n = 2: Vs = 0.025; midpoints 0.9625 / 0.9875.
+        assert!((rails[0].vccint - 0.9875).abs() < 1e-12);
+        assert!((rails[1].vccint - 0.9625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rail_count_matches_cluster_count() {
+        let slacks: Vec<f64> = (0..40).map(|i| 4.0 + 0.05 * i as f64).collect();
+        let c = Algorithm::Hierarchical { k: 5 }.run(&slacks).unwrap();
+        let rails = assign(&c, &slacks, 1.0, 0.9).unwrap();
+        assert_eq!(rails.len(), 5);
+    }
+}

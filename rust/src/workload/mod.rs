@@ -1,0 +1,197 @@
+//! S14 — Workload generation.
+//!
+//! Synthetic int8 activation streams with controllable **bit
+//! fluctuation** — the input property that drives both dynamic power
+//! (toggle rate) and NTC timing-error probability (GreenTPU's
+//! observation the paper's runtime scheme builds on). Plus a synthetic
+//! MNIST-class dataset for the end-to-end serving example (the L2 model
+//! artifact was trained on nothing; accuracy is measured *relative to
+//! the nominal-voltage outputs*, which is precisely the paper's accuracy
+//! notion — timing failures corrupt outputs away from the golden run).
+
+
+use crate::util::SplitMix64;
+
+/// How hard the activation bits fluctuate cycle to cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FluctuationProfile {
+    /// Slowly drifting activations (random walk, small steps) — low
+    /// toggle rate, the friendliest case for NTC.
+    Low,
+    /// Moderate random walk.
+    Medium,
+    /// Independent uniform samples every cycle — toggle rate ~0.5,
+    /// the adversarial case ("higher fluctuation of input bits
+    /// increases the possibility of timing failure").
+    High,
+}
+
+impl FluctuationProfile {
+    pub fn all() -> [Self; 3] {
+        [Self::Low, Self::Medium, Self::High]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Low => "low",
+            Self::Medium => "medium",
+            Self::High => "high",
+        }
+    }
+}
+
+/// An int8 activation stream: `rows` cycles of `width` lanes.
+#[derive(Debug, Clone)]
+pub struct Stream {
+    pub width: usize,
+    pub data: Vec<i8>, // row-major, rows x width
+}
+
+impl Stream {
+    pub fn rows(&self) -> usize {
+        self.data.len() / self.width
+    }
+
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.width..(r + 1) * self.width]
+    }
+
+    /// Generate a stream with the given fluctuation profile.
+    pub fn synthetic(rows: usize, width: usize, profile: FluctuationProfile, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut data = Vec::with_capacity(rows * width);
+        let mut state: Vec<i32> = (0..width).map(|_| rng.next_i8() as i32).collect();
+        for _ in 0..rows {
+            for s in state.iter_mut() {
+                match profile {
+                    FluctuationProfile::Low => {
+                        // +-1 drift.
+                        *s = (*s + (rng.below(3) as i32 - 1)).clamp(-128, 127);
+                    }
+                    FluctuationProfile::Medium => {
+                        *s = (*s + (rng.below(33) as i32 - 16)).clamp(-128, 127);
+                    }
+                    FluctuationProfile::High => {
+                        *s = rng.next_i8() as i32;
+                    }
+                }
+                data.push(*s as i8);
+            }
+        }
+        Self { width, data }
+    }
+
+    /// Mean per-lane bit-toggle rate in [0, 1] — the rust-side oracle of
+    /// the L1 activity kernel (used when artifacts are unavailable, and
+    /// by tests cross-checking the PJRT path).
+    pub fn toggle_rates(&self) -> Vec<f64> {
+        let rows = self.rows();
+        let mut rates = vec![0.0f64; self.width];
+        if rows < 2 {
+            return rates;
+        }
+        for r in 1..rows {
+            let (prev, curr) = (self.row(r - 1), self.row(r));
+            for (i, rate) in rates.iter_mut().enumerate() {
+                *rate += ((prev[i] as u8) ^ (curr[i] as u8)).count_ones() as f64;
+            }
+        }
+        let denom = ((rows - 1) * 8) as f64;
+        for r in rates.iter_mut() {
+            *r /= denom;
+        }
+        rates
+    }
+
+    /// Mean toggle rate across all lanes.
+    pub fn mean_toggle(&self) -> f64 {
+        let r = self.toggle_rates();
+        r.iter().sum::<f64>() / r.len().max(1) as f64
+    }
+}
+
+/// A labelled synthetic classification batch for the e2e example:
+/// inputs are 784-wide int8 "images"; the golden label is whatever the
+/// nominal-voltage model says (self-referential accuracy, as in the
+/// paper's timing-failure accuracy study).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub inputs: Vec<i8>, // batch x 784, row-major
+    pub batch: usize,
+    pub width: usize,
+}
+
+impl Batch {
+    pub fn synthetic(batch: usize, width: usize, profile: FluctuationProfile, seed: u64) -> Self {
+        let s = Stream::synthetic(batch, width, profile, seed);
+        Self {
+            inputs: s.data,
+            batch,
+            width,
+        }
+    }
+
+    pub fn sample(&self, i: usize) -> &[i8] {
+        &self.inputs[i * self.width..(i + 1) * self.width]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_order_toggle_rates() {
+        let low = Stream::synthetic(256, 64, FluctuationProfile::Low, 1).mean_toggle();
+        let med = Stream::synthetic(256, 64, FluctuationProfile::Medium, 1).mean_toggle();
+        let high = Stream::synthetic(256, 64, FluctuationProfile::High, 1).mean_toggle();
+        assert!(low < med, "low {low} med {med}");
+        assert!(med < high, "med {med} high {high}");
+        // Independent uniform int8: expected toggle rate 0.5.
+        assert!((high - 0.5).abs() < 0.05, "high {high}");
+    }
+
+    #[test]
+    fn low_profile_is_genuinely_quiet() {
+        let low = Stream::synthetic(256, 64, FluctuationProfile::Low, 7).mean_toggle();
+        assert!(low < 0.2, "low profile toggles at {low}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Stream::synthetic(32, 16, FluctuationProfile::Medium, 5);
+        let b = Stream::synthetic(32, 16, FluctuationProfile::Medium, 5);
+        assert_eq!(a.data, b.data);
+        let c = Stream::synthetic(32, 16, FluctuationProfile::Medium, 6);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn toggle_rates_edge_cases() {
+        let one_row = Stream {
+            width: 4,
+            data: vec![1, 2, 3, 4],
+        };
+        assert!(one_row.toggle_rates().iter().all(|&r| r == 0.0));
+        // Constant stream.
+        let constant = Stream {
+            width: 2,
+            data: vec![9, 9, 9, 9, 9, 9],
+        };
+        assert!(constant.mean_toggle() == 0.0);
+        // Full flip 0x00 <-> 0xFF.
+        let flip = Stream {
+            width: 1,
+            data: vec![0, -1, 0, -1],
+        };
+        assert!((flip.mean_toggle() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_sample_slices_rows() {
+        let b = Batch::synthetic(4, 8, FluctuationProfile::High, 3);
+        assert_eq!(b.sample(0).len(), 8);
+        assert_eq!(b.sample(3).len(), 8);
+        assert_eq!(b.inputs.len(), 32);
+    }
+}

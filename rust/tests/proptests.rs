@@ -1,0 +1,316 @@
+//! Property-based tests over randomized inputs.
+//!
+//! The build is fully vendored (no proptest crate), so properties are
+//! driven by the in-crate SplitMix64 generator: each property runs
+//! against `CASES` random instances with recorded seeds — a failure
+//! message always carries the seed, so shrink-by-hand is one rerun away.
+
+use vstpu::cluster::{dbscan, hierarchical, kmeans, meanshift, Algorithm, NOISE};
+use vstpu::fpga::{validate_partitions, Device};
+use vstpu::netlist::SystolicNetlist;
+use vstpu::razor::{effective_delay_ns, min_safe_voltage, RazorConfig};
+use vstpu::tech::Technology;
+use vstpu::timing::{self, CLOCK_UNCERTAINTY_NS};
+use vstpu::util::SplitMix64;
+use vstpu::voltage::{runtime_scheme, static_scheme};
+use vstpu::workload::{FluctuationProfile, Stream};
+
+const CASES: u64 = 40;
+
+/// Random 1-D dataset: a few gaussian-ish blobs plus uniform noise.
+fn random_data(rng: &mut SplitMix64) -> Vec<f64> {
+    let n_blobs = 1 + rng.below(4) as usize;
+    let n = 20 + rng.below(180) as usize;
+    let mut data = Vec::with_capacity(n);
+    let centers: Vec<f64> = (0..n_blobs).map(|_| rng.range_f64(0.0, 20.0)).collect();
+    for i in 0..n {
+        let c = centers[i % n_blobs];
+        data.push(c + rng.gauss() * 0.3);
+    }
+    data
+}
+
+// ------------------------------------------------------------ clustering
+
+#[test]
+fn prop_all_algorithms_produce_valid_labelings() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed);
+        let data = random_data(&mut rng);
+        let k = 1 + rng.below(4.min(data.len() as u64)) as usize;
+        let algos = [
+            Algorithm::Hierarchical { k },
+            Algorithm::KMeans { k, seed },
+            Algorithm::MeanShift {
+                bandwidth: rng.range_f64(0.1, 3.0),
+            },
+            Algorithm::Dbscan {
+                eps: rng.range_f64(0.05, 1.0),
+                min_points: 1 + rng.below(5) as usize,
+            },
+        ];
+        for algo in algos {
+            let c = algo.run(&data).unwrap();
+            assert_eq!(c.labels.len(), data.len(), "seed {seed} {}", algo.name());
+            for &l in &c.labels {
+                assert!(l < c.k || l == NOISE, "seed {seed} {}: label {l}", algo.name());
+            }
+            // Canonical order: centroids ascending.
+            let cents = c.centroids(&data);
+            for w in cents.windows(2) {
+                assert!(
+                    w[0] <= w[1] + 1e-9 || w[0].is_nan() || w[1].is_nan(),
+                    "seed {seed} {}: centroids {cents:?}",
+                    algo.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hierarchical_cut_is_a_partition_of_n() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 1000);
+        let data = random_data(&mut rng);
+        let d = hierarchical::dendrogram(&data);
+        for k in [1usize, 2, 3, data.len().min(7)] {
+            let c = d.cut(k).unwrap();
+            assert_eq!(c.sizes().iter().sum::<usize>(), data.len(), "seed {seed} k {k}");
+            assert_eq!(c.k, k);
+        }
+    }
+}
+
+#[test]
+fn prop_kmeans_inertia_nonincreasing_in_k() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 2000);
+        let data = random_data(&mut rng);
+        if data.len() < 6 {
+            continue;
+        }
+        let i2 = kmeans::inertia(&data, &kmeans::cluster(&data, 2, seed).unwrap());
+        let i5 = kmeans::inertia(&data, &kmeans::cluster(&data, 5, seed).unwrap());
+        // k-means++ with Lloyd is near-monotone; tiny epsilon for local
+        // minima wobble on adversarial blobs.
+        assert!(i5 <= i2 * 1.05 + 1e-9, "seed {seed}: i2={i2} i5={i5}");
+    }
+}
+
+#[test]
+fn prop_dbscan_core_points_never_noise() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 3000);
+        let data = random_data(&mut rng);
+        let eps = rng.range_f64(0.05, 0.5);
+        let min_points = 1 + rng.below(4) as usize;
+        let c = dbscan::cluster(&data, eps, min_points).unwrap();
+        for (i, &x) in data.iter().enumerate() {
+            let neighbours = data.iter().filter(|&&y| (x - y).abs() <= eps).count();
+            if neighbours >= min_points {
+                assert_ne!(
+                    c.labels[i], NOISE,
+                    "seed {seed}: core point {i} marked noise"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_meanshift_k_monotone_in_bandwidth() {
+    // Larger bandwidth can only merge modes, never split them.
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 4000);
+        let data = random_data(&mut rng);
+        let small = meanshift::cluster(&data, 0.2).unwrap().k;
+        let large = meanshift::cluster(&data, 5.0).unwrap().k;
+        assert!(large <= small, "seed {seed}: k({large}) > k({small})");
+    }
+}
+
+// ------------------------------------------------------- voltage schemes
+
+#[test]
+fn prop_static_voltages_stay_inside_region_and_ascend() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 5000);
+        let v_crash = rng.range_f64(0.5, 0.9);
+        let v_min = v_crash + rng.range_f64(0.01, 0.3);
+        let n = 1 + rng.below(9) as usize;
+        let v = static_scheme::stepping_voltages(v_min, v_crash, n).unwrap();
+        assert_eq!(v.len(), n);
+        for w in v.windows(2) {
+            assert!(w[0] < w[1], "seed {seed}: {v:?}");
+        }
+        assert!(v[0] > v_crash && *v.last().unwrap() < v_min, "seed {seed}");
+        // Midpoint identity: mean of rails == centre of the region.
+        let mean: f64 = v.iter().sum::<f64>() / n as f64;
+        assert!((mean - (v_crash + v_min) / 2.0).abs() < 1e-9, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_algorithm2_step_moves_every_rail_by_vs() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 6000);
+        let n = 1 + rng.below(8) as usize;
+        let vs = rng.range_f64(0.005, 0.05);
+        let mut rails: Vec<f64> = (0..n).map(|_| rng.range_f64(0.6, 1.0)).collect();
+        let flags: Vec<bool> = (0..n).map(|_| rng.next_f64() < 0.5).collect();
+        let before = rails.clone();
+        runtime_scheme::step(&mut rails, &flags, vs, 0.0, 2.0);
+        for i in 0..n {
+            let want = if flags[i] { before[i] + vs } else { before[i] - vs };
+            assert!((rails[i] - want).abs() < 1e-12, "seed {seed} rail {i}");
+        }
+    }
+}
+
+// ------------------------------------------------------ timing + razor
+
+#[test]
+fn prop_slack_identity_holds_for_every_path() {
+    for seed in 0..5 {
+        let tech = Technology::artix7_28nm();
+        let nl = SystolicNetlist::generate(16, &tech, 100.0, seed);
+        let rep = timing::synthesize(&nl);
+        for p in rep.worst_setup(500) {
+            let identity = p.slack_ns + CLOCK_UNCERTAINTY_NS + p.total_delay_ns;
+            assert!((identity - p.requirement_ns).abs() < 1e-9, "seed {seed}");
+            assert!(
+                (p.total_delay_ns - p.logic_delay_ns - p.net_delay_ns).abs() < 1e-9,
+                "seed {seed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_effective_delay_monotonicity() {
+    let tech = Technology::academic_22nm();
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 7000);
+        let d = rng.range_f64(1.0, 8.0);
+        let v1 = rng.range_f64(tech.v_th + 0.05, 1.0);
+        let v2 = rng.range_f64(tech.v_th + 0.05, 1.0);
+        let t1 = rng.next_f64();
+        let t2 = rng.next_f64();
+        let (vlo, vhi) = if v1 < v2 { (v1, v2) } else { (v2, v1) };
+        let (tlo, thi) = if t1 < t2 { (t1, t2) } else { (t2, t1) };
+        // Lower voltage => longer delay; higher toggle => longer delay.
+        assert!(
+            effective_delay_ns(&tech, d, vlo, 0.5) >= effective_delay_ns(&tech, d, vhi, 0.5),
+            "seed {seed}"
+        );
+        assert!(
+            effective_delay_ns(&tech, d, 0.8, thi) >= effective_delay_ns(&tech, d, 0.8, tlo),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_min_safe_voltage_is_sound_and_tight() {
+    let tech = Technology::artix7_28nm();
+    let nl = SystolicNetlist::generate(8, &tech, 100.0, 3);
+    let razor = RazorConfig::default();
+    let macs: Vec<_> = nl.macs().collect();
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 8000);
+        let toggle = rng.next_f64();
+        let subset: Vec<_> = macs
+            .iter()
+            .filter(|_| rng.next_f64() < 0.5)
+            .cloned()
+            .collect();
+        if subset.is_empty() {
+            continue;
+        }
+        let v = min_safe_voltage(&nl, &tech, &subset, toggle);
+        let at = vstpu::razor::trial_partition(&nl, &tech, &razor, 0, &subset, v + 1e-6, |_| toggle);
+        assert!(!at.timing_fail, "seed {seed}: flags at its own frontier");
+        if v - 0.01 > tech.v_th + 0.02 {
+            let below =
+                vstpu::razor::trial_partition(&nl, &tech, &razor, 0, &subset, v - 0.01, |_| toggle);
+            assert!(below.timing_fail, "seed {seed}: frontier not tight");
+        }
+    }
+}
+
+// ----------------------------------------------------------- floorplan
+
+#[test]
+fn prop_band_floorplans_always_validate() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 9000);
+        let size = 8 + 2 * rng.below(9) as u32; // 8..=24 even
+        let k = 2 + rng.below(5) as usize;
+        let n = (size * size) as usize;
+        // Random (possibly unbalanced) labeling with every cluster hit.
+        let mut labels: Vec<usize> = (0..n).map(|_| rng.below(k as u64) as usize).collect();
+        for (j, l) in labels.iter_mut().take(k).enumerate() {
+            *l = j;
+        }
+        let clustering = vstpu::cluster::Clustering { labels, k };
+        let device = Device::for_array(size);
+        let parts = vstpu::floorplan::bands(&device, &clustering, size).unwrap();
+        validate_partitions(&device, &parts).unwrap();
+        assert_eq!(
+            parts.iter().map(|p| p.mac_count()).sum::<usize>(),
+            n,
+            "seed {seed}"
+        );
+    }
+}
+
+// ------------------------------------------------------------ workload
+
+#[test]
+fn prop_toggle_rates_always_in_unit_interval() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 10_000);
+        let rows = 2 + rng.below(120) as usize;
+        let width = 1 + rng.below(64) as usize;
+        let profile = match rng.below(3) {
+            0 => FluctuationProfile::Low,
+            1 => FluctuationProfile::Medium,
+            _ => FluctuationProfile::High,
+        };
+        let s = Stream::synthetic(rows, width, profile, seed);
+        for (i, r) in s.toggle_rates().iter().enumerate() {
+            assert!((0.0..=1.0).contains(r), "seed {seed} lane {i}: {r}");
+        }
+    }
+}
+
+// ----------------------------------------------------------- manifest
+
+#[test]
+fn prop_manifest_roundtrip_random_signatures() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 11_000);
+        let n_art = 1 + rng.below(5) as usize;
+        let mut tsv = String::new();
+        let mut want: Vec<(String, usize, usize)> = Vec::new();
+        for a in 0..n_art {
+            let name = format!("art{a}");
+            let ins = 1 + rng.below(3) as usize;
+            let outs = 1 + rng.below(4) as usize;
+            for i in 0..ins {
+                tsv.push_str(&format!("{name}\tin\t{i}\tint8\t{}x{}\n", 1 + a, 2 + i));
+            }
+            for o in 0..outs {
+                tsv.push_str(&format!("{name}\tout\t{o}\tfloat32\t{}\n", 3 + o));
+            }
+            want.push((name, ins, outs));
+        }
+        let m = vstpu::runtime::parse_manifest_tsv(&tsv).unwrap();
+        for (name, ins, outs) in want {
+            let sig = &m[&name];
+            assert_eq!(sig.inputs.len(), ins, "seed {seed}");
+            assert_eq!(sig.outputs.len(), outs, "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Cross-language correctness: the PJRT path vs in-rust oracles.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they skip
+//! cleanly when it is absent so `cargo test` stays green on a fresh
+//! clone. The key property: the AOT-compiled Pallas systolic kernel and
+//! activity kernel must agree **bit-exactly** with independent rust
+//! implementations of the same math — a tiling or layout bug anywhere in
+//! the python -> HLO -> PJRT -> rust chain cannot hide.
+
+use std::path::Path;
+
+use vstpu::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest, MODEL_INPUT, MODEL_OUTPUT};
+use vstpu::runtime::{Engine, Tensor};
+use vstpu::tech::Technology;
+use vstpu::util::SplitMix64;
+use vstpu::workload::{Batch, FluctuationProfile, Stream};
+
+const BATCH: usize = 32;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.tsv").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Rust oracle for the systolic matmul: int8 x int8 -> int32.
+fn matmul_oracle(x: &[i8], w: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc += x[i * k + kk] as i32 * w[kk * n + j] as i32;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+#[test]
+fn engine_lists_all_artifacts() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::open(dir).unwrap();
+    let names = engine.names();
+    for want in [
+        "activity_16",
+        "activity_32",
+        "activity_64",
+        "model_fwd",
+        "systolic_16",
+        "systolic_32",
+        "systolic_64",
+    ] {
+        assert!(names.contains(&want), "missing artifact {want}: {names:?}");
+    }
+    assert_eq!(engine.platform().to_lowercase(), "cpu");
+}
+
+#[test]
+fn systolic_artifacts_match_rust_oracle_bit_exactly() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::open(dir).unwrap();
+    let mut rng = SplitMix64::new(7);
+    for s in [16usize, 32, 64] {
+        let model = engine.load(&format!("systolic_{s}")).unwrap();
+        let x: Vec<i8> = (0..BATCH * s).map(|_| rng.next_i8()).collect();
+        let w: Vec<i8> = (0..s * s).map(|_| rng.next_i8()).collect();
+        let out = model
+            .execute(&[
+                Tensor::I8(x.clone(), vec![BATCH, s]),
+                Tensor::I8(w.clone(), vec![s, s]),
+            ])
+            .unwrap();
+        let got = out[0].as_i32().unwrap();
+        let want = matmul_oracle(&x, &w, BATCH, s, s);
+        assert_eq!(got, want.as_slice(), "size {s}");
+    }
+}
+
+#[test]
+fn activity_artifacts_match_workload_oracle() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::open(dir).unwrap();
+    for s in [16usize, 32, 64] {
+        let model = engine.load(&format!("activity_{s}")).unwrap();
+        let stream = Stream::synthetic(BATCH, s, FluctuationProfile::Medium, 42 + s as u64);
+        let out = model
+            .execute(&[Tensor::I8(stream.data.clone(), vec![BATCH, s])])
+            .unwrap();
+        let got = out[0].as_f32().unwrap();
+        let want = stream.toggle_rates();
+        assert_eq!(got.len(), s);
+        for (lane, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (*g as f64 - w).abs() < 1e-6,
+                "size {s} lane {lane}: pjrt {g} oracle {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn model_fwd_shapes_and_telemetry_ranges() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::open(dir).unwrap();
+    let model = engine.load("model_fwd").unwrap();
+    let data = Batch::synthetic(BATCH, MODEL_INPUT, FluctuationProfile::High, 3);
+    let out = model
+        .execute(&[Tensor::I8(data.inputs.clone(), vec![BATCH, MODEL_INPUT])])
+        .unwrap();
+    assert_eq!(out.len(), 4); // logits + 3 toggle vectors
+    assert_eq!(out[0].shape(), &[BATCH, MODEL_OUTPUT]);
+    let logits = out[0].as_f32().unwrap();
+    assert!(logits.iter().all(|x| x.is_finite()));
+    for (t, width) in out[1..].iter().zip([784usize, 128, 64]) {
+        assert_eq!(t.shape(), &[width]);
+        let rates = t.as_f32().unwrap();
+        assert!(rates.iter().all(|r| (0.0..=1.0).contains(r)));
+    }
+    // High-fluctuation input: first-layer toggle rate must be high.
+    let l0 = out[1].as_f32().unwrap();
+    let mean: f32 = l0.iter().sum::<f32>() / l0.len() as f32;
+    assert!(mean > 0.3, "layer-0 toggle mean {mean}");
+}
+
+#[test]
+fn model_fwd_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::open(dir).unwrap();
+    let model = engine.load("model_fwd").unwrap();
+    let data = Batch::synthetic(BATCH, MODEL_INPUT, FluctuationProfile::Medium, 5);
+    let input = Tensor::I8(data.inputs.clone(), vec![BATCH, MODEL_INPUT]);
+    let a = model.execute(&[input.clone()]).unwrap();
+    let b = model.execute(&[input]).unwrap();
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+}
+
+#[test]
+fn execute_rejects_signature_mismatches() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::open(dir).unwrap();
+    let model = engine.load("systolic_16").unwrap();
+    // Wrong arity.
+    assert!(model.execute(&[]).is_err());
+    // Wrong shape.
+    let bad = model.execute(&[
+        Tensor::I8(vec![0; 16], vec![4, 4]),
+        Tensor::I8(vec![0; 256], vec![16, 16]),
+    ]);
+    assert!(bad.is_err());
+    // Wrong dtype.
+    let bad = model.execute(&[
+        Tensor::F32(vec![0.0; BATCH * 16], vec![BATCH, 16]),
+        Tensor::I8(vec![0; 256], vec![16, 16]),
+    ]);
+    assert!(bad.is_err());
+    // Unknown artifact.
+    assert!(engine.load("systolic_9000").is_err());
+}
+
+#[test]
+fn coordinator_serves_and_calibrates_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = CoordinatorConfig::paper_default(Technology::artix7_28nm());
+    cfg.voltage_epoch = 2;
+    let mut coord = Coordinator::open(dir, cfg).unwrap();
+    let data = Batch::synthetic(96, MODEL_INPUT, FluctuationProfile::Medium, 11);
+    let mut ids_seen = Vec::new();
+    for batch_idx in 0..3 {
+        let reqs: Vec<InferenceRequest> = (0..32)
+            .map(|i| InferenceRequest {
+                id: (batch_idx * 32 + i) as u64,
+                input: data.sample(batch_idx * 32 + i).to_vec(),
+            })
+            .collect();
+        let resp = coord.infer_batch(&reqs).unwrap();
+        assert_eq!(resp.len(), 32);
+        for r in resp {
+            assert_eq!(r.logits.len(), MODEL_OUTPUT);
+            assert!(!r.corrupted, "guard-band rails must not corrupt");
+            ids_seen.push(r.id);
+        }
+    }
+    assert_eq!(ids_seen.len(), 96);
+    let snap = coord.snapshot();
+    assert_eq!(snap.requests, 96);
+    assert_eq!(snap.batches, 3);
+    assert!(snap.power_mw > 0.0);
+    // Telemetry moved away from the DEFAULT_TOGGLE prior (0.125)
+    // towards the measured workload activity.
+    let mean_toggle: f64 = snap.row_toggle.iter().sum::<f64>() / snap.row_toggle.len() as f64;
+    assert!(
+        (mean_toggle - 0.125).abs() > 1e-3,
+        "telemetry never updated: {mean_toggle}"
+    );
+    assert!(mean_toggle > 0.0 && mean_toggle < 1.0);
+    // No flags inside the guard band.
+    assert!(snap.flagged.iter().all(|&f| !f));
+}
+
+#[test]
+fn forced_undervolt_corrupts_and_recovery_restores() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = CoordinatorConfig::paper_default(Technology::artix7_28nm());
+    cfg.voltage_epoch = usize::MAX;
+    let mut coord = Coordinator::open(dir, cfg).unwrap();
+    let data = Batch::synthetic(32, MODEL_INPUT, FluctuationProfile::High, 13);
+    let reqs: Vec<InferenceRequest> = (0..32)
+        .map(|i| InferenceRequest {
+            id: i as u64,
+            input: data.sample(i).to_vec(),
+        })
+        .collect();
+
+    // Golden at nominal.
+    let golden = coord.infer_batch(&reqs).unwrap();
+    assert!(golden.iter().all(|r| !r.corrupted));
+
+    // Deep undervolt: silent corruption.
+    coord.controller.set_rails(0.70);
+    let broken = coord.infer_batch(&reqs).unwrap();
+    assert!(broken.iter().all(|r| r.corrupted));
+    let differs = broken
+        .iter()
+        .zip(&golden)
+        .filter(|(b, g)| b.logits != g.logits)
+        .count();
+    assert!(differs > 0, "corruption must change logits");
+
+    // Recovery: back at nominal, outputs match the golden run again.
+    coord.controller.set_rails(1.00);
+    let recovered = coord.infer_batch(&reqs).unwrap();
+    assert!(recovered.iter().all(|r| !r.corrupted));
+    for (r, g) in recovered.iter().zip(&golden) {
+        assert_eq!(r.logits, g.logits);
+    }
+}
