@@ -1,0 +1,48 @@
+# vstpu build/test entry points.
+#
+# The rust build is fully self-contained: `make test` needs no Python,
+# no network and no artifacts/ directory (the runtime falls back to the
+# pure-Rust ReferenceBackend; see DESIGN.md "Runtime backends").
+# `make artifacts` optionally lowers the JAX/Pallas kernels to HLO text
+# so the artifact-validated Engine path gets exercised too.
+
+PYTHON ?= python3
+
+.PHONY: all build test pytest bench bench-build artifacts fmt lint clean
+
+all: build
+
+build:
+	cargo build --release
+
+# Tier-1 gate: build + tests from a clean checkout, zero artifacts.
+test:
+	cargo test -q
+
+# Python-side tests (skip themselves when jax/pytest are unavailable).
+pytest:
+	cd python && $(PYTHON) -m pytest tests -q
+
+# Compile every bench target (harness = false mains).
+bench-build:
+	cargo bench --no-run
+
+# Run the paper-figure benches.
+bench:
+	cargo bench
+
+# Lower the JAX/Pallas artifacts consumed by the Engine backend.
+# Wraps python/compile/aot.py; output lands in ./artifacts.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+fmt:
+	cargo fmt --all
+
+lint:
+	cargo fmt --all --check
+	cargo clippy --all-targets -- -D warnings
+
+clean:
+	cargo clean
+	rm -rf artifacts

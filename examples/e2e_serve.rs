@@ -17,7 +17,8 @@
 //!     ~100% through the guard band, degrades through the critical
 //!     region, and collapses below V_crash; power falls monotonically.
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_serve`
+//! Run: `cargo run --release --example e2e_serve`
+//! (optionally `make artifacts` first to exercise the artifact path)
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -35,9 +36,13 @@ fn open_coordinator(voltage_epoch: usize) -> Result<Coordinator, vstpu::Error> {
 }
 
 fn main() -> Result<(), vstpu::Error> {
-    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(2);
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        println!(
+            "artifacts/ found — serving via the manifest-validated engine \
+             (reference kernels execute; PJRT is not linked in this build)"
+        );
+    } else {
+        println!("artifacts/ absent — serving on the pure-Rust reference backend");
     }
     let data = Batch::synthetic(REQUESTS, 784, FluctuationProfile::Medium, 7);
 
@@ -46,9 +51,10 @@ fn main() -> Result<(), vstpu::Error> {
     // ---------------------------------------------------------------
     println!("== phase 1: serving {REQUESTS} requests through the router ==");
     let (tx, rx) = mpsc::channel::<(InferenceRequest, mpsc::Sender<InferenceResponse>)>();
-    // The PJRT client is not Send (Rc internals), so the coordinator is
-    // created *on* the serving thread — the pattern a real deployment
-    // uses anyway (one engine per serving thread).
+    // The coordinator is created *on* the serving thread — the pattern
+    // a real deployment uses anyway (one engine per serving thread),
+    // and a hard requirement once a PJRT client (not Send — Rc
+    // internals) is linked in.
     let server = std::thread::spawn(move || -> Result<_, vstpu::Error> {
         let coord = open_coordinator(8)?;
         coord.serve(rx, 2_000)

@@ -3,9 +3,10 @@
 //! Runs the full CAD flow on the 16x16 systolic array (Artix-7 class,
 //! 100 MHz): synthesis timing -> slack clustering -> quadrant floorplan
 //! -> Algorithm-1 static rails -> Razor-calibrated rails -> the Table II
-//! power comparison. If `artifacts/` exists (run `make artifacts`), it
-//! also pushes one batch of synthetic requests through the AOT-compiled
-//! JAX/Pallas model on the PJRT CPU client to show the serving path.
+//! power comparison. It then pushes one batch of synthetic requests
+//! through the serving path: the AOT-lowered model when `artifacts/`
+//! exists (run `make artifacts`), or the built-in pure-Rust reference
+//! backend otherwise — no artifacts, no Python needed.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -26,16 +27,15 @@ fn main() -> Result<(), vstpu::Error> {
         rep.power.baseline_total_mw, rep.power.scaled_total_mw, rep.power.reduction_pct
     );
 
-    // --- The serving path (needs `make artifacts`). --------------------
+    // --- The serving path (artifact-optional). --------------------------
+    // Coordinator::open falls back to the pure-Rust ReferenceBackend
+    // when artifacts/manifest.tsv is absent.
     let artifacts = std::path::Path::new("artifacts");
-    if !artifacts.join("manifest.tsv").exists() {
-        println!("artifacts/ not built; skipping the PJRT demo (run `make artifacts`)");
-        return Ok(());
-    }
     let mut coord = Coordinator::open(
         artifacts,
         CoordinatorConfig::paper_default(Technology::artix7_28nm()),
     )?;
+    println!("serving one batch on the '{}' runtime backend", coord.backend);
     let data = Batch::synthetic(32, 784, FluctuationProfile::Medium, 42);
     let reqs: Vec<InferenceRequest> = (0..32)
         .map(|i| InferenceRequest {
@@ -46,7 +46,7 @@ fn main() -> Result<(), vstpu::Error> {
     let responses = coord.infer_batch(&reqs)?;
     let snap = coord.snapshot();
     println!(
-        "served one batch of {} through PJRT: logits[0][0..4] = {:?}, \
+        "served one batch of {}: logits[0][0..4] = {:?}, \
          corrupted={}, power {:.1} mW at rails {:?}",
         responses.len(),
         &responses[0].logits[..4],

@@ -1,0 +1,12 @@
+"""Shared pytest setup: make `compile` importable from the repo's
+python/ directory and skip the whole suite cleanly when the optional
+heavy dependencies are missing (the rust tier-1 gate runs with no
+Python environment at all; these suites must never turn a missing
+interpreter package into a failure)."""
+
+import pathlib
+import sys
+
+# python/tests/ -> python/ on sys.path so `from compile import ...` works
+# no matter where pytest is invoked from.
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

@@ -5,12 +5,16 @@ contract with ref.py is bit-exactness, not allclose. Hypothesis sweeps
 shapes (tile multiples), tile sizes and operand ranges.
 """
 
+import pytest
+
+pytest.importorskip("jax", reason="jax not installed; kernel tests need it")
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
 import hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from compile.kernels import activity, ref, systolic
 

@@ -1,9 +1,12 @@
 """L2 model tests: quantised pipeline shape/behaviour + float oracle."""
 
+import pytest
+
+pytest.importorskip("jax", reason="jax not installed; model tests need it")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from compile import model as model_lib
 from compile.kernels import ref

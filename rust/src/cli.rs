@@ -35,7 +35,9 @@ COMMANDS
                     --array-size N (16)  --dendrogram
   calibrate       Razor trial-run calibration (Algorithm 2) details
                     --array-size N  --tech NAME  --toggle F (0.125)
-  serve           serve synthetic requests through the PJRT artifact
+  serve           serve synthetic requests through the runtime backend
+                    (falls back to the built-in reference backend when
+                    the artifacts directory is absent)
                     --artifacts DIR (artifacts)  --requests N (256)
                     --fluctuation low|medium|high (medium)
   e2e             end-to-end accuracy/power sweep (EXPERIMENTS.md E12)
@@ -241,6 +243,7 @@ pub fn run() -> Result<()> {
                 done += resp.len();
             }
             let snap = coord.snapshot();
+            println!("runtime backend: {}", coord.backend);
             println!(
                 "served {} requests in {} batches; power {:.1} mW; rails {:?}",
                 snap.requests,

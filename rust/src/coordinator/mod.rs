@@ -1,7 +1,7 @@
 //! S12 — Serving coordinator: the L3 request path.
 //!
 //! ```text
-//!  clients -> router (mpsc) -> Batcher -> PJRT model_fwd artifact
+//!  clients -> router (mpsc) -> Batcher -> model_fwd (runtime backend)
 //!                                |            |
 //!                                |            +-> logits  -> responses
 //!                                |            +-> toggle telemetry
@@ -12,8 +12,10 @@
 //! ```
 //!
 //! The coordinator owns the voltage-scaled systolic array end to end:
-//! requests are batched and executed through the AOT-compiled JAX/Pallas
-//! model (python never runs here), the per-layer toggle telemetry the
+//! requests are batched and executed through the runtime's `model_fwd`
+//! op — the AOT-lowered artifact when `artifacts/` exists, the built-in
+//! pure-Rust [`ReferenceBackend`] otherwise (python never runs here
+//! either way) — the per-layer toggle telemetry the
 //! model emits (L1 activity kernel) feeds the Razor error model, and
 //! every `voltage_epoch` batches the runtime scheme (paper Algorithm 2)
 //! re-calibrates the partition rails against the *measured* activity —
@@ -38,18 +40,22 @@ use crate::metrics::LatencyHistogram;
 use crate::netlist::{MacId, SystolicNetlist};
 use crate::power::PowerModel;
 use crate::razor::{trial_partition, MacOutcome, RazorConfig, DEFAULT_TOGGLE};
-use crate::runtime::{Engine, LoadedModel, Tensor};
+use crate::runtime::{self, Backend, LoadedModel, ReferenceBackend, Tensor};
 use crate::tech::Technology;
 use crate::timing;
 use crate::util::hash3_unit;
 use crate::voltage::static_scheme;
 
 /// Input width of the model artifact (see `python/compile/model.py`).
-pub const MODEL_INPUT: usize = 784;
+pub const MODEL_INPUT: usize = runtime::MODEL_LAYERS[0];
 /// Logit width.
-pub const MODEL_OUTPUT: usize = 16;
+pub const MODEL_OUTPUT: usize = runtime::MODEL_LAYERS[runtime::MODEL_LAYERS.len() - 1];
 /// Hidden-layer input widths whose toggle telemetry the artifact emits.
-pub const TELEMETRY_WIDTHS: [usize; 3] = [784, 128, 64];
+pub const TELEMETRY_WIDTHS: [usize; 3] = [
+    runtime::MODEL_LAYERS[0],
+    runtime::MODEL_LAYERS[1],
+    runtime::MODEL_LAYERS[2],
+];
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -336,6 +342,8 @@ impl VoltageController {
 pub struct Coordinator {
     pub config: CoordinatorConfig,
     model: LoadedModel,
+    /// Which runtime backend serves this coordinator ("cpu", "reference").
+    pub backend: &'static str,
     batcher: Batcher,
     pub controller: VoltageController,
     power_model: PowerModel,
@@ -345,16 +353,32 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Open artifacts and assemble the serving stack.
+    /// Assemble the serving stack over `artifacts_dir`. When the
+    /// directory holds no `manifest.tsv` the coordinator falls back to
+    /// the pure-Rust [`ReferenceBackend`], so inference works on a fresh
+    /// clone with zero external artifacts.
     pub fn open(artifacts_dir: &Path, config: CoordinatorConfig) -> Result<Self> {
-        let engine = Engine::open(artifacts_dir)?;
-        let model = engine.load("model_fwd")?;
+        let backend = runtime::backend_for(artifacts_dir, config.batch)?;
+        Self::with_backend(backend.as_ref(), config)
+    }
+
+    /// Assemble the serving stack on the built-in reference backend,
+    /// ignoring any artifacts on disk.
+    pub fn reference(config: CoordinatorConfig) -> Result<Self> {
+        let backend = ReferenceBackend::new(config.batch);
+        Self::with_backend(&backend, config)
+    }
+
+    /// Assemble the serving stack over any [`Backend`].
+    pub fn with_backend(backend: &dyn Backend, config: CoordinatorConfig) -> Result<Self> {
+        let model = backend.load("model_fwd")?;
         let controller = VoltageController::new(&config)?;
         let power_model = PowerModel::new(config.tech.clone(), config.clock_mhz);
         let batcher = Batcher::new(config.batch, MODEL_INPUT);
         Ok(Self {
             config,
             model,
+            backend: backend.platform_name(),
             batcher,
             controller,
             power_model,
@@ -364,7 +388,7 @@ impl Coordinator {
         })
     }
 
-    /// Execute one packed batch through the PJRT artifact; returns
+    /// Execute one packed batch through the model artifact; returns
     /// (logits row-major, per-layer toggle telemetry).
     fn execute(&self, packed: Vec<i8>) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
         let input = Tensor::I8(packed, vec![self.config.batch, MODEL_INPUT]);

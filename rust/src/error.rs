@@ -1,49 +1,92 @@
 //! Crate-wide error type.
+//!
+//! The build is fully vendored (zero dependencies — see Cargo.toml), so
+//! the `Display`/`Error` impls below are the hand-expanded form of what
+//! a `thiserror` derive would generate. Keep the message prefixes in
+//! sync with the variant docs: tests match on them.
 
 /// Unified error type for every subsystem.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid configuration or parameter combination.
-    #[error("config error: {0}")]
     Config(String),
 
     /// A clustering algorithm could not produce a valid clustering.
-    #[error("clustering error: {0}")]
     Clustering(String),
 
     /// Floorplanning / placement failure (e.g. partitions do not fit).
-    #[error("floorplan error: {0}")]
     Floorplan(String),
 
     /// Voltage outside the legal region for the technology.
-    #[error("voltage error: {0}")]
     Voltage(String),
 
     /// Timing analysis failure.
-    #[error("timing error: {0}")]
     Timing(String),
 
-    /// PJRT runtime failure (artifact load, compile or execute).
-    #[error("runtime error: {0}")]
+    /// Runtime backend failure (backend unavailable, execution error).
     Runtime(String),
 
-    /// Artifact missing or signature mismatch against manifest.json.
-    #[error("artifact error: {0}")]
+    /// Artifact missing or signature mismatch against the manifest.
     Artifact(String),
 
     /// Serving-path error (queue closed, request rejected, ...).
-    #[error("serve error: {0}")]
     Serve(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    /// I/O failure surfaced from the standard library.
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(e.to_string())
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Clustering(m) => write!(f, "clustering error: {m}"),
+            Error::Floorplan(m) => write!(f, "floorplan error: {m}"),
+            Error::Voltage(m) => write!(f, "voltage error: {m}"),
+            Error::Timing(m) => write!(f, "timing error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Serve(m) => write!(f, "serve error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_are_stable() {
+        assert!(Error::Config("x".into()).to_string().starts_with("config error: x"));
+        assert!(Error::Artifact("y".into()).to_string().contains("artifact error: y"));
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().starts_with("io error:"));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "inner").into();
+        assert!(e.source().is_some());
+        assert!(Error::Serve("s".into()).source().is_none());
+    }
+}

@@ -32,8 +32,10 @@
 //!   underscaling after Salami et al., per-MAC boosting after GreenTPU),
 //! * [`workload`] — synthetic int8 DNN workloads with controllable bit
 //!   fluctuation,
-//! * [`runtime`] — the PJRT client executing AOT-lowered JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) on the request path,
+//! * [`runtime`] — the pluggable runtime backends: the artifact-validated
+//!   engine over `artifacts/*.hlo.txt` + `manifest.tsv`, the pure-Rust
+//!   `ReferenceBackend` that serves with zero external artifacts, and
+//!   the (optional, unlinked by default) PJRT path,
 //! * [`coordinator`] — the serving loop: router, batcher, telemetry and
 //!   the runtime voltage controller,
 //! * [`report`] — renderers regenerating every table/figure of the paper.
@@ -41,9 +43,10 @@
 //! Quick start (library):
 //!
 //! ```no_run
-//! # // no_run: rustdoc test binaries do not inherit the rpath to
-//! # // libxla_extension.so (see .cargo/config.toml); the same snippet
-//! # // runs as examples/quickstart.rs.
+//! # // no_run: the full CAD flow takes whole seconds, and when the
+//! # // optional PJRT backend is linked rustdoc test binaries do not
+//! # // inherit the libxla_extension.so rpath (see .cargo/config.toml);
+//! # // the same snippet runs for real as examples/quickstart.rs.
 //! use vstpu::cadflow::{FlowConfig, VivadoFlow};
 //! use vstpu::tech::Technology;
 //!

@@ -1,22 +1,49 @@
-//! S13 — PJRT runtime: load and execute the AOT-lowered JAX/Pallas
-//! artifacts from the rust request path.
+//! S13 — Runtime: execute the model/kernel artifacts on the request path.
 //!
-//! `python/compile/aot.py` lowers every model/kernel once to HLO *text*
-//! (`artifacts/*.hlo.txt`; text rather than serialized proto because
-//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
-//! rejects) plus a manifest (`manifest.tsv` for this runtime, `manifest.json` for humans) with each artifact's signature. This
-//! module compiles the text on the PJRT CPU client and validates every
-//! call against the manifest, so a shape bug fails with a readable error
-//! instead of an aborted PJRT invocation.
+//! The runtime is organised around the [`Backend`] trait. Three
+//! implementations exist (see DESIGN.md "Runtime backends"):
 //!
-//! Python never runs here: after `make artifacts` the binary is
-//! self-contained.
+//! * [`ReferenceBackend`] — a pure-Rust, zero-dependency implementation
+//!   of every artifact the AOT pipeline ships: the int8 systolic matmul,
+//!   the switching-activity kernel and the quantised MLP forward pass.
+//!   It mirrors `python/compile/kernels/ref.py` + `model.py` semantics
+//!   (same layer widths, same requantisation, same toggle-rate
+//!   definition) so the coordinator, the CLI and the examples execute
+//!   real inference with **zero external artifacts**.
+//! * [`Engine`] — the artifact-backed backend: it reads the manifest
+//!   `python/compile/aot.py` emits (`artifacts/manifest.tsv`), validates
+//!   every signature, and executes through the reference kernels. When
+//!   the optional PJRT/XLA runtime is linked it would compile and run
+//!   the HLO text instead; either way every call is validated against
+//!   the manifest, so a shape bug fails with a readable error instead of
+//!   an aborted invocation.
+//! * [`PjrtBackend`] — the PJRT/HLO-artifact path. The fully vendored
+//!   default build does not link an XLA runtime, so this backend reports
+//!   itself unavailable gracefully ("artifacts skipped") rather than
+//!   failing the build; `.cargo/config.toml` documents the rpath needed
+//!   when it is linked in.
+//!
+//! [`backend_for`] picks the right backend for a directory: PJRT when
+//! linked, [`Engine`] when `manifest.tsv` exists, [`ReferenceBackend`]
+//! otherwise — the fallback chain that keeps `cargo test` and the
+//! serving examples green on a fresh clone with no Python and no
+//! `artifacts/` directory.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-
 use crate::error::{Error, Result};
+use crate::util::SplitMix64;
+
+/// Layer widths of the reference workload (`python/compile/model.py`'s
+/// `DEFAULT_LAYERS`): an MNIST-class int8 MLP.
+pub const MODEL_LAYERS: [usize; 4] = [784, 128, 64, 16];
+/// Weight seed (the paper year; fixed so every run is reproducible).
+pub const WEIGHT_SEED: u64 = 2021;
+/// Batch the default artifacts are lowered at (`model.py DEFAULT_BATCH`).
+pub const DEFAULT_BATCH: usize = 32;
+/// Systolic-array sizes the AOT pipeline ships kernels for.
+pub const ARRAY_SIZES: [usize; 3] = [16, 32, 64];
 
 /// Tensor signature as recorded by `aot.py`.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -26,19 +53,26 @@ pub struct TensorSig {
 }
 
 impl TensorSig {
+    pub fn new(shape: Vec<usize>, dtype: &str) -> Self {
+        Self {
+            shape,
+            dtype: dtype.to_string(),
+        }
+    }
+
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
 /// Artifact signature: input and output tensor lists.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArtifactSig {
     pub inputs: Vec<TensorSig>,
     pub outputs: Vec<TensorSig>,
 }
 
-/// Host tensor crossing the PJRT boundary.
+/// Host tensor crossing the backend boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
     I8(Vec<i8>, Vec<usize>),
@@ -73,11 +107,11 @@ impl Tensor {
         self.len() == 0
     }
 
-    /// Unwrap as f32 data.
-    pub fn as_f32(&self) -> Result<&[f32]> {
+    /// Unwrap as i8 data.
+    pub fn as_i8(&self) -> Result<&[i8]> {
         match self {
-            Tensor::F32(d, _) => Ok(d),
-            other => Err(Error::Runtime(format!("expected f32, got {}", other.dtype()))),
+            Tensor::I8(d, _) => Ok(d),
+            other => Err(Error::Runtime(format!("expected i8, got {}", other.dtype()))),
         }
     }
 
@@ -89,60 +123,426 @@ impl Tensor {
         }
     }
 
+    /// Unwrap as f32 data.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            other => Err(Error::Runtime(format!("expected f32, got {}", other.dtype()))),
+        }
+    }
+
     fn matches(&self, sig: &TensorSig) -> bool {
-        self.shape() == sig.shape.as_slice() && self.dtype() == sig.dtype
+        self.shape() == sig.shape.as_slice()
+            && self.dtype() == sig.dtype
+            // Data length must agree with the declared shape, or the
+            // kernels would slice out of bounds instead of erroring.
+            && self.len() == sig.element_count()
     }
+}
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let (bytes, ty, shape): (&[u8], xla::ElementType, &[usize]) = match self {
-            Tensor::I8(data, shape) => (
-                // i8 -> u8 reinterpret: same size, no invalid values.
-                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) },
-                xla::ElementType::S8,
-                shape,
-            ),
-            Tensor::I32(data, shape) => (
-                unsafe {
-                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-                },
-                xla::ElementType::S32,
-                shape,
-            ),
-            Tensor::F32(data, shape) => (
-                unsafe {
-                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-                },
-                xla::ElementType::F32,
-                shape,
-            ),
+/// Parse the TSV manifest `aot.py` emits alongside the JSON one
+/// (`<artifact> TAB in|out TAB <index> TAB <dtype> TAB d0xd1x...`).
+///
+/// Every malformed row — missing columns, an unknown in/out kind, a
+/// non-numeric dimension, an unsupported dtype — yields a readable
+/// [`Error::Artifact`] carrying the 1-based line number.
+pub fn parse_manifest_tsv(text: &str) -> Result<HashMap<String, ArtifactSig>> {
+    let mut manifest: HashMap<String, ArtifactSig> = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        let [name, kind, idx, dtype, dims] = fields.as_slice() else {
+            return Err(Error::Artifact(format!(
+                "manifest line {}: expected 5 tab-separated fields, got {}",
+                lineno + 1,
+                fields.len()
+            )));
         };
-        Ok(xla::Literal::create_from_shape_and_untyped_data(
-            ty, shape, bytes,
-        )?)
+        let idx: usize = idx.parse().map_err(|e| {
+            Error::Artifact(format!("manifest line {}: bad index '{idx}': {e}", lineno + 1))
+        })?;
+        if !matches!(*dtype, "int8" | "int32" | "float32") {
+            return Err(Error::Artifact(format!(
+                "manifest line {}: unsupported dtype '{dtype}' (int8/int32/float32)",
+                lineno + 1
+            )));
+        }
+        let shape: Vec<usize> = if dims.is_empty() {
+            Vec::new()
+        } else {
+            dims.split('x')
+                .map(|d| {
+                    d.parse::<usize>().map_err(|e| {
+                        Error::Artifact(format!("manifest line {}: bad dim '{d}': {e}", lineno + 1))
+                    })
+                })
+                .collect::<Result<_>>()?
+        };
+        let sig = TensorSig {
+            shape,
+            dtype: dtype.to_string(),
+        };
+        let entry = manifest.entry(name.to_string()).or_insert(ArtifactSig {
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        });
+        let list = match *kind {
+            "in" => &mut entry.inputs,
+            "out" => &mut entry.outputs,
+            other => {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: kind '{other}' is not in/out",
+                    lineno + 1
+                )))
+            }
+        };
+        // Indices must arrive in order: a reordered manifest would
+        // silently permute an artifact's signature otherwise.
+        if idx != list.len() {
+            return Err(Error::Artifact(format!(
+                "manifest line {}: {name} {kind} index {idx} out of order (expected {})",
+                lineno + 1,
+                list.len()
+            )));
+        }
+        list.push(sig);
+    }
+    Ok(manifest)
+}
+
+// ---------------------------------------------------------------------------
+// Reference kernels — pure-Rust mirrors of python/compile/kernels/ref.py.
+// ---------------------------------------------------------------------------
+
+/// int8 (M, K) @ int8 (K, N) -> int32 (M, N), row-major — the systolic
+/// matmul oracle (`ref.matmul_ref`).
+pub fn matmul_i8(x: &[i8], w: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0 {
+                continue; // zero activations contribute nothing
+            }
+            let xv = xv as i32;
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for (j, &wv) in wrow.iter().enumerate() {
+                orow[j] += xv * wv as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Per-lane bit-toggle rate in [0, 1] of a `rows x width` int8 stream —
+/// the activity oracle (`ref.stream_toggle_rates_ref`): XOR-popcount of
+/// consecutive rows, normalised by `(rows - 1) * 8`.
+pub fn toggle_rates_i8(stream: &[i8], rows: usize, width: usize) -> Vec<f32> {
+    debug_assert_eq!(stream.len(), rows * width);
+    if rows < 2 {
+        return vec![0.0f32; width];
+    }
+    let mut counts = vec![0u32; width];
+    for r in 1..rows {
+        let prev = &stream[(r - 1) * width..r * width];
+        let curr = &stream[r * width..(r + 1) * width];
+        for (lane, (&p, &c)) in prev.iter().zip(curr).enumerate() {
+            counts[lane] += ((p as u8) ^ (c as u8)).count_ones();
+        }
+    }
+    let denom = ((rows - 1) * 8) as f64;
+    counts
+        .iter()
+        .map(|&c| (c as f64 / denom) as f32)
+        .collect()
+}
+
+/// int32 accumulator -> int8 activation with relu folded in
+/// (`model.requantize`): `clip(round(max(acc, 0) * scale), 0, 127)`.
+/// Rounding is half-to-even, matching `jnp.round` on exact .5 ties.
+pub fn requantize_i32(acc: &[i32], scale: f32) -> Vec<i8> {
+    acc.iter()
+        .map(|&a| {
+            let y = (a.max(0) as f32) * scale; // y >= 0 after relu
+            round_half_even(y).clamp(0.0, 127.0) as i8
+        })
+        .collect()
+}
+
+/// Round a non-negative f32 half-to-even (`jnp.round` semantics; a
+/// local impl because `f32::round_ties_even` needs Rust >= 1.77).
+fn round_half_even(y: f32) -> f32 {
+    let f = y.floor();
+    let diff = y - f;
+    if diff > 0.5 {
+        f + 1.0
+    } else if diff < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Deterministic int8-quantised MLP mirroring `python/compile/model.py`:
+/// layer widths [`MODEL_LAYERS`], clipped-normal int8 weights, per-layer
+/// output scales `1 / (8 * sqrt(K) * 24)`, relu+requantise between
+/// layers, f32 logits out, plus per-layer input-stream toggle telemetry.
+///
+/// The weights are drawn from this crate's [`SplitMix64`] (seed
+/// [`WEIGHT_SEED`]), not from JAX's PRNG — the *semantics* match the
+/// Python model (the contract `rust/tests/reference_backend.rs` pins),
+/// the exact weight values intentionally do not: nothing downstream
+/// depends on them beyond determinism and realistic bit densities.
+#[derive(Debug, Clone)]
+pub struct RefMlp {
+    pub batch: usize,
+    weights: Vec<Vec<i8>>, // weights[l]: (K_l x N_l) row-major
+    scales: Vec<f32>,
+}
+
+impl RefMlp {
+    pub fn new(batch: usize) -> Self {
+        let mut weights = Vec::with_capacity(MODEL_LAYERS.len() - 1);
+        let mut scales = Vec::with_capacity(MODEL_LAYERS.len() - 1);
+        for l in 0..MODEL_LAYERS.len() - 1 {
+            let (k_in, n_out) = (MODEL_LAYERS[l], MODEL_LAYERS[l + 1]);
+            let mut rng = SplitMix64::new(WEIGHT_SEED ^ ((l as u64 + 1) << 32));
+            let w: Vec<i8> = (0..k_in * n_out)
+                .map(|_| (rng.gauss() * 24.0).round().clamp(-127.0, 127.0) as i8)
+                .collect();
+            weights.push(w);
+            scales.push(1.0 / (8.0 * (k_in as f32).sqrt() * 24.0));
+        }
+        Self {
+            batch,
+            weights,
+            scales,
+        }
     }
 
-    fn from_literal(lit: &xla::Literal, sig: &TensorSig) -> Result<Self> {
-        let shape = sig.shape.clone();
-        match sig.dtype.as_str() {
-            "int8" => Ok(Tensor::I8(lit.to_vec::<i8>()?, shape)),
-            "int32" => Ok(Tensor::I32(lit.to_vec::<i32>()?, shape)),
-            "float32" => Ok(Tensor::F32(lit.to_vec::<f32>()?, shape)),
-            other => Err(Error::Runtime(format!("unsupported output dtype {other}"))),
+    /// Forward pass: `x` is the packed `(batch, 784)` int8 input.
+    /// Returns (row-major f32 logits `(batch, 16)`, per-layer toggle
+    /// rates of the activation stream entering each layer).
+    pub fn forward(&self, x: &[i8]) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        if x.len() != self.batch * MODEL_LAYERS[0] {
+            return Err(Error::Runtime(format!(
+                "model input has {} elements, expected {} x {}",
+                x.len(),
+                self.batch,
+                MODEL_LAYERS[0]
+            )));
+        }
+        let n_layers = self.weights.len();
+        let mut toggles = Vec::with_capacity(n_layers);
+        let mut act: Vec<i8> = x.to_vec();
+        let mut logits = Vec::new();
+        for (l, (w, &scale)) in self.weights.iter().zip(&self.scales).enumerate() {
+            let (k_in, n_out) = (MODEL_LAYERS[l], MODEL_LAYERS[l + 1]);
+            toggles.push(toggle_rates_i8(&act, self.batch, k_in));
+            let acc = matmul_i8(&act, w, self.batch, k_in, n_out);
+            if l + 1 < n_layers {
+                act = requantize_i32(&acc, scale);
+            } else {
+                logits = acc.iter().map(|&a| a as f32 * scale).collect();
+            }
+        }
+        Ok((logits, toggles))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executable ops + loaded models.
+// ---------------------------------------------------------------------------
+
+/// The executable behind one loaded artifact. Today every op runs
+/// through the reference kernels; a linked PJRT backend would add a
+/// compiled-HLO variant here.
+#[derive(Debug, Clone)]
+enum RefOp {
+    /// int8 (M, K) @ int8 (K, N) -> int32 (M, N).
+    Systolic { m: usize, k: usize, n: usize },
+    /// Toggle rates over an int8 (rows, width) stream -> f32 (width,).
+    Activity { rows: usize, width: usize },
+    /// Quantised MLP forward: logits + per-layer toggle telemetry.
+    ModelFwd(RefMlp),
+}
+
+impl RefOp {
+    /// Build the op for `name`, validating the (manifest or built-in)
+    /// signature against the op's shape/dtype contract — a mismatch is a
+    /// readable [`Error::Artifact`], never a wrong-answer execution.
+    fn from_sig(name: &str, sig: &ArtifactSig) -> Result<RefOp> {
+        let fail = |msg: String| Err(Error::Artifact(format!("{name}: {msg}")));
+        if let Some(edge_str) = name.strip_prefix("systolic_") {
+            let Ok(edge) = edge_str.parse::<usize>() else {
+                return fail(format!("bad array size suffix '{edge_str}'"));
+            };
+            if sig.inputs.len() != 2 || sig.outputs.len() != 1 {
+                return fail(format!(
+                    "systolic kernels take 2 inputs / 1 output, manifest lists {}/{}",
+                    sig.inputs.len(),
+                    sig.outputs.len()
+                ));
+            }
+            let (x, w, o) = (&sig.inputs[0], &sig.inputs[1], &sig.outputs[0]);
+            if x.dtype != "int8" || w.dtype != "int8" {
+                return fail(format!(
+                    "systolic inputs must be int8, manifest says {}/{}",
+                    x.dtype, w.dtype
+                ));
+            }
+            if o.dtype != "int32" {
+                return fail(format!("systolic output must be int32, manifest says {}", o.dtype));
+            }
+            if x.shape.len() != 2 || w.shape.len() != 2 || o.shape.len() != 2 {
+                return fail("systolic tensors must be rank 2".to_string());
+            }
+            let (m, k) = (x.shape[0], x.shape[1]);
+            let n = w.shape[1];
+            if w.shape[0] != k {
+                return fail(format!(
+                    "contraction mismatch: x {:?} vs w {:?}",
+                    x.shape, w.shape
+                ));
+            }
+            if o.shape != vec![m, n] {
+                return fail(format!(
+                    "output shape {:?} does not match ({m}, {n})",
+                    o.shape
+                ));
+            }
+            if k != edge || n != edge {
+                return fail(format!(
+                    "weight shape {:?} does not match the {edge}x{edge} array in the name",
+                    w.shape
+                ));
+            }
+            Ok(RefOp::Systolic { m, k, n })
+        } else if let Some(edge_str) = name.strip_prefix("activity_") {
+            let Ok(edge) = edge_str.parse::<usize>() else {
+                return fail(format!("bad array size suffix '{edge_str}'"));
+            };
+            if sig.inputs.len() != 1 || sig.outputs.len() != 1 {
+                return fail(format!(
+                    "activity kernels take 1 input / 1 output, manifest lists {}/{}",
+                    sig.inputs.len(),
+                    sig.outputs.len()
+                ));
+            }
+            let (x, o) = (&sig.inputs[0], &sig.outputs[0]);
+            if x.dtype != "int8" || x.shape.len() != 2 {
+                return fail(format!(
+                    "activity input must be rank-2 int8, manifest says {} {:?}",
+                    x.dtype, x.shape
+                ));
+            }
+            let (rows, width) = (x.shape[0], x.shape[1]);
+            if width != edge {
+                return fail(format!(
+                    "stream width {width} does not match the {edge}-lane array in the name"
+                ));
+            }
+            if o.dtype != "float32" || o.shape != vec![width] {
+                return fail(format!(
+                    "activity output must be float32 ({width},), manifest says {} {:?}",
+                    o.dtype, o.shape
+                ));
+            }
+            Ok(RefOp::Activity { rows, width })
+        } else if name == "model_fwd" {
+            if sig.inputs.len() != 1 || sig.outputs.len() != MODEL_LAYERS.len() {
+                return fail(format!(
+                    "model_fwd takes 1 input / {} outputs, manifest lists {}/{}",
+                    MODEL_LAYERS.len(),
+                    sig.inputs.len(),
+                    sig.outputs.len()
+                ));
+            }
+            let x = &sig.inputs[0];
+            if x.dtype != "int8" || x.shape.len() != 2 || x.shape[1] != MODEL_LAYERS[0] {
+                return fail(format!(
+                    "model_fwd input must be int8 (batch, {}), manifest says {} {:?}",
+                    MODEL_LAYERS[0], x.dtype, x.shape
+                ));
+            }
+            let batch = x.shape[0];
+            let logits = &sig.outputs[0];
+            if logits.dtype != "float32"
+                || logits.shape != vec![batch, MODEL_LAYERS[MODEL_LAYERS.len() - 1]]
+            {
+                return fail(format!(
+                    "model_fwd logits must be float32 ({batch}, {}), manifest says {} {:?}",
+                    MODEL_LAYERS[MODEL_LAYERS.len() - 1],
+                    logits.dtype,
+                    logits.shape
+                ));
+            }
+            for (t, width) in sig.outputs[1..]
+                .iter()
+                .zip(&MODEL_LAYERS[..MODEL_LAYERS.len() - 1])
+            {
+                if t.dtype != "float32" || t.shape != vec![*width] {
+                    return fail(format!(
+                        "model_fwd telemetry must be float32 ({width},), manifest says {} {:?}",
+                        t.dtype, t.shape
+                    ));
+                }
+            }
+            Ok(RefOp::ModelFwd(RefMlp::new(batch)))
+        } else {
+            fail("no reference implementation for this artifact (PJRT backend required)".to_string())
+        }
+    }
+
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match self {
+            RefOp::Systolic { m, k, n } => {
+                let x = inputs[0].as_i8()?;
+                let w = inputs[1].as_i8()?;
+                let out = matmul_i8(x, w, *m, *k, *n);
+                Ok(vec![Tensor::I32(out, vec![*m, *n])])
+            }
+            RefOp::Activity { rows, width } => {
+                let x = inputs[0].as_i8()?;
+                let rates = toggle_rates_i8(x, *rows, *width);
+                Ok(vec![Tensor::F32(rates, vec![*width])])
+            }
+            RefOp::ModelFwd(mlp) => {
+                let x = inputs[0].as_i8()?;
+                let (logits, toggles) = mlp.forward(x)?;
+                let mut out = Vec::with_capacity(1 + toggles.len());
+                out.push(Tensor::F32(
+                    logits,
+                    vec![mlp.batch, MODEL_LAYERS[MODEL_LAYERS.len() - 1]],
+                ));
+                for rates in toggles {
+                    let w = rates.len();
+                    out.push(Tensor::F32(rates, vec![w]));
+                }
+                Ok(out)
+            }
         }
     }
 }
 
-/// A compiled artifact ready to execute.
+/// A loaded artifact ready to execute.
 pub struct LoadedModel {
     pub name: String,
     pub sig: ArtifactSig,
-    exe: xla::PjRtLoadedExecutable,
+    op: RefOp,
 }
 
 impl LoadedModel {
-    /// Execute with manifest validation. Inputs must match the signature
-    /// in order, shape and dtype; outputs are unpacked from the 1-tuple
-    /// the AOT pipeline lowers (`return_tuple=True`).
+    /// Execute with signature validation. Inputs must match the
+    /// signature in order, shape and dtype.
     pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         if inputs.len() != self.sig.inputs.len() {
             return Err(Error::Artifact(format!(
@@ -164,88 +564,146 @@ impl LoadedModel {
                 )));
             }
         }
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(Tensor::to_literal)
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != self.sig.outputs.len() {
+        let outputs = self.op.run(inputs)?;
+        if outputs.len() != self.sig.outputs.len() {
             return Err(Error::Artifact(format!(
-                "{}: {} outputs returned, manifest says {}",
+                "{}: {} outputs produced, signature says {}",
                 self.name,
-                parts.len(),
+                outputs.len(),
                 self.sig.outputs.len()
             )));
         }
-        parts
-            .iter()
-            .zip(&self.sig.outputs)
-            .map(|(lit, sig)| Tensor::from_literal(lit, sig))
-            .collect()
+        Ok(outputs)
     }
 }
 
-/// The artifact registry + PJRT client.
+// ---------------------------------------------------------------------------
+// Backends.
+// ---------------------------------------------------------------------------
+
+/// A runtime backend: a named registry of executable artifacts.
+pub trait Backend {
+    /// Platform/backend label ("cpu", "reference", ...).
+    fn platform_name(&self) -> &'static str;
+
+    /// Artifact names available, sorted.
+    fn names(&self) -> Vec<String>;
+
+    /// Signature of one artifact, if present.
+    fn signature(&self, name: &str) -> Option<&ArtifactSig>;
+
+    /// Load one artifact for execution.
+    fn load(&self, name: &str) -> Result<LoadedModel>;
+}
+
+/// The pure-Rust backend: ships the built-in signature set of the AOT
+/// pipeline (`systolic_{16,32,64}`, `activity_{16,32,64}`, `model_fwd`)
+/// at a configurable batch, and executes through the reference kernels.
+pub struct ReferenceBackend {
+    manifest: HashMap<String, ArtifactSig>,
+}
+
+impl ReferenceBackend {
+    /// Backend whose streaming ops are sized for `batch` samples.
+    pub fn new(batch: usize) -> Self {
+        Self {
+            manifest: builtin_manifest(batch),
+        }
+    }
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new(DEFAULT_BATCH)
+    }
+}
+
+/// The canonical signature set `aot.py` lowers, at batch `batch`.
+pub fn builtin_manifest(batch: usize) -> HashMap<String, ArtifactSig> {
+    let mut m = HashMap::new();
+    for s in ARRAY_SIZES {
+        m.insert(
+            format!("systolic_{s}"),
+            ArtifactSig {
+                inputs: vec![
+                    TensorSig::new(vec![batch, s], "int8"),
+                    TensorSig::new(vec![s, s], "int8"),
+                ],
+                outputs: vec![TensorSig::new(vec![batch, s], "int32")],
+            },
+        );
+        m.insert(
+            format!("activity_{s}"),
+            ArtifactSig {
+                inputs: vec![TensorSig::new(vec![batch, s], "int8")],
+                outputs: vec![TensorSig::new(vec![s], "float32")],
+            },
+        );
+    }
+    m.insert(
+        "model_fwd".to_string(),
+        ArtifactSig {
+            inputs: vec![TensorSig::new(vec![batch, MODEL_LAYERS[0]], "int8")],
+            outputs: vec![
+                TensorSig::new(vec![batch, MODEL_LAYERS[3]], "float32"),
+                TensorSig::new(vec![MODEL_LAYERS[0]], "float32"),
+                TensorSig::new(vec![MODEL_LAYERS[1]], "float32"),
+                TensorSig::new(vec![MODEL_LAYERS[2]], "float32"),
+            ],
+        },
+    );
+    m
+}
+
+fn sorted_names(manifest: &HashMap<String, ArtifactSig>) -> Vec<String> {
+    let mut v: Vec<String> = manifest.keys().cloned().collect();
+    v.sort();
+    v
+}
+
+fn load_from_manifest(
+    manifest: &HashMap<String, ArtifactSig>,
+    name: &str,
+) -> Result<LoadedModel> {
+    let sig = manifest
+        .get(name)
+        .ok_or_else(|| Error::Artifact(format!("'{name}' not in manifest")))?
+        .clone();
+    let op = RefOp::from_sig(name, &sig)?;
+    Ok(LoadedModel {
+        name: name.to_string(),
+        sig,
+        op,
+    })
+}
+
+impl Backend for ReferenceBackend {
+    fn platform_name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn names(&self) -> Vec<String> {
+        sorted_names(&self.manifest)
+    }
+
+    fn signature(&self, name: &str) -> Option<&ArtifactSig> {
+        self.manifest.get(name)
+    }
+
+    fn load(&self, name: &str) -> Result<LoadedModel> {
+        load_from_manifest(&self.manifest, name)
+    }
+}
+
+/// The artifact registry: `manifest.tsv` + `<name>.hlo.txt` files.
 pub struct Engine {
-    client: xla::PjRtClient,
     dir: PathBuf,
     manifest: HashMap<String, ArtifactSig>,
 }
 
-/// Parse the TSV manifest `aot.py` emits alongside the JSON one
-/// (`<artifact> TAB in|out TAB <index> TAB <dtype> TAB d0xd1x...`).
-pub fn parse_manifest_tsv(text: &str) -> Result<HashMap<String, ArtifactSig>> {
-    let mut manifest: HashMap<String, ArtifactSig> = HashMap::new();
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let fields: Vec<&str> = line.split('\t').collect();
-        let [name, kind, _idx, dtype, dims] = fields.as_slice() else {
-            return Err(Error::Artifact(format!(
-                "manifest line {}: expected 5 tab-separated fields, got {}",
-                lineno + 1,
-                fields.len()
-            )));
-        };
-        let shape: Vec<usize> = if dims.is_empty() {
-            Vec::new()
-        } else {
-            dims.split('x')
-                .map(|d| {
-                    d.parse::<usize>().map_err(|e| {
-                        Error::Artifact(format!("manifest line {}: bad dim '{d}': {e}", lineno + 1))
-                    })
-                })
-                .collect::<Result<_>>()?
-        };
-        let sig = TensorSig {
-            shape,
-            dtype: dtype.to_string(),
-        };
-        let entry = manifest.entry(name.to_string()).or_insert(ArtifactSig {
-            inputs: Vec::new(),
-            outputs: Vec::new(),
-        });
-        match *kind {
-            "in" => entry.inputs.push(sig),
-            "out" => entry.outputs.push(sig),
-            other => {
-                return Err(Error::Artifact(format!(
-                    "manifest line {}: kind '{other}' is not in/out",
-                    lineno + 1
-                )))
-            }
-        }
-    }
-    Ok(manifest)
-}
-
 impl Engine {
-    /// Open `dir` (expects `manifest.tsv` + `<name>.hlo.txt` files) on
-    /// the PJRT CPU client.
+    /// Open `dir` (expects `manifest.tsv`; the `.hlo.txt` artifacts are
+    /// only read by a linked PJRT backend).
     pub fn open(dir: &Path) -> Result<Self> {
         let manifest_path = dir.join("manifest.tsv");
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
@@ -255,10 +713,14 @@ impl Engine {
         })?;
         let manifest = parse_manifest_tsv(&text)?;
         Ok(Self {
-            client: xla::PjRtClient::cpu()?,
             dir: dir.to_path_buf(),
             manifest,
         })
+    }
+
+    /// Artifact directory this engine was opened on.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
     /// Artifact names available in the manifest.
@@ -272,29 +734,83 @@ impl Engine {
         self.manifest.get(name)
     }
 
+    /// Execution platform. Without a linked PJRT runtime the artifacts
+    /// execute on the host CPU through the reference kernels.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform_name().to_string()
     }
 
-    /// Load + compile one artifact.
+    /// Load one artifact, cross-validating its manifest signature
+    /// against the op's shape/dtype contract and checking the HLO text
+    /// is actually on disk (a manifest row without its artifact means a
+    /// corrupt or half-built `artifacts/` directory).
     pub fn load(&self, name: &str) -> Result<LoadedModel> {
-        let sig = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| Error::Artifact(format!("'{name}' not in manifest")))?
-            .clone();
+        let model = load_from_manifest(&self.manifest, name)?;
         let path = self.dir.join(format!("{name}.hlo.txt"));
-        let path_str = path
-            .to_str()
-            .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(LoadedModel {
-            name: name.to_string(),
-            sig,
-            exe,
-        })
+        if !path.exists() {
+            return Err(Error::Artifact(format!(
+                "{name}: listed in the manifest but {path:?} is missing \
+                 (re-run `make artifacts`)"
+            )));
+        }
+        Ok(model)
+    }
+}
+
+impl Backend for Engine {
+    fn platform_name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn names(&self) -> Vec<String> {
+        sorted_names(&self.manifest)
+    }
+
+    fn signature(&self, name: &str) -> Option<&ArtifactSig> {
+        self.manifest.get(name)
+    }
+
+    fn load(&self, name: &str) -> Result<LoadedModel> {
+        Engine::load(self, name)
+    }
+}
+
+/// The PJRT/HLO-artifact backend. The fully vendored default build does
+/// not link an XLA runtime, so [`PjrtBackend::available`] is `false` and
+/// [`PjrtBackend::open`] reports the situation gracefully instead of
+/// aborting — callers fall through to [`Engine`] / [`ReferenceBackend`].
+pub struct PjrtBackend;
+
+impl PjrtBackend {
+    /// Whether an XLA/PJRT runtime is linked into this build.
+    pub fn available() -> bool {
+        false
+    }
+
+    /// Attempt to open the PJRT client over `dir`.
+    pub fn open(dir: &Path) -> Result<Self> {
+        Err(Error::Runtime(format!(
+            "PJRT backend unavailable: no XLA runtime linked in this build \
+             (artifacts in {dir:?} skipped; the reference backend serves instead — \
+             see DESIGN.md \"Runtime backends\")"
+        )))
+    }
+}
+
+/// Pick the backend for an artifact directory:
+///
+/// 1. a build that links an XLA runtime would probe [`PjrtBackend`]
+///    first and return it on success (the fully vendored default build
+///    never can — [`PjrtBackend::available`] is `false` — so selection
+///    starts at step 2),
+/// 2. the manifest-validated [`Engine`] when `dir/manifest.tsv` exists,
+/// 3. the built-in [`ReferenceBackend`] (batch `batch`) otherwise —
+///    zero-artifact inference on a fresh clone.
+pub fn backend_for(dir: &Path, batch: usize) -> Result<Box<dyn Backend>> {
+    if dir.join("manifest.tsv").exists() {
+        Ok(Box::new(Engine::open(dir)?))
+    } else {
+        Ok(Box::new(ReferenceBackend::new(batch)))
     }
 }
 
@@ -309,6 +825,7 @@ mod tests {
         assert_eq!(t.dtype(), "int8");
         assert_eq!(t.len(), 4);
         assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i8().unwrap(), &[1, 2, 3, 4]);
         let f = Tensor::F32(vec![0.5], vec![1]);
         assert_eq!(f.as_f32().unwrap(), &[0.5]);
     }
@@ -322,6 +839,9 @@ mod tests {
         assert!(Tensor::I8(vec![0; 4], vec![2, 2]).matches(&sig));
         assert!(!Tensor::I8(vec![0; 4], vec![4]).matches(&sig));
         assert!(!Tensor::F32(vec![0.0; 4], vec![2, 2]).matches(&sig));
+        // Data length disagreeing with the declared shape must not pass
+        // validation — the kernels would slice out of bounds.
+        assert!(!Tensor::I8(vec![0; 3], vec![2, 2]).matches(&sig));
         assert_eq!(sig.element_count(), 4);
     }
 
@@ -339,6 +859,10 @@ mod tests {
         assert!(parse_manifest_tsv("m\tin\t0\tint8").is_err()); // 4 fields
         assert!(parse_manifest_tsv("m\tsideways\t0\tint8\t4").is_err());
         assert!(parse_manifest_tsv("m\tin\t0\tint8\t4xbanana").is_err());
+        assert!(parse_manifest_tsv("m\tin\t0\tcomplex128\t4").is_err());
+        // Non-numeric or out-of-order indices are rejected.
+        assert!(parse_manifest_tsv("m\tin\tzero\tint8\t4").is_err());
+        assert!(parse_manifest_tsv("m\tin\t1\tint8\t4").is_err());
         // Blank lines are fine.
         assert!(parse_manifest_tsv("\n\n").unwrap().is_empty());
     }
@@ -349,5 +873,119 @@ mod tests {
             Err(e) => assert!(e.to_string().contains("make artifacts")),
             Ok(_) => panic!("opening a nonexistent dir must fail"),
         }
+    }
+
+    #[test]
+    fn pjrt_backend_reports_unavailable_gracefully() {
+        assert!(!PjrtBackend::available());
+        let err = PjrtBackend::open(Path::new("artifacts")).err().unwrap();
+        let msg = err.to_string();
+        assert!(msg.contains("skipped"), "{msg}");
+        assert!(msg.contains("reference"), "{msg}");
+    }
+
+    #[test]
+    fn reference_backend_ships_the_full_artifact_set() {
+        let b = ReferenceBackend::default();
+        let names = b.names();
+        for want in [
+            "activity_16",
+            "activity_32",
+            "activity_64",
+            "model_fwd",
+            "systolic_16",
+            "systolic_32",
+            "systolic_64",
+        ] {
+            assert!(names.iter().any(|n| n == want), "missing {want}");
+        }
+        assert_eq!(b.platform_name(), "reference");
+        assert!(b.signature("model_fwd").is_some());
+        assert!(b.load("nonexistent_op").is_err());
+    }
+
+    #[test]
+    fn backend_for_falls_back_to_reference() {
+        let b = backend_for(Path::new("/nonexistent-vstpu"), 8).unwrap();
+        assert_eq!(b.platform_name(), "reference");
+        let model = b.load("systolic_16").unwrap();
+        assert_eq!(model.sig.inputs[0].shape, vec![8, 16]);
+    }
+
+    #[test]
+    fn systolic_reference_matches_naive_oracle() {
+        let b = ReferenceBackend::new(2);
+        let model = b.load("systolic_16").unwrap();
+        let mut rng = SplitMix64::new(3);
+        let x: Vec<i8> = (0..2 * 16).map(|_| rng.next_i8()).collect();
+        let w: Vec<i8> = (0..16 * 16).map(|_| rng.next_i8()).collect();
+        let out = model
+            .execute(&[
+                Tensor::I8(x.clone(), vec![2, 16]),
+                Tensor::I8(w.clone(), vec![16, 16]),
+            ])
+            .unwrap();
+        let got = out[0].as_i32().unwrap();
+        for i in 0..2 {
+            for j in 0..16 {
+                let mut acc = 0i32;
+                for k in 0..16 {
+                    acc += x[i * 16 + k] as i32 * w[k * 16 + j] as i32;
+                }
+                assert_eq!(got[i * 16 + j], acc, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_rejects_signature_mismatch() {
+        let b = ReferenceBackend::default();
+        let model = b.load("systolic_16").unwrap();
+        assert!(model.execute(&[]).is_err()); // arity
+        let bad = model.execute(&[
+            Tensor::I8(vec![0; 16], vec![4, 4]), // wrong shape
+            Tensor::I8(vec![0; 256], vec![16, 16]),
+        ]);
+        assert!(bad.is_err());
+        let bad = model.execute(&[
+            Tensor::F32(vec![0.0; 32 * 16], vec![32, 16]), // wrong dtype
+            Tensor::I8(vec![0; 256], vec![16, 16]),
+        ]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn model_fwd_zero_input_gives_zero_logits_and_telemetry() {
+        let b = ReferenceBackend::new(4);
+        let model = b.load("model_fwd").unwrap();
+        let out = model
+            .execute(&[Tensor::I8(vec![0i8; 4 * 784], vec![4, 784])])
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        assert!(out[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        for t in &out[1..] {
+            assert!(t.as_f32().unwrap().iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn toggle_rates_match_hand_computed_cases() {
+        // Constant stream: zero activity.
+        assert!(toggle_rates_i8(&[9, 9, 9, 9], 4, 1).iter().all(|&r| r == 0.0));
+        // 0x00 <-> 0xFF alternation: all 8 bits flip every transition.
+        let flip = toggle_rates_i8(&[0, -1, 0, -1], 4, 1);
+        assert!((flip[0] - 1.0).abs() < 1e-12);
+        // Single row: no transitions.
+        assert!(toggle_rates_i8(&[1, 2, 3], 1, 3).iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn requantize_matches_model_py() {
+        let got = requantize_i32(&[-100, 0, 100, 1_000_000], 0.01);
+        assert_eq!(got, vec![0, 0, 1, 127]);
+        // jnp.round ties go to even: 0.5 -> 0, 1.5 -> 2, 2.5 -> 2.
+        // Scale 0.5 is exact in f32, so these really are ties.
+        let ties = requantize_i32(&[1, 3, 5], 0.5);
+        assert_eq!(ties, vec![0, 2, 2]);
     }
 }

@@ -110,7 +110,6 @@ pub fn partition_count_study(cfg: &StudyConfig, counts: &[usize]) -> Result<Vec<
     let period = netlist.period_ns();
     let budget = period - timing::CLOCK_UNCERTAINTY_NS;
 
-    let mut single_power = f64::NAN;
     let mut out = Vec::with_capacity(counts.len());
     for &n in counts {
         let clustering = equal_quantile_clustering(&slacks, n);
@@ -140,9 +139,6 @@ pub fn partition_count_study(cfg: &StudyConfig, counts: &[usize]) -> Result<Vec<
 
         // Power at the calibrated rails.
         let power_mw = model.scaled_mw(&parts, |_| crate::razor::DEFAULT_TOGGLE);
-        if n == 1 || single_power.is_nan() {
-            single_power = if n == 1 { power_mw } else { single_power };
-        }
 
         // Margin + accuracy risk under the workload shift.
         let mut margins = Vec::with_capacity(n);

@@ -1,4 +1,4 @@
-//! Cross-language correctness: the PJRT path vs in-rust oracles.
+//! Cross-language correctness: the artifact path vs in-rust oracles.
 //!
 //! These tests need `artifacts/` (run `make artifacts`); they skip
 //! cleanly when it is absent so `cargo test` stays green on a fresh
@@ -6,6 +6,14 @@
 //! activity kernel must agree **bit-exactly** with independent rust
 //! implementations of the same math — a tiling or layout bug anywhere in
 //! the python -> HLO -> PJRT -> rust chain cannot hide.
+//!
+//! Caveat for the fully vendored default build: no XLA runtime is
+//! linked, so the Engine executes artifacts through the same reference
+//! kernels (after validating the manifest signatures and artifact files
+//! on disk). The bit-exactness assertions only regain cross-language
+//! teeth in a build that links the PJRT backend — see DESIGN.md
+//! "Runtime backends". What this suite pins today is the manifest
+//! contract between `aot.py` and the runtime.
 
 use std::path::Path;
 
