@@ -8,7 +8,7 @@
 
 PYTHON ?= python3
 
-.PHONY: all build test pytest bench bench-build artifacts fmt lint clean
+.PHONY: all build test pytest bench bench-build bench-serve artifacts fmt lint clean
 
 all: build
 
@@ -30,6 +30,10 @@ bench-build:
 # Run the paper-figure benches.
 bench:
 	cargo bench
+
+# CI smoke form of the sharded serving bench; writes BENCH_serve.json.
+bench-serve:
+	cargo run --release -- bench-serve --quick --json
 
 # Lower the JAX/Pallas artifacts consumed by the Engine backend.
 # Wraps python/compile/aot.py; output lands in ./artifacts.

@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""CI throughput-regression gate over BENCH_serve.json.
+
+Usage: check_regression.py CURRENT.json BASELINE.json
+
+Fails (exit 1) when:
+  * the current file is missing required schema fields, or
+  * measured requests_per_s has regressed more than `max_regression`
+    (default 20%) below the checked-in baseline floor, or
+  * any shard is missing its deterministic result_checksum.
+
+Stdlib only — runs on any CI python3 with no installs.
+"""
+
+import json
+import sys
+
+REQUIRED = ["schema", "requests", "requests_per_s", "latency_us", "shard_results"]
+
+
+def die(msg: str) -> None:
+    print(f"bench-smoke gate: FAIL — {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main(argv: list) -> None:
+    if len(argv) != 3:
+        die(f"usage: {argv[0]} CURRENT.json BASELINE.json")
+    with open(argv[1]) as f:
+        current = json.load(f)
+    with open(argv[2]) as f:
+        baseline = json.load(f)
+
+    for key in REQUIRED:
+        if key not in current:
+            die(f"{argv[1]} is missing required field '{key}'")
+    if current["schema"] != baseline["schema"]:
+        die(f"schema mismatch: {current['schema']} vs {baseline['schema']}")
+    # Like-for-like only: a non-quick (bigger) run must not be compared
+    # against the quick floor, and vice versa.
+    if "quick" in baseline and current.get("quick") != baseline["quick"]:
+        die(
+            f"configuration mismatch: quick={current.get('quick')!r} vs "
+            f"baseline quick={baseline['quick']!r}"
+        )
+    for q in ("p50", "p99"):
+        if q not in current["latency_us"]:
+            die(f"latency_us is missing '{q}'")
+    for shard in current["shard_results"]:
+        if not shard.get("result_checksum"):
+            die(f"shard {shard.get('shard')} has no result_checksum")
+
+    floor = baseline["requests_per_s"] * (1.0 - baseline.get("max_regression", 0.20))
+    got = current["requests_per_s"]
+    if got < floor:
+        die(
+            f"throughput {got:.0f} req/s is below the gate floor {floor:.0f} "
+            f"req/s (baseline {baseline['requests_per_s']:.0f}, "
+            f"max regression {100 * baseline.get('max_regression', 0.20):.0f}%)"
+        )
+    print(
+        f"bench-smoke gate: OK — {got:.0f} req/s (floor {floor:.0f}), "
+        f"p50 {current['latency_us']['p50']:.0f} us, "
+        f"p99 {current['latency_us']['p99']:.0f} us, "
+        f"{len(current['shard_results'])} shard checksums present"
+    )
+
+
+if __name__ == "__main__":
+    main(sys.argv)

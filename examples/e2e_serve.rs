@@ -7,8 +7,9 @@
 //!      activity telemetry -> Razor sim -> Algorithm-2 voltage epochs
 //!
 //! Three phases:
-//!  1. **Serving**: client threads push 1024 requests through the
-//!     threaded serve() loop; report throughput + latency percentiles.
+//!  1. **Serving**: push 1024 requests through the sharded multi-worker
+//!     engine (2 shards, dynamic batching, bounded-queue backpressure);
+//!     report throughput + latency percentiles per shard.
 //!  2. **Runtime calibration in vivo**: let the voltage controller run
 //!     epochs against measured telemetry; report rails + power drift.
 //!  3. **Accuracy-vs-voltage sweep** (the paper's Fig 7 story + its
@@ -23,7 +24,8 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
-use vstpu::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest, InferenceResponse};
+use vstpu::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+use vstpu::serve::{EngineConfig, ShardedEngine};
 use vstpu::tech::Technology;
 use vstpu::workload::{Batch, FluctuationProfile};
 
@@ -47,18 +49,16 @@ fn main() -> Result<(), vstpu::Error> {
     let data = Batch::synthetic(REQUESTS, 784, FluctuationProfile::Medium, 7);
 
     // ---------------------------------------------------------------
-    // Phase 1: threaded serving through the mpsc router.
+    // Phase 1: the sharded multi-worker engine.
     // ---------------------------------------------------------------
-    println!("== phase 1: serving {REQUESTS} requests through the router ==");
-    let (tx, rx) = mpsc::channel::<(InferenceRequest, mpsc::Sender<InferenceResponse>)>();
-    // The coordinator is created *on* the serving thread — the pattern
-    // a real deployment uses anyway (one engine per serving thread),
-    // and a hard requirement once a PJRT client (not Send — Rc
+    println!("== phase 1: serving {REQUESTS} requests through the sharded engine ==");
+    // Each shard thread builds its own coordinator (own backend, own
+    // voltage-controller slice) — the pattern a real deployment uses
+    // anyway, and a hard requirement once a PJRT client (not Send — Rc
     // internals) is linked in.
-    let server = std::thread::spawn(move || -> Result<_, vstpu::Error> {
-        let coord = open_coordinator(8)?;
-        coord.serve(rx, 2_000)
-    });
+    let mut ecfg = EngineConfig::paper_default(Technology::artix7_28nm());
+    ecfg.shards = 2;
+    let engine = ShardedEngine::start(std::path::Path::new("artifacts"), ecfg)?;
 
     let t0 = Instant::now();
     let (reply_tx, reply_rx) = mpsc::channel();
@@ -67,10 +67,13 @@ fn main() -> Result<(), vstpu::Error> {
             id: i as u64,
             input: data.sample(i).to_vec(),
         };
-        tx.send((req, reply_tx.clone()))
-            .map_err(|e| vstpu::Error::Serve(e.to_string()))?;
+        if let Err(e) = engine.submit(req, reply_tx.clone()) {
+            // Join the workers so a shard's startup error surfaces
+            // instead of the "no longer serving" routing symptom.
+            drop(reply_tx);
+            return Err(engine.shutdown().err().unwrap_or(e));
+        }
     }
-    drop(tx);
     drop(reply_tx);
     let mut latencies: Vec<f64> = Vec::with_capacity(REQUESTS);
     let mut corrupted = 0usize;
@@ -78,29 +81,40 @@ fn main() -> Result<(), vstpu::Error> {
         latencies.push(resp.latency_us as f64);
         corrupted += resp.corrupted as usize;
     }
-    let snap = server
-        .join()
-        .expect("server thread")
-        .expect("serve loop");
+    let reports = engine.shutdown()?;
     let wall = t0.elapsed();
     println!(
-        "  {} responses in {:.2}s -> {:.0} req/s; batches {}; corrupted {}",
+        "  {} responses in {:.2}s -> {:.0} req/s; corrupted {}",
         latencies.len(),
         wall.as_secs_f64(),
         latencies.len() as f64 / wall.as_secs_f64(),
-        snap.batches,
         corrupted,
     );
     println!(
-        "  batch latency: p50 {:.1} ms, p99 {:.1} ms",
+        "  end-to-end latency: p50 {:.1} ms, p99 {:.1} ms",
         vstpu::metrics::percentile(&latencies, 50.0) / 1000.0,
         vstpu::metrics::percentile(&latencies, 99.0) / 1000.0,
     );
+    let mut merged = vstpu::metrics::LatencyHistogram::default();
+    for rep in &reports {
+        merged.merge(&rep.latency);
+        println!(
+            "  shard {}: {} requests / {} batches (fill {:.2}), owned rails {:?}",
+            rep.shard,
+            rep.requests,
+            rep.batches,
+            rep.batch_fill,
+            rep.snapshot
+                .per_partition_power_mw
+                .iter()
+                .map(|&(i, v, _)| format!("p{i}@{v:.4}V"))
+                .collect::<Vec<_>>(),
+        );
+    }
     println!(
-        "  telemetry: mean row toggle {:.3}, rails {:?}, power {:.1} mW",
-        snap.row_toggle.iter().sum::<f64>() / snap.row_toggle.len() as f64,
-        snap.rails.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>(),
-        snap.power_mw
+        "  merged shard histogram: {} samples, mean {:.1} ms",
+        merged.count,
+        merged.mean_us() / 1000.0
     );
 
     // ---------------------------------------------------------------

@@ -1,0 +1,53 @@
+//! Serving-throughput bench: the sharded engine under a fixed seeded
+//! load at 1/2/4 shards — the scaling curve the ROADMAP's "throughput
+//! scales with cores" story is measured by, and the producer of the
+//! machine-readable `BENCH_serve.json` the CI `bench-smoke` job gates on
+//! (written from the widest configuration; `vstpu bench-serve --json`
+//! emits the same schema).
+//!
+//! Shard *results* (the per-shard FNV-1a logits checksums) are
+//! byte-identical across runs at the fixed seed; the timing columns are
+//! measurements. See README "BENCH_serve.json" for the schema.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+
+use std::path::Path;
+
+use vstpu::report::bench_serve_json;
+use vstpu::serve::{run_bench, BenchConfig, BenchReport};
+use vstpu::tech::Technology;
+
+const REQUESTS: usize = 2048;
+
+fn run_at(shards: usize) -> Result<BenchReport, vstpu::Error> {
+    let mut cfg = BenchConfig::paper_default(Technology::artix7_28nm());
+    cfg.requests = REQUESTS;
+    cfg.engine.shards = shards;
+    run_bench(Path::new("artifacts"), cfg)
+}
+
+fn main() -> Result<(), vstpu::Error> {
+    println!(
+        "{:>7} {:>10} {:>10} {:>10} {:>10} {:>7}",
+        "shards", "req/s", "p50 (us)", "p99 (us)", "fill", "flags"
+    );
+    let mut widest = None;
+    for shards in [1usize, 2, 4] {
+        let rep = run_at(shards)?;
+        println!(
+            "{shards:>7} {:>10.0} {:>10.0} {:>10.0} {:>10.2} {:>7.3}",
+            rep.requests_per_s, rep.p50_us, rep.p99_us, rep.batch_fill, rep.razor_flag_rate
+        );
+        widest = Some(rep);
+    }
+    let rep = widest.expect("at least one configuration ran");
+    std::fs::write("BENCH_serve.json", bench_serve_json(&rep))?;
+    println!(
+        "wrote BENCH_serve.json ({} requests, {} shards, backend {})",
+        rep.requests, rep.shard_count, rep.backend
+    );
+    for sh in &rep.shards {
+        println!("  shard {} checksum {}", sh.shard, sh.result_checksum);
+    }
+    Ok(())
+}

@@ -10,6 +10,7 @@ use vstpu::config::Config;
 use vstpu::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
 use vstpu::netlist::SystolicNetlist;
 use vstpu::report;
+use vstpu::serve::BenchConfig;
 use vstpu::tech::Technology;
 use vstpu::timing;
 use vstpu::voltage::static_scheme;
@@ -40,6 +41,14 @@ COMMANDS
                     the artifacts directory is absent)
                     --artifacts DIR (artifacts)  --requests N (256)
                     --fluctuation low|medium|high (medium)
+  bench-serve     drive the sharded multi-worker engine under load and
+                    report req/s + latency percentiles; --json writes
+                    the machine-readable BENCH_serve.json CI gates on
+                    --shards N (4)  --requests N (4096)  --max-batch N (32)
+                    --deadline-us N (2000)  --queue-depth N (64)
+                    --fluctuation low|medium|high (medium)  --seed N (7)
+                    --quick (CI smoke: 2 shards x 1024 requests)
+                    --json  --out FILE (BENCH_serve.json)
   e2e             end-to-end accuracy/power sweep (EXPERIMENTS.md E12)
                     --artifacts DIR  --requests N (512)
   tradeoff        partition-count vs power vs accuracy-risk study
@@ -260,6 +269,48 @@ pub fn run() -> Result<()> {
                 coord.latency.quantile_us(0.5),
                 coord.latency.quantile_us(0.99)
             );
+        }
+        "bench-serve" => {
+            let o = Opts::parse(rest, &["quick", "json"])?;
+            let tech = Technology::artix7_28nm();
+            let mut bcfg = if o.flag("quick") {
+                BenchConfig::quick(tech)
+            } else {
+                BenchConfig::paper_default(tech)
+            };
+            bcfg.profile = profile_from(&o.str_or("fluctuation", "medium"))?;
+            bcfg.seed = o.num("seed", bcfg.seed)?;
+            bcfg.requests = o.num("requests", bcfg.requests)?;
+            bcfg.engine.shards = o.num("shards", bcfg.engine.shards)?;
+            bcfg.engine.max_batch = o.num("max-batch", bcfg.engine.max_batch)?;
+            bcfg.engine.batch_deadline_us =
+                o.num("deadline-us", bcfg.engine.batch_deadline_us)?;
+            bcfg.engine.queue_depth = o.num("queue-depth", bcfg.engine.queue_depth)?;
+            let artifacts = PathBuf::from(o.str_or("artifacts", &config.serve.artifacts_dir));
+            let rep = vstpu::serve::run_bench(&artifacts, bcfg)?;
+            println!(
+                "bench-serve: {} requests over {} shards (backend {}) in {:.2}s",
+                rep.requests, rep.shard_count, rep.backend, rep.wall_s
+            );
+            println!(
+                "  throughput {:.0} req/s; latency p50 {:.0} us, p99 {:.0} us, mean {:.0} us",
+                rep.requests_per_s, rep.p50_us, rep.p99_us, rep.mean_us
+            );
+            println!(
+                "  batch fill {:.2}; razor flag rate {:.3}; power {:.1} mW ({:.1} mW overhead)",
+                rep.batch_fill, rep.razor_flag_rate, rep.power_total_mw, rep.power_overhead_mw
+            );
+            for sh in &rep.shards {
+                println!(
+                    "  shard {}: {} requests / {} batches, p99 {:.0} us, checksum {}",
+                    sh.shard, sh.requests, sh.batches, sh.p99_us, sh.result_checksum
+                );
+            }
+            if o.flag("json") {
+                let out = PathBuf::from(o.str_or("out", "BENCH_serve.json"));
+                std::fs::write(&out, report::bench_serve_json(&rep))?;
+                println!("wrote {}", out.display());
+            }
         }
         "e2e" => {
             let o = Opts::parse(rest, &[])?;

@@ -27,6 +27,11 @@
 //! corrupted (deterministically) before being returned — the mechanism
 //! behind the paper's "DNN accuracy near to zero" below `V_crash`, and
 //! the knob the e2e example sweeps.
+//!
+//! One `Coordinator` is one serving thread. The multi-core path lives in
+//! [`crate::serve`]: a sharded engine that runs N of these side by side,
+//! each restricted (via [`VoltageController::restrict_to_shard`]) to its
+//! own slice of the partition set.
 
 use std::path::Path;
 use std::sync::mpsc;
@@ -125,6 +130,12 @@ pub struct TelemetrySnapshot {
     pub silent: Vec<bool>,
     pub batches: u64,
     pub requests: u64,
+    /// Fraction of batches where Razor flagged at least one owned
+    /// partition (the serving-path "flag rate" the engine reports).
+    pub flag_rate: f64,
+    /// (partition index, rail V, dynamic power mW) for every partition
+    /// this coordinator owns (all of them outside sharded serving).
+    pub per_partition_power_mw: Vec<(usize, f64, f64)>,
 }
 
 /// Fixed-size batcher: collects single samples into the artifact batch,
@@ -202,6 +213,10 @@ pub struct VoltageController {
     row_toggle: Vec<f64>,
     pub flagged: Vec<bool>,
     pub silent: Vec<bool>,
+    /// Partition indices this controller manages. Defaults to all of
+    /// them; the sharded engine restricts each worker to its slice
+    /// (`index % shard_count == shard`) so rail state is per-shard.
+    owned: Vec<usize>,
 }
 
 impl VoltageController {
@@ -237,7 +252,30 @@ impl VoltageController {
             row_toggle: vec![DEFAULT_TOGGLE; cfg.array_size as usize],
             flagged: vec![false; n],
             silent: vec![false; n],
+            owned: (0..n).collect(),
         })
+    }
+
+    /// Restrict Algorithm-2 stepping (and the silent-failure scan) to
+    /// the partitions assigned to `shard` out of `shard_count` — the
+    /// per-shard voltage-controller state of the sharded engine. With
+    /// more shards than partitions some shards own nothing, which is
+    /// fine: they serve inference and skip voltage control.
+    pub fn restrict_to_shard(&mut self, shard: usize, shard_count: usize) -> Result<()> {
+        if shard_count == 0 || shard >= shard_count {
+            return Err(Error::Serve(format!(
+                "shard {shard} out of range for {shard_count} shards"
+            )));
+        }
+        self.owned = (0..self.partitions.len())
+            .filter(|i| i % shard_count == shard)
+            .collect();
+        Ok(())
+    }
+
+    /// Partition indices this controller currently manages.
+    pub fn owned(&self) -> &[usize] {
+        &self.owned
     }
 
     /// Fold a layer's per-lane toggle telemetry into the per-row EWMA
@@ -264,11 +302,14 @@ impl VoltageController {
         self.row_toggle[mac.row as usize % self.row_toggle.len()]
     }
 
-    /// Evaluate Razor over every partition at the current rails.
+    /// Evaluate Razor over every owned partition at the current rails
+    /// (a shard senses only the islands it drives — the per-batch
+    /// trial_partition walk is the serving hot path).
     pub fn sense(&mut self) {
         let toggles = self.row_toggle.clone();
         let size = toggles.len();
-        for (i, p) in self.partitions.iter().enumerate() {
+        for &i in &self.owned {
+            let p = &self.partitions[i];
             let t = trial_partition(
                 &self.netlist,
                 &self.tech,
@@ -283,10 +324,11 @@ impl VoltageController {
         }
     }
 
-    /// One Algorithm-2 epoch: sense, then step every rail.
+    /// One Algorithm-2 epoch: sense, then step every owned rail.
     pub fn epoch(&mut self) {
         self.sense();
-        for (i, p) in self.partitions.iter_mut().enumerate() {
+        for i in self.owned.clone() {
+            let p = &mut self.partitions[i];
             if self.flagged[i] {
                 p.vccint = (p.vccint + self.vs).min(self.v_ceil);
             } else {
@@ -350,6 +392,10 @@ pub struct Coordinator {
     pub latency: LatencyHistogram,
     batches: u64,
     requests: u64,
+    /// Sense passes taken (one per batch).
+    senses: u64,
+    /// Sense passes where at least one owned partition flagged.
+    flag_batches: u64,
 }
 
 impl Coordinator {
@@ -385,7 +431,15 @@ impl Coordinator {
             latency: LatencyHistogram::default(),
             batches: 0,
             requests: 0,
+            senses: 0,
+            flag_batches: 0,
         })
+    }
+
+    /// Restrict this coordinator's voltage control to one shard's
+    /// partition slice (see [`VoltageController::restrict_to_shard`]).
+    pub fn set_shard(&mut self, shard: usize, shard_count: usize) -> Result<()> {
+        self.controller.restrict_to_shard(shard, shard_count)
     }
 
     /// Execute one packed batch through the model artifact; returns
@@ -419,24 +473,30 @@ impl Coordinator {
             self.controller.observe_toggles(lane_rates);
         }
 
-        // Error injection from silently-failing partitions.
+        // Error injection from silently-failing owned partitions (a
+        // shard corrupts only through the islands it physically drives).
         let mut corrupted_cols: Vec<(u32, u32)> = Vec::new();
-        for i in 0..self.controller.partitions.len() {
+        for &i in self.controller.owned() {
             if self.controller.silent_now(i) {
                 corrupted_cols.push(self.controller.col_span(i));
             }
         }
         let corrupted = !corrupted_cols.is_empty();
         if corrupted {
-            for (b, l) in iter_2d(self.config.batch, MODEL_OUTPUT) {
-                let col = l as u32;
-                if corrupted_cols.iter().any(|&(lo, hi)| col >= lo && col <= hi) {
-                    // Deterministic bit-flip-style corruption: the MAC's
-                    // upper accumulator bits latch the previous value.
-                    let idx = b * MODEL_OUTPUT + l;
-                    let noise =
-                        hash3_unit(self.batches, b as u64, l as u64) as f32 * 2.0 - 1.0;
-                    logits[idx] = -logits[idx] + noise;
+            // Corrupt only the real rows (padding logits are discarded),
+            // keyed on each request's identity — not its batch position —
+            // so a request's corrupted output does not depend on how the
+            // dynamic batcher happened to slice the stream.
+            for (b, r) in reqs.iter().enumerate() {
+                for l in 0..MODEL_OUTPUT {
+                    let col = l as u32;
+                    if corrupted_cols.iter().any(|&(lo, hi)| col >= lo && col <= hi) {
+                        // Deterministic bit-flip-style corruption: the MAC's
+                        // upper accumulator bits latch the previous value.
+                        let idx = b * MODEL_OUTPUT + l;
+                        let noise = hash3_unit(r.id, l as u64, 0x5eed) as f32 * 2.0 - 1.0;
+                        logits[idx] = -logits[idx] + noise;
+                    }
                 }
             }
         }
@@ -449,6 +509,15 @@ impl Coordinator {
             self.controller.epoch();
         } else {
             self.controller.sense();
+        }
+        self.senses += 1;
+        if self
+            .controller
+            .owned()
+            .iter()
+            .any(|&i| self.controller.flagged[i])
+        {
+            self.flag_batches += 1;
         }
 
         let latency_us = start.elapsed().as_micros() as u64;
@@ -470,6 +539,20 @@ impl Coordinator {
     pub fn snapshot(&self) -> TelemetrySnapshot {
         let mean_row: f64 = self.controller.row_toggle.iter().sum::<f64>()
             / self.controller.row_toggle.len() as f64;
+        let per_partition_power_mw = self
+            .controller
+            .owned()
+            .iter()
+            .map(|&i| {
+                let p = &self.controller.partitions[i];
+                (
+                    i,
+                    p.vccint,
+                    self.power_model
+                        .macs_power_mw(p.mac_count(), p.vccint, mean_row),
+                )
+            })
+            .collect();
         TelemetrySnapshot {
             row_toggle: self.controller.row_toggle.clone(),
             rails: self.controller.rails(),
@@ -480,6 +563,12 @@ impl Coordinator {
             silent: self.controller.silent.clone(),
             batches: self.batches,
             requests: self.requests,
+            flag_rate: if self.senses == 0 {
+                0.0
+            } else {
+                self.flag_batches as f64 / self.senses as f64
+            },
+            per_partition_power_mw,
         }
     }
 
@@ -537,10 +626,6 @@ impl Coordinator {
         }
         Ok(self.snapshot())
     }
-}
-
-fn iter_2d(a: usize, b: usize) -> impl Iterator<Item = (usize, usize)> {
-    (0..a).flat_map(move |i| (0..b).map(move |j| (i, j)))
 }
 
 #[cfg(test)]
@@ -640,6 +725,28 @@ mod tests {
         for (b, a) in before.iter().zip(&after) {
             assert!(a >= b, "rail dropped under flags: {b} -> {a}");
         }
+    }
+
+    #[test]
+    fn restrict_to_shard_steps_only_owned_rails() {
+        let cfg = CoordinatorConfig::paper_default(Technology::artix7_28nm());
+        let mut c = VoltageController::new(&cfg).unwrap();
+        assert_eq!(c.owned(), &[0, 1, 2, 3]);
+        c.restrict_to_shard(1, 2).unwrap();
+        assert_eq!(c.owned(), &[1, 3]);
+        let before = c.rails();
+        c.epoch();
+        let after = c.rails();
+        // Unowned rails are untouched; owned rails descend (clean run).
+        assert!((after[0] - before[0]).abs() < 1e-15);
+        assert!((after[2] - before[2]).abs() < 1e-15);
+        assert!(after[1] < before[1]);
+        assert!(after[3] < before[3]);
+        // More shards than partitions: the tail shards own nothing.
+        c.restrict_to_shard(5, 6).unwrap();
+        assert!(c.owned().is_empty());
+        // Out-of-range shard is a readable error.
+        assert!(c.restrict_to_shard(2, 2).is_err());
     }
 
     #[test]

@@ -38,6 +38,9 @@
 //!   the (optional, unlinked by default) PJRT path,
 //! * [`coordinator`] — the serving loop: router, batcher, telemetry and
 //!   the runtime voltage controller,
+//! * [`serve`] — the sharded multi-worker engine: N coordinator threads
+//!   behind a deterministic router with dynamic batching, bounded-queue
+//!   backpressure and the `bench-serve` perf harness,
 //! * [`report`] — renderers regenerating every table/figure of the paper.
 //!
 //! Quick start (library):
@@ -70,6 +73,7 @@ pub mod power;
 pub mod razor;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod study;
 pub mod tech;
 pub mod timing;

@@ -92,6 +92,19 @@ impl LatencyHistogram {
         self.total_us += us;
     }
 
+    /// Fold another histogram in — shard aggregation in the serving
+    /// engine (bucket layouts are compatible by construction).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (b, &c) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += c;
+        }
+        self.count += other.count;
+        self.total_us += other.total_us;
+    }
+
     pub fn mean_us(&self) -> f64 {
         if self.count == 0 {
             f64::NAN
@@ -146,6 +159,28 @@ mod tests {
         let down = [3.0, 2.0, 1.0];
         assert!((pearson(&a, &up) - 1.0).abs() < 1e-12);
         assert!((pearson(&a, &down) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_histogram_merge_matches_single_recorder() {
+        let mut all = LatencyHistogram::default();
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        for us in [5u64, 40, 3000] {
+            all.record_us(us);
+            a.record_us(us);
+        }
+        for us in [7u64, 900_000] {
+            all.record_us(us);
+            b.record_us(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.count, all.count);
+        assert_eq!(a.total_us, all.total_us);
+        assert_eq!(a.buckets, all.buckets);
+        // Merging an empty histogram is a no-op.
+        a.merge(&LatencyHistogram::default());
+        assert_eq!(a.count, all.count);
     }
 
     #[test]

@@ -6,6 +6,7 @@ use std::fmt::Write as _;
 
 use crate::cadflow::FlowReport;
 use crate::cluster::{Clustering, NOISE};
+use crate::serve::BenchReport;
 use crate::timing::{PathRecord, TimingReport};
 
 /// Render a generic aligned text table.
@@ -168,6 +169,99 @@ pub fn variants_csv(series: &[(String, f64)]) -> String {
     csv(&["variant", "dynamic_power_mw"], &rows)
 }
 
+/// JSON number: finite floats with fixed precision (JSON has no NaN /
+/// Infinity; an idle shard's percentiles render as 0).
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "0.000000".to_string()
+    }
+}
+
+fn json_f64_list(xs: &[f64]) -> String {
+    let cells: Vec<String> = xs.iter().map(|&x| json_f64(x)).collect();
+    format!("[{}]", cells.join(","))
+}
+
+/// Render `BENCH_serve.json` — the machine-readable artifact the CI
+/// `bench-smoke` gate consumes. Schema: see README "BENCH_serve.json".
+/// Only `shard_results[].result_checksum`, `requests` and the
+/// configuration echo are deterministic across runs at a fixed seed;
+/// the throughput/latency fields are measurements.
+pub fn bench_serve_json(rep: &BenchReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"schema\": \"{}\",", rep.schema);
+    let _ = writeln!(s, "  \"quick\": {},", rep.quick);
+    let _ = writeln!(s, "  \"seed\": {},", rep.seed);
+    let _ = writeln!(s, "  \"fluctuation\": \"{}\",", rep.fluctuation);
+    let _ = writeln!(s, "  \"backend\": \"{}\",", rep.backend);
+    let _ = writeln!(s, "  \"shards\": {},", rep.shard_count);
+    let _ = writeln!(s, "  \"max_batch\": {},", rep.max_batch);
+    let _ = writeln!(s, "  \"batch_deadline_us\": {},", rep.batch_deadline_us);
+    let _ = writeln!(s, "  \"queue_depth\": {},", rep.queue_depth);
+    let _ = writeln!(s, "  \"requests\": {},", rep.requests);
+    let _ = writeln!(s, "  \"wall_s\": {},", json_f64(rep.wall_s));
+    let _ = writeln!(s, "  \"requests_per_s\": {},", json_f64(rep.requests_per_s));
+    let _ = writeln!(
+        s,
+        "  \"latency_us\": {{\"p50\": {}, \"p99\": {}, \"mean\": {}}},",
+        json_f64(rep.p50_us),
+        json_f64(rep.p99_us),
+        json_f64(rep.mean_us)
+    );
+    let _ = writeln!(s, "  \"batch_fill\": {},", json_f64(rep.batch_fill));
+    let _ = writeln!(
+        s,
+        "  \"razor_flag_rate\": {},",
+        json_f64(rep.razor_flag_rate)
+    );
+    let _ = writeln!(s, "  \"power_mw\": {{");
+    let _ = writeln!(s, "    \"total\": {},", json_f64(rep.power_total_mw));
+    let _ = writeln!(s, "    \"overhead\": {},", json_f64(rep.power_overhead_mw));
+    let _ = writeln!(s, "    \"per_partition\": [");
+    let mut cells = Vec::new();
+    for sh in &rep.shards {
+        for &(partition, vccint, mw) in &sh.per_partition_power_mw {
+            cells.push(format!(
+                "      {{\"shard\": {}, \"partition\": {}, \"vccint\": {}, \"power_mw\": {}}}",
+                sh.shard,
+                partition,
+                json_f64(vccint),
+                json_f64(mw)
+            ));
+        }
+    }
+    let _ = writeln!(s, "{}", cells.join(",\n"));
+    let _ = writeln!(s, "    ]");
+    let _ = writeln!(s, "  }},");
+    let _ = writeln!(s, "  \"shard_results\": [");
+    let shard_cells: Vec<String> = rep
+        .shards
+        .iter()
+        .map(|sh| {
+            format!(
+                "    {{\"shard\": {}, \"requests\": {}, \"batches\": {}, \
+                 \"batch_fill\": {}, \"p50_us\": {}, \"p99_us\": {}, \
+                 \"rails\": {}, \"result_checksum\": \"{}\"}}",
+                sh.shard,
+                sh.requests,
+                sh.batches,
+                json_f64(sh.batch_fill),
+                json_f64(sh.p50_us),
+                json_f64(sh.p99_us),
+                json_f64_list(&sh.rails),
+                sh.result_checksum
+            )
+        })
+        .collect();
+    let _ = writeln!(s, "{}", shard_cells.join(",\n"));
+    let _ = writeln!(s, "  ]");
+    let _ = writeln!(s, "}}");
+    s
+}
+
 /// Human summary of one flow run (the CLI's `flow` output).
 pub fn flow_summary(rep: &FlowReport) -> String {
     let mut s = String::new();
@@ -286,6 +380,58 @@ mod tests {
         let f4 = fig4_5_csv(&rep.fig4_setup_deltas);
         assert_eq!(f4.lines().count(), 101);
         assert!(f4.starts_with("rank,endpoint"));
+    }
+
+    #[test]
+    fn bench_serve_json_is_well_formed() {
+        use crate::serve::{ShardBench, BENCH_SCHEMA};
+        let rep = BenchReport {
+            schema: BENCH_SCHEMA,
+            quick: true,
+            seed: 7,
+            fluctuation: "medium",
+            backend: "reference".into(),
+            shard_count: 2,
+            max_batch: 32,
+            batch_deadline_us: 2000,
+            queue_depth: 64,
+            requests: 64,
+            wall_s: 0.5,
+            requests_per_s: 128.0,
+            p50_us: 100.0,
+            p99_us: f64::NAN, // must render as a valid JSON number
+            mean_us: 120.0,
+            batch_fill: 1.0,
+            razor_flag_rate: 0.0,
+            power_total_mw: 400.0,
+            power_overhead_mw: 50.0,
+            shards: vec![ShardBench {
+                shard: 0,
+                requests: 32,
+                batches: 1,
+                batch_fill: 1.0,
+                p50_us: 100.0,
+                p99_us: 110.0,
+                rails: vec![0.95, 0.96],
+                per_partition_power_mw: vec![(0, 0.95, 80.0), (2, 0.96, 90.0)],
+                result_checksum: "00000000deadbeef".into(),
+            }],
+        };
+        let json = bench_serve_json(&rep);
+        for needle in [
+            "\"schema\": \"vstpu-bench-serve/v1\"",
+            "\"requests_per_s\"",
+            "\"result_checksum\": \"00000000deadbeef\"",
+            "\"per_partition\"",
+            "\"p99\": 0.000000",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert!(!json.contains("NaN"));
+        // Balanced braces/brackets (cheap well-formedness check; no JSON
+        // parser in the vendored build).
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
     }
 
     #[test]

@@ -1,0 +1,800 @@
+//! S17 — Sharded multi-worker serving engine: the scale-out request path.
+//!
+//! ```text
+//!  clients --submit(id)--> router --(bounded sync_channel, id % N)--+
+//!                                                                  |
+//!        +---------------------+---------------------+-------------+
+//!        v                     v                     v
+//!   shard-0 thread        shard-1 thread        shard-N-1 thread
+//!   DynamicBatcher        DynamicBatcher        DynamicBatcher
+//!   (size + deadline)     (size + deadline)     (size + deadline)
+//!   Coordinator           Coordinator           Coordinator
+//!    own Backend           own Backend           own Backend
+//!    own VoltageCtrl       own VoltageCtrl       own VoltageCtrl
+//!    (owned partitions     (owned partitions     (owned partitions
+//!     j % N == 0)           j % N == 1)           j % N == N-1)
+//! ```
+//!
+//! The single-threaded [`Coordinator`] loop of `coordinator::serve` cannot
+//! scale with cores; this module shards the serving path instead. Each
+//! worker thread owns a full serving stack — its own
+//! [`crate::runtime::Backend`] instance (the pattern a PJRT client, which
+//! is not `Send`, will force anyway) and its own voltage-controller state
+//! restricted to the partitions assigned to that shard
+//! (`partition_index % shard_count == shard`). The router in front is a
+//! plain deterministic hash (`request id % shard_count`) over **bounded**
+//! `sync_channel`s, so a slow shard exerts real backpressure on the
+//! producer instead of buffering without limit.
+//!
+//! Batching is dynamic with the two classic triggers: a **size** trigger
+//! (the batch fills to `max_batch`) and a **deadline** trigger (the
+//! oldest queued request has waited `batch_deadline_us`). Shutdown is
+//! clean: dropping the submit side drains every queued request through a
+//! final flush before the workers exit with their [`ShardReport`]s.
+//!
+//! [`run_bench`] is the load-generating harness behind `vstpu bench-serve`
+//! and `benches/serve_throughput.rs`: it drives a fixed seeded workload
+//! through the engine and folds the shard reports into a [`BenchReport`],
+//! which `report::bench_serve_json` renders as the machine-readable
+//! `BENCH_serve.json` the CI perf gate consumes. Shard *results* (the
+//! FNV-1a [`result_checksum`] over each shard's logits in request-id
+//! order) are byte-identical across runs at a fixed seed while the rails
+//! stay inside the guard band — the default and CI configuration, where
+//! no silent corruption fires and a request's logits therefore depend
+//! only on its own input and id, never on how the dynamic batcher sliced
+//! the stream. (Corruption noise is keyed on request identity too, but
+//! *whether* a partition goes silent depends on rail/telemetry state,
+//! which does evolve with batch boundaries — so below `V_crash` the
+//! contract intentionally does not hold.) The timing fields are
+//! measurements and vary run to run.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, InferenceRequest, InferenceResponse, TelemetrySnapshot,
+    MODEL_INPUT,
+};
+use crate::error::{Error, Result};
+use crate::metrics::{percentile, LatencyHistogram};
+use crate::power::PowerModel;
+use crate::tech::Technology;
+use crate::workload::{Batch, FluctuationProfile};
+
+/// `BENCH_serve.json` schema identifier (see README "BENCH_serve.json").
+pub const BENCH_SCHEMA: &str = "vstpu-bench-serve/v1";
+
+/// Sharded-engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker-thread count; partitions are owned round-robin by shard.
+    pub shards: usize,
+    /// Size trigger: execute once this many requests are queued. Must be
+    /// in `1..=coordinator.batch` (short batches are zero-padded to the
+    /// artifact batch).
+    pub max_batch: usize,
+    /// Deadline trigger: flush a partial batch once its oldest request
+    /// has waited this long (microseconds).
+    pub batch_deadline_us: u64,
+    /// Bounded per-shard queue depth, in requests — the backpressure
+    /// window between the router and each worker.
+    pub queue_depth: usize,
+    /// Per-worker serving-stack configuration.
+    pub coordinator: CoordinatorConfig,
+}
+
+impl EngineConfig {
+    pub fn paper_default(tech: Technology) -> Self {
+        let coordinator = CoordinatorConfig::paper_default(tech);
+        Self {
+            shards: 4,
+            max_batch: coordinator.batch,
+            batch_deadline_us: 2_000,
+            queue_depth: 2 * coordinator.batch,
+            coordinator,
+        }
+    }
+}
+
+/// Dynamic batching queue: size trigger + deadline trigger.
+///
+/// `push` returns a full batch the moment `max_batch` requests are
+/// pending; [`DynamicBatcher::time_left`] reports how long the serving
+/// loop may keep waiting for more arrivals before the oldest pending
+/// request's deadline forces a partial flush.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    max_batch: usize,
+    width: usize,
+    deadline: Duration,
+    pending: Vec<InferenceRequest>,
+    first_at: Option<Instant>,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, width: usize, deadline_us: u64) -> Self {
+        Self {
+            max_batch,
+            width,
+            deadline: Duration::from_micros(deadline_us.max(1)),
+            pending: Vec::with_capacity(max_batch),
+            first_at: None,
+        }
+    }
+
+    /// Queue a request; returns the batch when the size trigger fires.
+    pub fn push(&mut self, req: InferenceRequest) -> Result<Option<Vec<InferenceRequest>>> {
+        if req.input.len() != self.width {
+            return Err(Error::Serve(format!(
+                "request {}: input width {} != {}",
+                req.id,
+                req.input.len(),
+                self.width
+            )));
+        }
+        if self.pending.is_empty() {
+            self.first_at = Some(Instant::now());
+        }
+        self.pending.push(req);
+        if self.pending.len() >= self.max_batch {
+            Ok(Some(self.take()))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Time remaining until the deadline trigger, as seen at `now`.
+    /// `None` when nothing is pending (the loop may block indefinitely);
+    /// `Some(ZERO)` when the flush is already due.
+    pub fn time_left(&self, now: Instant) -> Option<Duration> {
+        self.first_at
+            .map(|first| (first + self.deadline).saturating_duration_since(now))
+    }
+
+    /// Flush the partial batch (deadline or shutdown path).
+    pub fn flush(&mut self) -> Option<Vec<InferenceRequest>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.take())
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn take(&mut self) -> Vec<InferenceRequest> {
+        self.first_at = None;
+        std::mem::take(&mut self.pending)
+    }
+}
+
+/// What one worker hands back at shutdown.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub shard: usize,
+    /// Runtime backend the shard served on ("reference", "cpu").
+    pub backend: &'static str,
+    pub requests: u64,
+    pub batches: u64,
+    /// Mean real-request fill of executed batches, in [0, 1].
+    pub batch_fill: f64,
+    /// End-to-end (enqueue -> reply) latency percentiles, microseconds.
+    /// Bucket upper bounds from the power-of-two histogram: the worker
+    /// accumulates bounded state, not a per-request sample vector.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    /// Bucketed end-to-end latencies (mergeable across shards).
+    pub latency: LatencyHistogram,
+    /// Final telemetry: rails, flag rate, per-partition power.
+    pub snapshot: TelemetrySnapshot,
+}
+
+struct Envelope {
+    req: InferenceRequest,
+    enqueued: Instant,
+    reply: mpsc::Sender<InferenceResponse>,
+}
+
+/// The sharded multi-worker engine handle. Submission routes by
+/// `request id % shards` so a fixed workload always lands on the same
+/// shards in the same order — the property the bench determinism rides
+/// on. Dropping the handle via [`ShardedEngine::shutdown`] closes every
+/// queue, drains in-flight requests and joins the workers.
+pub struct ShardedEngine {
+    senders: Vec<SyncSender<Envelope>>,
+    handles: Vec<JoinHandle<Result<ShardReport>>>,
+    width: usize,
+}
+
+impl ShardedEngine {
+    /// Spawn the workers over `artifacts_dir` (each worker runs the
+    /// usual backend fallback chain independently, on its own thread).
+    pub fn start(artifacts_dir: &Path, cfg: EngineConfig) -> Result<Self> {
+        if cfg.shards == 0 {
+            return Err(Error::Serve("engine needs at least one shard".into()));
+        }
+        if cfg.max_batch == 0 || cfg.max_batch > cfg.coordinator.batch {
+            return Err(Error::Serve(format!(
+                "max_batch {} outside 1..={} (the artifact batch)",
+                cfg.max_batch, cfg.coordinator.batch
+            )));
+        }
+        let mut senders = Vec::with_capacity(cfg.shards);
+        let mut handles = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let (tx, rx) = mpsc::sync_channel::<Envelope>(cfg.queue_depth.max(1));
+            let worker_cfg = cfg.clone();
+            let dir = artifacts_dir.to_path_buf();
+            let handle = std::thread::Builder::new()
+                .name(format!("vstpu-shard-{shard}"))
+                .spawn(move || worker(shard, dir, worker_cfg, rx))?;
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Ok(Self {
+            senders,
+            handles,
+            width: MODEL_INPUT,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// The shard a request id routes to.
+    pub fn route(&self, id: u64) -> usize {
+        (id % self.senders.len() as u64) as usize
+    }
+
+    /// Enqueue on the request's home shard, blocking while that shard's
+    /// bounded queue is full (backpressure).
+    pub fn submit(
+        &self,
+        req: InferenceRequest,
+        reply: mpsc::Sender<InferenceResponse>,
+    ) -> Result<()> {
+        self.submit_to(self.route(req.id), req, reply)
+    }
+
+    /// Enqueue on an explicit shard (blocking).
+    pub fn submit_to(
+        &self,
+        shard: usize,
+        req: InferenceRequest,
+        reply: mpsc::Sender<InferenceResponse>,
+    ) -> Result<()> {
+        let env = self.envelope(shard, req, reply)?;
+        self.senders[shard]
+            .send(env)
+            .map_err(|_| Error::Serve(format!("shard {shard} is no longer serving")))
+    }
+
+    /// Non-blocking enqueue: `Ok(false)` when the shard's queue is full
+    /// (the caller sees the backpressure instead of blocking on it).
+    pub fn try_submit(
+        &self,
+        req: InferenceRequest,
+        reply: mpsc::Sender<InferenceResponse>,
+    ) -> Result<bool> {
+        let shard = self.route(req.id);
+        let env = self.envelope(shard, req, reply)?;
+        match self.senders[shard].try_send(env) {
+            Ok(()) => Ok(true),
+            Err(TrySendError::Full(_)) => Ok(false),
+            Err(TrySendError::Disconnected(_)) => Err(Error::Serve(format!(
+                "shard {shard} is no longer serving"
+            ))),
+        }
+    }
+
+    /// Validate at the router so a malformed request is an error for its
+    /// sender, never a dead worker thread.
+    fn envelope(
+        &self,
+        shard: usize,
+        req: InferenceRequest,
+        reply: mpsc::Sender<InferenceResponse>,
+    ) -> Result<Envelope> {
+        if shard >= self.senders.len() {
+            return Err(Error::Serve(format!(
+                "shard {shard} out of range (engine has {})",
+                self.senders.len()
+            )));
+        }
+        if req.input.len() != self.width {
+            return Err(Error::Serve(format!(
+                "request {}: input width {} != {}",
+                req.id,
+                req.input.len(),
+                self.width
+            )));
+        }
+        Ok(Envelope {
+            req,
+            enqueued: Instant::now(),
+            reply,
+        })
+    }
+
+    /// Close the queues, let every worker drain its in-flight requests,
+    /// and collect the per-shard reports (sorted by shard index).
+    pub fn shutdown(self) -> Result<Vec<ShardReport>> {
+        drop(self.senders);
+        let mut reports = Vec::with_capacity(self.handles.len());
+        let mut first_err = None;
+        for (shard, handle) in self.handles.into_iter().enumerate() {
+            match handle.join() {
+                Ok(Ok(report)) => reports.push(report),
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err =
+                        first_err.or_else(|| Some(Error::Serve(format!("shard {shard} panicked"))))
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => {
+                reports.sort_by_key(|r| r.shard);
+                Ok(reports)
+            }
+        }
+    }
+}
+
+/// One shard's serving loop: dynamic batching over the bounded queue,
+/// drain-on-close, per-request end-to-end latency accounting.
+fn worker(
+    shard: usize,
+    artifacts_dir: PathBuf,
+    cfg: EngineConfig,
+    rx: Receiver<Envelope>,
+) -> Result<ShardReport> {
+    let mut coord = Coordinator::open(&artifacts_dir, cfg.coordinator.clone())?;
+    coord.set_shard(shard, cfg.shards)?;
+    let mut batcher = DynamicBatcher::new(cfg.max_batch, MODEL_INPUT, cfg.batch_deadline_us);
+    let mut waiting: Vec<(Instant, mpsc::Sender<InferenceResponse>)> = Vec::new();
+    // Bounded accumulator: a long-lived shard must not grow per-request
+    // state, so latencies bucket into the histogram as they complete.
+    let mut latency = LatencyHistogram::default();
+
+    loop {
+        let msg = if batcher.pending() == 0 {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break, // closed and drained
+            }
+        } else {
+            let left = batcher.time_left(Instant::now()).unwrap_or(Duration::ZERO);
+            if left.is_zero() {
+                None // deadline trigger
+            } else {
+                match rx.recv_timeout(left) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        };
+        let full = match msg {
+            Some(env) => {
+                waiting.push((env.enqueued, env.reply));
+                batcher.push(env.req)?
+            }
+            None => batcher.flush(),
+        };
+        if let Some(batch) = full {
+            run_batch(&mut coord, &batch, &mut waiting, &mut latency)?;
+        }
+    }
+    // Clean shutdown: the queue is closed and already drained into the
+    // batcher; flush whatever is still pending so no request is dropped.
+    if let Some(batch) = batcher.flush() {
+        run_batch(&mut coord, &batch, &mut waiting, &mut latency)?;
+    }
+
+    let snap = coord.snapshot();
+    let batch_fill = if snap.batches == 0 {
+        0.0
+    } else {
+        snap.requests as f64 / (snap.batches as f64 * cfg.max_batch as f64)
+    };
+    let (p50_us, p99_us, mean_us) = if latency.count == 0 {
+        (0.0, 0.0, 0.0)
+    } else {
+        (
+            latency.quantile_us(0.5) as f64,
+            latency.quantile_us(0.99) as f64,
+            latency.mean_us(),
+        )
+    };
+    Ok(ShardReport {
+        shard,
+        backend: coord.backend,
+        requests: snap.requests,
+        batches: snap.batches,
+        batch_fill,
+        p50_us,
+        p99_us,
+        mean_us,
+        latency,
+        snapshot: snap,
+    })
+}
+
+fn run_batch(
+    coord: &mut Coordinator,
+    batch: &[InferenceRequest],
+    waiting: &mut Vec<(Instant, mpsc::Sender<InferenceResponse>)>,
+    latency: &mut LatencyHistogram,
+) -> Result<()> {
+    let responses = coord.infer_batch(batch)?;
+    for (mut resp, (enqueued, tx)) in responses.into_iter().zip(waiting.drain(..)) {
+        // Engine latency is end-to-end: queue wait + batch execution.
+        resp.latency_us = enqueued.elapsed().as_micros() as u64;
+        latency.record_us(resp.latency_us);
+        let _ = tx.send(resp); // a hung-up client is not a shard error
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The bench-serve harness.
+// ---------------------------------------------------------------------------
+
+/// Configuration of one `bench-serve` run.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub engine: EngineConfig,
+    /// Total requests pushed through the router.
+    pub requests: usize,
+    /// Workload seed — fixes inputs, routing and therefore shard results.
+    pub seed: u64,
+    pub profile: FluctuationProfile,
+    /// CI smoke mode (recorded in the JSON so gates compare like to like).
+    pub quick: bool,
+}
+
+impl BenchConfig {
+    pub fn paper_default(tech: Technology) -> Self {
+        Self {
+            engine: EngineConfig::paper_default(tech),
+            requests: 4096,
+            seed: 7,
+            profile: FluctuationProfile::Medium,
+            quick: false,
+        }
+    }
+
+    /// The CI smoke configuration (`vstpu bench-serve --quick`).
+    pub fn quick(tech: Technology) -> Self {
+        let mut cfg = Self::paper_default(tech);
+        cfg.quick = true;
+        cfg.requests = 1024;
+        cfg.engine.shards = 2;
+        cfg
+    }
+}
+
+/// One shard's block in `BENCH_serve.json`.
+#[derive(Debug, Clone)]
+pub struct ShardBench {
+    pub shard: usize,
+    pub requests: u64,
+    pub batches: u64,
+    pub batch_fill: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Final rails of every partition in the shard's local array.
+    pub rails: Vec<f64>,
+    /// (partition index, rail V, dynamic power mW) for owned partitions.
+    pub per_partition_power_mw: Vec<(usize, f64, f64)>,
+    /// FNV-1a over (id, logits) in id order — byte-identical across runs
+    /// at a fixed seed in guard-band operation (see the module docs).
+    /// Rendered as 16 lowercase hex digits.
+    pub result_checksum: String,
+}
+
+/// The machine-readable outcome `report::bench_serve_json` renders.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub schema: &'static str,
+    pub quick: bool,
+    pub seed: u64,
+    pub fluctuation: &'static str,
+    pub backend: String,
+    pub shard_count: usize,
+    pub max_batch: usize,
+    pub batch_deadline_us: u64,
+    pub queue_depth: usize,
+    pub requests: u64,
+    pub wall_s: f64,
+    pub requests_per_s: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub batch_fill: f64,
+    /// Batch-weighted mean Razor flag rate across shards.
+    pub razor_flag_rate: f64,
+    /// Overhead + every shard's owned-partition power.
+    pub power_total_mw: f64,
+    pub power_overhead_mw: f64,
+    pub shards: Vec<ShardBench>,
+}
+
+/// Incremental FNV-1a 64 state — one per shard during bench grouping,
+/// so the sorted result stream is digested in a single pass with no
+/// per-shard rescans or logits clones.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(pub u64);
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn eat(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn eat_result(&mut self, id: u64, logits: &[f32]) {
+        self.eat(&id.to_le_bytes());
+        for v in logits {
+            self.eat(&v.to_le_bytes());
+        }
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// FNV-1a 64 over the ids and logit bytes of `results` in the order
+/// given. Callers sort by id first so the digest is routing-stable.
+pub fn result_checksum(results: &[(u64, Vec<f32>)]) -> u64 {
+    let mut h = Fnv1a::new();
+    for (id, logits) in results {
+        h.eat_result(*id, logits);
+    }
+    h.0
+}
+
+/// Drive a seeded workload through a fresh [`ShardedEngine`] and fold
+/// the shard reports into a [`BenchReport`]. The producer runs on the
+/// caller's thread (blocking on per-shard backpressure); a collector
+/// thread gathers replies so the pipeline never deadlocks.
+pub fn run_bench(artifacts_dir: &Path, cfg: BenchConfig) -> Result<BenchReport> {
+    let engine = ShardedEngine::start(artifacts_dir, cfg.engine.clone())?;
+    let shards = cfg.engine.shards;
+    let data = Batch::synthetic(cfg.requests, MODEL_INPUT, cfg.profile, cfg.seed);
+
+    let (reply_tx, reply_rx) = mpsc::channel::<InferenceResponse>();
+    let collector = std::thread::spawn(move || {
+        let mut results: Vec<(u64, Vec<f32>)> = Vec::new();
+        let mut lat_us: Vec<f64> = Vec::new();
+        while let Ok(resp) = reply_rx.recv() {
+            lat_us.push(resp.latency_us as f64);
+            results.push((resp.id, resp.logits));
+        }
+        (results, lat_us)
+    });
+
+    let t0 = Instant::now();
+    for (i, sample) in data.samples().enumerate() {
+        let req = InferenceRequest {
+            id: i as u64,
+            input: sample.to_vec(),
+        };
+        if let Err(e) = engine.submit(req, reply_tx.clone()) {
+            // A dead shard closes its queue before its JoinHandle carries
+            // the root cause — join the workers so the real error (e.g. a
+            // malformed manifest) surfaces instead of the routing symptom.
+            drop(reply_tx);
+            return Err(engine.shutdown().err().unwrap_or(e));
+        }
+    }
+    drop(reply_tx);
+    let shard_reports = engine.shutdown()?;
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let (mut results, lat_us) = collector
+        .join()
+        .map_err(|_| Error::Serve("bench collector panicked".into()))?;
+
+    if results.len() != cfg.requests {
+        return Err(Error::Serve(format!(
+            "collected {} responses for {} requests",
+            results.len(),
+            cfg.requests
+        )));
+    }
+    results.sort_by_key(|(id, _)| *id);
+
+    // One pass over the sorted stream: each result folds into its home
+    // shard's digest (identical to checksumming the per-shard slices).
+    let mut digests = vec![Fnv1a::new(); shards];
+    for (id, logits) in &results {
+        digests[(id % shards as u64) as usize].eat_result(*id, logits);
+    }
+
+    let mut shard_out = Vec::with_capacity(shard_reports.len());
+    for rep in &shard_reports {
+        shard_out.push(ShardBench {
+            shard: rep.shard,
+            requests: rep.requests,
+            batches: rep.batches,
+            batch_fill: rep.batch_fill,
+            p50_us: rep.p50_us,
+            p99_us: rep.p99_us,
+            rails: rep.snapshot.rails.clone(),
+            per_partition_power_mw: rep.snapshot.per_partition_power_mw.clone(),
+            result_checksum: format!("{:016x}", digests[rep.shard].0),
+        });
+    }
+
+    let total_requests: u64 = shard_reports.iter().map(|r| r.requests).sum();
+    let total_batches: u64 = shard_reports.iter().map(|r| r.batches).sum();
+    let batch_fill = if total_batches == 0 {
+        0.0
+    } else {
+        total_requests as f64 / (total_batches as f64 * cfg.engine.max_batch as f64)
+    };
+    let razor_flag_rate = if total_batches == 0 {
+        0.0
+    } else {
+        shard_reports
+            .iter()
+            .map(|r| r.snapshot.flag_rate * r.batches as f64)
+            .sum::<f64>()
+            / total_batches as f64
+    };
+    let power_model = PowerModel::new(
+        cfg.engine.coordinator.tech.clone(),
+        cfg.engine.coordinator.clock_mhz,
+    );
+    // baseline_mw(0, v) is exactly the clock-scaled overhead term.
+    let power_overhead_mw = power_model.baseline_mw(0, cfg.engine.coordinator.tech.v_nom);
+    let power_total_mw = power_overhead_mw
+        + shard_out
+            .iter()
+            .flat_map(|s| s.per_partition_power_mw.iter().map(|&(_, _, mw)| mw))
+            .sum::<f64>();
+    let (p50_us, p99_us, mean_us) = if lat_us.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        (
+            percentile(&lat_us, 50.0),
+            percentile(&lat_us, 99.0),
+            lat_us.iter().sum::<f64>() / lat_us.len() as f64,
+        )
+    };
+
+    Ok(BenchReport {
+        schema: BENCH_SCHEMA,
+        quick: cfg.quick,
+        seed: cfg.seed,
+        fluctuation: cfg.profile.name(),
+        backend: shard_reports
+            .first()
+            .map(|r| r.backend)
+            .unwrap_or("reference")
+            .to_string(),
+        shard_count: shards,
+        max_batch: cfg.engine.max_batch,
+        batch_deadline_us: cfg.engine.batch_deadline_us,
+        queue_depth: cfg.engine.queue_depth,
+        requests: total_requests,
+        wall_s,
+        requests_per_s: total_requests as f64 / wall_s,
+        p50_us,
+        p99_us,
+        mean_us,
+        batch_fill,
+        razor_flag_rate,
+        power_total_mw,
+        power_overhead_mw,
+        shards: shard_out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            input: vec![1i8; MODEL_INPUT],
+        }
+    }
+
+    #[test]
+    fn dynamic_batcher_size_trigger() {
+        let mut b = DynamicBatcher::new(3, MODEL_INPUT, 1_000);
+        assert!(b.push(req(0)).unwrap().is_none());
+        assert!(b.push(req(1)).unwrap().is_none());
+        let full = b.push(req(2)).unwrap().unwrap();
+        assert_eq!(full.len(), 3);
+        assert_eq!(b.pending(), 0);
+        // Size trigger resets the deadline clock.
+        assert!(b.time_left(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn dynamic_batcher_deadline_counts_from_first_request() {
+        let mut b = DynamicBatcher::new(8, MODEL_INPUT, 10_000);
+        assert!(b.time_left(Instant::now()).is_none()); // empty queue: no deadline
+        b.push(req(0)).unwrap();
+        let now = Instant::now();
+        let left = b.time_left(now).unwrap();
+        assert!(left <= Duration::from_micros(10_000));
+        // Well past the deadline the remaining time saturates at zero.
+        assert!(b
+            .time_left(now + Duration::from_micros(20_000))
+            .unwrap()
+            .is_zero());
+        // A later push must NOT extend the oldest request's deadline.
+        b.push(req(1)).unwrap();
+        assert!(b
+            .time_left(now + Duration::from_micros(20_000))
+            .unwrap()
+            .is_zero());
+    }
+
+    #[test]
+    fn dynamic_batcher_flush_and_width_check() {
+        let mut b = DynamicBatcher::new(4, MODEL_INPUT, 1_000);
+        assert!(b.flush().is_none());
+        b.push(req(7)).unwrap();
+        assert_eq!(b.flush().unwrap().len(), 1);
+        assert!(b.time_left(Instant::now()).is_none());
+        let bad = InferenceRequest {
+            id: 9,
+            input: vec![0i8; 3],
+        };
+        assert!(b.push(bad).is_err());
+    }
+
+    #[test]
+    fn max_batch_one_fires_immediately() {
+        // A "request larger than the batch" cannot exist (requests are
+        // single samples); the degenerate small-batch case is max_batch
+        // = 1, where every push is its own full batch.
+        let mut b = DynamicBatcher::new(1, MODEL_INPUT, 1_000);
+        assert_eq!(b.push(req(0)).unwrap().unwrap().len(), 1);
+        assert_eq!(b.push(req(1)).unwrap().unwrap().len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn checksum_is_deterministic_and_input_sensitive() {
+        let a = vec![(0u64, vec![1.0f32, 2.0]), (1, vec![3.0])];
+        assert_eq!(result_checksum(&a), result_checksum(&a.clone()));
+        let b = vec![(0u64, vec![1.0f32, 2.0]), (2, vec![3.0])];
+        assert_ne!(result_checksum(&a), result_checksum(&b));
+        let c = vec![(0u64, vec![1.0f32, 2.5]), (1, vec![3.0])];
+        assert_ne!(result_checksum(&a), result_checksum(&c));
+        assert_eq!(result_checksum(&[]), result_checksum(&[]));
+    }
+
+    #[test]
+    fn engine_rejects_bad_configs() {
+        let tech = Technology::artix7_28nm();
+        let mut cfg = EngineConfig::paper_default(tech.clone());
+        cfg.shards = 0;
+        assert!(ShardedEngine::start(Path::new("/nonexistent-vstpu"), cfg).is_err());
+        let mut cfg = EngineConfig::paper_default(tech);
+        cfg.max_batch = cfg.coordinator.batch + 1;
+        assert!(ShardedEngine::start(Path::new("/nonexistent-vstpu"), cfg).is_err());
+    }
+}

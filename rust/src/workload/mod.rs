@@ -134,6 +134,12 @@ impl Batch {
     pub fn sample(&self, i: usize) -> &[i8] {
         &self.inputs[i * self.width..(i + 1) * self.width]
     }
+
+    /// Iterate samples in row order — the request stream the serving
+    /// benches replay (request id = enumeration index).
+    pub fn samples(&self) -> impl Iterator<Item = &[i8]> + '_ {
+        self.inputs.chunks(self.width)
+    }
 }
 
 #[cfg(test)]
@@ -193,5 +199,8 @@ mod tests {
         assert_eq!(b.sample(0).len(), 8);
         assert_eq!(b.sample(3).len(), 8);
         assert_eq!(b.inputs.len(), 32);
+        let rows: Vec<&[i8]> = b.samples().collect();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[2], b.sample(2));
     }
 }

@@ -1,0 +1,251 @@
+//! Sharded serving-engine integration tests: dynamic-batching edge
+//! cases (deadline flush, bursts past the size trigger, more shards
+//! than partitions, clean shutdown draining in-flight requests) and the
+//! fixed-seed determinism contract `BENCH_serve.json` gates on.
+//!
+//! Everything runs on the pure-Rust reference backend (the artifacts
+//! directory deliberately does not exist), so the suite is green on a
+//! fresh clone with no Python and no network.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use vstpu::coordinator::{CoordinatorConfig, InferenceRequest, MODEL_INPUT};
+use vstpu::serve::{run_bench, BenchConfig, EngineConfig, ShardedEngine};
+use vstpu::tech::Technology;
+use vstpu::workload::{Batch, FluctuationProfile};
+
+const NO_ARTIFACTS: &str = "/nonexistent-vstpu-artifacts";
+
+fn engine_config() -> EngineConfig {
+    EngineConfig::paper_default(Technology::artix7_28nm())
+}
+
+fn req(id: u64) -> InferenceRequest {
+    InferenceRequest {
+        id,
+        input: vec![3i8; MODEL_INPUT],
+    }
+}
+
+/// Collect exactly `n` replies, failing loudly on a stall.
+fn recv_n(rx: &mpsc::Receiver<vstpu::coordinator::InferenceResponse>, n: usize) -> Vec<u64> {
+    let mut ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("reply within 30s");
+        ids.push(resp.id);
+    }
+    ids.sort_unstable();
+    ids
+}
+
+#[test]
+fn deadline_flushes_a_partial_batch() {
+    let mut cfg = engine_config();
+    cfg.shards = 1;
+    cfg.max_batch = 8;
+    cfg.batch_deadline_us = 100_000; // 100 ms: fires fast, tolerates CI stalls
+    let engine = ShardedEngine::start(Path::new(NO_ARTIFACTS), cfg).unwrap();
+    let (tx, rx) = mpsc::channel();
+    for id in 0..3 {
+        engine.submit(req(id), tx.clone()).unwrap();
+    }
+    // The size trigger (8) can never fire: only the deadline can
+    // produce these replies while the engine is still accepting work.
+    assert_eq!(recv_n(&rx, 3), vec![0, 1, 2]);
+    let reports = engine.shutdown().unwrap();
+    assert_eq!(reports.len(), 1);
+    assert_eq!(reports[0].requests, 3);
+    assert_eq!(reports[0].batches, 1);
+    assert!((reports[0].batch_fill - 3.0 / 8.0).abs() < 1e-12);
+}
+
+#[test]
+fn burst_larger_than_max_batch_splits_into_batches() {
+    let mut cfg = engine_config();
+    cfg.shards = 1;
+    cfg.max_batch = 4;
+    cfg.batch_deadline_us = 1_000_000; // only the size trigger matters
+    cfg.queue_depth = 64;
+    let engine = ShardedEngine::start(Path::new(NO_ARTIFACTS), cfg).unwrap();
+    let (tx, rx) = mpsc::channel();
+    for id in 0..11 {
+        engine.submit(req(id), tx.clone()).unwrap();
+    }
+    drop(tx);
+    let reports = engine.shutdown().unwrap();
+    assert_eq!(recv_n(&rx, 11), (0..11).collect::<Vec<u64>>());
+    // 11 requests at max_batch 4: two full batches plus the drain flush.
+    assert_eq!(reports[0].requests, 11);
+    assert_eq!(reports[0].batches, 3);
+}
+
+#[test]
+fn more_shards_than_partitions_still_serves() {
+    // The 16x16 paper floorplan has 4 partitions; shard them 6 ways so
+    // shards 4 and 5 own no voltage island at all.
+    let mut cfg = engine_config();
+    cfg.shards = 6;
+    cfg.max_batch = 4;
+    let engine = ShardedEngine::start(Path::new(NO_ARTIFACTS), cfg).unwrap();
+    let (tx, rx) = mpsc::channel();
+    for id in 0..36 {
+        engine.submit(req(id), tx.clone()).unwrap();
+    }
+    drop(tx);
+    let reports = engine.shutdown().unwrap();
+    assert_eq!(recv_n(&rx, 36), (0..36).collect::<Vec<u64>>());
+    assert_eq!(reports.len(), 6);
+    let mut owned_partitions: Vec<usize> = Vec::new();
+    for (shard, rep) in reports.iter().enumerate() {
+        assert_eq!(rep.shard, shard);
+        assert_eq!(rep.requests, 6, "id % 6 routing sends 6 ids to each");
+        owned_partitions.extend(rep.snapshot.per_partition_power_mw.iter().map(|&(i, ..)| i));
+    }
+    // Tail shards own nothing; the 4 partitions are covered exactly once.
+    assert!(reports[4].snapshot.per_partition_power_mw.is_empty());
+    assert!(reports[5].snapshot.per_partition_power_mw.is_empty());
+    owned_partitions.sort_unstable();
+    assert_eq!(owned_partitions, vec![0, 1, 2, 3]);
+}
+
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let mut cfg = engine_config();
+    cfg.shards = 2;
+    cfg.max_batch = 32;
+    cfg.batch_deadline_us = 10_000_000; // 10 s: neither trigger can fire
+    let engine = ShardedEngine::start(Path::new(NO_ARTIFACTS), cfg).unwrap();
+    let (tx, rx) = mpsc::channel();
+    for id in 0..10 {
+        engine.submit(req(id), tx.clone()).unwrap();
+    }
+    drop(tx);
+    // Shutdown closes the queues; the drain path must still answer
+    // every queued request before the workers exit.
+    let reports = engine.shutdown().unwrap();
+    assert_eq!(recv_n(&rx, 10), (0..10).collect::<Vec<u64>>());
+    assert_eq!(reports.iter().map(|r| r.requests).sum::<u64>(), 10);
+    assert!(rx.recv().is_err(), "no stray replies after the drain");
+}
+
+#[test]
+fn router_rejects_malformed_requests_without_killing_shards() {
+    let mut cfg = engine_config();
+    cfg.shards = 2;
+    let engine = ShardedEngine::start(Path::new(NO_ARTIFACTS), cfg).unwrap();
+    let (tx, rx) = mpsc::channel();
+    let bad = InferenceRequest {
+        id: 0,
+        input: vec![0i8; 3],
+    };
+    assert!(engine.submit(bad, tx.clone()).is_err());
+    assert!(engine.submit_to(9, req(1), tx.clone()).is_err());
+    // The shards are still alive and serving after the rejections.
+    engine.submit(req(2), tx.clone()).unwrap();
+    drop(tx);
+    let reports = engine.shutdown().unwrap();
+    assert_eq!(recv_n(&rx, 1), vec![2]);
+    assert_eq!(reports.iter().map(|r| r.requests).sum::<u64>(), 1);
+}
+
+#[test]
+fn responses_match_the_single_coordinator_path() {
+    // The sharded engine must return exactly the logits the plain
+    // coordinator computes for the same inputs (sharding changes the
+    // threading, never the math).
+    let data = Batch::synthetic(8, MODEL_INPUT, FluctuationProfile::Medium, 11);
+    let ccfg = CoordinatorConfig::paper_default(Technology::artix7_28nm());
+    let mut coord = vstpu::coordinator::Coordinator::reference(ccfg).unwrap();
+    let reqs: Vec<InferenceRequest> = (0..8)
+        .map(|i| InferenceRequest {
+            id: i as u64,
+            input: data.sample(i).to_vec(),
+        })
+        .collect();
+    let golden = coord.infer_batch(&reqs).unwrap();
+
+    let mut cfg = engine_config();
+    cfg.shards = 2;
+    cfg.max_batch = 4;
+    let engine = ShardedEngine::start(Path::new(NO_ARTIFACTS), cfg).unwrap();
+    let (tx, rx) = mpsc::channel();
+    for r in &reqs {
+        engine.submit(r.clone(), tx.clone()).unwrap();
+    }
+    drop(tx);
+    engine.shutdown().unwrap();
+    let mut got: Vec<(u64, Vec<f32>)> = Vec::new();
+    while let Ok(resp) = rx.recv() {
+        got.push((resp.id, resp.logits));
+    }
+    got.sort_by_key(|(id, _)| *id);
+    assert_eq!(got.len(), 8);
+    for (resp, gold) in got.iter().zip(&golden) {
+        assert_eq!(resp.0, gold.id);
+        assert_eq!(resp.1, gold.logits, "logits diverged for id {}", gold.id);
+    }
+}
+
+#[test]
+fn bench_results_are_deterministic_across_runs() {
+    // The acceptance contract of BENCH_serve.json: byte-identical shard
+    // result checksums (and request counts) across runs at a fixed seed.
+    let bench = || {
+        let mut cfg = BenchConfig::quick(Technology::artix7_28nm());
+        cfg.requests = 192;
+        cfg.engine.shards = 3;
+        cfg.engine.max_batch = 16;
+        // Size-trigger-only batching: composition is identical even on
+        // a badly stalled CI runner.
+        cfg.engine.batch_deadline_us = 60_000_000;
+        run_bench(Path::new(NO_ARTIFACTS), cfg).unwrap()
+    };
+    let a = bench();
+    let b = bench();
+    assert_eq!(a.requests, 192);
+    assert_eq!(a.requests, b.requests);
+    assert_eq!(a.shards.len(), 3);
+    for (sa, sb) in a.shards.iter().zip(&b.shards) {
+        assert_eq!(sa.shard, sb.shard);
+        assert_eq!(sa.requests, sb.requests);
+        assert_eq!(
+            sa.result_checksum, sb.result_checksum,
+            "shard {} results diverged across identical runs",
+            sa.shard
+        );
+    }
+    // A different seed must change the results.
+    let mut cfg = BenchConfig::quick(Technology::artix7_28nm());
+    cfg.requests = 192;
+    cfg.engine.shards = 3;
+    cfg.engine.max_batch = 16;
+    cfg.engine.batch_deadline_us = 60_000_000;
+    cfg.seed = 8888;
+    let c = run_bench(Path::new(NO_ARTIFACTS), cfg).unwrap();
+    assert_ne!(a.shards[0].result_checksum, c.shards[0].result_checksum);
+}
+
+#[test]
+fn bench_report_fields_are_sane() {
+    let mut cfg = BenchConfig::quick(Technology::artix7_28nm());
+    cfg.requests = 64;
+    cfg.engine.shards = 2;
+    cfg.engine.max_batch = 8;
+    let rep = run_bench(Path::new(NO_ARTIFACTS), cfg).unwrap();
+    assert_eq!(rep.schema, vstpu::serve::BENCH_SCHEMA);
+    assert!(rep.quick);
+    assert_eq!(rep.requests, 64);
+    assert_eq!(rep.backend, "reference");
+    assert!(rep.requests_per_s > 0.0);
+    assert!(rep.p50_us > 0.0 && rep.p99_us >= rep.p50_us);
+    assert!(rep.batch_fill > 0.0 && rep.batch_fill <= 1.0);
+    assert!(rep.power_total_mw > rep.power_overhead_mw);
+    let json = vstpu::report::bench_serve_json(&rep);
+    assert!(json.contains("\"schema\": \"vstpu-bench-serve/v1\""));
+    assert!(json.contains("\"result_checksum\""));
+    assert!(!json.contains("NaN"));
+}
