@@ -8,7 +8,7 @@
 
 PYTHON ?= python3
 
-.PHONY: all build test pytest bench bench-build bench-serve artifacts fmt lint clean
+.PHONY: all build test pytest bench bench-build bench-serve sweep artifacts fmt lint clean
 
 all: build
 
@@ -34,6 +34,10 @@ bench:
 # CI smoke form of the sharded serving bench; writes BENCH_serve.json.
 bench-serve:
 	cargo run --release -- bench-serve --quick --json
+
+# CI smoke form of the parallel scenario sweep; writes BENCH_sweep.json.
+sweep:
+	cargo run --release -- sweep --smoke --json
 
 # Lower the JAX/Pallas artifacts consumed by the Engine backend.
 # Wraps python/compile/aot.py; output lands in ./artifacts.

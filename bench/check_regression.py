@@ -4,10 +4,16 @@
 Usage: check_regression.py CURRENT.json BASELINE.json
 
 Fails (exit 1) when:
+  * either input file is missing or not valid JSON, or
   * the current file is missing required schema fields, or
+  * the baseline's requests_per_s is missing or non-positive (a gate
+    floor cannot be derived from it), or
   * measured requests_per_s has regressed more than `max_regression`
     (default 20%) below the checked-in baseline floor, or
   * any shard is missing its deterministic result_checksum.
+
+Every failure mode prints one legible `bench-smoke gate: FAIL` line —
+never a traceback.
 
 Stdlib only — runs on any CI python3 with no installs.
 """
@@ -23,17 +29,32 @@ def die(msg: str) -> None:
     sys.exit(1)
 
 
+def load(path: str):
+    """Read one JSON input with legible failures instead of tracebacks."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        die(f"{path} not found — did the bench step run and write it?")
+    except OSError as e:
+        die(f"{path} is not readable: {e}")
+    except json.JSONDecodeError as e:
+        die(f"{path} is not valid JSON: {e}")
+
+
 def main(argv: list) -> None:
     if len(argv) != 3:
         die(f"usage: {argv[0]} CURRENT.json BASELINE.json")
-    with open(argv[1]) as f:
-        current = json.load(f)
-    with open(argv[2]) as f:
-        baseline = json.load(f)
+    current = load(argv[1])
+    baseline = load(argv[2])
+    if not isinstance(current, dict) or not isinstance(baseline, dict):
+        die("both inputs must be JSON objects")
 
     for key in REQUIRED:
         if key not in current:
             die(f"{argv[1]} is missing required field '{key}'")
+    if "schema" not in baseline:
+        die(f"{argv[2]} is missing required field 'schema'")
     if current["schema"] != baseline["schema"]:
         die(f"schema mismatch: {current['schema']} vs {baseline['schema']}")
     # Like-for-like only: a non-quick (bigger) run must not be compared
@@ -43,20 +64,40 @@ def main(argv: list) -> None:
             f"configuration mismatch: quick={current.get('quick')!r} vs "
             f"baseline quick={baseline['quick']!r}"
         )
+    if not isinstance(current["latency_us"], dict):
+        die(f"latency_us is not an object: {current['latency_us']!r}")
     for q in ("p50", "p99"):
-        if q not in current["latency_us"]:
-            die(f"latency_us is missing '{q}'")
-    for shard in current["shard_results"]:
+        v = current["latency_us"].get(q)
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            die(f"latency_us '{q}' is missing or not a number: {v!r}")
+    if not isinstance(current["shard_results"], list):
+        die(f"shard_results is not a list: {current['shard_results']!r}")
+    for i, shard in enumerate(current["shard_results"]):
+        if not isinstance(shard, dict):
+            die(f"shard_results[{i}] is not an object: {shard!r}")
         if not shard.get("result_checksum"):
             die(f"shard {shard.get('shard')} has no result_checksum")
 
-    floor = baseline["requests_per_s"] * (1.0 - baseline.get("max_regression", 0.20))
+    # Guard the division inputs: a zero/missing baseline floor or a
+    # non-numeric measurement must fail with a message, not a traceback.
+    base = baseline.get("requests_per_s")
+    if not isinstance(base, (int, float)) or isinstance(base, bool) or base <= 0:
+        die(
+            f"baseline requests_per_s is missing or non-positive ({base!r}) "
+            f"in {argv[2]} — cannot derive a gate floor"
+        )
     got = current["requests_per_s"]
+    if not isinstance(got, (int, float)) or isinstance(got, bool):
+        die(f"requests_per_s is not a number: {got!r}")
+    max_regression = baseline.get("max_regression", 0.20)
+    if not isinstance(max_regression, (int, float)) or not 0.0 <= max_regression < 1.0:
+        die(f"baseline max_regression must be in [0, 1): {max_regression!r}")
+    floor = base * (1.0 - max_regression)
     if got < floor:
         die(
             f"throughput {got:.0f} req/s is below the gate floor {floor:.0f} "
-            f"req/s (baseline {baseline['requests_per_s']:.0f}, "
-            f"max regression {100 * baseline.get('max_regression', 0.20):.0f}%)"
+            f"req/s (baseline {base:.0f}, "
+            f"max regression {100 * max_regression:.0f}%)"
         )
     print(
         f"bench-smoke gate: OK — {got:.0f} req/s (floor {floor:.0f}), "

@@ -1,0 +1,35 @@
+//! Scenario-sweep grid bench: the full algorithm axis over the three
+//! academic nodes at 16x16 — the cross-scenario winner tables the
+//! paper's Table II/III story rides on, and a producer of the
+//! machine-readable `BENCH_sweep.json` (schema `vstpu-bench-sweep/v1`;
+//! `vstpu sweep --json` emits the same artifact).
+//!
+//! Everything except the `wall_ms` lines is deterministic at the fixed
+//! seed. Run: `cargo bench --bench sweep_grid`
+
+use vstpu::report::bench_sweep_json;
+use vstpu::sweep::{render, run_sweep, SweepAlgo, SweepConfig};
+
+fn main() -> Result<(), vstpu::Error> {
+    let mut cfg = SweepConfig::smoke();
+    cfg.algos = SweepAlgo::all();
+    cfg.techs = vec![
+        "academic-22nm".into(),
+        "academic-45nm".into(),
+        "academic-130nm".into(),
+    ];
+    cfg.sizes = vec![16];
+    cfg.shifts = vec![0.25, 0.45];
+
+    let rep = run_sweep(&cfg)?;
+    print!("{}", render(&rep));
+    std::fs::write("BENCH_sweep.json", bench_sweep_json(&rep))?;
+    println!(
+        "wrote BENCH_sweep.json ({} scenarios, {} ok, {} failed, {} threads)",
+        rep.scenarios.len(),
+        rep.ok_count,
+        rep.failed_count,
+        rep.threads
+    );
+    Ok(())
+}

@@ -158,8 +158,7 @@ impl CadFlow {
         // 1. Netlist + synthesis timing (paper Fig 1 step 1).
         let netlist = SystolicNetlist::generate(cfg.array_size, &cfg.tech, cfg.clock_mhz, cfg.seed);
         let synth = timing::synthesize(&netlist);
-        let mac_slacks = synth.min_slack_per_mac(cfg.array_size);
-        let slack_values: Vec<f64> = mac_slacks.iter().map(|s| s.min_slack_ns).collect();
+        let slack_values = synth.min_slack_values(cfg.array_size);
 
         // 2. Partitioning (python environment in the paper's flow).
         let device = Device::for_array(cfg.array_size);
@@ -170,7 +169,11 @@ impl CadFlow {
                 (c, p, "slack-quartiles".to_string())
             }
             PartitionScheme::Clustered(algo) => {
-                let c = algo.run(&slack_values)?;
+                // DBSCAN marks outliers NOISE; the floorplan/voltage path
+                // needs a total labelling, so noise joins the nearest
+                // slack group before partitioning (never dropped, never
+                // blanket-folded into partition 0).
+                let c = algo.run(&slack_values)?.assign_noise_to_nearest(&slack_values);
                 if c.k < 2 {
                     return Err(Error::Clustering(format!(
                         "{} produced {} cluster(s); need >= 2 for voltage scaling",

@@ -11,6 +11,7 @@ use vstpu::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
 use vstpu::netlist::SystolicNetlist;
 use vstpu::report;
 use vstpu::serve::BenchConfig;
+use vstpu::sweep::{SweepAlgo, SweepConfig};
 use vstpu::tech::Technology;
 use vstpu::timing;
 use vstpu::voltage::static_scheme;
@@ -49,6 +50,15 @@ COMMANDS
                     --fluctuation low|medium|high (medium)  --seed N (7)
                     --quick (CI smoke: 2 shards x 1024 requests)
                     --json  --out FILE (BENCH_serve.json)
+  sweep           parallel scenario sweep: the full clustering-algorithm
+                    x tech x array-size x workload-shift grid on a job
+                    pool, with shared per-(tech,size) timing analysis;
+                    --json writes the machine-readable BENCH_sweep.json
+                    --smoke (CI grid: 2 algos x 2 techs x 1 size)
+                    --algos hierarchical,kmeans,meanshift,dbscan,equal-quantile
+                    --techs NAMES  --sizes 8,16,32,64  --shifts 0.25,0.45
+                    --k N (4)  --threads N (0 = cores)  --seed N (2021)
+                    --max-trials N (200)  --json  --out FILE (BENCH_sweep.json)
   e2e             end-to-end accuracy/power sweep (EXPERIMENTS.md E12)
                     --artifacts DIR  --requests N (512)
   tradeoff        partition-count vs power vs accuracy-risk study
@@ -177,11 +187,7 @@ pub fn run() -> Result<()> {
             let size: u32 = o.num("array-size", 16)?;
             let tech = Technology::artix7_28nm();
             let nl = SystolicNetlist::generate(size, &tech, 100.0, 2021);
-            let slacks: Vec<f64> = timing::synthesize(&nl)
-                .min_slack_per_mac(size)
-                .iter()
-                .map(|s| s.min_slack_ns)
-                .collect();
+            let slacks = timing::synthesize(&nl).min_slack_values(size);
             if o.flag("dendrogram") {
                 let d = hierarchical::dendrogram(&slacks);
                 println!("top merge heights: {:?}", d.top_merge_heights(8));
@@ -213,12 +219,7 @@ pub fn run() -> Result<()> {
             let rep = CadFlow::new(cfg.clone()).run()?;
             println!("static rails:     {:?}", rep.static_rails);
             println!("calibrated rails: {:?}", rep.calibrated_rails);
-            let synth = timing::synthesize(&nl);
-            let slacks: Vec<f64> = synth
-                .min_slack_per_mac(size)
-                .iter()
-                .map(|s| s.min_slack_ns)
-                .collect();
+            let slacks = timing::synthesize(&nl).min_slack_values(size);
             let clustering = vstpu::cadflow::equal_quartile_clustering(&slacks);
             let device = vstpu::fpga::Device::for_array(size);
             let parts = vstpu::floorplan::quadrants(&device, &clustering, size)?;
@@ -312,6 +313,49 @@ pub fn run() -> Result<()> {
                 println!("wrote {}", out.display());
             }
         }
+        "sweep" => {
+            let o = Opts::parse(rest, &["smoke", "json"])?;
+            let mut scfg = if o.flag("smoke") {
+                SweepConfig::smoke()
+            } else {
+                SweepConfig::full_grid()
+            };
+            scfg.threads = o.num("threads", config.sweep.threads)?;
+            scfg.seed = o.num("seed", config.sweep.seed)?;
+            scfg.max_trials = o.num("max-trials", config.sweep.max_trials)?;
+            scfg.k = o.num("k", scfg.k)?;
+            if let Some(v) = o.get("algos") {
+                scfg.algos = v
+                    .split(',')
+                    .map(SweepAlgo::from_name)
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(v) = o.get("techs") {
+                scfg.techs = v.split(',').map(|t| t.trim().to_string()).collect();
+            }
+            if let Some(v) = o.get("sizes") {
+                scfg.sizes = parse_list(v, "sizes")?;
+            }
+            if let Some(v) = o.get("shifts") {
+                scfg.shifts = parse_list(v, "shifts")?;
+            }
+            let rep = vstpu::sweep::run_sweep(&scfg)?;
+            print!("{}", vstpu::sweep::render(&rep));
+            if o.flag("json") {
+                let out = PathBuf::from(o.str_or("out", "BENCH_sweep.json"));
+                std::fs::write(&out, report::bench_sweep_json(&rep))?;
+                println!("wrote {}", out.display());
+            }
+            // The report and artifact are complete either way; a failed
+            // scenario must still turn the CI gate red.
+            if rep.failed_count > 0 {
+                return Err(Error::Sweep(format!(
+                    "{} of {} scenarios failed (see the report above)",
+                    rep.failed_count,
+                    rep.scenarios.len()
+                )));
+            }
+        }
         "e2e" => {
             let o = Opts::parse(rest, &[])?;
             let artifacts = PathBuf::from(o.str_or("artifacts", &config.serve.artifacts_dir));
@@ -323,15 +367,7 @@ pub fn run() -> Result<()> {
             let mut cfg = vstpu::study::StudyConfig::paper_default(tech);
             cfg.array_size = o.num("array-size", 16)?;
             cfg.shifted_toggle = o.num("shift", 0.45)?;
-            let counts: Vec<usize> = o
-                .str_or("counts", "1,2,4,8,16")
-                .split(',')
-                .map(|c| {
-                    c.trim()
-                        .parse::<usize>()
-                        .map_err(|_| Error::Config(format!("bad count '{c}'")))
-                })
-                .collect::<Result<_>>()?;
+            let counts: Vec<usize> = parse_list(&o.str_or("counts", "1,2,4,8,16"), "counts")?;
             let pts = vstpu::study::partition_count_study(&cfg, &counts)?;
             println!(
                 "partition-count tradeoff ({}x{} on {}, calib toggle {}, shifted {}):\n",
@@ -363,6 +399,17 @@ pub fn run() -> Result<()> {
 
 fn tech_by_name(name: &str) -> Result<Technology> {
     Technology::by_name(name).ok_or_else(|| Error::Config(format!("unknown tech '{name}'")))
+}
+
+/// Parse a comma-separated numeric list (grid-axis CLI flags).
+fn parse_list<T: std::str::FromStr>(v: &str, what: &str) -> Result<Vec<T>> {
+    v.split(',')
+        .map(|c| {
+            c.trim()
+                .parse::<T>()
+                .map_err(|_| Error::Config(format!("bad {what} element '{c}'")))
+        })
+        .collect()
 }
 
 fn scheme_from(algo: &str, k: usize) -> Result<PartitionScheme> {
@@ -412,11 +459,7 @@ fn emit_figs(fig: u32, out: &Path) -> Result<()> {
     }
     if (11..=14).any(want) {
         let nl = SystolicNetlist::generate(16, &tech, 100.0, 2021);
-        let slacks: Vec<f64> = timing::synthesize(&nl)
-            .min_slack_per_mac(16)
-            .iter()
-            .map(|s| s.min_slack_ns)
-            .collect();
+        let slacks = timing::synthesize(&nl).min_slack_values(16);
         let runs: Vec<(&str, Algorithm)> = vec![
             ("fig11_hierarchical_k4", Algorithm::Hierarchical { k: 4 }),
             ("fig12_kmeans_k4", Algorithm::KMeans { k: 4, seed: 2021 }),

@@ -16,6 +16,13 @@ pub const MAX_ITERS: usize = 100;
 pub const TOL: f64 = 1e-9;
 
 /// K-means++ initial centres over 1-D data.
+///
+/// Centres are de-duplicated: a candidate is only ever drawn from points
+/// at a positive distance to every existing centre (`d2 > 0`), so data
+/// with repeated values can never seed two identical centres. When the
+/// data has fewer distinct values than `k`, seeding stops early and the
+/// returned vector is shorter than `k` — [`cluster`] shrinks `k` to the
+/// label range actually used.
 fn seed_centres(data: &[f64], k: usize, rng: &mut SplitMix64) -> Vec<f64> {
     let mut centres = Vec::with_capacity(k);
     centres.push(data[rng.below(data.len() as u64) as usize]);
@@ -25,21 +32,32 @@ fn seed_centres(data: &[f64], k: usize, rng: &mut SplitMix64) -> Vec<f64> {
         .collect();
     while centres.len() < k {
         let total: f64 = d2.iter().sum();
-        let pick = if total <= 0.0 {
-            // All remaining mass at existing centres: pick uniformly.
-            rng.below(data.len() as u64) as usize
-        } else {
-            let mut target = rng.next_f64() * total;
-            let mut idx = data.len() - 1;
-            for (i, &w) in d2.iter().enumerate() {
-                if target < w {
-                    idx = i;
-                    break;
-                }
-                target -= w;
+        if total <= 0.0 {
+            // Every remaining point coincides with an existing centre:
+            // the data is out of distinct values.
+            break;
+        }
+        let mut target = rng.next_f64() * total;
+        let mut pick = None;
+        for (i, &w) in d2.iter().enumerate() {
+            if w <= 0.0 {
+                continue; // duplicate of an existing centre
             }
-            idx
-        };
+            if target < w {
+                pick = Some(i);
+                break;
+            }
+            target -= w;
+        }
+        // Floating-point rounding can exhaust the mass before a pick;
+        // fall back to the farthest remaining point (d2 > 0 by `total`).
+        let pick = pick.unwrap_or_else(|| {
+            d2.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .expect("non-empty data")
+        });
         let c = data[pick];
         centres.push(c);
         for (i, &x) in data.iter().enumerate() {
@@ -65,6 +83,9 @@ pub fn cluster(data: &[f64], k: usize, seed: u64) -> Result<Clustering> {
     }
     let mut rng = SplitMix64::new(seed);
     let mut centres = seed_centres(data, k, &mut rng);
+    // Low-cardinality data may seed fewer distinct centres than k; Lloyd
+    // runs over what exists and `k` shrinks to the truthful label range.
+    let k_seeded = centres.len();
     let mut labels = vec![0usize; data.len()];
 
     for _ in 0..MAX_ITERS {
@@ -80,14 +101,14 @@ pub fn cluster(data: &[f64], k: usize, seed: u64) -> Result<Clustering> {
             labels[i] = best.0;
         }
         // Update step.
-        let mut sum = vec![0.0; k];
-        let mut cnt = vec![0usize; k];
+        let mut sum = vec![0.0; k_seeded];
+        let mut cnt = vec![0usize; k_seeded];
         for (&l, &x) in labels.iter().zip(data) {
             sum[l] += x;
             cnt[l] += 1;
         }
         let mut moved = 0.0f64;
-        for j in 0..k {
+        for j in 0..k_seeded {
             if cnt[j] == 0 {
                 // Empty cluster: re-seed at the point farthest from its
                 // centre (standard k-means repair).
@@ -113,7 +134,28 @@ pub fn cluster(data: &[f64], k: usize, seed: u64) -> Result<Clustering> {
             break;
         }
     }
-    Ok(Clustering { labels, k })
+
+    // Truthful k: compress out any cluster that ended empty (possible
+    // when the farthest-point repair cannot find a distinct re-seed), so
+    // `k` always equals the label range actually used — an empty cluster
+    // previously leaked a lying k into the floorplan/voltage path, which
+    // then saw zero-member bands and NaN centroids.
+    let mut cnt = vec![0usize; k_seeded];
+    for &l in &labels {
+        cnt[l] += 1;
+    }
+    let mut remap = vec![usize::MAX; k_seeded];
+    let mut k_eff = 0usize;
+    for (j, &c) in cnt.iter().enumerate() {
+        if c > 0 {
+            remap[j] = k_eff;
+            k_eff += 1;
+        }
+    }
+    for l in &mut labels {
+        *l = remap[*l];
+    }
+    Ok(Clustering { labels, k: k_eff })
 }
 
 fn labels_nearest(centres: &[f64], x: f64) -> usize {
@@ -199,5 +241,38 @@ mod tests {
         let data = vec![2.5; 40];
         let c = cluster(&data, 3, 11).unwrap();
         assert_eq!(c.labels.len(), 40);
+    }
+
+    #[test]
+    fn constant_data_collapses_to_one_truthful_cluster() {
+        // A single distinct value can only support one centre: k must
+        // report 1, not the requested 3 with two empty clusters.
+        for seed in [0u64, 7, 11, 2021] {
+            let data = vec![2.5; 40];
+            let c = cluster(&data, 3, seed).unwrap();
+            assert_eq!(c.k, 1, "seed {seed}");
+            assert!(c.labels.iter().all(|&l| l == 0));
+            assert!(c.sizes().iter().all(|&s| s > 0));
+        }
+    }
+
+    #[test]
+    fn low_cardinality_data_has_no_empty_clusters() {
+        // Two distinct slack values, k = 3: duplicate centres used to
+        // yield an empty cluster and a k that lied about the label
+        // range. Every reported cluster must now be populated.
+        let mut data = vec![1.0; 20];
+        data.extend(vec![5.0; 20]);
+        for seed in 0..16u64 {
+            let c = cluster(&data, 3, seed).unwrap();
+            assert!(
+                (1..=2).contains(&c.k),
+                "seed {seed}: k={} for 2 distinct values",
+                c.k
+            );
+            let sizes = c.sizes();
+            assert!(sizes.iter().all(|&s| s > 0), "seed {seed}: {sizes:?}");
+            assert!(c.labels.iter().all(|&l| l < c.k));
+        }
     }
 }

@@ -67,6 +67,45 @@ impl Clustering {
             .collect()
     }
 
+    /// Reassign DBSCAN `NOISE` points to the cluster with the nearest
+    /// centroid, so the floorplan/voltage path downstream sees a *total*
+    /// labelling — every MAC must land in some island, and an outlier
+    /// with anomalous slack belongs with the slack group it is closest
+    /// to, not silently dropped or blanket-folded into partition 0. An
+    /// all-noise clustering (k = 0) collapses to a single cluster.
+    /// Labels are re-canonicalised afterwards: absorbing noise moves
+    /// centroids, and voltage assignment relies on the centroid order.
+    pub fn assign_noise_to_nearest(mut self, data: &[f64]) -> Self {
+        if !self.labels.contains(&NOISE) {
+            return self;
+        }
+        if self.k == 0 {
+            for l in &mut self.labels {
+                *l = 0;
+            }
+            self.k = 1;
+            return self;
+        }
+        let cents = self.centroids(data);
+        for (l, &x) in self.labels.iter_mut().zip(data) {
+            if *l != NOISE {
+                continue;
+            }
+            let mut best = (0usize, f64::INFINITY);
+            for (j, &c) in cents.iter().enumerate() {
+                if !c.is_finite() {
+                    continue; // empty cluster: no centroid to join
+                }
+                let d = (x - c).abs();
+                if d < best.1 {
+                    best = (j, d);
+                }
+            }
+            *l = best.0;
+        }
+        self.sorted_by_centroid(data)
+    }
+
     /// Relabel clusters so cluster 0 has the smallest centroid (most
     /// critical slack group) — canonical order for voltage assignment.
     pub fn sorted_by_centroid(mut self, data: &[f64]) -> Self {
@@ -254,6 +293,57 @@ mod tests {
     fn rejects_empty_and_nan() {
         assert!(Algorithm::paper_default().run(&[]).is_err());
         assert!(Algorithm::paper_default().run(&[1.0, f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn noise_reassigned_to_nearest_centroid() {
+        // Two blobs (~1.0 and ~5.0) plus one stray point at 4.6: DBSCAN
+        // marks it noise; the repair must hand it to the *upper* blob
+        // (the nearest centroid), never drop it or default it to 0.
+        let mut data = blobs();
+        data.push(4.6);
+        let c = Algorithm::Dbscan {
+            eps: 0.1,
+            min_points: 3,
+        }
+        .run(&data)
+        .unwrap();
+        assert_eq!(c.labels[100], NOISE, "stray point must start as noise");
+        let fixed = c.assign_noise_to_nearest(&data);
+        assert!(fixed.noise_points().is_empty());
+        assert_eq!(fixed.labels[100], 1, "4.6 is nearest the ~5.0 blob");
+        assert_eq!(fixed.k, 2);
+        // Downstream consumers get finite centroids for every cluster.
+        assert!(fixed.centroids(&data).iter().all(|c| c.is_finite()));
+        // Still canonically ordered after the reassignment.
+        let cents = fixed.centroids(&data);
+        assert!(cents[0] < cents[1]);
+    }
+
+    #[test]
+    fn all_noise_collapses_to_single_cluster() {
+        let data: Vec<f64> = (0..10).map(|i| i as f64 * 100.0).collect();
+        let c = Algorithm::Dbscan {
+            eps: 0.5,
+            min_points: 3,
+        }
+        .run(&data)
+        .unwrap();
+        assert_eq!(c.k, 0);
+        let fixed = c.assign_noise_to_nearest(&data);
+        assert_eq!(fixed.k, 1);
+        assert!(fixed.noise_points().is_empty());
+        assert_eq!(fixed.sizes(), vec![10]);
+    }
+
+    #[test]
+    fn noise_free_clustering_is_unchanged_by_reassignment() {
+        let data = blobs();
+        let c = Algorithm::KMeans { k: 2, seed: 5 }.run(&data).unwrap();
+        let before = c.labels.clone();
+        let fixed = c.assign_noise_to_nearest(&data);
+        assert_eq!(fixed.labels, before);
+        assert_eq!(fixed.k, 2);
     }
 
     #[test]

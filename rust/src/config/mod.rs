@@ -22,6 +22,7 @@ use crate::tech::Technology;
 pub struct Config {
     pub flow: FlowSection,
     pub serve: ServeSection,
+    pub sweep: SweepSection,
 }
 
 /// `[flow]` — CAD-flow parameters.
@@ -96,6 +97,28 @@ impl Default for ServeSection {
     }
 }
 
+/// `[sweep]` — scenario-sweep parameters (the grid axes stay on the CLI;
+/// the scalar knobs that rarely change live here).
+#[derive(Debug, Clone)]
+pub struct SweepSection {
+    /// Worker threads (0 = one per available core).
+    pub threads: usize,
+    /// Base seed for per-scenario seed derivation.
+    pub seed: u64,
+    /// Razor calibration trial cap per scenario.
+    pub max_trials: usize,
+}
+
+impl Default for SweepSection {
+    fn default() -> Self {
+        Self {
+            threads: 0,
+            seed: 2021,
+            max_trials: 200,
+        }
+    }
+}
+
 /// Strip quotes from a TOML string value.
 fn unquote(v: &str) -> String {
     v.trim().trim_matches('"').to_string()
@@ -132,7 +155,7 @@ impl Config {
             }
             if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
                 section = name.trim().to_string();
-                if section != "flow" && section != "serve" {
+                if section != "flow" && section != "serve" && section != "sweep" {
                     return Err(Error::Config(format!(
                         "line {}: unknown section [{section}]",
                         lineno + 1
@@ -173,6 +196,9 @@ impl Config {
             ("serve", "batch_timeout_us") => self.serve.batch_timeout_us = parse_num(key, v)?,
             ("serve", "voltage_epoch") => self.serve.voltage_epoch = parse_num(key, v)?,
             ("serve", "t_del_ns") => self.serve.t_del_ns = parse_num(key, v)?,
+            ("sweep", "threads") => self.sweep.threads = parse_num(key, v)?,
+            ("sweep", "seed") => self.sweep.seed = parse_num(key, v)?,
+            ("sweep", "max_trials") => self.sweep.max_trials = parse_num(key, v)?,
             _ => {
                 return Err(Error::Config(format!(
                     "unknown key '{key}' in section [{section}]"
@@ -203,7 +229,12 @@ impl Config {
              batch = {}\n\
              batch_timeout_us = {}\n\
              voltage_epoch = {}\n\
-             t_del_ns = {}\n",
+             t_del_ns = {}\n\
+             \n\
+             [sweep]\n\
+             threads = {}\n\
+             seed = {}\n\
+             max_trials = {}\n",
             self.flow.array_size,
             self.flow.tech,
             self.flow.clock_mhz,
@@ -221,6 +252,9 @@ impl Config {
             self.serve.batch_timeout_us,
             self.serve.voltage_epoch,
             self.serve.t_del_ns,
+            self.sweep.threads,
+            self.sweep.seed,
+            self.sweep.max_trials,
         )
     }
 
@@ -276,6 +310,18 @@ mod tests {
         assert_eq!(back.flow.tech, cfg.flow.tech);
         assert_eq!(back.serve.batch, cfg.serve.batch);
         assert_eq!(back.flow.calibrate, cfg.flow.calibrate);
+        assert_eq!(back.sweep.threads, cfg.sweep.threads);
+        assert_eq!(back.sweep.max_trials, cfg.sweep.max_trials);
+    }
+
+    #[test]
+    fn sweep_section_parses_and_rejects_typos() {
+        let cfg = Config::parse("[sweep]\nthreads = 8\nseed = 7\nmax_trials = 50\n").unwrap();
+        assert_eq!(cfg.sweep.threads, 8);
+        assert_eq!(cfg.sweep.seed, 7);
+        assert_eq!(cfg.sweep.max_trials, 50);
+        assert!(Config::parse("[sweep]\nthrads = 8\n").is_err());
+        assert!(Config::parse("[sweep]\nthreads = many\n").is_err());
     }
 
     #[test]

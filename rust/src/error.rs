@@ -32,6 +32,9 @@ pub enum Error {
     /// Serving-path error (queue closed, request rejected, ...).
     Serve(String),
 
+    /// Scenario-sweep error (empty grid, unknown axis value, ...).
+    Sweep(String),
+
     /// I/O failure surfaced from the standard library.
     Io(std::io::Error),
 }
@@ -47,6 +50,7 @@ impl std::fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Serve(m) => write!(f, "serve error: {m}"),
+            Error::Sweep(m) => write!(f, "sweep error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -78,6 +82,7 @@ mod tests {
     fn display_prefixes_are_stable() {
         assert!(Error::Config("x".into()).to_string().starts_with("config error: x"));
         assert!(Error::Artifact("y".into()).to_string().contains("artifact error: y"));
+        assert!(Error::Sweep("z".into()).to_string().starts_with("sweep error: z"));
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().starts_with("io error:"));
     }

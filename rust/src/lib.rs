@@ -41,6 +41,10 @@
 //! * [`serve`] — the sharded multi-worker engine: N coordinator threads
 //!   behind a deterministic router with dynamic batching, bounded-queue
 //!   backpressure and the `bench-serve` perf harness,
+//! * [`sweep`] — the parallel scenario sweep: the full clustering x tech
+//!   x array-size x workload-shift grid on a self-scheduling job pool
+//!   with shared per-`(tech, size)` timing analysis and structured
+//!   failure capture (`vstpu sweep`, `BENCH_sweep.json`),
 //! * [`report`] — renderers regenerating every table/figure of the paper.
 //!
 //! Quick start (library):
@@ -75,6 +79,7 @@ pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod study;
+pub mod sweep;
 pub mod tech;
 pub mod timing;
 pub mod util;

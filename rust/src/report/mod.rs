@@ -7,6 +7,7 @@ use std::fmt::Write as _;
 use crate::cadflow::FlowReport;
 use crate::cluster::{Clustering, NOISE};
 use crate::serve::BenchReport;
+use crate::sweep::SweepReport;
 use crate::timing::{PathRecord, TimingReport};
 
 /// Render a generic aligned text table.
@@ -262,6 +263,111 @@ pub fn bench_serve_json(rep: &BenchReport) -> String {
     s
 }
 
+/// JSON string with the escapes the scenario error messages need.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render `BENCH_sweep.json` — the machine-readable artifact the CI
+/// `sweep-smoke` job uploads. Schema: see README "BENCH_sweep.json".
+/// Everything except the `wall_ms` fields is deterministic across runs
+/// at a fixed configuration; every `wall_ms` measurement sits on its own
+/// line so consumers (and the determinism test) can filter them out.
+pub fn bench_sweep_json(rep: &SweepReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"schema\": \"{}\",", rep.schema);
+    let _ = writeln!(s, "  \"quick\": {},", rep.quick);
+    let _ = writeln!(s, "  \"seed\": {},", rep.seed);
+    let _ = writeln!(s, "  \"threads\": {},", rep.threads);
+    let _ = writeln!(s, "  \"scenario_count\": {},", rep.scenarios.len());
+    let _ = writeln!(s, "  \"ok\": {},", rep.ok_count);
+    let _ = writeln!(s, "  \"failed\": {},", rep.failed_count);
+    let _ = writeln!(s, "  \"wall_ms\": {},", json_f64(rep.wall_ms));
+    let _ = writeln!(s, "  \"scenarios\": [");
+    let cells: Vec<String> = rep
+        .scenarios
+        .iter()
+        .map(|r| {
+            let sc = &r.scenario;
+            let head = format!(
+                "    {{\n      \"algo\": \"{}\", \"tech\": \"{}\", \"array_size\": {}, \
+                 \"shift_toggle\": {}, \"seed\": {},",
+                sc.algo.name(),
+                sc.tech,
+                sc.array_size,
+                json_f64(sc.shift_toggle),
+                sc.seed
+            );
+            match &r.outcome {
+                Ok(res) => format!(
+                    "{head}\n      \"status\": \"ok\",\n      \
+                     \"k\": {}, \"noise_reassigned\": {},\n      \
+                     \"rails\": {},\n      \"frontiers\": {},\n      \
+                     \"power_mw\": {}, \"baseline_mw\": {}, \"reduction_pct\": {}, \
+                     \"silent_mac_fraction\": {},\n      \
+                     \"wall_ms\": {}\n    }}",
+                    res.k,
+                    res.noise_reassigned,
+                    json_f64_list(&res.rails),
+                    json_f64_list(&res.frontiers),
+                    json_f64(res.power_mw),
+                    json_f64(res.baseline_mw),
+                    json_f64(res.reduction_pct),
+                    json_f64(res.silent_mac_fraction),
+                    json_f64(res.wall_ms)
+                ),
+                Err(e) => format!(
+                    "{head}\n      \"status\": \"failed\",\n      \
+                     \"error\": {}\n    }}",
+                    json_str(e)
+                ),
+            }
+        })
+        .collect();
+    let _ = writeln!(s, "{}", cells.join(",\n"));
+    let _ = writeln!(s, "  ],");
+    let _ = writeln!(s, "  \"winners\": [");
+    let wcells: Vec<String> = rep
+        .winners
+        .iter()
+        .map(|w| {
+            format!(
+                "    {{\"tech\": \"{}\", \"array_size\": {}, \"shift_toggle\": {}, \
+                 \"best_power_algo\": \"{}\", \"best_power_mw\": {}, \
+                 \"best_accuracy_algo\": \"{}\", \"best_silent_fraction\": {}}}",
+                w.tech,
+                w.array_size,
+                json_f64(w.shift_toggle),
+                w.best_power_algo,
+                json_f64(w.best_power_mw),
+                w.best_accuracy_algo,
+                json_f64(w.best_silent_fraction)
+            )
+        })
+        .collect();
+    let _ = writeln!(s, "{}", wcells.join(",\n"));
+    let _ = writeln!(s, "  ]");
+    let _ = writeln!(s, "}}");
+    s
+}
+
 /// Human summary of one flow run (the CLI's `flow` output).
 pub fn flow_summary(rep: &FlowReport) -> String {
     let mut s = String::new();
@@ -430,6 +536,86 @@ mod tests {
         assert!(!json.contains("NaN"));
         // Balanced braces/brackets (cheap well-formedness check; no JSON
         // parser in the vendored build).
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn bench_sweep_json_is_well_formed() {
+        use crate::sweep::{
+            Scenario, ScenarioRecord, ScenarioResult, SweepAlgo, SweepReport, WinnerRow,
+            SWEEP_SCHEMA,
+        };
+        let rep = SweepReport {
+            schema: SWEEP_SCHEMA,
+            quick: true,
+            seed: 2021,
+            threads: 4,
+            scenarios: vec![
+                ScenarioRecord {
+                    scenario: Scenario {
+                        index: 0,
+                        algo: SweepAlgo::Dbscan,
+                        tech: "academic-22nm".into(),
+                        array_size: 16,
+                        shift_toggle: 0.45,
+                        seed: 99,
+                    },
+                    outcome: Ok(ScenarioResult {
+                        k: 4,
+                        noise_reassigned: 3,
+                        rails: vec![0.8, 0.75],
+                        frontiers: vec![0.78, 0.73],
+                        power_mw: 200.0,
+                        baseline_mw: 270.0,
+                        reduction_pct: 25.9,
+                        silent_mac_fraction: 0.01,
+                        wall_ms: 12.0,
+                    }),
+                },
+                ScenarioRecord {
+                    scenario: Scenario {
+                        index: 1,
+                        algo: SweepAlgo::KMeans,
+                        tech: "academic-22nm".into(),
+                        array_size: 16,
+                        shift_toggle: 0.45,
+                        seed: 100,
+                    },
+                    // Quotes and newlines in the message must be escaped.
+                    outcome: Err("clustering error: \"k\"\nexceeds points".into()),
+                },
+            ],
+            winners: vec![WinnerRow {
+                tech: "academic-22nm".into(),
+                array_size: 16,
+                shift_toggle: 0.45,
+                best_power_algo: "dbscan".into(),
+                best_power_mw: 200.0,
+                best_accuracy_algo: "dbscan".into(),
+                best_silent_fraction: 0.01,
+            }],
+            ok_count: 1,
+            failed_count: 1,
+            wall_ms: 50.0,
+        };
+        let json = bench_sweep_json(&rep);
+        for needle in [
+            "\"schema\": \"vstpu-bench-sweep/v1\"",
+            "\"status\": \"ok\"",
+            "\"status\": \"failed\"",
+            "\"error\": \"clustering error: \\\"k\\\"\\nexceeds points\"",
+            "\"best_power_algo\": \"dbscan\"",
+            "\"noise_reassigned\": 3",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        // Every wall-time measurement sits alone on its line, so the
+        // determinism contract (strip wall_ms lines, compare the rest)
+        // holds structurally.
+        for line in json.lines().filter(|l| l.contains("\"wall_ms\"")) {
+            assert_eq!(line.matches('"').count(), 2, "wall_ms shares a line: {line}");
+        }
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
     }

@@ -26,11 +26,11 @@
 use crate::cluster::Clustering;
 use crate::error::Result;
 use crate::floorplan;
-use crate::fpga::Device;
+use crate::fpga::{Device, Partition};
 use crate::netlist::SystolicNetlist;
 use crate::power::PowerModel;
 use crate::razor::{activity_stretch, RazorConfig};
-use crate::tech::Technology;
+use crate::tech::{FlowKind, Technology};
 use crate::timing;
 use crate::voltage::{runtime_scheme, static_scheme};
 
@@ -66,6 +66,84 @@ pub fn equal_quantile_clustering(slacks: &[f64], n: usize) -> Clustering {
     Clustering { labels, k: n }
 }
 
+/// Clustering -> band floorplan -> Algorithm-1 rail seeding ->
+/// Algorithm-2 Razor calibration: the partition-preparation recipe
+/// shared by the tradeoff study and the scenario sweep. Respects the
+/// technology's CAD flow: the commercial (Vivado) flow stays inside the
+/// vendor guard band (it cannot drive sub-guard-band rails — cadflow
+/// rejects such configurations outright), while the academic (VTR)
+/// flow may descend toward the NTC floor.
+pub fn calibrated_partitions(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    clustering: &Clustering,
+    slacks: &[f64],
+    max_trials: usize,
+    calib_toggle: f64,
+) -> Result<Vec<Partition>> {
+    let device = Device::for_array(netlist.size);
+    let mut parts = floorplan::bands(&device, clustering, netlist.size)?;
+    let (v_lo, floor) = match tech.flow {
+        FlowKind::Vivado => (tech.v_min, tech.v_min),
+        FlowKind::Vtr => (
+            (tech.v_th + 0.1).min(tech.v_min),
+            runtime_scheme::physical_floor(tech),
+        ),
+    };
+    let rails = static_scheme::assign(clustering, slacks, tech.v_nom, v_lo)?;
+    for p in parts.iter_mut() {
+        p.vccint = rails
+            .iter()
+            .find(|r| r.partition == p.id)
+            .expect("rail per partition")
+            .vccint;
+    }
+    let vs = static_scheme::step(tech.v_nom, v_lo, clustering.k.max(4));
+    runtime_scheme::calibrate(
+        netlist,
+        tech,
+        razor,
+        &mut parts,
+        vs,
+        max_trials,
+        floor,
+        |_| calib_toggle,
+    );
+    Ok(parts)
+}
+
+/// Fraction of MACs silently corrupting (beyond the Razor shadow
+/// window) when the workload's toggle rate shifts to `shifted_toggle`
+/// *after* the rails were calibrated — the accuracy-risk proxy shared by
+/// the tradeoff study and the scenario sweep (the GreenTPU scenario:
+/// rails tuned on a quiet trial run, then a noisy sequence arrives).
+pub fn silent_mac_fraction(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    partitions: &[Partition],
+    shifted_toggle: f64,
+) -> f64 {
+    let budget = netlist.period_ns() - timing::CLOCK_UNCERTAINTY_NS;
+    let mut silent = 0usize;
+    for p in partitions {
+        let stretch = tech.delay_factor(p.vccint) * activity_stretch(shifted_toggle);
+        for &mac in &p.macs {
+            let worst = netlist
+                .arcs_of(mac)
+                .iter()
+                .map(|a| a.total_delay_ns())
+                .fold(0.0, f64::max)
+                * stretch;
+            if worst > budget + razor.t_del_ns {
+                silent += 1;
+            }
+        }
+    }
+    silent as f64 / netlist.mac_count() as f64
+}
+
 /// Configuration of the study.
 #[derive(Debug, Clone)]
 pub struct StudyConfig {
@@ -98,69 +176,31 @@ impl StudyConfig {
 pub fn partition_count_study(cfg: &StudyConfig, counts: &[usize]) -> Result<Vec<TradeoffPoint>> {
     let netlist =
         SystolicNetlist::generate(cfg.array_size, &cfg.tech, cfg.clock_mhz, cfg.seed);
-    let synth = timing::synthesize(&netlist);
-    let slacks: Vec<f64> = synth
-        .min_slack_per_mac(cfg.array_size)
-        .iter()
-        .map(|s| s.min_slack_ns)
-        .collect();
-    let device = Device::for_array(cfg.array_size);
+    let slacks = timing::synthesize(&netlist).min_slack_values(cfg.array_size);
     let model = PowerModel::new(cfg.tech.clone(), cfg.clock_mhz);
-    let floor = runtime_scheme::physical_floor(&cfg.tech);
-    let period = netlist.period_ns();
-    let budget = period - timing::CLOCK_UNCERTAINTY_NS;
 
     let mut out = Vec::with_capacity(counts.len());
     for &n in counts {
         let clustering = equal_quantile_clustering(&slacks, n);
-        let mut parts = floorplan::bands(&device, &clustering, cfg.array_size)?;
-        // Seed with Algorithm 1 over the full usable range, then
-        // calibrate to the frontier (VTR-style NTC floor).
-        let v_lo = (cfg.tech.v_th + 0.1).min(cfg.tech.v_min);
-        let rails = static_scheme::assign(&clustering, &slacks, cfg.tech.v_nom, v_lo)?;
-        for p in parts.iter_mut() {
-            p.vccint = rails
-                .iter()
-                .find(|r| r.partition == p.id)
-                .expect("rail per partition")
-                .vccint;
-        }
-        let vs = static_scheme::step(cfg.tech.v_nom, v_lo, n.max(4));
-        runtime_scheme::calibrate(
+        let parts = calibrated_partitions(
             &netlist,
             &cfg.tech,
             &cfg.razor,
-            &mut parts,
-            vs,
+            &clustering,
+            &slacks,
             400,
-            floor,
-            |_| cfg.calib_toggle,
-        );
+            cfg.calib_toggle,
+        )?;
 
         // Power at the calibrated rails.
         let power_mw = model.scaled_mw(&parts, |_| crate::razor::DEFAULT_TOGGLE);
 
         // Margin + accuracy risk under the workload shift.
         let mut margins = Vec::with_capacity(n);
-        let mut silent_macs = 0usize;
         for p in &parts {
             let frontier =
                 crate::razor::min_safe_voltage(&netlist, &cfg.tech, &p.macs, cfg.calib_toggle);
             margins.push(p.vccint - frontier);
-            // Silent check at the shifted activity.
-            let vf = cfg.tech.delay_factor(p.vccint);
-            let stretch = vf * activity_stretch(cfg.shifted_toggle);
-            for &mac in &p.macs {
-                let worst = netlist
-                    .arcs_of(mac)
-                    .iter()
-                    .map(|a| a.total_delay_ns())
-                    .fold(0.0, f64::max)
-                    * stretch;
-                if worst > budget + cfg.razor.t_del_ns {
-                    silent_macs += 1;
-                }
-            }
         }
         out.push(TradeoffPoint {
             n,
@@ -168,7 +208,13 @@ pub fn partition_count_study(cfg: &StudyConfig, counts: &[usize]) -> Result<Vec<
             power_mw,
             power_vs_single: f64::NAN, // filled below
             mean_margin_v: margins.iter().sum::<f64>() / margins.len() as f64,
-            silent_mac_fraction: silent_macs as f64 / netlist.mac_count() as f64,
+            silent_mac_fraction: silent_mac_fraction(
+                &netlist,
+                &cfg.tech,
+                &cfg.razor,
+                &parts,
+                cfg.shifted_toggle,
+            ),
         });
     }
     // Normalise against n=1 (or the first point if 1 was not requested).

@@ -1,0 +1,673 @@
+//! S18 — Parallel scenario sweep: the cross-scenario coverage machine.
+//!
+//! The paper's central claim — slack-clustered voltage islands save
+//! power without timing failure — is only substantiated *across*
+//! scenarios: four clustering algorithms plus the equal-quantile
+//! reference, three academic tech nodes (22/45/130 nm), several array
+//! sizes and post-calibration workload shifts. `study::tradeoff` and
+//! `cadflow` evaluate one configuration at a time on one thread; this
+//! module enumerates the whole grid
+//!
+//! ```text
+//! {hierarchical, kmeans, meanshift, dbscan, equal-quantile}
+//!   x {22nm, 45nm, 130nm} x array sizes {8..64} x workload shifts
+//! ```
+//!
+//! and executes it on the self-scheduling job pool in [`pool`], with:
+//!
+//! * **shared STA** — the netlist + synthesis timing of each
+//!   `(tech, array)` pair is computed once and shared (`Arc`) by every
+//!   clustering variant that stresses it, never recomputed;
+//! * **per-scenario deterministic seeds** — derived from the sweep seed
+//!   and the grid coordinates via [`crate::util::hash3`], so the same
+//!   configuration always reproduces byte-identical results
+//!   (modulo wall-time measurements);
+//! * **structured failure capture** — a scenario that errors *or
+//!   panics* lands as a `failed` record with its message; the rest of
+//!   the sweep completes.
+//!
+//! [`run_sweep`] produces a [`SweepReport`];
+//! `report::bench_sweep_json` renders it as the machine-readable
+//! `BENCH_sweep.json` (schema [`SWEEP_SCHEMA`]) that the CI
+//! `sweep-smoke` job uploads, including per-`(tech, size, shift)`
+//! winner rows mirroring the paper's Table II/III comparisons. Driven
+//! by `vstpu sweep` and `benches/sweep_grid.rs`.
+
+pub mod pool;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::{dbscan, Algorithm, Clustering};
+use crate::error::{Error, Result};
+use crate::netlist::SystolicNetlist;
+use crate::power::PowerModel;
+use crate::razor::{self, RazorConfig, DEFAULT_TOGGLE};
+use crate::study;
+use crate::tech::Technology;
+use crate::timing;
+use crate::util::hash3;
+
+/// `BENCH_sweep.json` schema identifier (see README "BENCH_sweep.json").
+pub const SWEEP_SCHEMA: &str = "vstpu-bench-sweep/v1";
+
+/// Most voltage islands the band floorplan can host on a
+/// [`crate::fpga::Device::for_array`] fabric (its routing margin sizes
+/// for ~8).
+pub const MAX_ISLANDS: usize = 8;
+
+/// One axis of the grid: how MACs are grouped into islands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepAlgo {
+    Hierarchical,
+    KMeans,
+    MeanShift,
+    Dbscan,
+    /// Equal-population slack quantiles — the paper's Table II reference
+    /// partitioning, generalised by `study::equal_quantile_clustering`.
+    EqualQuantile,
+}
+
+impl SweepAlgo {
+    /// The full algorithm axis, in canonical order.
+    pub fn all() -> Vec<Self> {
+        vec![
+            Self::Hierarchical,
+            Self::KMeans,
+            Self::MeanShift,
+            Self::Dbscan,
+            Self::EqualQuantile,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Hierarchical => "hierarchical",
+            Self::KMeans => "kmeans",
+            Self::MeanShift => "meanshift",
+            Self::Dbscan => "dbscan",
+            Self::EqualQuantile => "equal-quantile",
+        }
+    }
+
+    /// Parse a CLI `--algos` element.
+    pub fn from_name(name: &str) -> Result<Self> {
+        Self::all()
+            .into_iter()
+            .find(|a| a.name() == name.trim())
+            .ok_or_else(|| Error::Sweep(format!("unknown sweep algorithm '{name}'")))
+    }
+}
+
+/// Sweep configuration: the grid axes plus the shared flow knobs.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub algos: Vec<SweepAlgo>,
+    /// Technology preset names (see [`Technology::by_name`]).
+    pub techs: Vec<String>,
+    /// Systolic-array edges (even, >= 2).
+    pub sizes: Vec<u32>,
+    /// Post-calibration workload toggle rates (the shift axis).
+    pub shifts: Vec<f64>,
+    /// Cluster count for hierarchical / kmeans / equal-quantile.
+    pub k: usize,
+    pub clock_mhz: f64,
+    /// Toggle rate the trial-run calibration sees.
+    pub calib_toggle: f64,
+    /// Base seed; per-scenario seeds derive from it deterministically.
+    pub seed: u64,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Calibration trial cap per scenario.
+    pub max_trials: usize,
+    pub razor: RazorConfig,
+    /// CI smoke mode (recorded in the JSON so gates compare like to like).
+    pub quick: bool,
+}
+
+impl SweepConfig {
+    /// The full paper grid: every algorithm x the three academic nodes
+    /// (the ones whose flow may descend toward the NTC floor) x array
+    /// sizes 8..64 x a mild and a harsh workload shift.
+    pub fn full_grid() -> Self {
+        Self {
+            algos: SweepAlgo::all(),
+            techs: vec![
+                "academic-22nm".into(),
+                "academic-45nm".into(),
+                "academic-130nm".into(),
+            ],
+            sizes: vec![8, 16, 32, 64],
+            shifts: vec![0.25, 0.45],
+            k: 4,
+            clock_mhz: 100.0,
+            calib_toggle: DEFAULT_TOGGLE,
+            seed: 2021,
+            threads: 0,
+            max_trials: 200,
+            razor: RazorConfig::default(),
+            quick: false,
+        }
+    }
+
+    /// The CI smoke grid (`vstpu sweep --smoke`): 2 algorithms x 2 techs
+    /// x 1 size x 1 shift = 4 scenarios.
+    pub fn smoke() -> Self {
+        let mut cfg = Self::full_grid();
+        cfg.quick = true;
+        cfg.algos = vec![SweepAlgo::Dbscan, SweepAlgo::KMeans];
+        cfg.techs = vec!["academic-22nm".into(), "academic-45nm".into()];
+        cfg.sizes = vec![16];
+        cfg.shifts = vec![0.45];
+        cfg
+    }
+}
+
+/// One cell of the grid.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Position in grid-enumeration order (stable for a fixed config).
+    pub index: usize,
+    pub algo: SweepAlgo,
+    pub tech: String,
+    pub array_size: u32,
+    pub shift_toggle: f64,
+    /// Deterministic per-scenario seed (k-means++ seeding etc.).
+    pub seed: u64,
+}
+
+/// What a successful scenario measured.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    /// Partition count the clustering actually produced.
+    pub k: usize,
+    /// DBSCAN noise points reassigned to their nearest cluster.
+    pub noise_reassigned: usize,
+    /// Calibrated rails, partition order (0 = most critical).
+    pub rails: Vec<f64>,
+    /// Analytic min-safe voltage per partition at the calibration
+    /// toggle — every rail must sit at or above its frontier.
+    pub frontiers: Vec<f64>,
+    /// Dynamic power at the calibrated rails (mW).
+    pub power_mw: f64,
+    /// Unscaled (nominal-rail) power of the same array (mW).
+    pub baseline_mw: f64,
+    pub reduction_pct: f64,
+    /// Accuracy-risk proxy under the workload shift.
+    pub silent_mac_fraction: f64,
+    /// Scenario wall time (measurement; excluded from determinism).
+    pub wall_ms: f64,
+}
+
+/// A scenario plus its outcome — failures carry the error or panic
+/// message instead of sinking the sweep.
+#[derive(Debug, Clone)]
+pub struct ScenarioRecord {
+    pub scenario: Scenario,
+    pub outcome: std::result::Result<ScenarioResult, String>,
+}
+
+/// Per-`(tech, size, shift)` cross-algorithm comparison — the sweep's
+/// analogue of the paper's Table II/III "which scheme wins" rows.
+#[derive(Debug, Clone)]
+pub struct WinnerRow {
+    pub tech: String,
+    pub array_size: u32,
+    pub shift_toggle: f64,
+    /// Algorithm with the lowest calibrated power.
+    pub best_power_algo: String,
+    pub best_power_mw: f64,
+    /// Algorithm with the lowest silent-corruption fraction (power
+    /// breaks ties).
+    pub best_accuracy_algo: String,
+    pub best_silent_fraction: f64,
+}
+
+/// Everything one sweep run produces.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub schema: &'static str,
+    pub quick: bool,
+    pub seed: u64,
+    /// Worker threads actually used.
+    pub threads: usize,
+    pub scenarios: Vec<ScenarioRecord>,
+    pub winners: Vec<WinnerRow>,
+    pub ok_count: usize,
+    pub failed_count: usize,
+    /// Total wall time (measurement; excluded from determinism).
+    pub wall_ms: f64,
+}
+
+/// Once-computed synthesis view of one `(tech, array)` pair, shared by
+/// every clustering variant of that pair — algorithm scenarios must
+/// never redo STA.
+pub struct SharedTiming {
+    pub tech: Technology,
+    pub netlist: SystolicNetlist,
+    /// Per-MAC minimum slack, row-major (the clustering input).
+    pub slacks: Vec<f64>,
+}
+
+/// Build the shared view for one pair.
+pub fn shared_timing(tech: &Technology, size: u32, clock_mhz: f64, seed: u64) -> SharedTiming {
+    let netlist = SystolicNetlist::generate(size, tech, clock_mhz, seed);
+    let slacks = timing::synthesize(&netlist).min_slack_values(size);
+    SharedTiming {
+        tech: tech.clone(),
+        netlist,
+        slacks,
+    }
+}
+
+/// FNV-1a over an axis *value*'s name — the seed key must depend on
+/// what a scenario is, never on where it sits in the axis list, so a
+/// scenario keeps its seed when axes are reordered or filtered.
+fn axis_tag(s: &str) -> u64 {
+    let mut h = crate::serve::Fnv1a::new();
+    h.eat(s.as_bytes());
+    h.0
+}
+
+/// Enumerate the grid in canonical (tech, size, shift, algo) order —
+/// scenarios of one `(tech, size)` pair are adjacent, which keeps the
+/// shared-STA working set warm on the pool.
+pub fn enumerate(cfg: &SweepConfig) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    for tech in &cfg.techs {
+        for &size in &cfg.sizes {
+            for &shift in &cfg.shifts {
+                for &algo in &cfg.algos {
+                    let index = out.len();
+                    out.push(Scenario {
+                        index,
+                        algo,
+                        tech: tech.clone(),
+                        array_size: size,
+                        shift_toggle: shift,
+                        // Keyed on the grid coordinate *values* (see
+                        // `axis_tag`; full shift bits — near-identical
+                        // shifts must not collide), never on indices.
+                        seed: hash3(
+                            cfg.seed,
+                            axis_tag(tech).wrapping_add(axis_tag(algo.name()).rotate_left(17)),
+                            hash3(size as u64, shift.to_bits(), 0x5157),
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run the whole grid on the pool. Fails fast on a malformed grid
+/// (unknown tech, odd size, empty axis); per-scenario failures are
+/// captured in the report instead.
+pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
+    if cfg.algos.is_empty() || cfg.techs.is_empty() || cfg.sizes.is_empty() || cfg.shifts.is_empty()
+    {
+        return Err(Error::Sweep("every grid axis needs at least one value".into()));
+    }
+    let mut techs: HashMap<String, Technology> = HashMap::new();
+    for name in &cfg.techs {
+        let t = Technology::by_name(name)
+            .ok_or_else(|| Error::Sweep(format!("unknown tech '{name}'")))?;
+        techs.insert(name.clone(), t);
+    }
+    for &size in &cfg.sizes {
+        if size < 2 || size % 2 != 0 {
+            return Err(Error::Sweep(format!(
+                "array size {size} must be even and >= 2"
+            )));
+        }
+    }
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        cfg.threads
+    };
+
+    let t0 = Instant::now();
+    let scenarios = enumerate(cfg);
+
+    // Phase 1: one STA per (tech, size) pair, computed on the pool. A
+    // failure here is a hard error — nothing downstream can run.
+    let mut pairs: Vec<(String, u32)> = Vec::new();
+    for sc in &scenarios {
+        let key = (sc.tech.clone(), sc.array_size);
+        if !pairs.contains(&key) {
+            pairs.push(key);
+        }
+    }
+    let sta_jobs: Vec<_> = pairs
+        .iter()
+        .map(|(name, size)| {
+            let tech = techs[name].clone();
+            let (size, clock, seed) = (*size, cfg.clock_mhz, cfg.seed);
+            move || Arc::new(shared_timing(&tech, size, clock, seed))
+        })
+        .collect();
+    let mut shared: HashMap<(String, u32), Arc<SharedTiming>> = HashMap::new();
+    for (key, st) in pairs.iter().zip(pool::run_parallel(threads, sta_jobs)) {
+        match st {
+            Ok(st) => {
+                shared.insert(key.clone(), st);
+            }
+            Err(p) => {
+                return Err(Error::Sweep(format!(
+                    "timing analysis for {} {}x{} panicked: {}",
+                    key.0,
+                    key.1,
+                    key.1,
+                    pool::panic_message(p.as_ref())
+                )))
+            }
+        }
+    }
+
+    // Phase 2: the scenarios themselves, panic-isolated.
+    let jobs: Vec<_> = scenarios
+        .iter()
+        .map(|sc| {
+            let st = Arc::clone(&shared[&(sc.tech.clone(), sc.array_size)]);
+            let sc = sc.clone();
+            move || run_scenario(&sc, &st, cfg)
+        })
+        .collect();
+    let raw = pool::run_parallel(threads, jobs);
+
+    let records: Vec<ScenarioRecord> = scenarios
+        .into_iter()
+        .zip(raw)
+        .map(|(scenario, r)| ScenarioRecord {
+            scenario,
+            outcome: match r {
+                Ok(Ok(res)) => Ok(res),
+                Ok(Err(e)) => Err(e.to_string()),
+                Err(p) => Err(format!(
+                    "scenario panicked: {}",
+                    pool::panic_message(p.as_ref())
+                )),
+            },
+        })
+        .collect();
+
+    let ok_count = records.iter().filter(|r| r.outcome.is_ok()).count();
+    let winners = winner_tables(&records);
+    Ok(SweepReport {
+        schema: SWEEP_SCHEMA,
+        quick: cfg.quick,
+        seed: cfg.seed,
+        threads,
+        failed_count: records.len() - ok_count,
+        ok_count,
+        scenarios: records,
+        winners,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Cluster, floorplan, calibrate and measure one scenario against the
+/// shared timing view — the single-configuration slice of
+/// `study::partition_count_study`, generalised over the algorithm axis.
+fn run_scenario(sc: &Scenario, st: &SharedTiming, cfg: &SweepConfig) -> Result<ScenarioResult> {
+    let t0 = Instant::now();
+    let tech = &st.tech;
+    let slacks = &st.slacks;
+
+    let clustering = cluster_scenario(sc, slacks, cfg)?;
+    let noise_reassigned = clustering.noise_points().len();
+    let clustering = clustering.assign_noise_to_nearest(slacks);
+
+    // Bands -> Algorithm 1 -> Algorithm 2, FlowKind-aware (the shared
+    // recipe: commercial techs stay inside the guard band, academic
+    // techs descend toward the NTC floor).
+    let parts = study::calibrated_partitions(
+        &st.netlist,
+        tech,
+        &cfg.razor,
+        &clustering,
+        slacks,
+        cfg.max_trials,
+        cfg.calib_toggle,
+    )?;
+
+    let model = PowerModel::new(tech.clone(), cfg.clock_mhz);
+    let power_mw = model.scaled_mw(&parts, |_| DEFAULT_TOGGLE);
+    let baseline_mw = model.baseline_mw(st.netlist.mac_count(), tech.v_nom);
+    let frontiers: Vec<f64> = parts
+        .iter()
+        .map(|p| razor::min_safe_voltage(&st.netlist, tech, &p.macs, cfg.calib_toggle))
+        .collect();
+    let silent = study::silent_mac_fraction(&st.netlist, tech, &cfg.razor, &parts, sc.shift_toggle);
+
+    Ok(ScenarioResult {
+        k: clustering.k,
+        noise_reassigned,
+        rails: parts.iter().map(|p| p.vccint).collect(),
+        frontiers,
+        power_mw,
+        baseline_mw,
+        reduction_pct: 100.0 * (baseline_mw - power_mw) / baseline_mw,
+        silent_mac_fraction: silent,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// The per-algorithm clustering step.
+fn cluster_scenario(sc: &Scenario, slacks: &[f64], cfg: &SweepConfig) -> Result<Clustering> {
+    match sc.algo {
+        SweepAlgo::Hierarchical => Algorithm::Hierarchical { k: cfg.k }.run(slacks),
+        SweepAlgo::KMeans => Algorithm::KMeans {
+            k: cfg.k,
+            seed: sc.seed,
+        }
+        .run(slacks),
+        SweepAlgo::MeanShift => Algorithm::MeanShift { bandwidth: 0.4 }.run(slacks),
+        SweepAlgo::Dbscan => {
+            // Auto-eps from the data scale; 1-D DBSCAN on dense slack
+            // data can shatter into more islands than the fabric hosts
+            // (small arrays host fewer bands than [`MAX_ISLANDS`]), so
+            // widen eps (deterministically) until it fits.
+            let cap = MAX_ISLANDS.min((sc.array_size / 2) as usize).max(1);
+            let mut eps = dbscan::suggest_eps(slacks, 4.0);
+            let mut c = Algorithm::Dbscan { eps, min_points: 4 }.run(slacks)?;
+            let mut guard = 0;
+            while c.k > cap && guard < 12 {
+                eps *= 2.0;
+                c = Algorithm::Dbscan { eps, min_points: 4 }.run(slacks)?;
+                guard += 1;
+            }
+            Ok(c)
+        }
+        SweepAlgo::EqualQuantile => Ok(study::equal_quantile_clustering(slacks, cfg.k)),
+    }
+}
+
+/// Fold scenario records into per-`(tech, size, shift)` winner rows,
+/// preserving grid order. Groups whose scenarios all failed are skipped.
+fn winner_tables(records: &[ScenarioRecord]) -> Vec<WinnerRow> {
+    let mut order: Vec<(String, u32, u64)> = Vec::new();
+    let mut groups: HashMap<(String, u32, u64), Vec<&ScenarioRecord>> = HashMap::new();
+    for r in records {
+        let key = (
+            r.scenario.tech.clone(),
+            r.scenario.array_size,
+            r.scenario.shift_toggle.to_bits(),
+        );
+        if !groups.contains_key(&key) {
+            order.push(key.clone());
+        }
+        groups.entry(key).or_default().push(r);
+    }
+    let mut rows = Vec::new();
+    for key in order {
+        let ok: Vec<(SweepAlgo, &ScenarioResult)> = groups[&key]
+            .iter()
+            .filter_map(|r| r.outcome.as_ref().ok().map(|res| (r.scenario.algo, res)))
+            .collect();
+        let Some(bp) = ok
+            .iter()
+            .min_by(|a, b| a.1.power_mw.total_cmp(&b.1.power_mw))
+        else {
+            continue;
+        };
+        let ba = ok
+            .iter()
+            .min_by(|a, b| {
+                a.1.silent_mac_fraction
+                    .total_cmp(&b.1.silent_mac_fraction)
+                    .then(a.1.power_mw.total_cmp(&b.1.power_mw))
+            })
+            .expect("non-empty ok set");
+        rows.push(WinnerRow {
+            tech: key.0,
+            array_size: key.1,
+            shift_toggle: f64::from_bits(key.2),
+            best_power_algo: bp.0.name().to_string(),
+            best_power_mw: bp.1.power_mw,
+            best_accuracy_algo: ba.0.name().to_string(),
+            best_silent_fraction: ba.1.silent_mac_fraction,
+        });
+    }
+    rows
+}
+
+/// Render the sweep as aligned text (the CLI's human output).
+pub fn render(rep: &SweepReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "scenario sweep: {} scenarios (ok {}, failed {}) on {} threads in {:.0} ms",
+        rep.scenarios.len(),
+        rep.ok_count,
+        rep.failed_count,
+        rep.threads,
+        rep.wall_ms
+    );
+    let _ = writeln!(
+        s,
+        "{:<15} {:<15} {:>5} {:>6} {:>3} {:>10} {:>7} {:>8}",
+        "algo", "tech", "size", "shift", "k", "power mW", "red %", "silent %"
+    );
+    for r in &rep.scenarios {
+        let sc = &r.scenario;
+        match &r.outcome {
+            Ok(res) => {
+                let _ = writeln!(
+                    s,
+                    "{:<15} {:<15} {:>5} {:>6.2} {:>3} {:>10.1} {:>7.2} {:>8.2}",
+                    sc.algo.name(),
+                    sc.tech,
+                    sc.array_size,
+                    sc.shift_toggle,
+                    res.k,
+                    res.power_mw,
+                    res.reduction_pct,
+                    100.0 * res.silent_mac_fraction
+                );
+            }
+            Err(e) => {
+                let _ = writeln!(
+                    s,
+                    "{:<15} {:<15} {:>5} {:>6.2} FAILED: {e}",
+                    sc.algo.name(),
+                    sc.tech,
+                    sc.array_size,
+                    sc.shift_toggle
+                );
+            }
+        }
+    }
+    if !rep.winners.is_empty() {
+        let _ = writeln!(s, "\nwinners (per tech x size x shift):");
+        for w in &rep.winners {
+            let _ = writeln!(
+                s,
+                "  {} {}x{} shift {:.2}: power -> {} ({:.1} mW), accuracy -> {} ({:.2}% silent)",
+                w.tech,
+                w.array_size,
+                w.array_size,
+                w.shift_toggle,
+                w.best_power_algo,
+                w.best_power_mw,
+                w.best_accuracy_algo,
+                100.0 * w.best_silent_fraction
+            );
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumerate_covers_the_cartesian_grid() {
+        let cfg = SweepConfig::full_grid();
+        let scenarios = enumerate(&cfg);
+        assert_eq!(
+            scenarios.len(),
+            cfg.algos.len() * cfg.techs.len() * cfg.sizes.len() * cfg.shifts.len()
+        );
+        // Indices are the enumeration order; seeds are pairwise distinct.
+        let mut seeds = std::collections::HashSet::new();
+        for (i, sc) in scenarios.iter().enumerate() {
+            assert_eq!(sc.index, i);
+            assert!(seeds.insert(sc.seed), "duplicate seed for {sc:?}");
+        }
+    }
+
+    #[test]
+    fn scenario_seeds_survive_axis_reordering() {
+        // Reverse EVERY axis — a scenario's seed must depend on what it
+        // is (tech/algo/size/shift values), never on list positions.
+        let mut cfg = SweepConfig::full_grid();
+        cfg.shifts = vec![0.25, 0.45];
+        let mut swapped = cfg.clone();
+        swapped.algos.reverse();
+        swapped.techs.reverse();
+        swapped.sizes.reverse();
+        swapped.shifts.reverse();
+        let a = enumerate(&cfg);
+        let b = enumerate(&swapped);
+        assert_eq!(a.len(), b.len());
+        for sa in &a {
+            let sb = b
+                .iter()
+                .find(|s| {
+                    s.algo == sa.algo
+                        && s.tech == sa.tech
+                        && s.array_size == sa.array_size
+                        && s.shift_toggle == sa.shift_toggle
+                })
+                .unwrap();
+            assert_eq!(sa.seed, sb.seed, "{sa:?} vs {sb:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_grids() {
+        let mut cfg = SweepConfig::smoke();
+        cfg.techs = vec!["7nm-dreams".into()];
+        assert!(run_sweep(&cfg).is_err());
+        let mut cfg = SweepConfig::smoke();
+        cfg.sizes = vec![15];
+        assert!(run_sweep(&cfg).is_err());
+        let mut cfg = SweepConfig::smoke();
+        cfg.algos.clear();
+        assert!(run_sweep(&cfg).is_err());
+    }
+
+    #[test]
+    fn algo_names_round_trip() {
+        for a in SweepAlgo::all() {
+            assert_eq!(SweepAlgo::from_name(a.name()).unwrap(), a);
+        }
+        assert!(SweepAlgo::from_name("voronoi").is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Work-stealing job pool for the scenario sweep (std-only).
+//!
+//! The serving engine (`crate::serve`) pins one long-lived worker per
+//! shard behind a bounded channel because each worker owns mutable
+//! serving state. Sweep scenarios are the opposite shape — many short
+//! independent jobs of wildly different cost (a 64x64 calibration is
+//! ~50x a 8x8 one) — so the pool here self-schedules instead: every
+//! worker steals the next unclaimed job off a shared atomic cursor the
+//! moment it goes idle, which load-balances without any splitting
+//! heuristics. Results land in their submission slot, so the output
+//! order is deterministic regardless of which worker ran what.
+//!
+//! Each job runs under [`std::panic::catch_unwind`]: one panicking
+//! scenario surfaces as an `Err` in its own slot and the rest of the
+//! sweep completes — the structured failure capture the sweep report
+//! relies on.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `jobs` on up to `threads` workers; results are returned in job
+/// order, with a panicking job's payload captured as `Err` in its slot.
+pub fn run_parallel<J, T>(threads: usize, jobs: Vec<J>) -> Vec<std::thread::Result<T>>
+where
+    J: FnOnce() -> T + Send,
+    T: Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads.max(1).min(n);
+    // Each slot is locked only twice (claim, store) — contention lives
+    // on the cursor, which is a single fetch_add per job.
+    let queue: Vec<Mutex<Option<J>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<Option<std::thread::Result<T>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = queue[i]
+                    .lock()
+                    .expect("job slot poisoned")
+                    .take()
+                    .expect("job claimed exactly once");
+                let out = catch_unwind(AssertUnwindSafe(job));
+                *results[i].lock().expect("result slot poisoned") = Some(out);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("result slot poisoned")
+                .expect("every claimed job stores a result")
+        })
+        .collect()
+}
+
+/// Render a caught panic payload as a message (panics carry `&str` or
+/// `String` in practice; anything else gets a placeholder).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_keep_submission_order() {
+        let jobs: Vec<_> = (0..64usize).map(|i| move || i * i).collect();
+        let out = run_parallel(8, jobs);
+        assert_eq!(out.len(), 64);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(*r.as_ref().unwrap(), i * i);
+        }
+    }
+
+    #[test]
+    fn single_thread_and_empty_inputs() {
+        let out = run_parallel(1, (0..3usize).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(out.len(), 3);
+        let none: Vec<std::thread::Result<usize>> =
+            run_parallel::<Box<dyn FnOnce() -> usize + Send>, usize>(4, Vec::new());
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let out = run_parallel(0, vec![|| 42usize]);
+        assert_eq!(*out[0].as_ref().unwrap(), 42);
+    }
+
+    #[test]
+    fn a_panicking_job_is_isolated() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..8usize)
+            .map(|i| -> Box<dyn FnOnce() -> usize + Send> {
+                if i == 3 {
+                    Box::new(|| panic!("scenario blew up"))
+                } else {
+                    Box::new(move || i * 2)
+                }
+            })
+            .collect();
+        let out = run_parallel(4, jobs);
+        assert_eq!(out.len(), 8);
+        for (i, r) in out.iter().enumerate() {
+            if i == 3 {
+                let msg = panic_message(r.as_ref().err().unwrap().as_ref());
+                assert!(msg.contains("blew up"), "{msg}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 2);
+            }
+        }
+    }
+
+    #[test]
+    fn panic_message_handles_string_payloads() {
+        let s: Box<dyn std::any::Any + Send> = Box::new("static".to_string());
+        assert_eq!(panic_message(s.as_ref()), "static");
+        let n: Box<dyn std::any::Any + Send> = Box::new(17u32);
+        assert_eq!(panic_message(n.as_ref()), "non-string panic payload");
+    }
+}

@@ -159,6 +159,16 @@ impl TimingReport {
             })
             .collect()
     }
+
+    /// Per-MAC minimum slack *values* alone, row-major — the exact 1-D
+    /// vector the clustering algorithms consume. Shared by the CAD flow,
+    /// the tradeoff study, the scenario sweep and the CLI.
+    pub fn min_slack_values(&self, size: u32) -> Vec<f64> {
+        self.min_slack_per_mac(size)
+            .iter()
+            .map(|s| s.min_slack_ns)
+            .collect()
+    }
 }
 
 /// Post-synthesis timing: delays straight from the netlist model, slack
@@ -443,6 +453,15 @@ mod tests {
         };
         // Bottom rows have *less* slack (paper §V-C).
         assert!(row_mean(15) < row_mean(0) - 0.5);
+    }
+
+    #[test]
+    fn min_slack_values_match_records() {
+        let rep = synthesize(&netlist16());
+        let vals = rep.min_slack_values(16);
+        let recs = rep.min_slack_per_mac(16);
+        assert_eq!(vals.len(), 256);
+        assert!(vals.iter().zip(&recs).all(|(v, r)| *v == r.min_slack_ns));
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! Integration tests for the parallel scenario-sweep subsystem:
+//! determinism of the machine-readable artifact, panic/error isolation,
+//! and the cross-algorithm rails-above-frontier sanity the clustering ->
+//! partition path must uphold under every algorithm.
+
+use vstpu::report::bench_sweep_json;
+use vstpu::sweep::{pool, run_sweep, SweepAlgo, SweepConfig};
+
+/// Drop the wall-time measurement lines — everything else in
+/// `BENCH_sweep.json` is part of the determinism contract.
+fn strip_wall(json: &str) -> String {
+    json.lines()
+        .filter(|l| !l.contains("\"wall_ms\""))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn smoke_sweep_is_deterministic_modulo_wall_time() {
+    let cfg = SweepConfig::smoke();
+    let a = run_sweep(&cfg).unwrap();
+    let b = run_sweep(&cfg).unwrap();
+    assert_eq!(a.failed_count, 0, "smoke grid must be all-green");
+    assert_eq!(a.scenarios.len(), 4); // 2 algos x 2 techs x 1 size x 1 shift
+    assert!(!a.winners.is_empty());
+    assert_eq!(
+        strip_wall(&bench_sweep_json(&a)),
+        strip_wall(&bench_sweep_json(&b)),
+        "same configuration must reproduce byte-identical results"
+    );
+}
+
+#[test]
+fn sweep_runs_single_threaded_and_parallel_identically() {
+    let mut serial = SweepConfig::smoke();
+    serial.threads = 1;
+    let mut wide = SweepConfig::smoke();
+    wide.threads = 8;
+    let a = run_sweep(&serial).unwrap();
+    let b = run_sweep(&wide).unwrap();
+    // Scheduling must not leak into results — only the threads echo and
+    // the wall-time lines may differ.
+    let scrub = |json: &str| {
+        strip_wall(json)
+            .lines()
+            .filter(|l| !l.contains("\"threads\""))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(scrub(&bench_sweep_json(&a)), scrub(&bench_sweep_json(&b)));
+}
+
+#[test]
+fn one_panicking_job_does_not_sink_the_pool() {
+    let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..8usize)
+        .map(|i| -> Box<dyn FnOnce() -> usize + Send> {
+            if i == 3 {
+                Box::new(|| panic!("scenario {} exploded", 3))
+            } else {
+                Box::new(move || i * 7)
+            }
+        })
+        .collect();
+    let out = pool::run_parallel(4, jobs);
+    assert_eq!(out.len(), 8);
+    for (i, r) in out.iter().enumerate() {
+        if i == 3 {
+            assert!(r.is_err(), "panicking job must surface as Err");
+        } else {
+            assert_eq!(*r.as_ref().unwrap(), i * 7, "sibling job {i} lost");
+        }
+    }
+}
+
+#[test]
+fn failing_scenario_is_captured_not_fatal() {
+    let mut cfg = SweepConfig::smoke();
+    cfg.algos = vec![SweepAlgo::KMeans, SweepAlgo::Dbscan];
+    cfg.techs = vec!["academic-22nm".into()];
+    // k far beyond the MAC count: the kmeans scenario must fail with a
+    // structured record while the dbscan scenario completes.
+    cfg.k = 100_000;
+    let rep = run_sweep(&cfg).unwrap();
+    assert_eq!(rep.scenarios.len(), 2);
+    assert_eq!(rep.failed_count, 1);
+    assert_eq!(rep.ok_count, 1);
+    let failed = rep.scenarios.iter().find(|r| r.outcome.is_err()).unwrap();
+    assert_eq!(failed.scenario.algo, SweepAlgo::KMeans);
+    assert!(
+        failed.outcome.as_ref().err().unwrap().contains("exceeds"),
+        "error message lost: {:?}",
+        failed.outcome
+    );
+    // The winner table still forms from the surviving scenario, and the
+    // JSON renders the failure as a structured record.
+    assert_eq!(rep.winners.len(), 1);
+    assert_eq!(rep.winners[0].best_power_algo, "dbscan");
+    let json = bench_sweep_json(&rep);
+    assert!(json.contains("\"status\": \"failed\""));
+    assert!(json.contains("\"status\": \"ok\""));
+}
+
+#[test]
+fn every_algorithm_calibrates_rails_at_or_above_its_frontier() {
+    let mut cfg = SweepConfig::smoke();
+    cfg.algos = SweepAlgo::all();
+    cfg.techs = vec!["academic-22nm".into()];
+    cfg.sizes = vec![16];
+    cfg.shifts = vec![0.45];
+    let rep = run_sweep(&cfg).unwrap();
+    assert_eq!(rep.failed_count, 0, "all five algorithms must complete");
+    for r in &rep.scenarios {
+        let res = r.outcome.as_ref().unwrap();
+        let name = r.scenario.algo.name();
+        assert!(res.k >= 1, "{name}: no partitions");
+        assert_eq!(res.rails.len(), res.frontiers.len(), "{name}");
+        for (i, (&v, &f)) in res.rails.iter().zip(&res.frontiers).enumerate() {
+            assert!(
+                v >= f - 1e-9,
+                "{name} partition {i}: rail {v:.4} V below frontier {f:.4} V"
+            );
+        }
+        assert!(
+            res.power_mw < res.baseline_mw,
+            "{name}: calibrated power must beat the unscaled baseline"
+        );
+        // The clustering -> partition path produced a total labelling:
+        // rails exist for exactly k partitions.
+        assert_eq!(res.rails.len(), res.k, "{name}");
+    }
+}
