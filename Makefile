@@ -8,7 +8,7 @@
 
 PYTHON ?= python3
 
-.PHONY: all build test pytest bench bench-build bench-serve sweep artifacts fmt lint clean
+.PHONY: all build test pytest bench bench-build bench-serve sweep calibrate doc artifacts fmt lint clean
 
 all: build
 
@@ -38,6 +38,16 @@ bench-serve:
 # CI smoke form of the parallel scenario sweep; writes BENCH_sweep.json.
 sweep:
 	cargo run --release -- sweep --smoke --json
+
+# CI smoke form of the closed-loop runtime voltage calibration; writes
+# BENCH_calibrate.json and gates it like CI does.
+calibrate:
+	cargo run --release -- calibrate --quick --json
+	python3 bench/check_regression.py BENCH_calibrate.json bench/baseline.json
+
+# Public API docs with the CI gate's strictness (zero rustdoc warnings).
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib
 
 # Lower the JAX/Pallas artifacts consumed by the Engine backend.
 # Wraps python/compile/aot.py; output lands in ./artifacts.

@@ -1,19 +1,25 @@
 #!/usr/bin/env python3
-"""CI throughput-regression gate over BENCH_serve.json.
+"""CI regression gate over the vstpu bench artifacts.
 
 Usage: check_regression.py CURRENT.json BASELINE.json
 
-Fails (exit 1) when:
-  * either input file is missing or not valid JSON, or
-  * the current file is missing required schema fields, or
-  * the baseline's requests_per_s is missing or non-positive (a gate
-    floor cannot be derived from it), or
-  * measured requests_per_s has regressed more than `max_regression`
-    (default 20%) below the checked-in baseline floor, or
-  * any shard is missing its deterministic result_checksum.
+Dispatches on the current artifact's schema:
 
-Every failure mode prints one legible `bench-smoke gate: FAIL` line —
-never a traceback.
+* ``vstpu-bench-serve/v1`` — the throughput gate. Fails when measured
+  requests_per_s regresses more than ``max_regression`` (default 20%)
+  below the checked-in baseline floor, or any shard is missing its
+  deterministic result_checksum.
+* ``vstpu-bench-calibrate/v1`` — the closed-loop calibration gate.
+  Fails when the run did not converge, the settled Razor flag rate
+  reached the configured high water, or energy-per-request after
+  convergence regressed against the static baseline: the ``after``
+  value must stay below ``before * max_after_to_before_ratio`` (from
+  the baseline's ``calibrate`` block, default 0.999 — calibration on
+  must never cost energy).
+
+Common failure modes for both schemas: a missing/corrupt input file or
+missing required fields. Every failure mode prints one legible
+``bench-smoke gate: FAIL`` line — never a traceback.
 
 Stdlib only — runs on any CI python3 with no installs.
 """
@@ -21,7 +27,15 @@ Stdlib only — runs on any CI python3 with no installs.
 import json
 import sys
 
-REQUIRED = ["schema", "requests", "requests_per_s", "latency_us", "shard_results"]
+SERVE_REQUIRED = ["schema", "requests", "requests_per_s", "latency_us", "shard_results"]
+CALIBRATE_REQUIRED = [
+    "schema",
+    "requests",
+    "converged",
+    "flag_rate_final",
+    "high_water",
+    "energy_per_request_uj",
+]
 
 
 def die(msg: str) -> None:
@@ -42,21 +56,18 @@ def load(path: str):
         die(f"{path} is not valid JSON: {e}")
 
 
-def main(argv: list) -> None:
-    if len(argv) != 3:
-        die(f"usage: {argv[0]} CURRENT.json BASELINE.json")
-    current = load(argv[1])
-    baseline = load(argv[2])
-    if not isinstance(current, dict) or not isinstance(baseline, dict):
-        die("both inputs must be JSON objects")
+def require_number(obj, key: str, where: str):
+    v = obj.get(key)
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        die(f"{where} '{key}' is missing or not a number: {v!r}")
+    return v
 
-    for key in REQUIRED:
+
+def check_serve(current: dict, baseline: dict, current_path: str, baseline_path: str) -> None:
+    """The original throughput gate over BENCH_serve.json."""
+    for key in SERVE_REQUIRED:
         if key not in current:
-            die(f"{argv[1]} is missing required field '{key}'")
-    if "schema" not in baseline:
-        die(f"{argv[2]} is missing required field 'schema'")
-    if current["schema"] != baseline["schema"]:
-        die(f"schema mismatch: {current['schema']} vs {baseline['schema']}")
+            die(f"{current_path} is missing required field '{key}'")
     # Like-for-like only: a non-quick (bigger) run must not be compared
     # against the quick floor, and vice versa.
     if "quick" in baseline and current.get("quick") != baseline["quick"]:
@@ -67,9 +78,7 @@ def main(argv: list) -> None:
     if not isinstance(current["latency_us"], dict):
         die(f"latency_us is not an object: {current['latency_us']!r}")
     for q in ("p50", "p99"):
-        v = current["latency_us"].get(q)
-        if not isinstance(v, (int, float)) or isinstance(v, bool):
-            die(f"latency_us '{q}' is missing or not a number: {v!r}")
+        require_number(current["latency_us"], q, "latency_us")
     if not isinstance(current["shard_results"], list):
         die(f"shard_results is not a list: {current['shard_results']!r}")
     for i, shard in enumerate(current["shard_results"]):
@@ -84,11 +93,9 @@ def main(argv: list) -> None:
     if not isinstance(base, (int, float)) or isinstance(base, bool) or base <= 0:
         die(
             f"baseline requests_per_s is missing or non-positive ({base!r}) "
-            f"in {argv[2]} — cannot derive a gate floor"
+            f"in {baseline_path} — cannot derive a gate floor"
         )
-    got = current["requests_per_s"]
-    if not isinstance(got, (int, float)) or isinstance(got, bool):
-        die(f"requests_per_s is not a number: {got!r}")
+    got = require_number(current, "requests_per_s", current_path)
     max_regression = baseline.get("max_regression", 0.20)
     if not isinstance(max_regression, (int, float)) or not 0.0 <= max_regression < 1.0:
         die(f"baseline max_regression must be in [0, 1): {max_regression!r}")
@@ -105,6 +112,84 @@ def main(argv: list) -> None:
         f"p99 {current['latency_us']['p99']:.0f} us, "
         f"{len(current['shard_results'])} shard checksums present"
     )
+
+
+def check_calibrate(current: dict, baseline: dict, current_path: str) -> None:
+    """The closed-loop gate over BENCH_calibrate.json."""
+    for key in CALIBRATE_REQUIRED:
+        if key not in current:
+            die(f"{current_path} is missing required field '{key}'")
+    # Like-for-like only, same as the serve gate: a full (non-quick) run
+    # must not be compared against the quick baseline, and vice versa.
+    if "quick" in baseline and current.get("quick") != baseline["quick"]:
+        die(
+            f"configuration mismatch: quick={current.get('quick')!r} vs "
+            f"baseline quick={baseline['quick']!r}"
+        )
+    if current["converged"] is not True:
+        die(
+            "calibration did not converge "
+            f"(convergence_epoch {current.get('convergence_epoch')!r} of "
+            f"{current.get('epochs')!r} epochs)"
+        )
+    flag_rate = require_number(current, "flag_rate_final", current_path)
+    high_water = require_number(current, "high_water", current_path)
+    if flag_rate >= high_water:
+        die(
+            f"settled Razor flag rate {flag_rate:.3f} is at/above the "
+            f"high water {high_water:.3f} — the loop is not holding the rails"
+        )
+    energy = current["energy_per_request_uj"]
+    if not isinstance(energy, dict):
+        die(f"energy_per_request_uj is not an object: {energy!r}")
+    before = require_number(energy, "before", "energy_per_request_uj")
+    after = require_number(energy, "after", "energy_per_request_uj")
+    if before <= 0:
+        die(f"static-baseline energy per request is non-positive: {before!r}")
+    if after <= 0:
+        # json_f64 renders non-finite values as 0 — for this
+        # lower-is-better field a zero means a corrupted run, not a
+        # perfect one. Fail closed.
+        die(f"post-convergence energy per request is non-positive: {after!r}")
+    cal_base = baseline.get("calibrate", {})
+    if not isinstance(cal_base, dict):
+        die(f"baseline 'calibrate' block is not an object: {cal_base!r}")
+    ratio_cap = cal_base.get("max_after_to_before_ratio", 0.999)
+    if not isinstance(ratio_cap, (int, float)) or not 0.0 < ratio_cap <= 1.0:
+        die(f"baseline max_after_to_before_ratio must be in (0, 1]: {ratio_cap!r}")
+    ratio = after / before
+    if ratio > ratio_cap:
+        die(
+            f"energy per request regressed with calibration on: "
+            f"{after:.4f} uJ after vs {before:.4f} uJ static "
+            f"(ratio {ratio:.4f} > cap {ratio_cap})"
+        )
+    print(
+        f"bench-smoke gate: OK — calibrate converged at epoch "
+        f"{current.get('convergence_epoch')}, energy/request "
+        f"{before:.4f} -> {after:.4f} uJ (ratio {ratio:.4f} <= {ratio_cap}), "
+        f"flag rate {flag_rate:.3f} < high water {high_water:.3f}"
+    )
+
+
+def main(argv: list) -> None:
+    if len(argv) != 3:
+        die(f"usage: {argv[0]} CURRENT.json BASELINE.json")
+    current = load(argv[1])
+    baseline = load(argv[2])
+    if not isinstance(current, dict) or not isinstance(baseline, dict):
+        die("both inputs must be JSON objects")
+    schema = current.get("schema")
+    if schema == "vstpu-bench-serve/v1":
+        if "schema" not in baseline:
+            die(f"{argv[2]} is missing required field 'schema'")
+        if baseline["schema"] != schema:
+            die(f"schema mismatch: {schema} vs {baseline['schema']}")
+        check_serve(current, baseline, argv[1], argv[2])
+    elif schema == "vstpu-bench-calibrate/v1":
+        check_calibrate(current, baseline, argv[1])
+    else:
+        die(f"{argv[1]} has unknown schema {schema!r}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,49 @@
+//! Bench: the closed-loop runtime voltage calibration trajectory.
+//!
+//! Runs the deterministic calibrate harness on the three VTR nodes plus
+//! the guard-band-clamped Artix-7 and prints, per node: convergence
+//! epoch, settled rails, and the energy-per-request drop from the
+//! static (Algorithm-1) seeds to the converged closed-loop rails — the
+//! serving-path payoff the ThUnderVolt-style controller exists for.
+//!
+//! `harness = false`: plain main, wall-clock timed.
+
+use std::path::Path;
+use std::time::Instant;
+
+use vstpu::calibrate::{run_calibrate, CalibrateBenchConfig};
+use vstpu::tech::Technology;
+
+fn main() {
+    println!("closed-loop calibration trajectory (2 shards, 4096 requests)\n");
+    println!(
+        "{:<15} {:>7} {:>10} {:>12} {:>12} {:>8} {:>9}",
+        "tech", "epochs", "converged", "uJ/req pre", "uJ/req post", "drop %", "wall ms"
+    );
+    for tech in Technology::paper_suite() {
+        let name = tech.name.clone();
+        let cfg = CalibrateBenchConfig::quick(tech);
+        let t0 = Instant::now();
+        match run_calibrate(Path::new("artifacts"), cfg) {
+            Ok(rep) => {
+                let drop_pct = 100.0 * (rep.energy_uj_before - rep.energy_uj_after)
+                    / rep.energy_uj_before;
+                println!(
+                    "{:<15} {:>7} {:>10} {:>12.4} {:>12.4} {:>8.2} {:>9.0}",
+                    name,
+                    rep.epochs,
+                    format!("@{}", rep.convergence_epoch),
+                    rep.energy_uj_before,
+                    rep.energy_uj_after,
+                    drop_pct,
+                    t0.elapsed().as_secs_f64() * 1e3
+                );
+                assert!(
+                    rep.energy_uj_after <= rep.energy_uj_before,
+                    "{name}: calibration made energy per request worse"
+                );
+            }
+            Err(e) => println!("{name:<15} FAILED: {e}"),
+        }
+    }
+}

@@ -24,10 +24,13 @@ use crate::tech::Technology;
 /// Power and voltage summary of one baseline configuration.
 #[derive(Debug, Clone)]
 pub struct BaselineResult {
+    /// Baseline name ("no-scaling", "whole-fpga-underscale", ...).
     pub name: String,
-    /// Rail voltage(s): min and max across the array.
+    /// Lowest rail voltage across the array.
     pub v_low: f64,
+    /// Highest rail voltage across the array.
     pub v_high: f64,
+    /// Total dynamic power, mW.
     pub total_mw: f64,
 }
 

@@ -50,17 +50,24 @@ pub enum PartitionScheme {
 /// Full flow configuration.
 #[derive(Debug, Clone)]
 pub struct FlowConfig {
+    /// Systolic-array edge.
     pub array_size: u32,
+    /// Target technology.
     pub tech: Technology,
+    /// Array clock, MHz.
     pub clock_mhz: f64,
+    /// Netlist process-variation seed.
     pub seed: u64,
+    /// How MACs group into voltage islands.
     pub scheme: PartitionScheme,
     /// Algorithm-1 stepping range `[v_lo, v_hi]` (the paper's
     /// `[V_crash, V_min]` arguments).
     pub v_lo: f64,
+    /// Top of the stepping range.
     pub v_hi: f64,
     /// Run Algorithm 2 trial-run calibration.
     pub calibrate: bool,
+    /// Razor shadow-register configuration.
     pub razor: RazorConfig,
     /// Trial-run cap for calibration.
     pub max_trials: usize,
@@ -101,28 +108,36 @@ impl FlowConfig {
 /// Everything a flow run produces.
 #[derive(Debug, Clone)]
 pub struct FlowReport {
+    /// One-line echo of the configuration.
     pub config_summary: String,
-    /// Synthesis-stage timing.
+    /// Synthesis-stage worst setup slack, ns.
     pub synth_worst_slack_ns: f64,
+    /// Synthesis-stage critical-path delay, ns.
     pub synth_critical_path_ns: f64,
-    /// Implementation-stage timing.
+    /// Implementation-stage worst setup slack, ns.
     pub impl_worst_slack_ns: f64,
+    /// Implementation-stage critical-path delay, ns.
     pub impl_critical_path_ns: f64,
     /// Pearson correlation of per-MAC min slack across the two stages —
     /// the re-cluster check (paper §II-B: "partitioning based on minimum
     /// slack of MACs ... will [be] effective"; > 0.95 means no
     /// re-clustering needed).
     pub stage_slack_correlation: f64,
-    /// Clustering outcome.
+    /// Clustering algorithm that partitioned the array.
     pub algorithm: String,
+    /// Voltage-island count.
     pub n_partitions: usize,
+    /// MACs per island.
     pub partition_sizes: Vec<usize>,
+    /// Clustering quality (mean silhouette coefficient).
     pub silhouette: f64,
     /// Static rails from Algorithm 1 (partition id order).
     pub static_rails: Vec<f64>,
     /// Rails after Razor calibration (== static if `calibrate = false`).
     pub calibrated_rails: Vec<f64>,
+    /// Trial runs Algorithm 2 took.
     pub calibration_trials: usize,
+    /// Whether every rail settled before the trial cap.
     pub calibration_converged: bool,
     /// Power comparison at the **static** rails (one Table II block —
     /// the paper's Table II reports the Algorithm-1 voltages).
@@ -134,18 +149,21 @@ pub struct FlowReport {
     pub baselines: Vec<BaselineResult>,
     /// Generated constraint file.
     pub constraint_file: String,
-    /// Fig 4 / Fig 5 series: (endpoint, synth delay, impl delay).
+    /// Fig 4 setup series: (endpoint, synth delay, impl delay).
     pub fig4_setup_deltas: Vec<(String, f64, f64)>,
+    /// Fig 5 hold series: (endpoint, synth delay, impl delay).
     pub fig5_hold_deltas: Vec<(String, f64, f64)>,
 }
 
 /// The generic flow engine; [`VivadoFlow`] / [`VtrFlow`] wrap it.
 #[derive(Debug, Clone)]
 pub struct CadFlow {
+    /// The configuration the flow runs.
     pub config: FlowConfig,
 }
 
 impl CadFlow {
+    /// Flow over `config` (validated on `run`).
     pub fn new(config: FlowConfig) -> Self {
         Self { config }
     }
@@ -349,12 +367,14 @@ pub fn equal_quartile_clustering(slacks: &[f64]) -> Clustering {
 pub struct VivadoFlow(CadFlow);
 
 impl VivadoFlow {
+    /// Commercial flow over `config` (forces the Vivado flow kind).
     pub fn new(mut config: FlowConfig) -> Self {
         debug_assert_eq!(config.tech.flow, FlowKind::Vivado);
         config.tech.flow = FlowKind::Vivado;
         Self(CadFlow::new(config))
     }
 
+    /// Run the full flow.
     pub fn run(&self) -> Result<FlowReport> {
         self.0.run()
     }
@@ -364,11 +384,13 @@ impl VivadoFlow {
 pub struct VtrFlow(CadFlow);
 
 impl VtrFlow {
+    /// Academic flow over `config` (forces the VTR flow kind).
     pub fn new(mut config: FlowConfig) -> Self {
         config.tech.flow = FlowKind::Vtr;
         Self(CadFlow::new(config))
     }
 
+    /// Run the full flow.
     pub fn run(&self) -> Result<FlowReport> {
         self.0.run()
     }

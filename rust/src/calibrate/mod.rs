@@ -1,0 +1,884 @@
+//! S19 — Closed-loop runtime voltage calibration on the serving path.
+//!
+//! The paper's runtime scheme (Algorithm 2, [`crate::voltage::runtime_scheme`])
+//! is a *trial-run* loop: it tunes the rails once, offline, before the
+//! real workload arrives. The serving coordinator then re-runs raw
+//! Algorithm-2 epochs, which bounce one `Vs` per epoch forever. This
+//! module closes the loop properly, ThUnderVolt-style: underscale while
+//! the observed Razor flag **rate** stays quiet, recover the moment
+//! errors appear, and *hold* once the frontier has been found.
+//!
+//! ```text
+//!  batches ->  Coordinator.infer_batch
+//!                 |  sense(): per-partition Razor flags
+//!                 v
+//!           Calibrator.observe_batch          (every batch)
+//!                 |
+//!                 v  every `epoch_batches` batches
+//!           Calibrator.end_epoch:
+//!             rate_i = flags_i / batches_in_epoch
+//!             rate_i >= high_water  -> step rail UP, arm cooldown
+//!             rate_i <= low_water   -> step rail DOWN (unless cooling
+//!                                      down or locked)
+//!             otherwise             -> hold
+//!             clamped to [v_floor, v_ceil] from study::rail_bounds
+//!             second step-up        -> lock the rail (frontier found)
+//! ```
+//!
+//! Decisions are taken at **batch-count boundaries only** — never
+//! wall-clock — so a fixed seed reproduces the exact voltage trajectory.
+//! The clamp rails come from [`crate::study::rail_bounds`]: commercial
+//! (Vivado) technologies never leave the vendor guard band, academic
+//! (VTR) technologies may descend to the near-threshold floor. That is
+//! the guard-band discipline of Salami et al. (the vendor margin is
+//! large and workload-dependent — worth discovering online) fused with
+//! the per-partition rails of the paper.
+//!
+//! [`run_calibrate`] is the deterministic A/B harness behind
+//! `vstpu calibrate` and `benches/calibrate_loop.rs`: it drives a fixed
+//! seeded workload through per-shard coordinators (the same
+//! `restrict_to_shard` slicing as [`crate::serve::ShardedEngine`], with
+//! fixed-size batch slicing so no deadline flush can perturb the epoch
+//! grid) and renders the trajectory as `BENCH_calibrate.json`
+//! (schema [`CALIBRATE_SCHEMA`], written by
+//! `report::bench_calibrate_json`). The live engine path is
+//! [`crate::serve::EngineConfig::calibrate`].
+
+use std::time::Instant;
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest, MODEL_INPUT};
+use crate::error::{Error, Result};
+use crate::fpga::Partition;
+use crate::power::PowerModel;
+use crate::razor::DEFAULT_TOGGLE;
+use crate::runtime::MODEL_LAYERS;
+use crate::study;
+use crate::tech::Technology;
+use crate::voltage::static_scheme;
+use crate::workload::{Batch, FluctuationProfile};
+
+/// `BENCH_calibrate.json` schema identifier (see docs/BENCH_SCHEMAS.md).
+pub const CALIBRATE_SCHEMA: &str = "vstpu-bench-calibrate/v1";
+
+/// Most epochs a [`Calibrator`] records in its trajectory. Decisions
+/// keep running past the cap — only the *recording* stops, so a
+/// long-lived serving shard holds bounded state (the serve worker's
+/// invariant) while every harness configuration (tens of epochs) stays
+/// far below it.
+pub const MAX_TRACE_EPOCHS: usize = 4096;
+
+/// Hysteresis-controller knobs (the `[calibrate]` config section).
+#[derive(Debug, Clone)]
+pub struct CalibrateConfig {
+    /// Step a rail *down* only while the epoch flag rate is at or below
+    /// this fraction of batches.
+    pub low_water: f64,
+    /// Step a rail *up* once the epoch flag rate reaches this fraction.
+    pub high_water: f64,
+    /// Batches per decision epoch (decisions land on batch-count
+    /// boundaries, never wall-clock — the determinism contract).
+    pub epoch_batches: usize,
+    /// Epochs a rail holds after a step-up before it may descend again.
+    pub cooldown_epochs: u32,
+    /// Voltage step per decision (V). `<= 0` derives a step from
+    /// context: the Algorithm-1 guard-band step `(v_nom - v_min) / 4`
+    /// when resolved against a technology
+    /// ([`CalibrateConfig::resolved_step`] — the path every in-crate
+    /// entry point takes), or a quarter of the clamp range when a
+    /// [`Calibrator`] is constructed directly from bounds.
+    pub step_v: f64,
+}
+
+impl Default for CalibrateConfig {
+    fn default() -> Self {
+        Self {
+            low_water: 0.05,
+            high_water: 0.5,
+            epoch_batches: 4,
+            cooldown_epochs: 2,
+            step_v: 0.0125,
+        }
+    }
+}
+
+impl CalibrateConfig {
+    /// Resolve the voltage step for `tech` (see [`CalibrateConfig::step_v`]).
+    pub fn resolved_step(&self, tech: &Technology) -> f64 {
+        if self.step_v > 0.0 {
+            self.step_v
+        } else {
+            static_scheme::step(tech.v_nom, tech.v_min, 4)
+        }
+    }
+
+    /// Validate the waters and epoch shape.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.low_water)
+            || !(0.0..=1.0).contains(&self.high_water)
+            || self.low_water >= self.high_water
+        {
+            return Err(Error::Config(format!(
+                "calibrate waters must satisfy 0 <= low {} < high {} <= 1",
+                self.low_water, self.high_water
+            )));
+        }
+        if self.epoch_batches == 0 {
+            return Err(Error::Config("calibrate epoch_batches must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Per-partition hysteresis state machine plus its full trajectory.
+///
+/// One `Calibrator` lives inside one [`Coordinator`]
+/// (attach with [`Coordinator::attach_calibrator`]); in sharded serving
+/// each shard's calibrator steps only the partitions that shard owns.
+///
+/// ```
+/// use vstpu::calibrate::{CalibrateConfig, Calibrator};
+/// use vstpu::fpga::{Partition, Rect};
+///
+/// let mut parts = vec![Partition {
+///     id: 0,
+///     rect: Rect::new(0, 0, 3, 3),
+///     macs: vec![],
+///     vccint: 0.98,
+/// }];
+/// let mut cal = Calibrator::new(CalibrateConfig::default(), 0.90, 1.00, &[0.98]);
+/// for _ in 0..4 {
+///     cal.observe_batch(&[false], &[0]); // a quiet epoch: no Razor flags
+/// }
+/// cal.end_epoch(&mut parts, &[0]);
+/// assert!(parts[0].vccint < 0.98, "quiet rails step down");
+/// assert_eq!(cal.epochs(), 1);
+/// ```
+#[derive(Debug, Clone)]
+pub struct Calibrator {
+    cfg: CalibrateConfig,
+    step: f64,
+    v_floor: f64,
+    v_ceil: f64,
+    /// Flags observed per partition in the current epoch.
+    flag_counts: Vec<u64>,
+    batches_in_epoch: usize,
+    cooldown: Vec<u32>,
+    /// Step-up events per partition; the second one locks the rail.
+    up_events: Vec<u32>,
+    locked: Vec<bool>,
+    /// Decision epochs taken (keeps counting past the recording cap).
+    epochs_run: usize,
+    /// Epoch index (1-based) of each partition's last rail movement.
+    last_move: Vec<usize>,
+    /// Rail snapshot per epoch boundary; `[0]` is the static seed.
+    voltage_trace: Vec<Vec<f64>>,
+    /// Per-partition flag rate of each completed epoch.
+    flag_rate_trace: Vec<Vec<f64>>,
+}
+
+impl Calibrator {
+    /// Build a controller over `initial_rails` clamped to
+    /// `[v_floor, v_ceil]`. `step_v <= 0` in `cfg` derives the
+    /// guard-band step from the bounds (`(v_ceil - v_floor) / 4`).
+    pub fn new(cfg: CalibrateConfig, v_floor: f64, v_ceil: f64, initial_rails: &[f64]) -> Self {
+        let n = initial_rails.len();
+        let step = if cfg.step_v > 0.0 {
+            cfg.step_v
+        } else {
+            (v_ceil - v_floor) / 4.0
+        };
+        Self {
+            cfg,
+            step,
+            v_floor,
+            v_ceil,
+            flag_counts: vec![0; n],
+            batches_in_epoch: 0,
+            cooldown: vec![0; n],
+            up_events: vec![0; n],
+            locked: vec![false; n],
+            epochs_run: 0,
+            last_move: vec![0; n],
+            voltage_trace: vec![initial_rails.to_vec()],
+            flag_rate_trace: Vec::new(),
+        }
+    }
+
+    /// Controller configuration (read-only).
+    pub fn config(&self) -> &CalibrateConfig {
+        &self.cfg
+    }
+
+    /// Resolved voltage step per decision (V).
+    pub fn step_v(&self) -> f64 {
+        self.step
+    }
+
+    /// Rail clamp `[floor, ceil]` the controller enforces.
+    pub fn bounds(&self) -> (f64, f64) {
+        (self.v_floor, self.v_ceil)
+    }
+
+    /// *Recorded* decision epochs (capped at [`MAX_TRACE_EPOCHS`];
+    /// [`Calibrator::epochs_run`] keeps the uncapped count).
+    pub fn epochs(&self) -> usize {
+        self.flag_rate_trace.len()
+    }
+
+    /// Total decision epochs taken, including any past the recording
+    /// cap (equal to [`Calibrator::epochs`] in every harness run).
+    pub fn epochs_run(&self) -> usize {
+        self.epochs_run
+    }
+
+    /// Rail snapshots, one per epoch boundary (`[0]` = static seed), so
+    /// `voltage_trace().len() == epochs() + 1`.
+    pub fn voltage_trace(&self) -> &[Vec<f64>] {
+        &self.voltage_trace
+    }
+
+    /// Per-partition flag rate of every completed epoch (unowned
+    /// partitions read 0 — their owner's calibrator carries the truth).
+    pub fn flag_rate_trace(&self) -> &[Vec<f64>] {
+        &self.flag_rate_trace
+    }
+
+    /// Epoch (1-based) of partition `i`'s last rail movement; 0 if the
+    /// rail never moved. In a live run that outlasted
+    /// [`MAX_TRACE_EPOCHS`] this may point past the recorded trace.
+    pub fn converged_epoch(&self, i: usize) -> usize {
+        self.last_move[i]
+    }
+
+    /// True once partition `i`'s rail is pinned (second step-up found
+    /// the frontier; further step-ups remain allowed under new flags).
+    pub fn is_locked(&self, i: usize) -> bool {
+        self.locked[i]
+    }
+
+    /// Fold one batch's per-partition Razor flags (the coordinator's
+    /// `flagged` vector) into the current epoch. Only `owned`
+    /// partitions are counted — a shard senses only the islands it
+    /// drives.
+    pub fn observe_batch(&mut self, flags: &[bool], owned: &[usize]) {
+        for &i in owned {
+            if flags[i] {
+                self.flag_counts[i] += 1;
+            }
+        }
+        self.batches_in_epoch += 1;
+    }
+
+    /// Close the epoch: compute per-partition flag rates, apply the
+    /// hysteresis decision to every `owned` rail in `partitions`, and
+    /// record the trajectory. An epoch with no observed batches carries
+    /// no evidence, so it records an all-hold epoch (no rail moves).
+    /// Recording stops after [`MAX_TRACE_EPOCHS`] (decisions continue)
+    /// so a long-lived serving shard never grows unbounded state.
+    pub fn end_epoch(&mut self, partitions: &mut [Partition], owned: &[usize]) {
+        let record = self.flag_rate_trace.len() < MAX_TRACE_EPOCHS;
+        self.epochs_run += 1;
+        if self.batches_in_epoch == 0 {
+            // Zero telemetry: hold every rail rather than mistaking
+            // silence for a flag-free epoch.
+            if record {
+                self.flag_rate_trace
+                    .push(vec![0.0f64; self.flag_counts.len()]);
+                self.voltage_trace
+                    .push(partitions.iter().map(|p| p.vccint).collect());
+            }
+            return;
+        }
+        let batches = self.batches_in_epoch as f64;
+        let epoch = self.epochs_run; // 1-based
+        let mut rates = vec![0.0f64; self.flag_counts.len()];
+        for &i in owned {
+            rates[i] = self.flag_counts[i] as f64 / batches;
+            let p = &mut partitions[i];
+            let before = p.vccint;
+            if rates[i] >= self.cfg.high_water {
+                // Errors: recover one step, arm the cooldown; a second
+                // recovery at the same frontier locks the rail there.
+                p.vccint = (p.vccint + self.step).min(self.v_ceil);
+                self.cooldown[i] = self.cfg.cooldown_epochs;
+                self.up_events[i] += 1;
+                if self.up_events[i] >= 2 {
+                    self.locked[i] = true;
+                }
+            } else if rates[i] <= self.cfg.low_water {
+                if self.cooldown[i] > 0 {
+                    self.cooldown[i] -= 1; // hold: still recovering
+                } else if !self.locked[i] {
+                    p.vccint = (p.vccint - self.step).max(self.v_floor);
+                }
+            } else {
+                // Between the waters: hold (hysteresis band).
+                self.cooldown[i] = self.cooldown[i].saturating_sub(1);
+            }
+            if (p.vccint - before).abs() > 1e-15 {
+                self.last_move[i] = epoch;
+            }
+        }
+        if record {
+            self.flag_rate_trace.push(rates);
+            self.voltage_trace
+                .push(partitions.iter().map(|p| p.vccint).collect());
+        }
+        self.flag_counts.fill(0);
+        self.batches_in_epoch = 0;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The deterministic A/B harness behind `vstpu calibrate`.
+// ---------------------------------------------------------------------------
+
+/// Configuration of one [`run_calibrate`] run.
+#[derive(Debug, Clone)]
+pub struct CalibrateBenchConfig {
+    /// Per-shard serving-stack configuration (tech, batch, seed, ...).
+    pub coordinator: CoordinatorConfig,
+    /// Hysteresis-controller knobs.
+    pub controller: CalibrateConfig,
+    /// Shard count; partition `p` is owned by shard `p % shards`.
+    pub shards: usize,
+    /// Total requests pushed through the harness.
+    pub requests: usize,
+    /// Fixed batch slice size (requests per `infer_batch` call).
+    pub max_batch: usize,
+    /// Workload seed — fixes inputs, routing and the whole trajectory.
+    pub seed: u64,
+    /// Workload bit-fluctuation profile.
+    pub profile: FluctuationProfile,
+    /// CI smoke mode (recorded in the JSON so gates compare like to like).
+    pub quick: bool,
+}
+
+impl CalibrateBenchConfig {
+    /// Default closed-loop run for `tech`: 2 shards, 8192 requests.
+    pub fn paper_default(tech: Technology) -> Self {
+        let coordinator = CoordinatorConfig::paper_default(tech);
+        let max_batch = coordinator.batch;
+        Self {
+            coordinator,
+            controller: CalibrateConfig::default(),
+            shards: 2,
+            requests: 8192,
+            max_batch,
+            seed: 7,
+            profile: FluctuationProfile::Medium,
+            quick: false,
+        }
+    }
+
+    /// The CI smoke configuration (`vstpu calibrate --quick`): shorter
+    /// epochs so the trajectory converges inside 4096 requests.
+    pub fn quick(tech: Technology) -> Self {
+        let mut cfg = Self::paper_default(tech);
+        cfg.quick = true;
+        cfg.requests = 4096;
+        cfg.controller.epoch_batches = 2;
+        cfg
+    }
+}
+
+/// One partition's merged trajectory in the report (taken from the
+/// shard that owns the partition).
+#[derive(Debug, Clone)]
+pub struct PartitionTrace {
+    /// Partition index (canonical cluster order, 0 = most critical).
+    pub partition: usize,
+    /// Owning shard (`partition % shards`).
+    pub shard: usize,
+    /// Epoch (1-based) of the last rail movement; 0 = never moved.
+    pub converged_epoch: usize,
+    /// Rail voltage per epoch boundary (`[0]` = static seed).
+    pub voltages: Vec<f64>,
+    /// Razor flag rate per completed epoch.
+    pub flag_rates: Vec<f64>,
+}
+
+/// Everything one closed-loop calibration run produces —
+/// `report::bench_calibrate_json` renders it as `BENCH_calibrate.json`.
+#[derive(Debug, Clone)]
+pub struct CalibrateReport {
+    /// Schema identifier ([`CALIBRATE_SCHEMA`]).
+    pub schema: &'static str,
+    /// CI smoke mode flag.
+    pub quick: bool,
+    /// Workload seed.
+    pub seed: u64,
+    /// Technology preset name.
+    pub tech: String,
+    /// Runtime backend the shards served on.
+    pub backend: String,
+    /// Shard count.
+    pub shards: usize,
+    /// Requests served.
+    pub requests: u64,
+    /// Requests per `infer_batch` slice.
+    pub max_batch: usize,
+    /// Batches per decision epoch.
+    pub epoch_batches: usize,
+    /// Resolved voltage step (V).
+    pub step_v: f64,
+    /// Step-down threshold (fraction of batches flagging).
+    pub low_water: f64,
+    /// Step-up threshold.
+    pub high_water: f64,
+    /// Post-step-up hold, in epochs.
+    pub cooldown_epochs: u32,
+    /// Rail clamp floor (FlowKind-aware; guard band on Vivado techs).
+    pub v_floor: f64,
+    /// Rail clamp ceiling (`v_nom`).
+    pub v_ceil: f64,
+    /// Epochs every shard completed (the comparable trajectory length).
+    pub epochs: usize,
+    /// Epoch of the last rail movement across all partitions.
+    pub convergence_epoch: usize,
+    /// True when no rail moved over the final two comparable epochs.
+    pub converged: bool,
+    /// Mean per-partition flag rate of the final epoch.
+    pub flag_rate_final: f64,
+    /// Energy per request at the static (epoch-0) rails, microjoules.
+    pub energy_uj_before: f64,
+    /// Mean energy per request over the epochs after convergence.
+    pub energy_uj_after: f64,
+    /// Wall time (measurement; excluded from the determinism contract).
+    pub wall_s: f64,
+    /// Per-partition merged trajectories, partition order.
+    pub partitions: Vec<PartitionTrace>,
+}
+
+/// Model service time of one batch, seconds — the deterministic energy
+/// denominator. Weight-stationary systolic pipeline: each layer streams
+/// `batch` rows plus its fill/drain (`K + N` cycles) at the array clock.
+pub fn batch_seconds(batch: usize, clock_mhz: f64) -> f64 {
+    let cycles: usize = MODEL_LAYERS
+        .windows(2)
+        .map(|w| batch + w[0] + w[1])
+        .sum();
+    cycles as f64 * 1e-6 / clock_mhz
+}
+
+/// Energy per request (microjoules) at the given rails: model power at
+/// `DEFAULT_TOGGLE` activity times the batch service time, split across
+/// the batch. Purely model-based, hence byte-deterministic.
+fn energy_uj_per_request(
+    model: &PowerModel,
+    template: &[Partition],
+    rails: &[f64],
+    batch: usize,
+) -> f64 {
+    let mut parts = template.to_vec();
+    for (p, &v) in parts.iter_mut().zip(rails) {
+        p.vccint = v;
+    }
+    let power_mw = model.scaled_mw(&parts, |_| DEFAULT_TOGGLE);
+    power_mw * batch_seconds(batch, model.clock_mhz) * 1e3 / batch as f64
+}
+
+/// Drive a fixed seeded workload through `shards` per-shard coordinators
+/// (each restricted to its partition slice, each with an attached
+/// [`Calibrator`]) and fold the trajectories into a [`CalibrateReport`].
+///
+/// Batch slicing is fixed-size by construction — the harness never uses
+/// a deadline flush — so the epoch grid, and therefore the entire
+/// artifact modulo its wall-time line, is byte-deterministic at a fixed
+/// seed.
+pub fn run_calibrate(
+    artifacts_dir: &std::path::Path,
+    cfg: CalibrateBenchConfig,
+) -> Result<CalibrateReport> {
+    cfg.controller.validate()?;
+    if cfg.shards == 0 {
+        return Err(Error::Serve("calibrate needs at least one shard".into()));
+    }
+    if cfg.max_batch == 0 || cfg.max_batch > cfg.coordinator.batch {
+        return Err(Error::Serve(format!(
+            "max_batch {} outside 1..={} (the artifact batch)",
+            cfg.max_batch, cfg.coordinator.batch
+        )));
+    }
+    let t0 = Instant::now();
+    let tech = cfg.coordinator.tech.clone();
+    let (_, v_floor) = study::rail_bounds(&tech);
+    let v_ceil = tech.v_nom;
+    let data = Batch::synthetic(cfg.requests, MODEL_INPUT, cfg.profile, cfg.seed);
+
+    // One serving stack per shard, driven synchronously on its own
+    // thread over its deterministic id subsequence. Each run hands back
+    // its calibrator (the trajectory) and its partition set — reused
+    // below as the energy template, so the netlist/STA/floorplan
+    // pipeline never runs an extra time on the harness thread.
+    type ShardRun = (Calibrator, &'static str, Vec<Partition>);
+    let shard_runs: Vec<Result<ShardRun>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.shards)
+            .map(|shard| {
+                let ccfg = cfg.coordinator.clone();
+                let ctl = cfg.controller.clone();
+                let data = &data;
+                let (requests, shards, max_batch) = (cfg.requests, cfg.shards, cfg.max_batch);
+                s.spawn(move || -> Result<ShardRun> {
+                    let mut coord = Coordinator::open(artifacts_dir, ccfg)?;
+                    coord.set_shard(shard, shards)?;
+                    coord.attach_calibrator(ctl)?;
+                    let ids: Vec<u64> = (0..requests as u64)
+                        .filter(|id| (*id % shards as u64) as usize == shard)
+                        .collect();
+                    for chunk in ids.chunks(max_batch) {
+                        let reqs: Vec<InferenceRequest> = chunk
+                            .iter()
+                            .map(|&id| InferenceRequest {
+                                id,
+                                input: data.sample(id as usize).to_vec(),
+                            })
+                            .collect();
+                        coord.infer_batch(&reqs)?;
+                    }
+                    let backend = coord.backend;
+                    let cal = coord
+                        .take_calibrator()
+                        .ok_or_else(|| Error::Serve("calibrator vanished".into()))?;
+                    Ok((cal, backend, coord.controller.partitions))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::Serve("calibrate shard panicked".into())))
+            })
+            .collect()
+    });
+    let mut calibrators = Vec::with_capacity(cfg.shards);
+    let mut backend = "reference";
+    let mut template: Vec<Partition> = Vec::new();
+    for r in shard_runs {
+        let (cal, b, parts) = r?;
+        backend = b;
+        template = parts;
+        calibrators.push(cal);
+    }
+
+    // Merge: partition p's trajectory comes from its owning shard.
+    // Shards may complete different epoch counts (requests not evenly
+    // divisible), so everything — traces AND convergence epochs — is
+    // computed over the comparable window `..=epochs`, keeping the
+    // artifact self-consistent.
+    let n_parts = calibrators[0].voltage_trace()[0].len();
+    let epochs = calibrators.iter().map(Calibrator::epochs).min().unwrap_or(0);
+    let mut partitions = Vec::with_capacity(n_parts);
+    for p in 0..n_parts {
+        let shard = p % cfg.shards;
+        let cal = &calibrators[shard];
+        let voltages: Vec<f64> = cal.voltage_trace()[..=epochs]
+            .iter()
+            .map(|v| v[p])
+            .collect();
+        // Last movement *within* the comparable window, 1-based.
+        let converged_epoch = voltages
+            .windows(2)
+            .enumerate()
+            .filter(|(_, w)| (w[1] - w[0]).abs() > 1e-15)
+            .map(|(e, _)| e + 1)
+            .next_back()
+            .unwrap_or(0);
+        partitions.push(PartitionTrace {
+            partition: p,
+            shard,
+            converged_epoch,
+            voltages,
+            flag_rates: cal.flag_rate_trace()[..epochs]
+                .iter()
+                .map(|r| r[p])
+                .collect(),
+        });
+    }
+    let convergence_epoch = partitions
+        .iter()
+        .map(|p| p.converged_epoch)
+        .max()
+        .unwrap_or(0);
+    let converged = epochs >= 2 && convergence_epoch + 2 <= epochs;
+    let flag_rate_final = if epochs == 0 {
+        0.0
+    } else {
+        partitions
+            .iter()
+            .map(|p| p.flag_rates[epochs - 1])
+            .sum::<f64>()
+            / n_parts.max(1) as f64
+    };
+
+    // Energy per request at each epoch boundary, from the model alone.
+    // The template (any shard's partition set — identical geometry and
+    // MAC counts everywhere) carries the real per-partition MAC counts;
+    // its rails are overwritten per epoch below.
+    let model = PowerModel::new(tech.clone(), cfg.coordinator.clock_mhz);
+    let rails_at = |e: usize| -> Vec<f64> {
+        partitions.iter().map(|p| p.voltages[e]).collect()
+    };
+    let energy_at = |e: usize| {
+        energy_uj_per_request(&model, &template, &rails_at(e), cfg.coordinator.batch)
+    };
+    let energy_uj_before = energy_at(0);
+    let after_epochs: Vec<usize> = (convergence_epoch..=epochs)
+        .skip(if convergence_epoch == 0 { 0 } else { 1 })
+        .collect();
+    let energy_uj_after = if after_epochs.is_empty() {
+        energy_at(epochs)
+    } else {
+        after_epochs.iter().map(|&e| energy_at(e)).sum::<f64>() / after_epochs.len() as f64
+    };
+    // Gate-critical values must never reach the artifact non-finite:
+    // json_f64 would render them as 0, which the lower-is-better energy
+    // gate reads as a perfect result (fail-open).
+    if !energy_uj_before.is_finite()
+        || !energy_uj_after.is_finite()
+        || energy_uj_before <= 0.0
+        || energy_uj_after <= 0.0
+    {
+        return Err(Error::Serve(format!(
+            "energy-per-request computation produced a non-finite or \
+             non-positive value (before {energy_uj_before}, after {energy_uj_after}) \
+             — rails or power model corrupted"
+        )));
+    }
+
+    Ok(CalibrateReport {
+        schema: CALIBRATE_SCHEMA,
+        quick: cfg.quick,
+        seed: cfg.seed,
+        tech: tech.name.clone(),
+        backend: backend.to_string(),
+        shards: cfg.shards,
+        requests: cfg.requests as u64,
+        max_batch: cfg.max_batch,
+        epoch_batches: cfg.controller.epoch_batches,
+        step_v: cfg.controller.resolved_step(&tech),
+        low_water: cfg.controller.low_water,
+        high_water: cfg.controller.high_water,
+        cooldown_epochs: cfg.controller.cooldown_epochs,
+        v_floor,
+        v_ceil,
+        epochs,
+        convergence_epoch,
+        converged,
+        flag_rate_final,
+        energy_uj_before,
+        energy_uj_after,
+        wall_s: t0.elapsed().as_secs_f64(),
+        partitions,
+    })
+}
+
+/// Render the calibration run as aligned text (the CLI's human output).
+pub fn render(rep: &CalibrateReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "closed-loop calibration on {} ({} shards, {} requests, backend {}):",
+        rep.tech, rep.shards, rep.requests, rep.backend
+    );
+    let _ = writeln!(
+        s,
+        "  epochs {} (x{} batches), step {:.4} V, waters [{:.2}, {:.2}], clamp [{:.3}, {:.3}] V",
+        rep.epochs,
+        rep.epoch_batches,
+        rep.step_v,
+        rep.low_water,
+        rep.high_water,
+        rep.v_floor,
+        rep.v_ceil
+    );
+    let _ = writeln!(
+        s,
+        "  converged: {} at epoch {}; final flag rate {:.3}",
+        rep.converged, rep.convergence_epoch, rep.flag_rate_final
+    );
+    let _ = writeln!(
+        s,
+        "  energy/request: {:.4} uJ static -> {:.4} uJ after convergence ({:+.2}%)",
+        rep.energy_uj_before,
+        rep.energy_uj_after,
+        100.0 * (rep.energy_uj_after - rep.energy_uj_before) / rep.energy_uj_before
+    );
+    for p in &rep.partitions {
+        let _ = writeln!(
+            s,
+            "  partition {} (shard {}): {:.4} V -> {:.4} V, settled at epoch {}",
+            p.partition,
+            p.shard,
+            p.voltages.first().copied().unwrap_or(f64::NAN),
+            p.voltages.last().copied().unwrap_or(f64::NAN),
+            p.converged_epoch
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::Rect;
+
+    fn one_partition(v: f64) -> Vec<Partition> {
+        vec![Partition {
+            id: 0,
+            rect: Rect::new(0, 0, 3, 3),
+            macs: vec![],
+            vccint: v,
+        }]
+    }
+
+    fn drive_epoch(cal: &mut Calibrator, parts: &mut [Partition], flagged: bool) {
+        for _ in 0..cal.config().epoch_batches {
+            cal.observe_batch(&[flagged], &[0]);
+        }
+        cal.end_epoch(parts, &[0]);
+    }
+
+    #[test]
+    fn quiet_rails_descend_to_the_floor_and_stay() {
+        let mut parts = one_partition(0.98);
+        let mut cal = Calibrator::new(CalibrateConfig::default(), 0.95, 1.0, &[0.98]);
+        for _ in 0..12 {
+            drive_epoch(&mut cal, &mut parts, false);
+        }
+        assert!((parts[0].vccint - 0.95).abs() < 1e-12, "{}", parts[0].vccint);
+        // Floor reached after (0.98-0.95)/0.0125 = 3 epochs (1-based).
+        assert_eq!(cal.converged_epoch(0), 3);
+        // And it never moves again.
+        let trace = cal.voltage_trace();
+        for snap in &trace[3..] {
+            assert!((snap[0] - 0.95).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spike_steps_up_then_cooldown_holds() {
+        let mut parts = one_partition(0.98);
+        let mut cal = Calibrator::new(CalibrateConfig::default(), 0.90, 1.0, &[0.98]);
+        drive_epoch(&mut cal, &mut parts, false); // 0.9675
+        drive_epoch(&mut cal, &mut parts, true); // spike: back to 0.98
+        assert!((parts[0].vccint - 0.98).abs() < 1e-12);
+        // Cooldown: the next `cooldown_epochs` quiet epochs hold.
+        let held = parts[0].vccint;
+        drive_epoch(&mut cal, &mut parts, false);
+        assert_eq!(parts[0].vccint, held, "cooldown epoch 1 must hold");
+        drive_epoch(&mut cal, &mut parts, false);
+        assert_eq!(parts[0].vccint, held, "cooldown epoch 2 must hold");
+        // Cooldown expired: descent resumes.
+        drive_epoch(&mut cal, &mut parts, false);
+        assert!(parts[0].vccint < held);
+    }
+
+    #[test]
+    fn second_step_up_locks_the_rail() {
+        let mut parts = one_partition(0.98);
+        let mut cal = Calibrator::new(CalibrateConfig::default(), 0.90, 1.0, &[0.98]);
+        // Flag whenever the rail sits below the synthetic 0.95 frontier.
+        for _ in 0..40 {
+            let flagging = parts[0].vccint < 0.95 - 1e-12;
+            drive_epoch(&mut cal, &mut parts, flagging);
+        }
+        assert!(cal.is_locked(0), "two recoveries must lock the rail");
+        let v_final = parts[0].vccint;
+        assert!(
+            v_final >= 0.95 - 1e-12,
+            "locked rail {v_final} sits below the frontier"
+        );
+        // No oscillation: the last 3+ epochs are flat.
+        let trace = cal.voltage_trace();
+        let tail = &trace[trace.len() - 4..];
+        for snap in tail {
+            assert_eq!(snap[0], v_final, "tail oscillates: {tail:?}");
+        }
+    }
+
+    #[test]
+    fn empty_epoch_holds_every_rail() {
+        let mut parts = one_partition(0.98);
+        let mut cal = Calibrator::new(CalibrateConfig::default(), 0.90, 1.0, &[0.98]);
+        // No observe_batch calls: zero telemetry must mean hold, never
+        // "flag-free, step down".
+        cal.end_epoch(&mut parts, &[0]);
+        assert_eq!(parts[0].vccint, 0.98);
+        assert_eq!(cal.epochs(), 1);
+        assert_eq!(cal.converged_epoch(0), 0);
+    }
+
+    #[test]
+    fn rates_between_waters_hold() {
+        let cfg = CalibrateConfig {
+            low_water: 0.2,
+            high_water: 0.8,
+            epoch_batches: 4,
+            ..CalibrateConfig::default()
+        };
+        let mut parts = one_partition(0.98);
+        let mut cal = Calibrator::new(cfg, 0.90, 1.0, &[0.98]);
+        // 2 of 4 batches flag: rate 0.5 sits inside the hysteresis band.
+        cal.observe_batch(&[true], &[0]);
+        cal.observe_batch(&[true], &[0]);
+        cal.observe_batch(&[false], &[0]);
+        cal.observe_batch(&[false], &[0]);
+        cal.end_epoch(&mut parts, &[0]);
+        assert!((parts[0].vccint - 0.98).abs() < 1e-12);
+        assert_eq!(cal.converged_epoch(0), 0);
+    }
+
+    #[test]
+    fn unowned_partitions_never_move() {
+        let mut parts = vec![
+            Partition {
+                id: 0,
+                rect: Rect::new(0, 0, 3, 3),
+                macs: vec![],
+                vccint: 0.98,
+            },
+            Partition {
+                id: 1,
+                rect: Rect::new(4, 0, 7, 3),
+                macs: vec![],
+                vccint: 0.98,
+            },
+        ];
+        let mut cal = Calibrator::new(CalibrateConfig::default(), 0.90, 1.0, &[0.98, 0.98]);
+        for _ in 0..4 {
+            cal.observe_batch(&[false, false], &[1]);
+        }
+        cal.end_epoch(&mut parts, &[1]);
+        assert_eq!(parts[0].vccint, 0.98, "unowned rail moved");
+        assert!(parts[1].vccint < 0.98);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_waters() {
+        let inverted = CalibrateConfig {
+            low_water: 0.6,
+            high_water: 0.5,
+            ..CalibrateConfig::default()
+        };
+        assert!(inverted.validate().is_err());
+        let no_epoch = CalibrateConfig {
+            epoch_batches: 0,
+            ..CalibrateConfig::default()
+        };
+        assert!(no_epoch.validate().is_err());
+        assert!(CalibrateConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn batch_seconds_is_positive_and_batch_monotone() {
+        let a = batch_seconds(16, 100.0);
+        let b = batch_seconds(32, 100.0);
+        assert!(a > 0.0);
+        assert!(b > a);
+        // Double the clock, half the time.
+        assert!((batch_seconds(32, 200.0) - b / 2.0).abs() < 1e-15);
+    }
+}

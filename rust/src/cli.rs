@@ -5,16 +5,16 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use vstpu::cadflow::{CadFlow, FlowConfig, PartitionScheme};
+use vstpu::calibrate::{run_calibrate, CalibrateBenchConfig};
 use vstpu::cluster::{hierarchical, Algorithm};
 use vstpu::config::Config;
 use vstpu::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
 use vstpu::netlist::SystolicNetlist;
 use vstpu::report;
 use vstpu::serve::BenchConfig;
-use vstpu::sweep::{SweepAlgo, SweepConfig};
+use vstpu::sweep::{RailMode, SweepAlgo, SweepConfig};
 use vstpu::tech::Technology;
 use vstpu::timing;
-use vstpu::voltage::static_scheme;
 use vstpu::workload::{Batch, FluctuationProfile};
 use vstpu::{Error, Result};
 
@@ -35,8 +35,15 @@ COMMANDS
   cluster         run one clustering algorithm over the min-slack data
                     --algo NAME  --k N  --bandwidth F (0.4)
                     --array-size N (16)  --dendrogram
-  calibrate       Razor trial-run calibration (Algorithm 2) details
-                    --array-size N  --tech NAME  --toggle F (0.125)
+  calibrate       closed-loop runtime voltage calibration: drive a
+                    seeded workload through per-shard coordinators with
+                    the hysteresis controller attached; --json writes
+                    BENCH_calibrate.json (vstpu-bench-calibrate/v1)
+                    --tech NAME (academic-22nm)  --shards N (2)
+                    --requests N (8192)  --epoch-batches N (4)
+                    --step-v F (0.0125)  --low-water F (0.05)
+                    --high-water F (0.5)  --cooldown N (2)  --seed N (7)
+                    --quick (CI smoke)  --json  --out FILE
   serve           serve synthetic requests through the runtime backend
                     (falls back to the built-in reference backend when
                     the artifacts directory is absent)
@@ -45,18 +52,22 @@ COMMANDS
   bench-serve     drive the sharded multi-worker engine under load and
                     report req/s + latency percentiles; --json writes
                     the machine-readable BENCH_serve.json CI gates on
+                    --tech NAME (artix7-28nm)
                     --shards N (4)  --requests N (4096)  --max-batch N (32)
                     --deadline-us N (2000)  --queue-depth N (64)
                     --fluctuation low|medium|high (medium)  --seed N (7)
                     --quick (CI smoke: 2 shards x 1024 requests)
+                    --calibrate (A/B: run calibration off then on; the
+                    [calibrate] config section enables it too)
                     --json  --out FILE (BENCH_serve.json)
   sweep           parallel scenario sweep: the full clustering-algorithm
                     x tech x array-size x workload-shift grid on a job
                     pool, with shared per-(tech,size) timing analysis;
                     --json writes the machine-readable BENCH_sweep.json
-                    --smoke (CI grid: 2 algos x 2 techs x 1 size)
+                    --smoke (CI grid: 2 algos x 2 techs x 1 size x 2 rail modes)
                     --algos hierarchical,kmeans,meanshift,dbscan,equal-quantile
                     --techs NAMES  --sizes 8,16,32,64  --shifts 0.25,0.45
+                    --rails static,runtime (the rail-mode axis)
                     --k N (4)  --threads N (0 = cores)  --seed N (2021)
                     --max-trials N (200)  --json  --out FILE (BENCH_sweep.json)
   e2e             end-to-end accuracy/power sweep (EXPERIMENTS.md E12)
@@ -210,25 +221,41 @@ pub fn run() -> Result<()> {
             print!("{}", report::clustering_csv(&slacks, &c));
         }
         "calibrate" => {
-            let o = Opts::parse(rest, &[])?;
-            let size: u32 = o.num("array-size", 16)?;
-            let toggle: f64 = o.num("toggle", 0.125)?;
-            let tech = tech_by_name(&o.str_or("tech", "artix7-28nm"))?;
-            let cfg = FlowConfig::paper_default(size, tech.clone());
-            let nl = SystolicNetlist::generate(size, &tech, cfg.clock_mhz, cfg.seed);
-            let rep = CadFlow::new(cfg.clone()).run()?;
-            println!("static rails:     {:?}", rep.static_rails);
-            println!("calibrated rails: {:?}", rep.calibrated_rails);
-            let slacks = timing::synthesize(&nl).min_slack_values(size);
-            let clustering = vstpu::cadflow::equal_quartile_clustering(&slacks);
-            let device = vstpu::fpga::Device::for_array(size);
-            let parts = vstpu::floorplan::quadrants(&device, &clustering, size)?;
-            for p in &parts {
-                let f = vstpu::razor::min_safe_voltage(&nl, &tech, &p.macs, toggle);
-                println!("partition-{} frontier @ toggle {toggle}: {f:.4} V", p.id + 1);
+            let o = Opts::parse(rest, &["quick", "json"])?;
+            let tech = tech_by_name(&o.str_or("tech", "academic-22nm"))?;
+            let mut ccfg = if o.flag("quick") {
+                CalibrateBenchConfig::quick(tech)
+            } else {
+                CalibrateBenchConfig::paper_default(tech)
+            };
+            // Controller knobs come from the [calibrate] config section;
+            // --quick keeps its own short epochs (the CI smoke run must
+            // converge inside its 4096-request budget) and an explicit
+            // --epoch-batches below still overrides both.
+            let quick_epoch_batches = ccfg.controller.epoch_batches;
+            ccfg.controller = config.calibrate.controller();
+            if o.flag("quick") {
+                ccfg.controller.epoch_batches = quick_epoch_batches;
             }
-            let vs = static_scheme::step(cfg.v_hi, cfg.v_lo, 4);
-            println!("step Vs = {vs:.4} V; flow: {:?}", tech.flow);
+            ccfg.shards = o.num("shards", ccfg.shards)?;
+            ccfg.requests = o.num("requests", ccfg.requests)?;
+            ccfg.seed = o.num("seed", ccfg.seed)?;
+            ccfg.profile = profile_from(&o.str_or("fluctuation", "medium"))?;
+            ccfg.controller.epoch_batches =
+                o.num("epoch-batches", ccfg.controller.epoch_batches)?;
+            ccfg.controller.step_v = o.num("step-v", ccfg.controller.step_v)?;
+            ccfg.controller.low_water = o.num("low-water", ccfg.controller.low_water)?;
+            ccfg.controller.high_water = o.num("high-water", ccfg.controller.high_water)?;
+            ccfg.controller.cooldown_epochs =
+                o.num("cooldown", ccfg.controller.cooldown_epochs)?;
+            let artifacts = PathBuf::from(o.str_or("artifacts", &config.serve.artifacts_dir));
+            let rep = run_calibrate(&artifacts, ccfg)?;
+            print!("{}", vstpu::calibrate::render(&rep));
+            if o.flag("json") {
+                let out = PathBuf::from(o.str_or("out", "BENCH_calibrate.json"));
+                std::fs::write(&out, report::bench_calibrate_json(&rep))?;
+                println!("wrote {}", out.display());
+            }
         }
         "serve" => {
             let o = Opts::parse(rest, &[])?;
@@ -272,8 +299,8 @@ pub fn run() -> Result<()> {
             );
         }
         "bench-serve" => {
-            let o = Opts::parse(rest, &["quick", "json"])?;
-            let tech = Technology::artix7_28nm();
+            let o = Opts::parse(rest, &["quick", "json", "calibrate"])?;
+            let tech = tech_by_name(&o.str_or("tech", "artix7-28nm"))?;
             let mut bcfg = if o.flag("quick") {
                 BenchConfig::quick(tech)
             } else {
@@ -288,7 +315,25 @@ pub fn run() -> Result<()> {
                 o.num("deadline-us", bcfg.engine.batch_deadline_us)?;
             bcfg.engine.queue_depth = o.num("queue-depth", bcfg.engine.queue_depth)?;
             let artifacts = PathBuf::from(o.str_or("artifacts", &config.serve.artifacts_dir));
-            let rep = vstpu::serve::run_bench(&artifacts, bcfg)?;
+            // Calibration A/B in one run: measure the same load twice —
+            // first at static rails, then with the closed-loop
+            // controller attached to every shard.
+            let rep = if o.flag("calibrate") || config.calibrate.enabled {
+                let off = vstpu::serve::run_bench(&artifacts, bcfg.clone())?;
+                bcfg.engine.calibrate = Some(config.calibrate.controller());
+                let on = vstpu::serve::run_bench(&artifacts, bcfg)?;
+                println!(
+                    "calibration A/B: power {:.1} mW (off) -> {:.1} mW (on), \
+                     razor flag rate {:.3} -> {:.3}",
+                    off.power_total_mw,
+                    on.power_total_mw,
+                    off.razor_flag_rate,
+                    on.razor_flag_rate
+                );
+                on
+            } else {
+                vstpu::serve::run_bench(&artifacts, bcfg)?
+            };
             println!(
                 "bench-serve: {} requests over {} shards (backend {}) in {:.2}s",
                 rep.requests, rep.shard_count, rep.backend, rep.wall_s
@@ -338,6 +383,12 @@ pub fn run() -> Result<()> {
             }
             if let Some(v) = o.get("shifts") {
                 scfg.shifts = parse_list(v, "shifts")?;
+            }
+            if let Some(v) = o.get("rails") {
+                scfg.rail_modes = v
+                    .split(',')
+                    .map(RailMode::from_name)
+                    .collect::<Result<_>>()?;
             }
             let rep = vstpu::sweep::run_sweep(&scfg)?;
             print!("{}", vstpu::sweep::render(&rep));

@@ -23,16 +23,22 @@ use crate::error::{Error, Result};
 /// `distance`, producing a cluster of `size` points.
 #[derive(Debug, Clone)]
 pub struct Merge {
+    /// First merged cluster id.
     pub a: usize,
+    /// Second merged cluster id.
     pub b: usize,
+    /// Centroid distance at which the merge happened.
     pub distance: f64,
+    /// Points in the merged cluster.
     pub size: usize,
 }
 
 /// The full dendrogram over the input points.
 #[derive(Debug, Clone)]
 pub struct Dendrogram {
+    /// Merge history, bottom-up (`n - 1` entries).
     pub merges: Vec<Merge>,
+    /// Number of input points (leaves).
     pub n: usize,
 }
 

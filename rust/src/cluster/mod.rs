@@ -171,6 +171,7 @@ impl Algorithm {
         Ok(c.sorted_by_centroid(data))
     }
 
+    /// Stable algorithm name (CLI value).
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::Hierarchical { .. } => "hierarchical",

@@ -13,6 +13,7 @@
 
 use std::path::Path;
 
+use crate::calibrate::CalibrateConfig;
 use crate::cluster::Algorithm;
 use crate::error::{Error, Result};
 use crate::tech::Technology;
@@ -20,9 +21,14 @@ use crate::tech::Technology;
 /// Top-level configuration file.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
+    /// `[flow]` — CAD-flow parameters.
     pub flow: FlowSection,
+    /// `[serve]` — coordinator parameters.
     pub serve: ServeSection,
+    /// `[sweep]` — scenario-sweep parameters.
     pub sweep: SweepSection,
+    /// `[calibrate]` — closed-loop voltage-calibration parameters.
+    pub calibrate: CalibrateSection,
 }
 
 /// `[flow]` — CAD-flow parameters.
@@ -32,6 +38,7 @@ pub struct FlowSection {
     pub array_size: u32,
     /// Technology preset name (see `Technology::paper_suite`).
     pub tech: String,
+    /// Array clock, MHz.
     pub clock_mhz: f64,
     /// Clustering algorithm: "hierarchical" | "kmeans" | "meanshift" | "dbscan".
     pub algorithm: String,
@@ -41,9 +48,11 @@ pub struct FlowSection {
     pub bandwidth: f64,
     /// eps/min_points for dbscan (eps <= 0 means auto).
     pub eps: f64,
+    /// DBSCAN core-point neighbourhood size.
     pub min_points: usize,
     /// Algorithm-1 stepping range; 0 = use the tech guard band.
     pub v_lo: f64,
+    /// Top of the stepping range; 0 = use the tech guard band.
     pub v_hi: f64,
     /// Run the Razor runtime calibration after the static scheme.
     pub calibrate: bool,
@@ -119,6 +128,53 @@ impl Default for SweepSection {
     }
 }
 
+/// `[calibrate]` — closed-loop runtime voltage calibration (the
+/// hysteresis controller of `crate::calibrate`). `enabled = true` makes
+/// `vstpu bench-serve` run the calibration-off/on A/B comparison and
+/// attach the controller to every shard.
+#[derive(Debug, Clone)]
+pub struct CalibrateSection {
+    /// Attach the calibrator during `bench-serve` (A/B in one run).
+    pub enabled: bool,
+    /// Step-down threshold (epoch flag-rate fraction).
+    pub low_water: f64,
+    /// Step-up threshold.
+    pub high_water: f64,
+    /// Batches per decision epoch.
+    pub epoch_batches: usize,
+    /// Epochs a rail holds after a step-up.
+    pub cooldown_epochs: u32,
+    /// Voltage step per decision, V (0 derives the guard-band step).
+    pub step_v: f64,
+}
+
+impl Default for CalibrateSection {
+    fn default() -> Self {
+        let c = CalibrateConfig::default();
+        Self {
+            enabled: false,
+            low_water: c.low_water,
+            high_water: c.high_water,
+            epoch_batches: c.epoch_batches,
+            cooldown_epochs: c.cooldown_epochs,
+            step_v: c.step_v,
+        }
+    }
+}
+
+impl CalibrateSection {
+    /// The controller knobs this section configures.
+    pub fn controller(&self) -> CalibrateConfig {
+        CalibrateConfig {
+            low_water: self.low_water,
+            high_water: self.high_water,
+            epoch_batches: self.epoch_batches,
+            cooldown_epochs: self.cooldown_epochs,
+            step_v: self.step_v,
+        }
+    }
+}
+
 /// Strip quotes from a TOML string value.
 fn unquote(v: &str) -> String {
     v.trim().trim_matches('"').to_string()
@@ -139,6 +195,7 @@ fn parse_bool(key: &str, v: &str) -> Result<bool> {
 }
 
 impl Config {
+    /// Load and parse a configuration file.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)?;
         Self::parse(&text).map_err(|e| Error::Config(format!("{path:?}: {e}")))
@@ -155,7 +212,7 @@ impl Config {
             }
             if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
                 section = name.trim().to_string();
-                if section != "flow" && section != "serve" && section != "sweep" {
+                if !matches!(section.as_str(), "flow" | "serve" | "sweep" | "calibrate") {
                     return Err(Error::Config(format!(
                         "line {}: unknown section [{section}]",
                         lineno + 1
@@ -199,6 +256,14 @@ impl Config {
             ("sweep", "threads") => self.sweep.threads = parse_num(key, v)?,
             ("sweep", "seed") => self.sweep.seed = parse_num(key, v)?,
             ("sweep", "max_trials") => self.sweep.max_trials = parse_num(key, v)?,
+            ("calibrate", "enabled") => self.calibrate.enabled = parse_bool(key, v)?,
+            ("calibrate", "low_water") => self.calibrate.low_water = parse_num(key, v)?,
+            ("calibrate", "high_water") => self.calibrate.high_water = parse_num(key, v)?,
+            ("calibrate", "epoch_batches") => self.calibrate.epoch_batches = parse_num(key, v)?,
+            ("calibrate", "cooldown_epochs") => {
+                self.calibrate.cooldown_epochs = parse_num(key, v)?
+            }
+            ("calibrate", "step_v") => self.calibrate.step_v = parse_num(key, v)?,
             _ => {
                 return Err(Error::Config(format!(
                     "unknown key '{key}' in section [{section}]"
@@ -208,6 +273,7 @@ impl Config {
         Ok(())
     }
 
+    /// Render the configuration back to TOML (`vstpu print-config`).
     pub fn to_toml(&self) -> String {
         format!(
             "[flow]\n\
@@ -234,7 +300,15 @@ impl Config {
              [sweep]\n\
              threads = {}\n\
              seed = {}\n\
-             max_trials = {}\n",
+             max_trials = {}\n\
+             \n\
+             [calibrate]\n\
+             enabled = {}\n\
+             low_water = {}\n\
+             high_water = {}\n\
+             epoch_batches = {}\n\
+             cooldown_epochs = {}\n\
+             step_v = {}\n",
             self.flow.array_size,
             self.flow.tech,
             self.flow.clock_mhz,
@@ -255,6 +329,12 @@ impl Config {
             self.sweep.threads,
             self.sweep.seed,
             self.sweep.max_trials,
+            self.calibrate.enabled,
+            self.calibrate.low_water,
+            self.calibrate.high_water,
+            self.calibrate.epoch_batches,
+            self.calibrate.cooldown_epochs,
+            self.calibrate.step_v,
         )
     }
 
@@ -312,6 +392,27 @@ mod tests {
         assert_eq!(back.flow.calibrate, cfg.flow.calibrate);
         assert_eq!(back.sweep.threads, cfg.sweep.threads);
         assert_eq!(back.sweep.max_trials, cfg.sweep.max_trials);
+        assert_eq!(back.calibrate.enabled, cfg.calibrate.enabled);
+        assert_eq!(back.calibrate.epoch_batches, cfg.calibrate.epoch_batches);
+        assert_eq!(back.calibrate.step_v, cfg.calibrate.step_v);
+    }
+
+    #[test]
+    fn calibrate_section_parses_and_rejects_typos() {
+        let cfg = Config::parse(
+            "[calibrate]\nenabled = true\nlow_water = 0.1\nhigh_water = 0.6\n\
+             epoch_batches = 8\ncooldown_epochs = 3\nstep_v = 0.025\n",
+        )
+        .unwrap();
+        assert!(cfg.calibrate.enabled);
+        assert_eq!(cfg.calibrate.epoch_batches, 8);
+        assert_eq!(cfg.calibrate.cooldown_epochs, 3);
+        let c = cfg.calibrate.controller();
+        assert_eq!(c.low_water, 0.1);
+        assert_eq!(c.high_water, 0.6);
+        assert_eq!(c.step_v, 0.025);
+        assert!(Config::parse("[calibrate]\nenabeld = true\n").is_err());
+        assert!(Config::parse("[calibrate]\nlow_water = soggy\n").is_err());
     }
 
     #[test]

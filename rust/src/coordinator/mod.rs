@@ -38,6 +38,7 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::cadflow::equal_quartile_clustering;
+use crate::calibrate::{CalibrateConfig, Calibrator};
 use crate::error::{Error, Result};
 use crate::floorplan;
 use crate::fpga::{Device, Partition};
@@ -69,8 +70,11 @@ pub struct CoordinatorConfig {
     pub batch: usize,
     /// Systolic-array edge the model runs on.
     pub array_size: u32,
+    /// Technology the array is placed on.
     pub tech: Technology,
+    /// Array clock, MHz.
     pub clock_mhz: f64,
+    /// Razor shadow-register configuration.
     pub razor: RazorConfig,
     /// Batches between voltage-controller epochs.
     pub voltage_epoch: usize,
@@ -78,10 +82,13 @@ pub struct CoordinatorConfig {
     pub seed: u64,
     /// Start rails at the static scheme over this range.
     pub v_lo: f64,
+    /// Top of the static stepping range (normally `v_nom`).
     pub v_hi: f64,
 }
 
 impl CoordinatorConfig {
+    /// The paper's primary serving setup: batch 32 on a 16x16 array at
+    /// 100 MHz, rails seeded across the vendor guard band.
     pub fn paper_default(tech: Technology) -> Self {
         let (v_lo, v_hi) = (tech.v_min, tech.v_nom);
         Self {
@@ -101,17 +108,22 @@ impl CoordinatorConfig {
 /// One inference request: a single 784-wide int8 sample.
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
+    /// Client-chosen request id (also the sharded engine's routing key).
     pub id: u64,
+    /// The int8 sample, [`MODEL_INPUT`] wide.
     pub input: Vec<i8>,
 }
 
 /// One response.
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
+    /// The request id this response answers.
     pub id: u64,
+    /// [`MODEL_OUTPUT`] f32 logits.
     pub logits: Vec<f32>,
     /// True if a silently-failing partition corrupted these logits.
     pub corrupted: bool,
+    /// End-to-end latency, microseconds.
     pub latency_us: u64,
 }
 
@@ -128,7 +140,9 @@ pub struct TelemetrySnapshot {
     pub flagged: Vec<bool>,
     /// Partitions silently failing.
     pub silent: Vec<bool>,
+    /// Batches executed so far.
     pub batches: u64,
+    /// Requests served so far.
     pub requests: u64,
     /// Fraction of batches where Razor flagged at least one owned
     /// partition (the serving-path "flag rate" the engine reports).
@@ -148,6 +162,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Batcher collecting `width`-wide samples into batches of `batch`.
     pub fn new(batch: usize, width: usize) -> Self {
         Self {
             batch,
@@ -183,6 +198,7 @@ impl Batcher {
         }
     }
 
+    /// Requests currently queued (below the batch size).
     pub fn pending(&self) -> usize {
         self.pending.len()
     }
@@ -202,6 +218,7 @@ impl Batcher {
 /// with *measured* toggle rates each epoch.
 #[derive(Debug, Clone)]
 pub struct VoltageController {
+    /// The voltage islands (rails mutate as epochs run).
     pub partitions: Vec<Partition>,
     netlist: SystolicNetlist,
     tech: Technology,
@@ -211,7 +228,9 @@ pub struct VoltageController {
     v_ceil: f64,
     /// EWMA per-row toggle rate (rows of the systolic array).
     row_toggle: Vec<f64>,
+    /// Razor flag per partition, from the last sense pass.
     pub flagged: Vec<bool>,
+    /// Silent-corruption flag per partition, from the last sense pass.
     pub silent: Vec<bool>,
     /// Partition indices this controller manages. Defaults to all of
     /// them; the sharded engine restricts each worker to its slice
@@ -220,6 +239,8 @@ pub struct VoltageController {
 }
 
 impl VoltageController {
+    /// Build the controller for `cfg`: generate the netlist, cluster by
+    /// min slack, floorplan, and seed the rails with Algorithm 1.
     pub fn new(cfg: &CoordinatorConfig) -> Result<Self> {
         let netlist =
             SystolicNetlist::generate(cfg.array_size, &cfg.tech, cfg.clock_mhz, cfg.seed);
@@ -344,6 +365,7 @@ impl VoltageController {
         }
     }
 
+    /// Current rail voltage of every partition, partition order.
     pub fn rails(&self) -> Vec<f64> {
         self.partitions.iter().map(|p| p.vccint).collect()
     }
@@ -382,13 +404,19 @@ impl VoltageController {
 
 /// The coordinator proper.
 pub struct Coordinator {
+    /// The configuration this stack was assembled from.
     pub config: CoordinatorConfig,
     model: LoadedModel,
     /// Which runtime backend serves this coordinator ("cpu", "reference").
     pub backend: &'static str,
     batcher: Batcher,
+    /// The voltage controller (rails + Razor telemetry).
     pub controller: VoltageController,
+    /// Closed-loop hysteresis controller; when attached it replaces the
+    /// raw Algorithm-2 epoch (see [`Coordinator::attach_calibrator`]).
+    pub calibrator: Option<Calibrator>,
     power_model: PowerModel,
+    /// Per-batch execution-latency histogram.
     pub latency: LatencyHistogram,
     batches: u64,
     requests: u64,
@@ -427,6 +455,7 @@ impl Coordinator {
             backend: backend.platform_name(),
             batcher,
             controller,
+            calibrator: None,
             power_model,
             latency: LatencyHistogram::default(),
             batches: 0,
@@ -440,6 +469,32 @@ impl Coordinator {
     /// partition slice (see [`VoltageController::restrict_to_shard`]).
     pub fn set_shard(&mut self, shard: usize, shard_count: usize) -> Result<()> {
         self.controller.restrict_to_shard(shard, shard_count)
+    }
+
+    /// Attach a closed-loop [`Calibrator`] seeded at the current rails.
+    ///
+    /// From then on `infer_batch` feeds every batch's per-partition
+    /// Razor flags into the calibrator and applies its hysteresis
+    /// decision at each `epoch_batches` boundary, instead of running the
+    /// raw Algorithm-2 epoch. The clamp bounds come from
+    /// [`crate::study::rail_bounds`] — commercial technologies never
+    /// leave the vendor guard band.
+    pub fn attach_calibrator(&mut self, mut cfg: CalibrateConfig) -> Result<()> {
+        cfg.validate()?;
+        cfg.step_v = cfg.resolved_step(&self.config.tech);
+        let (_, v_floor) = crate::study::rail_bounds(&self.config.tech);
+        self.calibrator = Some(Calibrator::new(
+            cfg,
+            v_floor,
+            self.config.tech.v_nom,
+            &self.controller.rails(),
+        ));
+        Ok(())
+    }
+
+    /// Detach and return the calibrator (trajectory included), if any.
+    pub fn take_calibrator(&mut self) -> Option<Calibrator> {
+        self.calibrator.take()
     }
 
     /// Execute one packed batch through the model artifact; returns
@@ -504,8 +559,17 @@ impl Coordinator {
         self.batches += 1;
         self.requests += reqs.len() as u64;
 
-        // Voltage epoch (Algorithm 2 with measured activity).
-        if self.batches % self.config.voltage_epoch as u64 == 0 {
+        // Voltage control: the closed-loop calibrator when attached
+        // (hysteresis decisions at batch-count boundaries), the raw
+        // Algorithm-2 epoch otherwise.
+        if let Some(cal) = self.calibrator.as_mut() {
+            self.controller.sense();
+            cal.observe_batch(&self.controller.flagged, self.controller.owned());
+            if self.batches % cal.config().epoch_batches as u64 == 0 {
+                let owned = self.controller.owned().to_vec();
+                cal.end_epoch(&mut self.controller.partitions, &owned);
+            }
+        } else if self.batches % self.config.voltage_epoch as u64 == 0 {
             self.controller.epoch();
         } else {
             self.controller.sense();

@@ -19,34 +19,44 @@ pub const SLICES_PER_MAC: u32 = 4;
 /// Inclusive rectangle of slice coordinates, `SLICE_X{x0..=x1}Y{y0..=y1}`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Rect {
+    /// Left slice column.
     pub x0: u32,
+    /// Bottom slice row.
     pub y0: u32,
+    /// Right slice column (inclusive).
     pub x1: u32,
+    /// Top slice row (inclusive).
     pub y1: u32,
 }
 
 impl Rect {
+    /// Rectangle from inclusive corners; panics when inverted.
     pub fn new(x0: u32, y0: u32, x1: u32, y1: u32) -> Self {
         assert!(x0 <= x1 && y0 <= y1, "degenerate rect");
         Self { x0, y0, x1, y1 }
     }
 
+    /// Width in slice columns.
     pub fn width(&self) -> u32 {
         self.x1 - self.x0 + 1
     }
 
+    /// Height in slice rows.
     pub fn height(&self) -> u32 {
         self.y1 - self.y0 + 1
     }
 
+    /// Area in slices.
     pub fn area(&self) -> u64 {
         self.width() as u64 * self.height() as u64
     }
 
+    /// Does the rectangle contain slice `(x, y)`?
     pub fn contains(&self, x: u32, y: u32) -> bool {
         (self.x0..=self.x1).contains(&x) && (self.y0..=self.y1).contains(&y)
     }
 
+    /// Do the two rectangles share any slice?
     pub fn overlaps(&self, other: &Rect) -> bool {
         self.x0 <= other.x1 && other.x0 <= self.x1 && self.y0 <= other.y1 && other.y0 <= self.y1
     }
@@ -59,6 +69,7 @@ impl Rect {
         (cx1 - cx2).abs() + (cy1 - cy2).abs()
     }
 
+    /// Centre point in slice coordinates.
     pub fn centre(&self) -> (f64, f64) {
         (
             (self.x0 + self.x1) as f64 / 2.0,
@@ -75,8 +86,11 @@ impl Rect {
 /// The FPGA fabric: a `slice_cols x slice_rows` grid of slices.
 #[derive(Debug, Clone)]
 pub struct Device {
+    /// Device name, e.g. `vfpga-16x16`.
     pub name: String,
+    /// Slice columns on the fabric.
     pub slice_cols: u32,
+    /// Slice rows on the fabric.
     pub slice_rows: u32,
 }
 
@@ -96,10 +110,12 @@ impl Device {
         }
     }
 
+    /// The whole fabric as a rectangle.
     pub fn bounds(&self) -> Rect {
         Rect::new(0, 0, self.slice_cols - 1, self.slice_rows - 1)
     }
 
+    /// Total slice count of the fabric.
     pub fn total_slices(&self) -> u64 {
         self.slice_cols as u64 * self.slice_rows as u64
     }
@@ -123,6 +139,7 @@ impl Device {
 pub struct Partition {
     /// Partition index (the paper's `partition-1` .. `partition-n`).
     pub id: usize,
+    /// Slice rectangle of the island.
     pub rect: Rect,
     /// MACs placed inside this island.
     pub macs: Vec<MacId>,
@@ -131,6 +148,7 @@ pub struct Partition {
 }
 
 impl Partition {
+    /// Number of MACs placed in this island.
     pub fn mac_count(&self) -> usize {
         self.macs.len()
     }

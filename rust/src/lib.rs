@@ -38,6 +38,9 @@
 //!   the (optional, unlinked by default) PJRT path,
 //! * [`coordinator`] — the serving loop: router, batcher, telemetry and
 //!   the runtime voltage controller,
+//! * [`calibrate`] — the closed-loop runtime voltage calibration: a
+//!   per-partition hysteresis controller fed by live Razor flag-rate
+//!   telemetry (`vstpu calibrate`, `BENCH_calibrate.json`),
 //! * [`serve`] — the sharded multi-worker engine: N coordinator threads
 //!   behind a deterministic router with dynamic batching, bounded-queue
 //!   backpressure and the `bench-serve` perf harness,
@@ -61,9 +64,16 @@
 //! let report = VivadoFlow::new(cfg).run().unwrap();
 //! assert!(report.power.scaled_total_mw < report.power.baseline_total_mw);
 //! ```
+//!
+//! ARCHITECTURE.md holds the top-down tour (module map, request
+//! lifecycle, data flow); docs/BENCH_SCHEMAS.md documents the three
+//! machine-readable bench artifacts.
+
+#![warn(missing_docs)]
 
 pub mod baseline;
 pub mod cadflow;
+pub mod calibrate;
 pub mod cluster;
 pub mod config;
 pub mod constraints;

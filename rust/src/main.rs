@@ -7,8 +7,8 @@
 //! * `timing-report` — print a Table I fragment (E1)
 //! * `figs`          — emit CSV series for Figs 4/5, 10-14, 15/16
 //! * `cluster`       — run one clustering algorithm over the min-slacks
-//! * `calibrate`     — run the Razor trial-run calibration and print the
-//!                     rail trajectory (E10/E11)
+//! * `calibrate`     — closed-loop runtime voltage calibration on the
+//!                     serving path (writes BENCH_calibrate.json)
 //! * `serve`         — start the async coordinator on a synthetic client
 //! * `e2e`           — the end-to-end accuracy/power sweep (E12)
 //! * `calibrate-tech`— re-fit the power constants from Table II numbers

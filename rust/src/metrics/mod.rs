@@ -5,14 +5,20 @@
 /// Summary statistics of a sample.
 #[derive(Debug, Clone, Copy)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest value.
     pub min: f64,
+    /// Largest value.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarise `data` (NaNs out for an empty sample).
     pub fn of(data: &[f64]) -> Self {
         let n = data.len();
         if n == 0 {
@@ -77,11 +83,14 @@ pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
 pub struct LatencyHistogram {
     /// bucket i counts samples in [2^i, 2^(i+1)) microseconds.
     pub buckets: Vec<u64>,
+    /// Samples recorded.
     pub count: u64,
+    /// Sum of all recorded latencies, microseconds.
     pub total_us: u64,
 }
 
 impl LatencyHistogram {
+    /// Record one latency sample (microseconds).
     pub fn record_us(&mut self, us: u64) {
         let b = (64 - us.max(1).leading_zeros()) as usize;
         if self.buckets.len() <= b {
@@ -105,6 +114,7 @@ impl LatencyHistogram {
         self.total_us += other.total_us;
     }
 
+    /// Mean recorded latency, microseconds (NaN when empty).
     pub fn mean_us(&self) -> f64 {
         if self.count == 0 {
             f64::NAN

@@ -34,11 +34,14 @@ pub const MAC_OUT_BITS: u32 = 17;
 /// Grid coordinate of a MAC inside the systolic array.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct MacId {
+    /// Array row (partial sums flow toward higher rows).
     pub row: u32,
+    /// Array column.
     pub col: u32,
 }
 
 impl MacId {
+    /// MAC at `(row, col)`.
     pub fn new(row: u32, col: u32) -> Self {
         Self { row, col }
     }
@@ -75,6 +78,7 @@ pub struct TimingArc {
 }
 
 impl TimingArc {
+    /// Total (logic + net) path delay at nominal voltage, ns.
     pub fn total_delay_ns(&self) -> f64 {
         self.logic_delay_ns + self.net_delay_ns
     }
@@ -187,6 +191,7 @@ impl SystolicNetlist {
         }
     }
 
+    /// MACs in the array (`size * size`).
     pub fn mac_count(&self) -> usize {
         (self.size * self.size) as usize
     }

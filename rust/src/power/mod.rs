@@ -29,11 +29,14 @@ pub const PAPER_CLOCK_MHZ: f64 = 100.0;
 /// Dynamic-power model for one technology at one clock.
 #[derive(Debug, Clone)]
 pub struct PowerModel {
+    /// The technology whose constants drive the model.
     pub tech: Technology,
+    /// Array clock, MHz.
     pub clock_mhz: f64,
 }
 
 impl PowerModel {
+    /// Model for `tech` at `clock_mhz`.
     pub fn new(tech: Technology, clock_mhz: f64) -> Self {
         Self { tech, clock_mhz }
     }

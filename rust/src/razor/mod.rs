@@ -127,6 +127,7 @@ pub fn mac_outcome(
 /// sees (paper Fig 8's `timing_fail-part-i`).
 #[derive(Debug, Clone, Copy)]
 pub struct PartitionTrial {
+    /// Partition index the trial ran over.
     pub partition: usize,
     /// True iff *any* MAC in the partition flagged or failed. (The
     /// paper's §III-B prose says the partition flag is the AND of the

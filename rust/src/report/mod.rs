@@ -5,6 +5,7 @@
 use std::fmt::Write as _;
 
 use crate::cadflow::FlowReport;
+use crate::calibrate::CalibrateReport;
 use crate::cluster::{Clustering, NOISE};
 use crate::serve::BenchReport;
 use crate::sweep::SweepReport;
@@ -218,6 +219,11 @@ pub fn bench_serve_json(rep: &BenchReport) -> String {
         "  \"razor_flag_rate\": {},",
         json_f64(rep.razor_flag_rate)
     );
+    let _ = writeln!(
+        s,
+        "  \"calibration_enabled\": {},",
+        rep.calibration_enabled
+    );
     let _ = writeln!(s, "  \"power_mw\": {{");
     let _ = writeln!(s, "    \"total\": {},", json_f64(rep.power_total_mw));
     let _ = writeln!(s, "    \"overhead\": {},", json_f64(rep.power_overhead_mw));
@@ -308,11 +314,12 @@ pub fn bench_sweep_json(rep: &SweepReport) -> String {
             let sc = &r.scenario;
             let head = format!(
                 "    {{\n      \"algo\": \"{}\", \"tech\": \"{}\", \"array_size\": {}, \
-                 \"shift_toggle\": {}, \"seed\": {},",
+                 \"shift_toggle\": {}, \"rail_mode\": \"{}\", \"seed\": {},",
                 sc.algo.name(),
                 sc.tech,
                 sc.array_size,
                 json_f64(sc.shift_toggle),
+                sc.rail_mode.name(),
                 sc.seed
             );
             match &r.outcome {
@@ -350,11 +357,13 @@ pub fn bench_sweep_json(rep: &SweepReport) -> String {
         .map(|w| {
             format!(
                 "    {{\"tech\": \"{}\", \"array_size\": {}, \"shift_toggle\": {}, \
+                 \"rail_mode\": \"{}\", \
                  \"best_power_algo\": \"{}\", \"best_power_mw\": {}, \
                  \"best_accuracy_algo\": \"{}\", \"best_silent_fraction\": {}}}",
                 w.tech,
                 w.array_size,
                 json_f64(w.shift_toggle),
+                w.rail_mode,
                 w.best_power_algo,
                 json_f64(w.best_power_mw),
                 w.best_accuracy_algo,
@@ -363,6 +372,65 @@ pub fn bench_sweep_json(rep: &SweepReport) -> String {
         })
         .collect();
     let _ = writeln!(s, "{}", wcells.join(",\n"));
+    let _ = writeln!(s, "  ]");
+    let _ = writeln!(s, "}}");
+    s
+}
+
+/// Render `BENCH_calibrate.json` — the machine-readable trajectory of
+/// one closed-loop calibration run (schema `vstpu-bench-calibrate/v1`;
+/// see docs/BENCH_SCHEMAS.md). Everything except the `wall_s` line is
+/// byte-deterministic across runs at a fixed seed; `wall_s` sits alone
+/// on its own line so consumers (and the determinism test) can filter
+/// it out.
+pub fn bench_calibrate_json(rep: &CalibrateReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"schema\": \"{}\",", rep.schema);
+    let _ = writeln!(s, "  \"quick\": {},", rep.quick);
+    let _ = writeln!(s, "  \"seed\": {},", rep.seed);
+    let _ = writeln!(s, "  \"tech\": \"{}\",", rep.tech);
+    let _ = writeln!(s, "  \"backend\": \"{}\",", rep.backend);
+    let _ = writeln!(s, "  \"shards\": {},", rep.shards);
+    let _ = writeln!(s, "  \"requests\": {},", rep.requests);
+    let _ = writeln!(s, "  \"max_batch\": {},", rep.max_batch);
+    let _ = writeln!(s, "  \"epoch_batches\": {},", rep.epoch_batches);
+    let _ = writeln!(s, "  \"step_v\": {},", json_f64(rep.step_v));
+    let _ = writeln!(s, "  \"low_water\": {},", json_f64(rep.low_water));
+    let _ = writeln!(s, "  \"high_water\": {},", json_f64(rep.high_water));
+    let _ = writeln!(s, "  \"cooldown_epochs\": {},", rep.cooldown_epochs);
+    let _ = writeln!(s, "  \"v_floor\": {},", json_f64(rep.v_floor));
+    let _ = writeln!(s, "  \"v_ceil\": {},", json_f64(rep.v_ceil));
+    let _ = writeln!(s, "  \"epochs\": {},", rep.epochs);
+    let _ = writeln!(s, "  \"convergence_epoch\": {},", rep.convergence_epoch);
+    let _ = writeln!(s, "  \"converged\": {},", rep.converged);
+    let _ = writeln!(
+        s,
+        "  \"flag_rate_final\": {},",
+        json_f64(rep.flag_rate_final)
+    );
+    let _ = writeln!(s, "  \"energy_per_request_uj\": {{");
+    let _ = writeln!(s, "    \"before\": {},", json_f64(rep.energy_uj_before));
+    let _ = writeln!(s, "    \"after\": {}", json_f64(rep.energy_uj_after));
+    let _ = writeln!(s, "  }},");
+    let _ = writeln!(s, "  \"wall_s\": {},", json_f64(rep.wall_s));
+    let _ = writeln!(s, "  \"partitions\": [");
+    let cells: Vec<String> = rep
+        .partitions
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"partition\": {}, \"shard\": {}, \"converged_epoch\": {},\n      \
+                 \"voltages\": {},\n      \"flag_rates\": {}}}",
+                p.partition,
+                p.shard,
+                p.converged_epoch,
+                json_f64_list(&p.voltages),
+                json_f64_list(&p.flag_rates)
+            )
+        })
+        .collect();
+    let _ = writeln!(s, "{}", cells.join(",\n"));
     let _ = writeln!(s, "  ]");
     let _ = writeln!(s, "}}");
     s
@@ -511,6 +579,7 @@ mod tests {
             razor_flag_rate: 0.0,
             power_total_mw: 400.0,
             power_overhead_mw: 50.0,
+            calibration_enabled: false,
             shards: vec![ShardBench {
                 shard: 0,
                 requests: 32,
@@ -530,6 +599,7 @@ mod tests {
             "\"result_checksum\": \"00000000deadbeef\"",
             "\"per_partition\"",
             "\"p99\": 0.000000",
+            "\"calibration_enabled\": false",
         ] {
             assert!(json.contains(needle), "missing {needle} in:\n{json}");
         }
@@ -543,8 +613,8 @@ mod tests {
     #[test]
     fn bench_sweep_json_is_well_formed() {
         use crate::sweep::{
-            Scenario, ScenarioRecord, ScenarioResult, SweepAlgo, SweepReport, WinnerRow,
-            SWEEP_SCHEMA,
+            RailMode, Scenario, ScenarioRecord, ScenarioResult, SweepAlgo, SweepReport,
+            WinnerRow, SWEEP_SCHEMA,
         };
         let rep = SweepReport {
             schema: SWEEP_SCHEMA,
@@ -559,6 +629,7 @@ mod tests {
                         tech: "academic-22nm".into(),
                         array_size: 16,
                         shift_toggle: 0.45,
+                        rail_mode: RailMode::Runtime,
                         seed: 99,
                     },
                     outcome: Ok(ScenarioResult {
@@ -580,6 +651,7 @@ mod tests {
                         tech: "academic-22nm".into(),
                         array_size: 16,
                         shift_toggle: 0.45,
+                        rail_mode: RailMode::Static,
                         seed: 100,
                     },
                     // Quotes and newlines in the message must be escaped.
@@ -590,6 +662,7 @@ mod tests {
                 tech: "academic-22nm".into(),
                 array_size: 16,
                 shift_toggle: 0.45,
+                rail_mode: "runtime",
                 best_power_algo: "dbscan".into(),
                 best_power_mw: 200.0,
                 best_accuracy_algo: "dbscan".into(),
@@ -607,6 +680,8 @@ mod tests {
             "\"error\": \"clustering error: \\\"k\\\"\\nexceeds points\"",
             "\"best_power_algo\": \"dbscan\"",
             "\"noise_reassigned\": 3",
+            "\"rail_mode\": \"runtime\"",
+            "\"rail_mode\": \"static\"",
         ] {
             assert!(json.contains(needle), "missing {needle} in:\n{json}");
         }
@@ -615,6 +690,60 @@ mod tests {
         // holds structurally.
         for line in json.lines().filter(|l| l.contains("\"wall_ms\"")) {
             assert_eq!(line.matches('"').count(), 2, "wall_ms shares a line: {line}");
+        }
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn bench_calibrate_json_is_well_formed() {
+        use crate::calibrate::{CalibrateReport, PartitionTrace, CALIBRATE_SCHEMA};
+        let rep = CalibrateReport {
+            schema: CALIBRATE_SCHEMA,
+            quick: true,
+            seed: 7,
+            tech: "academic-22nm".into(),
+            backend: "reference".into(),
+            shards: 2,
+            requests: 4096,
+            max_batch: 32,
+            epoch_batches: 2,
+            step_v: 0.0125,
+            low_water: 0.05,
+            high_water: 0.5,
+            cooldown_epochs: 2,
+            v_floor: 0.47,
+            v_ceil: 1.0,
+            epochs: 3,
+            convergence_epoch: 2,
+            converged: true,
+            flag_rate_final: 0.0,
+            energy_uj_before: 0.12,
+            energy_uj_after: f64::NAN, // must render as a valid number
+            wall_s: 1.5,
+            partitions: vec![PartitionTrace {
+                partition: 0,
+                shard: 0,
+                converged_epoch: 2,
+                voltages: vec![0.99, 0.97, 0.96, 0.96],
+                flag_rates: vec![0.0, 0.0, 0.0],
+            }],
+        };
+        let json = bench_calibrate_json(&rep);
+        for needle in [
+            "\"schema\": \"vstpu-bench-calibrate/v1\"",
+            "\"energy_per_request_uj\"",
+            "\"convergence_epoch\": 2",
+            "\"voltages\": [0.990000,0.970000,0.960000,0.960000]",
+            "\"after\": 0.000000",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert!(!json.contains("NaN"));
+        // The wall-time measurement sits alone on its line so the
+        // determinism contract (strip wall_s, compare the rest) holds.
+        for line in json.lines().filter(|l| l.contains("\"wall_s\"")) {
+            assert_eq!(line.matches('"').count(), 2, "wall_s shares a line: {line}");
         }
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());

@@ -48,11 +48,14 @@ pub const ARRAY_SIZES: [usize; 3] = [16, 32, 64];
 /// Tensor signature as recorded by `aot.py`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSig {
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
+    /// Element dtype ("int8", "int32", "float32").
     pub dtype: String,
 }
 
 impl TensorSig {
+    /// Signature from a shape and dtype name.
     pub fn new(shape: Vec<usize>, dtype: &str) -> Self {
         Self {
             shape,
@@ -60,6 +63,7 @@ impl TensorSig {
         }
     }
 
+    /// Elements the shape describes.
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
     }
@@ -68,25 +72,32 @@ impl TensorSig {
 /// Artifact signature: input and output tensor lists.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArtifactSig {
+    /// Input tensor signatures, call order.
     pub inputs: Vec<TensorSig>,
+    /// Output tensor signatures, return order.
     pub outputs: Vec<TensorSig>,
 }
 
 /// Host tensor crossing the backend boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
+    /// int8 data + shape.
     I8(Vec<i8>, Vec<usize>),
+    /// int32 data + shape.
     I32(Vec<i32>, Vec<usize>),
+    /// float32 data + shape.
     F32(Vec<f32>, Vec<usize>),
 }
 
 impl Tensor {
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             Tensor::I8(_, s) | Tensor::I32(_, s) | Tensor::F32(_, s) => s,
         }
     }
 
+    /// The tensor's dtype name.
     pub fn dtype(&self) -> &'static str {
         match self {
             Tensor::I8(..) => "int8",
@@ -95,6 +106,7 @@ impl Tensor {
         }
     }
 
+    /// Element count of the stored data.
     pub fn len(&self) -> usize {
         match self {
             Tensor::I8(d, _) => d.len(),
@@ -103,6 +115,7 @@ impl Tensor {
         }
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -303,12 +316,14 @@ fn round_half_even(y: f32) -> f32 {
 /// depends on them beyond determinism and realistic bit densities.
 #[derive(Debug, Clone)]
 pub struct RefMlp {
+    /// Batch the model executes at.
     pub batch: usize,
     weights: Vec<Vec<i8>>, // weights[l]: (K_l x N_l) row-major
     scales: Vec<f32>,
 }
 
 impl RefMlp {
+    /// Build the deterministic model at batch `batch`.
     pub fn new(batch: usize) -> Self {
         let mut weights = Vec::with_capacity(MODEL_LAYERS.len() - 1);
         let mut scales = Vec::with_capacity(MODEL_LAYERS.len() - 1);
@@ -535,7 +550,9 @@ impl RefOp {
 
 /// A loaded artifact ready to execute.
 pub struct LoadedModel {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// The signature every call is validated against.
     pub sig: ArtifactSig,
     op: RefOp,
 }
@@ -730,6 +747,7 @@ impl Engine {
         v
     }
 
+    /// Signature of one artifact, if present in the manifest.
     pub fn signature(&self, name: &str) -> Option<&ArtifactSig> {
         self.manifest.get(name)
     }

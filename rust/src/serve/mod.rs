@@ -53,6 +53,7 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::calibrate::{CalibrateConfig, Calibrator};
 use crate::coordinator::{
     Coordinator, CoordinatorConfig, InferenceRequest, InferenceResponse, TelemetrySnapshot,
     MODEL_INPUT,
@@ -83,9 +84,16 @@ pub struct EngineConfig {
     pub queue_depth: usize,
     /// Per-worker serving-stack configuration.
     pub coordinator: CoordinatorConfig,
+    /// Closed-loop voltage calibration (the `[calibrate]` config
+    /// section): when set, every shard attaches a
+    /// [`crate::calibrate::Calibrator`] to its coordinator and the raw
+    /// Algorithm-2 epoch is replaced by the hysteresis controller.
+    pub calibrate: Option<CalibrateConfig>,
 }
 
 impl EngineConfig {
+    /// The paper's serving setup: 4 shards, batch-32 dynamic batching
+    /// over 2 ms deadlines, calibration off.
     pub fn paper_default(tech: Technology) -> Self {
         let coordinator = CoordinatorConfig::paper_default(tech);
         Self {
@@ -94,6 +102,7 @@ impl EngineConfig {
             batch_deadline_us: 2_000,
             queue_depth: 2 * coordinator.batch,
             coordinator,
+            calibrate: None,
         }
     }
 }
@@ -114,6 +123,8 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
+    /// Batcher with a `max_batch` size trigger and a `deadline_us`
+    /// deadline trigger over `width`-wide samples.
     pub fn new(max_batch: usize, width: usize, deadline_us: u64) -> Self {
         Self {
             max_batch,
@@ -162,6 +173,7 @@ impl DynamicBatcher {
         }
     }
 
+    /// Requests currently queued (below the size trigger).
     pub fn pending(&self) -> usize {
         self.pending.len()
     }
@@ -175,10 +187,13 @@ impl DynamicBatcher {
 /// What one worker hands back at shutdown.
 #[derive(Debug, Clone)]
 pub struct ShardReport {
+    /// Shard index.
     pub shard: usize,
     /// Runtime backend the shard served on ("reference", "cpu").
     pub backend: &'static str,
+    /// Requests this shard served.
     pub requests: u64,
+    /// Batches this shard executed.
     pub batches: u64,
     /// Mean real-request fill of executed batches, in [0, 1].
     pub batch_fill: f64,
@@ -186,12 +201,17 @@ pub struct ShardReport {
     /// Bucket upper bounds from the power-of-two histogram: the worker
     /// accumulates bounded state, not a per-request sample vector.
     pub p50_us: f64,
+    /// p99 latency bucket upper bound, microseconds.
     pub p99_us: f64,
+    /// Mean end-to-end latency, microseconds.
     pub mean_us: f64,
     /// Bucketed end-to-end latencies (mergeable across shards).
     pub latency: LatencyHistogram,
     /// Final telemetry: rails, flag rate, per-partition power.
     pub snapshot: TelemetrySnapshot,
+    /// The shard's closed-loop calibrator (trajectory included), when
+    /// [`EngineConfig::calibrate`] was set.
+    pub calibration: Option<Calibrator>,
 }
 
 struct Envelope {
@@ -205,6 +225,25 @@ struct Envelope {
 /// shards in the same order — the property the bench determinism rides
 /// on. Dropping the handle via [`ShardedEngine::shutdown`] closes every
 /// queue, drains in-flight requests and joins the workers.
+///
+/// ```
+/// use std::{path::Path, sync::mpsc};
+/// use vstpu::coordinator::{InferenceRequest, MODEL_INPUT};
+/// use vstpu::serve::{EngineConfig, ShardedEngine};
+/// use vstpu::tech::Technology;
+///
+/// let mut cfg = EngineConfig::paper_default(Technology::artix7_28nm());
+/// cfg.shards = 2;
+/// cfg.max_batch = 1; // every push is its own batch
+/// // No artifacts directory: the pure-Rust reference backend serves.
+/// let engine = ShardedEngine::start(Path::new("/nonexistent"), cfg).unwrap();
+/// let (tx, rx) = mpsc::channel();
+/// let req = InferenceRequest { id: 7, input: vec![1; MODEL_INPUT] };
+/// engine.submit(req, tx).unwrap();
+/// let resp = rx.recv().unwrap();
+/// assert_eq!(resp.id, 7);
+/// engine.shutdown().unwrap();
+/// ```
 pub struct ShardedEngine {
     senders: Vec<SyncSender<Envelope>>,
     handles: Vec<JoinHandle<Result<ShardReport>>>,
@@ -243,6 +282,7 @@ impl ShardedEngine {
         })
     }
 
+    /// Worker-thread count.
     pub fn shards(&self) -> usize {
         self.senders.len()
     }
@@ -358,6 +398,9 @@ fn worker(
 ) -> Result<ShardReport> {
     let mut coord = Coordinator::open(&artifacts_dir, cfg.coordinator.clone())?;
     coord.set_shard(shard, cfg.shards)?;
+    if let Some(cal) = &cfg.calibrate {
+        coord.attach_calibrator(cal.clone())?;
+    }
     let mut batcher = DynamicBatcher::new(cfg.max_batch, MODEL_INPUT, cfg.batch_deadline_us);
     let mut waiting: Vec<(Instant, mpsc::Sender<InferenceResponse>)> = Vec::new();
     // Bounded accumulator: a long-lived shard must not grow per-request
@@ -399,6 +442,7 @@ fn worker(
         run_batch(&mut coord, &batch, &mut waiting, &mut latency)?;
     }
 
+    let calibration = coord.take_calibrator();
     let snap = coord.snapshot();
     let batch_fill = if snap.batches == 0 {
         0.0
@@ -425,6 +469,7 @@ fn worker(
         mean_us,
         latency,
         snapshot: snap,
+        calibration,
     })
 }
 
@@ -451,17 +496,20 @@ fn run_batch(
 /// Configuration of one `bench-serve` run.
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
+    /// Engine shape (shards, batching, queue depth, calibration).
     pub engine: EngineConfig,
     /// Total requests pushed through the router.
     pub requests: usize,
     /// Workload seed — fixes inputs, routing and therefore shard results.
     pub seed: u64,
+    /// Workload bit-fluctuation profile.
     pub profile: FluctuationProfile,
     /// CI smoke mode (recorded in the JSON so gates compare like to like).
     pub quick: bool,
 }
 
 impl BenchConfig {
+    /// The default load shape: 4096 requests over 4 shards.
     pub fn paper_default(tech: Technology) -> Self {
         Self {
             engine: EngineConfig::paper_default(tech),
@@ -485,11 +533,17 @@ impl BenchConfig {
 /// One shard's block in `BENCH_serve.json`.
 #[derive(Debug, Clone)]
 pub struct ShardBench {
+    /// Shard index.
     pub shard: usize,
+    /// Requests the shard served.
     pub requests: u64,
+    /// Batches the shard executed.
     pub batches: u64,
+    /// Mean real-request fill of executed batches.
     pub batch_fill: f64,
+    /// p50 end-to-end latency bucket upper bound, microseconds.
     pub p50_us: f64,
+    /// p99 end-to-end latency bucket upper bound, microseconds.
     pub p99_us: f64,
     /// Final rails of every partition in the shard's local array.
     pub rails: Vec<f64>,
@@ -504,27 +558,47 @@ pub struct ShardBench {
 /// The machine-readable outcome `report::bench_serve_json` renders.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
+    /// Schema identifier ([`BENCH_SCHEMA`]).
     pub schema: &'static str,
+    /// CI smoke mode flag.
     pub quick: bool,
+    /// Workload seed.
     pub seed: u64,
+    /// Workload bit-fluctuation profile name.
     pub fluctuation: &'static str,
+    /// Runtime backend the shards served on.
     pub backend: String,
+    /// Worker-thread count.
     pub shard_count: usize,
+    /// Dynamic-batching size trigger.
     pub max_batch: usize,
+    /// Dynamic-batching deadline trigger, microseconds.
     pub batch_deadline_us: u64,
+    /// Bounded per-shard queue depth, requests.
     pub queue_depth: usize,
+    /// Requests served.
     pub requests: u64,
+    /// Wall time of the whole run, seconds (a measurement).
     pub wall_s: f64,
+    /// Throughput — the number the CI gate compares.
     pub requests_per_s: f64,
+    /// Exact p50 end-to-end latency, microseconds.
     pub p50_us: f64,
+    /// Exact p99 end-to-end latency, microseconds.
     pub p99_us: f64,
+    /// Mean end-to-end latency, microseconds.
     pub mean_us: f64,
+    /// Mean real-request fill of executed batches.
     pub batch_fill: f64,
     /// Batch-weighted mean Razor flag rate across shards.
     pub razor_flag_rate: f64,
     /// Overhead + every shard's owned-partition power.
     pub power_total_mw: f64,
+    /// The array-independent overhead share of `power_total_mw`.
     pub power_overhead_mw: f64,
+    /// True when the closed-loop calibrator ran inside every shard.
+    pub calibration_enabled: bool,
+    /// Per-shard blocks.
     pub shards: Vec<ShardBench>,
 }
 
@@ -532,13 +606,18 @@ pub struct BenchReport {
 /// so the sorted result stream is digested in a single pass with no
 /// per-shard rescans or logits clones.
 #[derive(Debug, Clone, Copy)]
-pub struct Fnv1a(pub u64);
+pub struct Fnv1a(
+    /// The current 64-bit FNV-1a state (rendered as 16 hex digits).
+    pub u64,
+);
 
 impl Fnv1a {
+    /// Fresh digest at the FNV-1a 64 offset basis.
     pub fn new() -> Self {
         Self(0xcbf2_9ce4_8422_2325)
     }
 
+    /// Fold raw bytes into the digest.
     pub fn eat(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.0 ^= b as u64;
@@ -703,6 +782,7 @@ pub fn run_bench(artifacts_dir: &Path, cfg: BenchConfig) -> Result<BenchReport> 
         razor_flag_rate,
         power_total_mw,
         power_overhead_mw,
+        calibration_enabled: cfg.engine.calibrate.is_some(),
         shards: shard_out,
     })
 }

@@ -66,13 +66,75 @@ pub fn equal_quantile_clustering(slacks: &[f64], n: usize) -> Clustering {
     Clustering { labels, k: n }
 }
 
+/// FlowKind-aware rail bounds for a technology: `(v_lo, v_floor)`.
+///
+/// `v_lo` is the bottom of the Algorithm-1 stepping range; `v_floor` is
+/// the lowest rail any runtime scheme (trial-run Algorithm 2 or the
+/// closed-loop [`crate::calibrate`] controller) may ever drive. The
+/// commercial (Vivado) flow never leaves the vendor guard band — it
+/// cannot simulate the critical region, so both bounds sit at `v_min`;
+/// the academic (VTR) flow may descend toward the near-threshold floor.
+pub fn rail_bounds(tech: &Technology) -> (f64, f64) {
+    match tech.flow {
+        FlowKind::Vivado => (tech.v_min, tech.v_min),
+        FlowKind::Vtr => (
+            (tech.v_th + 0.1).min(tech.v_min),
+            runtime_scheme::physical_floor(tech),
+        ),
+    }
+}
+
 /// Clustering -> band floorplan -> Algorithm-1 rail seeding ->
-/// Algorithm-2 Razor calibration: the partition-preparation recipe
-/// shared by the tradeoff study and the scenario sweep. Respects the
-/// technology's CAD flow: the commercial (Vivado) flow stays inside the
-/// vendor guard band (it cannot drive sub-guard-band rails — cadflow
-/// rejects such configurations outright), while the academic (VTR)
-/// flow may descend toward the NTC floor.
+/// optionally Algorithm-2 Razor calibration: the partition-preparation
+/// recipe shared by the tradeoff study and the scenario sweep. Bounds
+/// come from [`rail_bounds`] — the commercial (Vivado) flow stays inside
+/// the vendor guard band (it cannot drive sub-guard-band rails — cadflow
+/// rejects such configurations outright), while the academic (VTR) flow
+/// may descend toward the NTC floor.
+///
+/// `runtime = false` stops after the static scheme — the "static-only"
+/// arm of the sweep's rail-mode axis.
+#[allow(clippy::too_many_arguments)]
+pub fn partitions_with_rails(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    clustering: &Clustering,
+    slacks: &[f64],
+    max_trials: usize,
+    calib_toggle: f64,
+    runtime: bool,
+) -> Result<Vec<Partition>> {
+    let device = Device::for_array(netlist.size);
+    let mut parts = floorplan::bands(&device, clustering, netlist.size)?;
+    let (v_lo, floor) = rail_bounds(tech);
+    let rails = static_scheme::assign(clustering, slacks, tech.v_nom, v_lo)?;
+    for p in parts.iter_mut() {
+        p.vccint = rails
+            .iter()
+            .find(|r| r.partition == p.id)
+            .expect("rail per partition")
+            .vccint;
+    }
+    if runtime {
+        let vs = static_scheme::step(tech.v_nom, v_lo, clustering.k.max(4));
+        runtime_scheme::calibrate(
+            netlist,
+            tech,
+            razor,
+            &mut parts,
+            vs,
+            max_trials,
+            floor,
+            |_| calib_toggle,
+        );
+    }
+    Ok(parts)
+}
+
+/// [`partitions_with_rails`] with the runtime scheme enabled — the
+/// static+runtime recipe both the tradeoff study and the sweep default
+/// to.
 pub fn calibrated_partitions(
     netlist: &SystolicNetlist,
     tech: &Technology,
@@ -82,35 +144,16 @@ pub fn calibrated_partitions(
     max_trials: usize,
     calib_toggle: f64,
 ) -> Result<Vec<Partition>> {
-    let device = Device::for_array(netlist.size);
-    let mut parts = floorplan::bands(&device, clustering, netlist.size)?;
-    let (v_lo, floor) = match tech.flow {
-        FlowKind::Vivado => (tech.v_min, tech.v_min),
-        FlowKind::Vtr => (
-            (tech.v_th + 0.1).min(tech.v_min),
-            runtime_scheme::physical_floor(tech),
-        ),
-    };
-    let rails = static_scheme::assign(clustering, slacks, tech.v_nom, v_lo)?;
-    for p in parts.iter_mut() {
-        p.vccint = rails
-            .iter()
-            .find(|r| r.partition == p.id)
-            .expect("rail per partition")
-            .vccint;
-    }
-    let vs = static_scheme::step(tech.v_nom, v_lo, clustering.k.max(4));
-    runtime_scheme::calibrate(
+    partitions_with_rails(
         netlist,
         tech,
         razor,
-        &mut parts,
-        vs,
+        clustering,
+        slacks,
         max_trials,
-        floor,
-        |_| calib_toggle,
-    );
-    Ok(parts)
+        calib_toggle,
+        true,
+    )
 }
 
 /// Fraction of MACs silently corrupting (beyond the Razor shadow
@@ -147,18 +190,25 @@ pub fn silent_mac_fraction(
 /// Configuration of the study.
 #[derive(Debug, Clone)]
 pub struct StudyConfig {
+    /// Systolic-array edge.
     pub array_size: u32,
+    /// Technology under study.
     pub tech: Technology,
+    /// Array clock, MHz.
     pub clock_mhz: f64,
+    /// Netlist process-variation seed.
     pub seed: u64,
     /// Toggle rate the trial-run calibration sees.
     pub calib_toggle: f64,
     /// Toggle rate of the post-calibration workload (the shift).
     pub shifted_toggle: f64,
+    /// Razor shadow-register configuration.
     pub razor: RazorConfig,
 }
 
 impl StudyConfig {
+    /// The paper's primary study setup: 16x16 at 100 MHz, quiet
+    /// calibration (toggle 0.125) shifted to a noisy 0.45 workload.
     pub fn paper_default(tech: Technology) -> Self {
         Self {
             array_size: 16,

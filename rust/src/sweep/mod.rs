@@ -60,9 +60,13 @@ pub const MAX_ISLANDS: usize = 8;
 /// One axis of the grid: how MACs are grouped into islands.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SweepAlgo {
+    /// Agglomerative hierarchical clustering (paper §IV-A).
     Hierarchical,
+    /// K-Means with k-means++ seeding (paper §IV-B).
     KMeans,
+    /// Mean-Shift with Gaussian kernel (paper §IV-C).
     MeanShift,
+    /// DBSCAN — the paper's pick (paper §IV-D).
     Dbscan,
     /// Equal-population slack quantiles — the paper's Table II reference
     /// partitioning, generalised by `study::equal_quantile_clustering`.
@@ -81,6 +85,7 @@ impl SweepAlgo {
         ]
     }
 
+    /// Stable axis-value name (also the JSON field value).
     pub fn name(self) -> &'static str {
         match self {
             Self::Hierarchical => "hierarchical",
@@ -100,9 +105,58 @@ impl SweepAlgo {
     }
 }
 
+/// The rail-preparation axis: how far voltage tuning goes before a
+/// scenario is measured — the sweep's static-vs-runtime comparison (the
+/// paper's two-stage claim, quantified across the whole grid).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RailMode {
+    /// Algorithm-1 static stepping only (no Razor feedback): cheap but
+    /// blind — rails may sit below a partition's real frontier.
+    Static,
+    /// Static seeding plus the runtime Razor calibration
+    /// (`study::calibrated_partitions`): rails settle at the frontier.
+    Runtime,
+}
+
+impl RailMode {
+    /// The full rail-mode axis, static first.
+    pub fn all() -> Vec<Self> {
+        vec![Self::Static, Self::Runtime]
+    }
+
+    /// Stable axis-value name (also the JSON field value).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Static => "static",
+            Self::Runtime => "runtime",
+        }
+    }
+
+    /// Parse a CLI `--rails` element.
+    pub fn from_name(name: &str) -> Result<Self> {
+        Self::all()
+            .into_iter()
+            .find(|m| m.name() == name.trim())
+            .ok_or_else(|| Error::Sweep(format!("unknown rail mode '{name}'")))
+    }
+}
+
 /// Sweep configuration: the grid axes plus the shared flow knobs.
+///
+/// ```
+/// use vstpu::sweep::{run_sweep, RailMode, SweepAlgo, SweepConfig};
+///
+/// let mut cfg = SweepConfig::smoke();
+/// cfg.algos = vec![SweepAlgo::EqualQuantile];
+/// cfg.techs = vec!["academic-22nm".into()];
+/// cfg.rail_modes = vec![RailMode::Runtime];
+/// let rep = run_sweep(&cfg).unwrap();
+/// assert_eq!(rep.failed_count, 0);
+/// assert_eq!(rep.scenarios.len(), 1);
+/// ```
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
+    /// The clustering-algorithm axis.
     pub algos: Vec<SweepAlgo>,
     /// Technology preset names (see [`Technology::by_name`]).
     pub techs: Vec<String>,
@@ -110,8 +164,11 @@ pub struct SweepConfig {
     pub sizes: Vec<u32>,
     /// Post-calibration workload toggle rates (the shift axis).
     pub shifts: Vec<f64>,
+    /// Rail-preparation modes (static-only vs static+runtime).
+    pub rail_modes: Vec<RailMode>,
     /// Cluster count for hierarchical / kmeans / equal-quantile.
     pub k: usize,
+    /// Array clock, MHz.
     pub clock_mhz: f64,
     /// Toggle rate the trial-run calibration sees.
     pub calib_toggle: f64,
@@ -121,6 +178,7 @@ pub struct SweepConfig {
     pub threads: usize,
     /// Calibration trial cap per scenario.
     pub max_trials: usize,
+    /// Razor shadow-register configuration.
     pub razor: RazorConfig,
     /// CI smoke mode (recorded in the JSON so gates compare like to like).
     pub quick: bool,
@@ -140,6 +198,7 @@ impl SweepConfig {
             ],
             sizes: vec![8, 16, 32, 64],
             shifts: vec![0.25, 0.45],
+            rail_modes: RailMode::all(),
             k: 4,
             clock_mhz: 100.0,
             calib_toggle: DEFAULT_TOGGLE,
@@ -152,7 +211,7 @@ impl SweepConfig {
     }
 
     /// The CI smoke grid (`vstpu sweep --smoke`): 2 algorithms x 2 techs
-    /// x 1 size x 1 shift = 4 scenarios.
+    /// x 1 size x 1 shift x 2 rail modes = 8 scenarios.
     pub fn smoke() -> Self {
         let mut cfg = Self::full_grid();
         cfg.quick = true;
@@ -169,10 +228,16 @@ impl SweepConfig {
 pub struct Scenario {
     /// Position in grid-enumeration order (stable for a fixed config).
     pub index: usize,
+    /// Clustering algorithm under test.
     pub algo: SweepAlgo,
+    /// Technology preset name.
     pub tech: String,
+    /// Systolic-array edge.
     pub array_size: u32,
+    /// Post-calibration workload toggle rate.
     pub shift_toggle: f64,
+    /// Rail-preparation mode (static-only vs static+runtime).
+    pub rail_mode: RailMode,
     /// Deterministic per-scenario seed (k-means++ seeding etc.).
     pub seed: u64,
 }
@@ -193,6 +258,7 @@ pub struct ScenarioResult {
     pub power_mw: f64,
     /// Unscaled (nominal-rail) power of the same array (mW).
     pub baseline_mw: f64,
+    /// Percent power reduction vs the unscaled baseline.
     pub reduction_pct: f64,
     /// Accuracy-risk proxy under the workload shift.
     pub silent_mac_fraction: f64,
@@ -204,37 +270,53 @@ pub struct ScenarioResult {
 /// message instead of sinking the sweep.
 #[derive(Debug, Clone)]
 pub struct ScenarioRecord {
+    /// The grid cell.
     pub scenario: Scenario,
+    /// Its measurement, or the captured error/panic message.
     pub outcome: std::result::Result<ScenarioResult, String>,
 }
 
-/// Per-`(tech, size, shift)` cross-algorithm comparison — the sweep's
-/// analogue of the paper's Table II/III "which scheme wins" rows.
+/// Per-`(tech, size, shift, rail-mode)` cross-algorithm comparison — the
+/// sweep's analogue of the paper's Table II/III "which scheme wins" rows.
 #[derive(Debug, Clone)]
 pub struct WinnerRow {
+    /// Technology preset name.
     pub tech: String,
+    /// Systolic-array edge.
     pub array_size: u32,
+    /// Post-calibration workload toggle rate.
     pub shift_toggle: f64,
+    /// Rail-preparation mode of this comparison group.
+    pub rail_mode: &'static str,
     /// Algorithm with the lowest calibrated power.
     pub best_power_algo: String,
+    /// That algorithm's power, mW.
     pub best_power_mw: f64,
     /// Algorithm with the lowest silent-corruption fraction (power
     /// breaks ties).
     pub best_accuracy_algo: String,
+    /// That algorithm's silent-MAC fraction.
     pub best_silent_fraction: f64,
 }
 
 /// Everything one sweep run produces.
 #[derive(Debug, Clone)]
 pub struct SweepReport {
+    /// Schema identifier ([`SWEEP_SCHEMA`]).
     pub schema: &'static str,
+    /// CI smoke mode flag.
     pub quick: bool,
+    /// Base seed.
     pub seed: u64,
     /// Worker threads actually used.
     pub threads: usize,
+    /// Every grid cell with its outcome, enumeration order.
     pub scenarios: Vec<ScenarioRecord>,
+    /// Cross-algorithm winner rows, grid order.
     pub winners: Vec<WinnerRow>,
+    /// Scenarios that completed.
     pub ok_count: usize,
+    /// Scenarios that errored or panicked.
     pub failed_count: usize,
     /// Total wall time (measurement; excluded from determinism).
     pub wall_ms: f64,
@@ -244,7 +326,9 @@ pub struct SweepReport {
 /// every clustering variant of that pair — algorithm scenarios must
 /// never redo STA.
 pub struct SharedTiming {
+    /// The technology the pair was synthesized on.
     pub tech: Technology,
+    /// The generated netlist.
     pub netlist: SystolicNetlist,
     /// Per-MAC minimum slack, row-major (the clustering input).
     pub slacks: Vec<f64>,
@@ -270,31 +354,39 @@ fn axis_tag(s: &str) -> u64 {
     h.0
 }
 
-/// Enumerate the grid in canonical (tech, size, shift, algo) order —
-/// scenarios of one `(tech, size)` pair are adjacent, which keeps the
-/// shared-STA working set warm on the pool.
+/// Enumerate the grid in canonical (tech, size, shift, algo, rail-mode)
+/// order — scenarios of one `(tech, size)` pair are adjacent, which
+/// keeps the shared-STA working set warm on the pool.
 pub fn enumerate(cfg: &SweepConfig) -> Vec<Scenario> {
     let mut out = Vec::new();
     for tech in &cfg.techs {
         for &size in &cfg.sizes {
             for &shift in &cfg.shifts {
                 for &algo in &cfg.algos {
-                    let index = out.len();
-                    out.push(Scenario {
-                        index,
-                        algo,
-                        tech: tech.clone(),
-                        array_size: size,
-                        shift_toggle: shift,
-                        // Keyed on the grid coordinate *values* (see
-                        // `axis_tag`; full shift bits — near-identical
-                        // shifts must not collide), never on indices.
-                        seed: hash3(
-                            cfg.seed,
-                            axis_tag(tech).wrapping_add(axis_tag(algo.name()).rotate_left(17)),
-                            hash3(size as u64, shift.to_bits(), 0x5157),
-                        ),
-                    });
+                    for &mode in &cfg.rail_modes {
+                        let index = out.len();
+                        out.push(Scenario {
+                            index,
+                            algo,
+                            tech: tech.clone(),
+                            array_size: size,
+                            shift_toggle: shift,
+                            rail_mode: mode,
+                            // Keyed on the grid coordinate *values* (see
+                            // `axis_tag`; full shift bits — near-identical
+                            // shifts must not collide), never on indices.
+                            // Deliberately NOT keyed on the rail mode:
+                            // both arms of a cell must cluster the array
+                            // identically (same k-means seed) so the
+                            // static-vs-runtime delta isolates the rail
+                            // stage, not clustering variance.
+                            seed: hash3(
+                                cfg.seed,
+                                axis_tag(tech).wrapping_add(axis_tag(algo.name()).rotate_left(17)),
+                                hash3(size as u64, shift.to_bits(), 0x5157),
+                            ),
+                        });
+                    }
                 }
             }
         }
@@ -306,7 +398,11 @@ pub fn enumerate(cfg: &SweepConfig) -> Vec<Scenario> {
 /// (unknown tech, odd size, empty axis); per-scenario failures are
 /// captured in the report instead.
 pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
-    if cfg.algos.is_empty() || cfg.techs.is_empty() || cfg.sizes.is_empty() || cfg.shifts.is_empty()
+    if cfg.algos.is_empty()
+        || cfg.techs.is_empty()
+        || cfg.sizes.is_empty()
+        || cfg.shifts.is_empty()
+        || cfg.rail_modes.is_empty()
     {
         return Err(Error::Sweep("every grid axis needs at least one value".into()));
     }
@@ -421,10 +517,11 @@ fn run_scenario(sc: &Scenario, st: &SharedTiming, cfg: &SweepConfig) -> Result<S
     let noise_reassigned = clustering.noise_points().len();
     let clustering = clustering.assign_noise_to_nearest(slacks);
 
-    // Bands -> Algorithm 1 -> Algorithm 2, FlowKind-aware (the shared
-    // recipe: commercial techs stay inside the guard band, academic
-    // techs descend toward the NTC floor).
-    let parts = study::calibrated_partitions(
+    // Bands -> Algorithm 1 -> (optionally) Algorithm 2, FlowKind-aware
+    // (the shared recipe: commercial techs stay inside the guard band,
+    // academic techs descend toward the NTC floor). The rail-mode axis
+    // decides whether the runtime stage runs at all.
+    let parts = study::partitions_with_rails(
         &st.netlist,
         tech,
         &cfg.razor,
@@ -432,6 +529,7 @@ fn run_scenario(sc: &Scenario, st: &SharedTiming, cfg: &SweepConfig) -> Result<S
         slacks,
         cfg.max_trials,
         cfg.calib_toggle,
+        sc.rail_mode == RailMode::Runtime,
     )?;
 
     let model = PowerModel::new(tech.clone(), cfg.clock_mhz);
@@ -486,16 +584,19 @@ fn cluster_scenario(sc: &Scenario, slacks: &[f64], cfg: &SweepConfig) -> Result<
     }
 }
 
-/// Fold scenario records into per-`(tech, size, shift)` winner rows,
-/// preserving grid order. Groups whose scenarios all failed are skipped.
+/// Fold scenario records into per-`(tech, size, shift, rail-mode)`
+/// winner rows, preserving grid order. Groups whose scenarios all
+/// failed are skipped.
 fn winner_tables(records: &[ScenarioRecord]) -> Vec<WinnerRow> {
-    let mut order: Vec<(String, u32, u64)> = Vec::new();
-    let mut groups: HashMap<(String, u32, u64), Vec<&ScenarioRecord>> = HashMap::new();
+    type Key = (String, u32, u64, &'static str);
+    let mut order: Vec<Key> = Vec::new();
+    let mut groups: HashMap<Key, Vec<&ScenarioRecord>> = HashMap::new();
     for r in records {
         let key = (
             r.scenario.tech.clone(),
             r.scenario.array_size,
             r.scenario.shift_toggle.to_bits(),
+            r.scenario.rail_mode.name(),
         );
         if !groups.contains_key(&key) {
             order.push(key.clone());
@@ -526,6 +627,7 @@ fn winner_tables(records: &[ScenarioRecord]) -> Vec<WinnerRow> {
             tech: key.0,
             array_size: key.1,
             shift_toggle: f64::from_bits(key.2),
+            rail_mode: key.3,
             best_power_algo: bp.0.name().to_string(),
             best_power_mw: bp.1.power_mw,
             best_accuracy_algo: ba.0.name().to_string(),
@@ -550,8 +652,8 @@ pub fn render(rep: &SweepReport) -> String {
     );
     let _ = writeln!(
         s,
-        "{:<15} {:<15} {:>5} {:>6} {:>3} {:>10} {:>7} {:>8}",
-        "algo", "tech", "size", "shift", "k", "power mW", "red %", "silent %"
+        "{:<15} {:<15} {:>5} {:>6} {:>8} {:>3} {:>10} {:>7} {:>8}",
+        "algo", "tech", "size", "shift", "rails", "k", "power mW", "red %", "silent %"
     );
     for r in &rep.scenarios {
         let sc = &r.scenario;
@@ -559,11 +661,12 @@ pub fn render(rep: &SweepReport) -> String {
             Ok(res) => {
                 let _ = writeln!(
                     s,
-                    "{:<15} {:<15} {:>5} {:>6.2} {:>3} {:>10.1} {:>7.2} {:>8.2}",
+                    "{:<15} {:<15} {:>5} {:>6.2} {:>8} {:>3} {:>10.1} {:>7.2} {:>8.2}",
                     sc.algo.name(),
                     sc.tech,
                     sc.array_size,
                     sc.shift_toggle,
+                    sc.rail_mode.name(),
                     res.k,
                     res.power_mw,
                     res.reduction_pct,
@@ -573,25 +676,27 @@ pub fn render(rep: &SweepReport) -> String {
             Err(e) => {
                 let _ = writeln!(
                     s,
-                    "{:<15} {:<15} {:>5} {:>6.2} FAILED: {e}",
+                    "{:<15} {:<15} {:>5} {:>6.2} {:>8} FAILED: {e}",
                     sc.algo.name(),
                     sc.tech,
                     sc.array_size,
-                    sc.shift_toggle
+                    sc.shift_toggle,
+                    sc.rail_mode.name()
                 );
             }
         }
     }
     if !rep.winners.is_empty() {
-        let _ = writeln!(s, "\nwinners (per tech x size x shift):");
+        let _ = writeln!(s, "\nwinners (per tech x size x shift x rail mode):");
         for w in &rep.winners {
             let _ = writeln!(
                 s,
-                "  {} {}x{} shift {:.2}: power -> {} ({:.1} mW), accuracy -> {} ({:.2}% silent)",
+                "  {} {}x{} shift {:.2} {}: power -> {} ({:.1} mW), accuracy -> {} ({:.2}% silent)",
                 w.tech,
                 w.array_size,
                 w.array_size,
                 w.shift_toggle,
+                w.rail_mode,
                 w.best_power_algo,
                 w.best_power_mw,
                 w.best_accuracy_algo,
@@ -612,13 +717,34 @@ mod tests {
         let scenarios = enumerate(&cfg);
         assert_eq!(
             scenarios.len(),
-            cfg.algos.len() * cfg.techs.len() * cfg.sizes.len() * cfg.shifts.len()
+            cfg.algos.len()
+                * cfg.techs.len()
+                * cfg.sizes.len()
+                * cfg.shifts.len()
+                * cfg.rail_modes.len()
         );
-        // Indices are the enumeration order; seeds are pairwise distinct.
-        let mut seeds = std::collections::HashSet::new();
+        // Indices are the enumeration order. Seeds are distinct per
+        // (tech, algo, size, shift) cell, but deliberately *shared*
+        // across the rail-mode arms of one cell: both arms must
+        // cluster identically for the static-vs-runtime comparison.
+        let mut cell_seeds = std::collections::HashMap::new();
         for (i, sc) in scenarios.iter().enumerate() {
             assert_eq!(sc.index, i);
-            assert!(seeds.insert(sc.seed), "duplicate seed for {sc:?}");
+            let cell = (
+                sc.tech.clone(),
+                sc.algo.name(),
+                sc.array_size,
+                sc.shift_toggle.to_bits(),
+            );
+            if let Some(&seed) = cell_seeds.get(&cell) {
+                assert_eq!(seed, sc.seed, "rail-mode arms diverged for {sc:?}");
+            } else {
+                assert!(
+                    cell_seeds.values().all(|&s| s != sc.seed),
+                    "duplicate seed across cells for {sc:?}"
+                );
+                cell_seeds.insert(cell, sc.seed);
+            }
         }
     }
 
@@ -633,6 +759,7 @@ mod tests {
         swapped.techs.reverse();
         swapped.sizes.reverse();
         swapped.shifts.reverse();
+        swapped.rail_modes.reverse();
         let a = enumerate(&cfg);
         let b = enumerate(&swapped);
         assert_eq!(a.len(), b.len());
@@ -644,6 +771,7 @@ mod tests {
                         && s.tech == sa.tech
                         && s.array_size == sa.array_size
                         && s.shift_toggle == sa.shift_toggle
+                        && s.rail_mode == sa.rail_mode
                 })
                 .unwrap();
             assert_eq!(sa.seed, sb.seed, "{sa:?} vs {sb:?}");
@@ -661,6 +789,9 @@ mod tests {
         let mut cfg = SweepConfig::smoke();
         cfg.algos.clear();
         assert!(run_sweep(&cfg).is_err());
+        let mut cfg = SweepConfig::smoke();
+        cfg.rail_modes.clear();
+        assert!(run_sweep(&cfg).is_err());
     }
 
     #[test]
@@ -669,5 +800,13 @@ mod tests {
             assert_eq!(SweepAlgo::from_name(a.name()).unwrap(), a);
         }
         assert!(SweepAlgo::from_name("voronoi").is_err());
+    }
+
+    #[test]
+    fn rail_mode_names_round_trip() {
+        for m in RailMode::all() {
+            assert_eq!(RailMode::from_name(m.name()).unwrap(), m);
+        }
+        assert!(RailMode::from_name("dynamic").is_err());
     }
 }

@@ -42,12 +42,19 @@ pub const HOLD_MARGIN_NS: f64 = 0.10;
 pub struct PathRecord {
     /// Rank after sorting by slack (0 = worst); `name()` renders it.
     pub rank: u32,
+    /// Setup (or hold) slack, ns.
     pub slack_ns: f64,
+    /// Logic levels on the path.
     pub levels: u32,
+    /// Highest fanout net along the path.
     pub high_fanout: u32,
+    /// Total path delay, ns.
     pub total_delay_ns: f64,
+    /// LUT/carry share of the delay, ns.
     pub logic_delay_ns: f64,
+    /// Routing share of the delay, ns.
     pub net_delay_ns: f64,
+    /// Timing requirement (clock period), ns.
     pub requirement_ns: f64,
     /// Owning MAC (not printed by Vivado, carried for clustering).
     pub mac: MacId,
@@ -94,7 +101,9 @@ impl PathRecord {
 /// clustering algorithms consume.
 #[derive(Debug, Clone, Copy)]
 pub struct MacSlack {
+    /// The MAC.
     pub mac: MacId,
+    /// Its minimum setup slack over all arcs, ns.
     pub min_slack_ns: f64,
 }
 
@@ -105,14 +114,18 @@ pub struct TimingReport {
     pub setup: Vec<PathRecord>,
     /// Hold paths, sorted worst first.
     pub hold: Vec<PathRecord>,
+    /// Clock the analysis ran at, MHz.
     pub clock_mhz: f64,
     /// Which stage produced the view.
     pub stage: Stage,
 }
 
+/// CAD stage a timing view belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Stage {
+    /// Post-synthesis (pre-placement) timing.
     Synthesis,
+    /// Post-place-and-route timing over a floorplan.
     Implementation,
 }
 

@@ -77,6 +77,7 @@ pub fn step(vccint: &mut [f64], flags: &[bool], vs: f64, v_floor: f64, v_ceil: f
 /// region" because Vivado cannot go lower); the academic flow passes a
 /// near-threshold floor. Pass [`physical_floor`]`(tech)` for no policy
 /// bound.
+#[allow(clippy::too_many_arguments)]
 pub fn calibrate<F>(
     netlist: &SystolicNetlist,
     tech: &Technology,
@@ -217,12 +218,15 @@ where
 /// Audit row for one rail.
 #[derive(Debug, Clone, Copy)]
 pub struct RailAudit {
+    /// Partition index.
     pub partition: usize,
+    /// The audited rail voltage (V).
     pub vccint: f64,
     /// No Razor flag at the calibrated voltage.
     pub clean: bool,
     /// One step lower would flag (the rail carries no wasted margin).
     pub tight: bool,
+    /// Voltage region the rail sits in (paper Fig 7).
     pub region: Region,
 }
 

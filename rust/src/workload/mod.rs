@@ -27,10 +27,12 @@ pub enum FluctuationProfile {
 }
 
 impl FluctuationProfile {
+    /// All three profiles, quietest first.
     pub fn all() -> [Self; 3] {
         [Self::Low, Self::Medium, Self::High]
     }
 
+    /// Stable profile name (CLI/JSON value).
     pub fn name(&self) -> &'static str {
         match self {
             Self::Low => "low",
@@ -43,15 +45,19 @@ impl FluctuationProfile {
 /// An int8 activation stream: `rows` cycles of `width` lanes.
 #[derive(Debug, Clone)]
 pub struct Stream {
+    /// Lanes per cycle.
     pub width: usize,
-    pub data: Vec<i8>, // row-major, rows x width
+    /// Samples, row-major (`rows x width`).
+    pub data: Vec<i8>,
 }
 
 impl Stream {
+    /// Cycles in the stream.
     pub fn rows(&self) -> usize {
         self.data.len() / self.width
     }
 
+    /// One cycle's lane values.
     pub fn row(&self, r: usize) -> &[i8] {
         &self.data[r * self.width..(r + 1) * self.width]
     }
@@ -116,12 +122,16 @@ impl Stream {
 /// paper's timing-failure accuracy study).
 #[derive(Debug, Clone)]
 pub struct Batch {
-    pub inputs: Vec<i8>, // batch x 784, row-major
+    /// Samples, row-major (`batch x width`).
+    pub inputs: Vec<i8>,
+    /// Sample count.
     pub batch: usize,
+    /// Sample width.
     pub width: usize,
 }
 
 impl Batch {
+    /// Generate a batch with the given fluctuation profile.
     pub fn synthetic(batch: usize, width: usize, profile: FluctuationProfile, seed: u64) -> Self {
         let s = Stream::synthetic(batch, width, profile, seed);
         Self {
@@ -131,6 +141,7 @@ impl Batch {
         }
     }
 
+    /// One sample's data.
     pub fn sample(&self, i: usize) -> &[i8] {
         &self.inputs[i * self.width..(i + 1) * self.width]
     }

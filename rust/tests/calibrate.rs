@@ -1,0 +1,194 @@
+//! Closed-loop calibration integration tests: floor convergence on the
+//! guard-band-clamped commercial tech, energy-per-request improvement on
+//! the VTR nodes, the byte-determinism contract of
+//! `BENCH_calibrate.json`, and the live sharded-engine attachment.
+
+use std::path::Path;
+
+use vstpu::calibrate::{run_calibrate, CalibrateBenchConfig};
+use vstpu::report::bench_calibrate_json;
+use vstpu::serve::{run_bench, BenchConfig};
+use vstpu::tech::Technology;
+
+const NO_ARTIFACTS: &str = "/nonexistent-vstpu-artifacts";
+
+/// A short but convergent run: one-batch epochs and a coarser step so
+/// the trajectory settles well inside 2048 requests.
+fn fast_cfg(tech: Technology) -> CalibrateBenchConfig {
+    let mut cfg = CalibrateBenchConfig::quick(tech);
+    cfg.requests = 2048;
+    cfg.controller.epoch_batches = 1;
+    cfg.controller.step_v = 0.025;
+    cfg
+}
+
+/// Drop the wall-time measurement line — everything else in
+/// `BENCH_calibrate.json` is part of the determinism contract.
+fn strip_wall(json: &str) -> String {
+    json.lines()
+        .filter(|l| !l.contains("\"wall_s\""))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn commercial_tech_converges_to_the_guard_band_floor_and_stays() {
+    // On Artix-7 the frontier sits far below the vendor guard band, so
+    // the flag rate is pinned at zero: every rail must walk down to the
+    // FlowKind-aware floor (v_min — never past the guard band) and hold.
+    let tech = Technology::artix7_28nm();
+    let v_min = tech.v_min;
+    let rep = run_calibrate(Path::new(NO_ARTIFACTS), fast_cfg(tech)).unwrap();
+    assert!((rep.v_floor - v_min).abs() < 1e-12, "Vivado floor must be v_min");
+    assert!(rep.converged, "quiet run must converge (epoch {})", rep.convergence_epoch);
+    assert_eq!(rep.flag_rate_final, 0.0);
+    for p in &rep.partitions {
+        // The clamp is absolute: no rail ever leaves the guard band.
+        for (e, &v) in p.voltages.iter().enumerate() {
+            assert!(
+                v >= v_min - 1e-12,
+                "partition {} epoch {e}: rail {v} crossed the guard band",
+                p.partition
+            );
+        }
+        let last = *p.voltages.last().unwrap();
+        assert!(
+            (last - v_min).abs() < 1e-12,
+            "partition {} settled at {last}, not the floor {v_min}",
+            p.partition
+        );
+        // Once at the floor it never moves again.
+        for &v in &p.voltages[p.converged_epoch..] {
+            assert!((v - last).abs() < 1e-12);
+        }
+    }
+    // Descending from the static rails to the floor saves energy even
+    // inside the guard band.
+    assert!(rep.energy_uj_after < rep.energy_uj_before);
+}
+
+#[test]
+fn vtr_nodes_cut_energy_per_request_below_the_static_baseline() {
+    for tech in [Technology::academic_22nm(), Technology::academic_45nm()] {
+        let name = tech.name.clone();
+        let high_water = 0.5;
+        let rep = run_calibrate(Path::new(NO_ARTIFACTS), fast_cfg(tech)).unwrap();
+        assert!(rep.converged, "{name}: no convergence by epoch {}", rep.convergence_epoch);
+        assert!(
+            rep.energy_uj_after < rep.energy_uj_before,
+            "{name}: energy/request {} did not drop below the static baseline {}",
+            rep.energy_uj_after,
+            rep.energy_uj_before
+        );
+        assert!(
+            rep.flag_rate_final < high_water,
+            "{name}: settled flag rate {} at/above the high water",
+            rep.flag_rate_final
+        );
+        // Every rail stayed inside the clamp the whole way.
+        for p in &rep.partitions {
+            for &v in &p.voltages {
+                assert!(v >= rep.v_floor - 1e-12 && v <= rep.v_ceil + 1e-12);
+            }
+        }
+    }
+}
+
+#[test]
+fn calibrate_artifact_is_byte_deterministic_modulo_wall_time() {
+    let run = || {
+        run_calibrate(
+            Path::new(NO_ARTIFACTS),
+            fast_cfg(Technology::academic_22nm()),
+        )
+        .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(
+        strip_wall(&bench_calibrate_json(&a)),
+        strip_wall(&bench_calibrate_json(&b)),
+        "same seed must reproduce the exact voltage trajectory"
+    );
+    // A different seed changes the workload and therefore the artifact.
+    let mut cfg = fast_cfg(Technology::academic_22nm());
+    cfg.seed = 4242;
+    let c = run_calibrate(Path::new(NO_ARTIFACTS), cfg).unwrap();
+    assert_ne!(
+        strip_wall(&bench_calibrate_json(&a)),
+        strip_wall(&bench_calibrate_json(&c))
+    );
+}
+
+#[test]
+fn calibrate_rejects_bad_configs() {
+    let mut cfg = fast_cfg(Technology::artix7_28nm());
+    cfg.shards = 0;
+    assert!(run_calibrate(Path::new(NO_ARTIFACTS), cfg).is_err());
+    let mut cfg = fast_cfg(Technology::artix7_28nm());
+    cfg.max_batch = cfg.coordinator.batch + 1;
+    assert!(run_calibrate(Path::new(NO_ARTIFACTS), cfg).is_err());
+    let mut cfg = fast_cfg(Technology::artix7_28nm());
+    cfg.controller.low_water = 0.9; // above high_water
+    assert!(run_calibrate(Path::new(NO_ARTIFACTS), cfg).is_err());
+}
+
+#[test]
+fn sharded_engine_runs_the_calibrator_live() {
+    // The live path: EngineConfig.calibrate attaches the controller to
+    // every shard; the shard reports carry the trajectory out.
+    use std::sync::mpsc;
+    use vstpu::coordinator::{InferenceRequest, MODEL_INPUT};
+    use vstpu::serve::{EngineConfig, ShardedEngine};
+
+    let mut cfg = EngineConfig::paper_default(Technology::artix7_28nm());
+    cfg.shards = 2;
+    cfg.max_batch = 8;
+    cfg.batch_deadline_us = 60_000_000; // size trigger only
+    cfg.calibrate = Some(vstpu::calibrate::CalibrateConfig {
+        epoch_batches: 2,
+        ..Default::default()
+    });
+    let engine = ShardedEngine::start(Path::new(NO_ARTIFACTS), cfg).unwrap();
+    let (tx, rx) = mpsc::channel();
+    for id in 0..128u64 {
+        let req = InferenceRequest {
+            id,
+            input: vec![1i8; MODEL_INPUT],
+        };
+        engine.submit(req, tx.clone()).unwrap();
+    }
+    drop(tx);
+    let reports = engine.shutdown().unwrap();
+    let mut replies = 0;
+    while rx.recv().is_ok() {
+        replies += 1;
+    }
+    assert_eq!(replies, 128);
+
+    let v_min = Technology::artix7_28nm().v_min;
+    for rep in &reports {
+        // Each shard's report carries its calibrator trajectory.
+        let cal = rep.calibration.as_ref().expect("calibrator in report");
+        assert!(cal.epochs() > 0, "shard {} took no epochs", rep.shard);
+        assert_eq!(cal.voltage_trace().len(), cal.epochs() + 1);
+        // Quiet guard-band workload: owned rails descend, and the clamp
+        // never lets any rail leave the guard band.
+        for snap in cal.voltage_trace() {
+            for &v in snap {
+                assert!(v >= v_min - 1e-12, "live calibrator crossed the guard band");
+            }
+        }
+    }
+
+    // And the bench wrapper reports the flag in its artifact.
+    let mut bcfg = BenchConfig::quick(Technology::artix7_28nm());
+    bcfg.requests = 64;
+    bcfg.engine.shards = 2;
+    bcfg.engine.max_batch = 8;
+    bcfg.engine.calibrate = Some(vstpu::calibrate::CalibrateConfig::default());
+    let brep = run_bench(Path::new(NO_ARTIFACTS), bcfg).unwrap();
+    assert!(brep.calibration_enabled);
+    let json = vstpu::report::bench_serve_json(&brep);
+    assert!(json.contains("\"calibration_enabled\": true"));
+}

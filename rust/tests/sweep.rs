@@ -4,7 +4,7 @@
 //! partition path must uphold under every algorithm.
 
 use vstpu::report::bench_sweep_json;
-use vstpu::sweep::{pool, run_sweep, SweepAlgo, SweepConfig};
+use vstpu::sweep::{pool, run_sweep, RailMode, SweepAlgo, SweepConfig};
 
 /// Drop the wall-time measurement lines — everything else in
 /// `BENCH_sweep.json` is part of the determinism contract.
@@ -21,7 +21,8 @@ fn smoke_sweep_is_deterministic_modulo_wall_time() {
     let a = run_sweep(&cfg).unwrap();
     let b = run_sweep(&cfg).unwrap();
     assert_eq!(a.failed_count, 0, "smoke grid must be all-green");
-    assert_eq!(a.scenarios.len(), 4); // 2 algos x 2 techs x 1 size x 1 shift
+    // 2 algos x 2 techs x 1 size x 1 shift x 2 rail modes.
+    assert_eq!(a.scenarios.len(), 8);
     assert!(!a.winners.is_empty());
     assert_eq!(
         strip_wall(&bench_sweep_json(&a)),
@@ -77,6 +78,7 @@ fn failing_scenario_is_captured_not_fatal() {
     let mut cfg = SweepConfig::smoke();
     cfg.algos = vec![SweepAlgo::KMeans, SweepAlgo::Dbscan];
     cfg.techs = vec!["academic-22nm".into()];
+    cfg.rail_modes = vec![RailMode::Runtime];
     // k far beyond the MAC count: the kmeans scenario must fail with a
     // structured record while the dbscan scenario completes.
     cfg.k = 100_000;
@@ -101,12 +103,50 @@ fn failing_scenario_is_captured_not_fatal() {
 }
 
 #[test]
+fn rail_mode_axis_compares_static_vs_runtime() {
+    let mut cfg = SweepConfig::smoke();
+    cfg.algos = vec![SweepAlgo::EqualQuantile];
+    cfg.techs = vec!["academic-22nm".into()];
+    let rep = run_sweep(&cfg).unwrap(); // 1 algo x 1 tech x both rail modes
+    assert_eq!(rep.failed_count, 0);
+    assert_eq!(rep.scenarios.len(), 2);
+    let get = |m: RailMode| {
+        rep.scenarios
+            .iter()
+            .find(|r| r.scenario.rail_mode == m)
+            .unwrap()
+            .outcome
+            .as_ref()
+            .unwrap()
+    };
+    let st = get(RailMode::Static);
+    let rt = get(RailMode::Runtime);
+    // Runtime rails respect every partition's frontier; blind static
+    // stepping over the VTR critical region dips below it — the gap the
+    // paper's runtime scheme exists to close.
+    for (&v, &f) in rt.rails.iter().zip(&rt.frontiers) {
+        assert!(v >= f - 1e-9, "runtime rail {v} below frontier {f}");
+    }
+    assert!(
+        st.rails.iter().zip(&st.frontiers).any(|(v, f)| v < f),
+        "static-only rails never dip below a frontier — the runtime \
+         stage would have nothing to fix: {:?} vs {:?}",
+        st.rails,
+        st.frontiers
+    );
+    // Both comparison groups form their own winner rows.
+    assert!(rep.winners.iter().any(|w| w.rail_mode == "static"));
+    assert!(rep.winners.iter().any(|w| w.rail_mode == "runtime"));
+}
+
+#[test]
 fn every_algorithm_calibrates_rails_at_or_above_its_frontier() {
     let mut cfg = SweepConfig::smoke();
     cfg.algos = SweepAlgo::all();
     cfg.techs = vec!["academic-22nm".into()];
     cfg.sizes = vec![16];
     cfg.shifts = vec![0.45];
+    cfg.rail_modes = vec![RailMode::Runtime];
     let rep = run_sweep(&cfg).unwrap();
     assert_eq!(rep.failed_count, 0, "all five algorithms must complete");
     for r in &rep.scenarios {
