@@ -8,7 +8,7 @@
 
 PYTHON ?= python3
 
-.PHONY: all build test pytest bench bench-build bench-serve sweep calibrate doc artifacts fmt lint clean
+.PHONY: all build test pytest bench bench-build bench-serve sweep calibrate check doc artifacts fmt lint clean
 
 all: build
 
@@ -44,6 +44,12 @@ sweep:
 calibrate:
 	cargo run --release -- calibrate --quick --json
 	python3 bench/check_regression.py BENCH_calibrate.json bench/baseline.json
+
+# CI smoke form of the S20 design-rule checker: re-derive the sweep
+# smoke grid + quick calibration trajectory and run the full rule
+# catalog; writes CHECK_report.json. Warnings are fatal, like CI.
+check:
+	cargo run --release -- check --smoke --deny-warnings --json
 
 # Public API docs with the CI gate's strictness (zero rustdoc warnings).
 doc:

@@ -17,15 +17,33 @@ Dispatches on the current artifact's schema:
   the baseline's ``calibrate`` block, default 0.999 — calibration on
   must never cost energy).
 
-Common failure modes for both schemas: a missing/corrupt input file or
-missing required fields. Every failure mode prints one legible
+Common failure modes for both schemas: a missing/corrupt input file,
+missing required fields, an unknown schema, or a schema that
+contradicts the artifact's filename (``BENCH_serve*.json`` must carry
+``vstpu-bench-serve/v1`` and so on — a mis-wired CI upload must not
+sail through the wrong gate). Every failure mode prints one legible
 ``bench-smoke gate: FAIL`` line — never a traceback.
+
+``check_regression.py --selftest`` exercises every guard path
+in-process and fails if any of them raises a traceback or prints
+anything but the single FAIL line.
 
 Stdlib only — runs on any CI python3 with no installs.
 """
 
 import json
+import os
 import sys
+
+# Artifact filename prefix -> the schema it must carry. A file whose
+# basename matches none of these is unconstrained (ad-hoc local names),
+# but a known name with a foreign schema fails closed.
+FILENAME_SCHEMAS = {
+    "BENCH_serve": "vstpu-bench-serve/v1",
+    "BENCH_calibrate": "vstpu-bench-calibrate/v1",
+    "BENCH_sweep": "vstpu-bench-sweep/v1",
+    "CHECK_report": "vstpu-check/v1",
+}
 
 SERVE_REQUIRED = ["schema", "requests", "requests_per_s", "latency_us", "shard_results"]
 CALIBRATE_REQUIRED = [
@@ -172,6 +190,19 @@ def check_calibrate(current: dict, baseline: dict, current_path: str) -> None:
     )
 
 
+def check_filename_schema(path: str, schema) -> None:
+    """Fail closed when a well-known artifact name carries a foreign
+    schema — the symptom of a mis-wired CI upload step."""
+    base = os.path.basename(path)
+    for prefix, want in FILENAME_SCHEMAS.items():
+        if base.startswith(prefix) and schema != want:
+            die(
+                f"{path} is named like a {prefix} artifact but carries "
+                f"schema {schema!r} (expected {want!r}) — wrong file wired "
+                f"into the gate"
+            )
+
+
 def main(argv: list) -> None:
     if len(argv) != 3:
         die(f"usage: {argv[0]} CURRENT.json BASELINE.json")
@@ -180,6 +211,7 @@ def main(argv: list) -> None:
     if not isinstance(current, dict) or not isinstance(baseline, dict):
         die("both inputs must be JSON objects")
     schema = current.get("schema")
+    check_filename_schema(argv[1], schema)
     if schema == "vstpu-bench-serve/v1":
         if "schema" not in baseline:
             die(f"{argv[2]} is missing required field 'schema'")
@@ -192,5 +224,141 @@ def main(argv: list) -> None:
         die(f"{argv[1]} has unknown schema {schema!r}")
 
 
+# ----------------------------------------------------------------------
+# --selftest: drive every guard path in-process. Each case must exit 1
+# and print exactly one FAIL line (no tracebacks, no extra noise);
+# the OK cases must exit 0. Used by the CI python job.
+# ----------------------------------------------------------------------
+
+
+def _selftest() -> None:
+    import contextlib
+    import io
+    import tempfile
+
+    GOOD_SERVE = {
+        "schema": "vstpu-bench-serve/v1",
+        "quick": True,
+        "requests": 64,
+        "requests_per_s": 1000.0,
+        "latency_us": {"p50": 100.0, "p99": 200.0},
+        "shard_results": [{"shard": 0, "result_checksum": "deadbeef"}],
+    }
+    GOOD_SERVE_BASE = {"schema": "vstpu-bench-serve/v1", "quick": True, "requests_per_s": 900.0}
+    GOOD_CAL = {
+        "schema": "vstpu-bench-calibrate/v1",
+        "quick": True,
+        "requests": 4096,
+        "converged": True,
+        "convergence_epoch": 2,
+        "epochs": 3,
+        "flag_rate_final": 0.01,
+        "high_water": 0.5,
+        "energy_per_request_uj": {"before": 0.12, "after": 0.10},
+    }
+
+    tmp = tempfile.mkdtemp(prefix="vstpu-gate-selftest-")
+
+    def write(name: str, obj) -> str:
+        path = os.path.join(tmp, name)
+        with open(path, "w") as f:
+            if isinstance(obj, str):
+                f.write(obj)
+            else:
+                json.dump(obj, f)
+        return path
+
+    def run(label: str, current, baseline, expect_fail: bool, current_name=None, needle=""):
+        """Run main() on the pair; verify exit status and output shape."""
+        cur = current if isinstance(current, str) and os.sep in current else write(
+            current_name or "BENCH_serve.json", current
+        )
+        base = write("baseline.json", baseline)
+        err = io.StringIO()
+        code = 0
+        with contextlib.redirect_stderr(err), contextlib.redirect_stdout(io.StringIO()):
+            try:
+                main(["check_regression.py", cur, base])
+            except SystemExit as e:
+                code = e.code or 0
+        lines = [l for l in err.getvalue().splitlines() if l.strip()]
+        if expect_fail:
+            ok = (
+                code == 1
+                and len(lines) == 1
+                and lines[0].startswith("bench-smoke gate: FAIL")
+                and needle in lines[0]
+            )
+        else:
+            ok = code == 0 and not lines
+        status = "ok" if ok else "BROKEN"
+        print(f"selftest [{status}] {label}: {lines[0] if lines else '(clean)'}")
+        return ok
+
+    cases = []
+
+    # Load/shape guards.
+    cases.append(run("missing file", os.path.join(tmp, "absent", "BENCH_serve.json"),
+                     GOOD_SERVE_BASE, True, needle="not found"))
+    cases.append(run("invalid json", "{not json", GOOD_SERVE_BASE, True,
+                     current_name="BENCH_serve_bad.json", needle="not valid JSON"))
+    cases.append(run("non-object input", [1, 2, 3], GOOD_SERVE_BASE, True,
+                     needle="JSON objects"))
+    cases.append(run("unknown schema", {"schema": "vstpu-bench-mystery/v9"},
+                     GOOD_SERVE_BASE, True, current_name="mystery.json",
+                     needle="unknown schema"))
+    cases.append(run("filename/schema mismatch", dict(GOOD_CAL),
+                     GOOD_SERVE_BASE, True, current_name="BENCH_serve_wired.json",
+                     needle="wrong file wired"))
+
+    # Serve-gate guards.
+    missing = {k: v for k, v in GOOD_SERVE.items() if k != "requests_per_s"}
+    cases.append(run("serve missing field", missing, GOOD_SERVE_BASE, True,
+                     needle="missing required field"))
+    cases.append(run("serve quick mismatch", dict(GOOD_SERVE, quick=False),
+                     GOOD_SERVE_BASE, True, needle="configuration mismatch"))
+    no_sum = dict(GOOD_SERVE, shard_results=[{"shard": 0}])
+    cases.append(run("serve missing checksum", no_sum, GOOD_SERVE_BASE, True,
+                     needle="result_checksum"))
+    cases.append(run("serve zero baseline", GOOD_SERVE,
+                     dict(GOOD_SERVE_BASE, requests_per_s=0), True,
+                     needle="non-positive"))
+    cases.append(run("serve bad regression cap", GOOD_SERVE,
+                     dict(GOOD_SERVE_BASE, max_regression=1.5), True,
+                     needle="max_regression"))
+    slow = dict(GOOD_SERVE, requests_per_s=100.0)
+    cases.append(run("serve below floor", slow, GOOD_SERVE_BASE, True,
+                     needle="below the gate floor"))
+    cases.append(run("serve baseline schema mismatch", GOOD_SERVE,
+                     {"schema": "vstpu-bench-calibrate/v1"}, True,
+                     needle="schema mismatch"))
+    cases.append(run("serve clean", GOOD_SERVE, GOOD_SERVE_BASE, False))
+
+    # Calibrate-gate guards.
+    cases.append(run("calibrate not converged", dict(GOOD_CAL, converged=False),
+                     {}, True, current_name="BENCH_calibrate.json",
+                     needle="did not converge"))
+    cases.append(run("calibrate flag rate high", dict(GOOD_CAL, flag_rate_final=0.5),
+                     {}, True, current_name="BENCH_calibrate.json",
+                     needle="high water"))
+    bad_energy = dict(GOOD_CAL, energy_per_request_uj={"before": 0.12, "after": 0.0})
+    cases.append(run("calibrate zero after-energy", bad_energy, {}, True,
+                     current_name="BENCH_calibrate.json", needle="non-positive"))
+    regressed = dict(GOOD_CAL, energy_per_request_uj={"before": 0.10, "after": 0.12})
+    cases.append(run("calibrate energy regressed", regressed, {}, True,
+                     current_name="BENCH_calibrate.json", needle="regressed"))
+    cases.append(run("calibrate clean", GOOD_CAL, {}, False,
+                     current_name="BENCH_calibrate.json"))
+
+    broken = cases.count(False)
+    if broken:
+        print(f"selftest: {broken}/{len(cases)} guard path(s) BROKEN", file=sys.stderr)
+        sys.exit(1)
+    print(f"selftest: all {len(cases)} guard paths print one legible line and fail closed")
+
+
 if __name__ == "__main__":
-    main(sys.argv)
+    if len(sys.argv) == 2 and sys.argv[1] == "--selftest":
+        _selftest()
+    else:
+        main(sys.argv)

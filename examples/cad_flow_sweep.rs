@@ -36,8 +36,7 @@ fn main() -> Result<(), vstpu::Error> {
             let paper = paper_reduction
                 .iter()
                 .find(|(n, _)| *n == tech.name)
-                .map(|(_, r)| *r)
-                .unwrap_or(f64::NAN);
+                .map_or(f64::NAN, |(_, r)| *r);
             println!(
                 "{:<16} {:>2}x{:<2}  {:>8.0} mW -> {:>8.0} mW   reduction {:>5.2}%  (paper ~{paper}%)",
                 tech.name,

@@ -173,8 +173,7 @@ fn main() -> Result<(), vstpu::Error> {
                     .iter()
                     .enumerate()
                     .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(i, _)| i)
-                    .unwrap_or(0);
+                    .map_or(0, |(i, _)| i);
                 preds.push(arg);
             }
             done += n;

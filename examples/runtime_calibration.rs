@@ -46,7 +46,7 @@ fn main() -> Result<(), vstpu::Error> {
 
         let mut parts = floorplan::quadrants(&device, &clustering, size)?;
         let rails = static_scheme::assign(&clustering, &slacks, tech.v_nom, tech.v_min)?;
-        for p in parts.iter_mut() {
+        for p in &mut parts {
             p.vccint = rails.iter().find(|r| r.partition == p.id).unwrap().vccint;
         }
         let vs = static_scheme::step(tech.v_nom, tech.v_min, parts.len());

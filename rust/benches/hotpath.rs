@@ -105,7 +105,7 @@ fn main() {
     });
     bench("algorithm-2 full calibration 64x64", || {
         let mut ps = parts.clone();
-        for p in ps.iter_mut() {
+        for p in &mut ps {
             p.vccint = 0.97;
         }
         runtime_scheme::calibrate(

@@ -207,7 +207,7 @@ impl CadFlow {
 
         // 3. Static scheme (Algorithm 1).
         let rails = static_scheme::assign(&clustering, &slack_values, cfg.v_hi, cfg.v_lo)?;
-        for p in partitions.iter_mut() {
+        for p in &mut partitions {
             p.vccint = rails
                 .iter()
                 .find(|r| r.partition == p.id)

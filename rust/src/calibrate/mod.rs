@@ -46,6 +46,7 @@
 
 use std::time::Instant;
 
+use crate::check;
 use crate::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest, MODEL_INPUT};
 use crate::error::{Error, Result};
 use crate::fpga::Partition;
@@ -645,6 +646,31 @@ pub fn run_calibrate(
              non-positive value (before {energy_uj_before}, after {energy_uj_after}) \
              — rails or power model corrupted"
         )));
+    }
+
+    // S20 post-convergence gate: the recorded trajectories must obey
+    // the controller contract (clamp bounds, one step per epoch,
+    // cooldown and lock semantics) before the artifact is written.
+    let trajectory = check::Trajectory {
+        v_floor,
+        v_ceil,
+        step_v: cfg.controller.resolved_step(&tech),
+        cooldown_epochs: cfg.controller.cooldown_epochs,
+        rails: partitions
+            .iter()
+            .map(|p| check::RailTrace {
+                partition: p.partition,
+                voltages: p.voltages.clone(),
+            })
+            .collect(),
+    };
+    let violations = check::check_trajectory(&trajectory);
+    if !violations.is_empty() {
+        let verdict = check::CheckReport {
+            diagnostics: violations,
+            configurations: 1,
+        };
+        return Err(Error::Check(verdict.error_summary()));
     }
 
     Ok(CalibrateReport {

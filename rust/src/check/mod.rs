@@ -1,0 +1,1318 @@
+//! S20 — Static design-rule checker for produced configurations.
+//!
+//! The paper's safety argument is a *static* invariant: every MAC sits
+//! in a partition whose NTC rail still leaves its min-slack path
+//! non-negative, or undervolting silently corrupts the int8 pipeline
+//! (the failure mode ThUnderVolt recovers from and Salami et al.
+//! measure on real reduced-voltage FPGAs). Until now that invariant was
+//! only enforced implicitly inside `cadflow`/`study` and re-checked ad
+//! hoc in tests. This module makes it explicit: it takes any produced
+//! configuration — netlist + clustering labels + partition rail
+//! assignment + (optionally) a calibration trajectory — and verifies a
+//! catalog of named rules ([`Rule`]) with structured diagnostics.
+//!
+//! Rule families:
+//!
+//! * **Timing safety** (`VST001`..`VST004`) — per-MAC Razor outcome at
+//!   the partition's assigned rail under the tech delay model, the
+//!   paper's slack-ordered rail placement, and wasted-margin detection.
+//! * **Flow compliance** (`VST005`..`VST008`) — FlowKind-aware bounds:
+//!   Vivado techs never leave the vendor guard band, VTR rails never
+//!   descend below the NTC floor, nothing exceeds `v_nom` or drops to
+//!   the alpha-power-law singularity at `v_th`.
+//! * **Structural soundness** (`VST009`..`VST014`) — clustering labels
+//!   form a disjoint cover of the array, `k` matches the label range,
+//!   no empty partitions, DBSCAN noise fully reassigned, partitions
+//!   form a disjoint exact cover and pass the floorplan geometry rules.
+//! * **Trajectory invariants** (`VST015`..`VST018`) — calibrator steps
+//!   respect clamp bounds, step quantisation and the cooldown/lock
+//!   semantics of the hysteresis controller.
+//!
+//! Severities are calibration-aware: a Razor flag (or silent MAC) on a
+//! *runtime-calibrated* rail contradicts the calibration claim and is a
+//! violation, while on a static (Algorithm-1) rail it is the paper's
+//! designed operating mode — the gap Algorithm 2 exists to close — and
+//! renders as an Info diagnostic instead (see
+//! `rail_mode_axis_compares_static_vs_runtime` in `rust/tests/sweep.rs`
+//! for the measured static-dips-below-frontier behaviour).
+//!
+//! The checker is wired four ways: the `vstpu check` subcommand, a
+//! post-scenario gate in [`crate::sweep`] (violations become structured
+//! failure records, never winner-table entries), a post-convergence
+//! assertion in [`crate::calibrate::run_calibrate`], and
+//! `debug_assert!`-level hooks in the `cluster`/`timing`/`power` hot
+//! paths that reuse the same predicates so checker and pipeline cannot
+//! drift apart. `docs/CHECK_RULES.md` is the human-readable catalog.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+
+use crate::cluster::{Algorithm, Clustering, NOISE};
+use crate::error::Result;
+use crate::fpga::{Device, Partition};
+use crate::netlist::{MacId, SystolicNetlist};
+use crate::razor::{self, RazorConfig, DEFAULT_TOGGLE};
+use crate::study;
+use crate::tech::{FlowKind, Technology};
+use crate::timing;
+use crate::voltage::{runtime_scheme, static_scheme};
+
+/// Schema tag of the machine-readable artifact
+/// (`CHECK_report.json`, rendered by [`crate::report::check_json`]).
+pub const CHECK_SCHEMA: &str = "vstpu-check/v1";
+
+/// Voltage comparison slack (V): rails sitting exactly on a clamp bound
+/// must not trip the bound rules.
+const EPS_V: f64 = 1e-9;
+
+/// Diagnostic severity. Only `Error` fails a check outright; `Warn`
+/// fails under `--deny-warnings`; `Info` is never fatal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Invariant violation: the configuration must not ship.
+    Error,
+    /// Suspicious but recoverable (fails under `--deny-warnings`).
+    Warn,
+    /// Expected-by-design observation worth surfacing.
+    Info,
+}
+
+impl Severity {
+    /// Stable lower-case name (JSON + human output).
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// The rule catalog. Every rule has a stable id (`VST001`..) that tests
+/// and CI match on; see `docs/CHECK_RULES.md` for the prose catalog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    /// VST001 — a MAC misses even the Razor shadow window at its rail.
+    TimingSilent,
+    /// VST002 — a MAC raises the Razor flag at its rail.
+    TimingFlagged,
+    /// VST003 — rails are not monotone non-increasing in partition
+    /// criticality (the paper's slack-ordered placement rule).
+    RailOrdering,
+    /// VST004 — a rail carries more than two steps of reclaimable
+    /// margin above its flag frontier.
+    RailMargin,
+    /// VST005 — a rail exceeds the nominal voltage.
+    RailCeiling,
+    /// VST006 — a Vivado-flow rail leaves the vendor guard band.
+    GuardBand,
+    /// VST007 — a VTR-flow rail descends below the NTC floor.
+    NtcFloor,
+    /// VST008 — a rail is non-finite or at/below the transistor
+    /// threshold (the alpha-power-law delay model diverges there).
+    RailPhysical,
+    /// VST009 — a clustering label is outside `0..k`.
+    LabelRange,
+    /// VST010 — DBSCAN noise labels survive into the configuration.
+    NoiseLeak,
+    /// VST011 — a cluster/partition has no members (a hole in the
+    /// label range).
+    EmptyCluster,
+    /// VST012 — the label vector does not cover the array.
+    LabelCover,
+    /// VST013 — partitions are not a disjoint exact cover of the MAC
+    /// grid consistent with the labels.
+    PartitionCover,
+    /// VST014 — partition rectangles violate the floorplan geometry
+    /// rules (device bounds, capacity, overlap).
+    FloorplanGeometry,
+    /// VST015 — a trajectory voltage crosses the clamp bounds.
+    TraceBounds,
+    /// VST016 — a trajectory moves more than one step per epoch.
+    TraceStep,
+    /// VST017 — a rail steps down inside the post-recovery cooldown.
+    TraceCooldown,
+    /// VST018 — a rail moves again after its second recovery locked it.
+    TraceLock,
+}
+
+impl Rule {
+    /// Every rule, in id order.
+    pub const ALL: [Rule; 18] = [
+        Rule::TimingSilent,
+        Rule::TimingFlagged,
+        Rule::RailOrdering,
+        Rule::RailMargin,
+        Rule::RailCeiling,
+        Rule::GuardBand,
+        Rule::NtcFloor,
+        Rule::RailPhysical,
+        Rule::LabelRange,
+        Rule::NoiseLeak,
+        Rule::EmptyCluster,
+        Rule::LabelCover,
+        Rule::PartitionCover,
+        Rule::FloorplanGeometry,
+        Rule::TraceBounds,
+        Rule::TraceStep,
+        Rule::TraceCooldown,
+        Rule::TraceLock,
+    ];
+
+    /// Stable rule id (`VST001`..`VST018`).
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::TimingSilent => "VST001",
+            Rule::TimingFlagged => "VST002",
+            Rule::RailOrdering => "VST003",
+            Rule::RailMargin => "VST004",
+            Rule::RailCeiling => "VST005",
+            Rule::GuardBand => "VST006",
+            Rule::NtcFloor => "VST007",
+            Rule::RailPhysical => "VST008",
+            Rule::LabelRange => "VST009",
+            Rule::NoiseLeak => "VST010",
+            Rule::EmptyCluster => "VST011",
+            Rule::LabelCover => "VST012",
+            Rule::PartitionCover => "VST013",
+            Rule::FloorplanGeometry => "VST014",
+            Rule::TraceBounds => "VST015",
+            Rule::TraceStep => "VST016",
+            Rule::TraceCooldown => "VST017",
+            Rule::TraceLock => "VST018",
+        }
+    }
+
+    /// Short kebab-case slug (human output).
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::TimingSilent => "timing-silent",
+            Rule::TimingFlagged => "timing-flagged",
+            Rule::RailOrdering => "rail-ordering",
+            Rule::RailMargin => "rail-margin",
+            Rule::RailCeiling => "rail-ceiling",
+            Rule::GuardBand => "guard-band",
+            Rule::NtcFloor => "ntc-floor",
+            Rule::RailPhysical => "rail-physical",
+            Rule::LabelRange => "label-range",
+            Rule::NoiseLeak => "noise-leak",
+            Rule::EmptyCluster => "empty-cluster",
+            Rule::LabelCover => "label-cover",
+            Rule::PartitionCover => "partition-cover",
+            Rule::FloorplanGeometry => "floorplan-geometry",
+            Rule::TraceBounds => "trace-bounds",
+            Rule::TraceStep => "trace-step",
+            Rule::TraceCooldown => "trace-cooldown",
+            Rule::TraceLock => "trace-lock",
+        }
+    }
+
+    /// One-line statement of the invariant the rule encodes.
+    pub fn invariant(self) -> &'static str {
+        match self {
+            Rule::TimingSilent => {
+                "every MAC's effective delay at its rail stays inside the Razor shadow window"
+            }
+            Rule::TimingFlagged => {
+                "no MAC raises the Razor flag at its assigned rail (calibrated configurations)"
+            }
+            Rule::RailOrdering => {
+                "rails are monotone non-increasing in partition criticality (lowest slack -> highest rail)"
+            }
+            Rule::RailMargin => {
+                "no rail carries more than two calibration steps of reclaimable margin"
+            }
+            Rule::RailCeiling => "no rail exceeds v_nom",
+            Rule::GuardBand => "Vivado-flow rails never leave the vendor guard band [v_min, v_nom]",
+            Rule::NtcFloor => "VTR-flow rails never descend below the NTC floor (v_th + 0.02)",
+            Rule::RailPhysical => "every rail is finite and above the transistor threshold",
+            Rule::LabelRange => "every clustering label is inside 0..k",
+            Rule::NoiseLeak => "no DBSCAN noise label survives into the configuration",
+            Rule::EmptyCluster => "every cluster and partition has at least one MAC",
+            Rule::LabelCover => "the label vector has exactly one entry per MAC",
+            Rule::PartitionCover => {
+                "partitions form a disjoint exact cover of the array consistent with the labels"
+            }
+            Rule::FloorplanGeometry => {
+                "partition rectangles fit the device, hold their MACs and do not overlap"
+            }
+            Rule::TraceBounds => "calibration trajectories never cross the clamp bounds",
+            Rule::TraceStep => "calibration trajectories move at most one step per epoch",
+            Rule::TraceCooldown => "no rail steps down inside the post-recovery cooldown window",
+            Rule::TraceLock => "a rail locked by its second recovery never moves again",
+        }
+    }
+
+    /// The severity the rule fires at in a calibrated configuration
+    /// (the strictest case; see [`check_timing`] for the static-rail
+    /// downgrades of `VST001`/`VST002`).
+    pub fn default_severity(self) -> Severity {
+        match self {
+            Rule::TimingFlagged => Severity::Warn,
+            Rule::RailMargin => Severity::Info,
+            _ => Severity::Error,
+        }
+    }
+}
+
+/// Where a diagnostic points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Location {
+    /// A MAC by array coordinates.
+    Mac(MacId),
+    /// A row-major index into the label vector.
+    MacIndex(usize),
+    /// A partition / cluster id.
+    Partition(usize),
+    /// An ordered pair of partitions (ordering violations).
+    PartitionPair(usize, usize),
+    /// A trajectory epoch of one partition.
+    Epoch {
+        /// Partition the trace belongs to.
+        partition: usize,
+        /// Epoch index inside the trace (0 = static seed).
+        epoch: usize,
+    },
+    /// The configuration as a whole.
+    Global,
+}
+
+impl fmt::Display for Location {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Location::Mac(m) => write!(f, "mac ({},{})", m.row, m.col),
+            Location::MacIndex(i) => write!(f, "mac #{i}"),
+            Location::Partition(p) => write!(f, "partition {p}"),
+            Location::PartitionPair(a, b) => write!(f, "partitions {a}/{b}"),
+            Location::Epoch { partition, epoch } => {
+                write!(f, "partition {partition} epoch {epoch}")
+            }
+            Location::Global => write!(f, "configuration"),
+        }
+    }
+}
+
+/// One structured finding.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// The rule that fired.
+    pub rule: Rule,
+    /// Actual severity (may be downgraded from the rule default for
+    /// uncalibrated configurations).
+    pub severity: Severity,
+    /// Which configuration the finding belongs to (smoke mode checks
+    /// many; empty for single-configuration runs).
+    pub scope: String,
+    /// Where the finding points.
+    pub location: Location,
+    /// One-line explanation with the offending numbers.
+    pub message: String,
+}
+
+fn diag(rule: Rule, severity: Severity, location: Location, message: String) -> Diagnostic {
+    Diagnostic {
+        rule,
+        severity,
+        scope: String::new(),
+        location,
+        message,
+    }
+}
+
+/// The checker's verdict: every diagnostic plus the catalog size.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    /// All findings, sorted errors-first then by rule id.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of configurations checked (1 for single runs, more in
+    /// smoke mode).
+    pub configurations: usize,
+}
+
+impl CheckReport {
+    /// An empty (clean) report.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of `Error` diagnostics.
+    pub fn errors(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    /// Number of `Warn` diagnostics.
+    pub fn warnings(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    /// Number of `Info` diagnostics.
+    pub fn infos(&self) -> usize {
+        self.count(Severity::Info)
+    }
+
+    fn count(&self, s: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == s).count()
+    }
+
+    /// True iff no `Error` diagnostic fired.
+    pub fn is_clean(&self) -> bool {
+        self.errors() == 0
+    }
+
+    /// Fold another report into this one.
+    pub fn merge(&mut self, other: CheckReport) {
+        self.diagnostics.extend(other.diagnostics);
+        self.configurations += other.configurations;
+        sort_diagnostics(&mut self.diagnostics);
+    }
+
+    /// Compact summary of the error diagnostics — the string that
+    /// becomes a sweep failure record. Caps at four findings.
+    pub fn error_summary(&self) -> String {
+        let errs: Vec<&Diagnostic> = self
+            .diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .collect();
+        let mut parts: Vec<String> = errs
+            .iter()
+            .take(4)
+            .map(|d| format!("{} @ {}: {}", d.rule.id(), d.location, d.message))
+            .collect();
+        if errs.len() > 4 {
+            parts.push(format!("(+{} more)", errs.len() - 4));
+        }
+        parts.join("; ")
+    }
+}
+
+fn sort_diagnostics(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| {
+        (a.severity, a.rule.id(), a.scope.as_str())
+            .cmp(&(b.severity, b.rule.id(), b.scope.as_str()))
+    });
+}
+
+/// A per-partition calibration voltage trace (epoch 0 = static seed).
+#[derive(Debug, Clone)]
+pub struct RailTrace {
+    /// Partition the trace belongs to.
+    pub partition: usize,
+    /// Rail voltage at each epoch boundary.
+    pub voltages: Vec<f64>,
+}
+
+/// A calibration trajectory plus the controller contract it must obey.
+#[derive(Debug, Clone)]
+pub struct Trajectory {
+    /// Lower clamp bound (V).
+    pub v_floor: f64,
+    /// Upper clamp bound (V).
+    pub v_ceil: f64,
+    /// Maximum movement per epoch (V).
+    pub step_v: f64,
+    /// Epochs a rail must hold after a recovery step-up.
+    pub cooldown_epochs: u32,
+    /// One trace per partition.
+    pub rails: Vec<RailTrace>,
+}
+
+/// Everything the checker inspects, borrowed from the producing
+/// pipeline. Built with [`CheckInput::new`] plus the `with_*` setters.
+#[derive(Debug)]
+pub struct CheckInput<'a> {
+    /// The netlist the configuration was produced for.
+    pub netlist: &'a SystolicNetlist,
+    /// Technology preset (flow kind, voltage landmarks, delay model).
+    pub tech: &'a Technology,
+    /// Razor shadow-register configuration.
+    pub razor: &'a RazorConfig,
+    /// Toggle rate the timing rules evaluate at.
+    pub toggle: f64,
+    /// Clustering labels, when available (structural rules).
+    pub clustering: Option<&'a Clustering>,
+    /// The partition set with assigned rails.
+    pub partitions: &'a [Partition],
+    /// Calibration trajectory, when available (trajectory rules).
+    pub trajectory: Option<&'a Trajectory>,
+    /// True iff the rails claim to be runtime-calibrated — Razor flags
+    /// then contradict the claim and fire at full severity.
+    pub calibrated: bool,
+    /// Context tag copied onto every diagnostic.
+    pub scope: String,
+}
+
+impl<'a> CheckInput<'a> {
+    /// Minimal input: netlist + tech + razor + railed partitions, at
+    /// the default toggle, treated as calibrated.
+    pub fn new(
+        netlist: &'a SystolicNetlist,
+        tech: &'a Technology,
+        razor: &'a RazorConfig,
+        partitions: &'a [Partition],
+    ) -> Self {
+        Self {
+            netlist,
+            tech,
+            razor,
+            toggle: DEFAULT_TOGGLE,
+            clustering: None,
+            partitions,
+            trajectory: None,
+            calibrated: true,
+            scope: String::new(),
+        }
+    }
+
+    /// Attach clustering labels (enables the structural label rules).
+    pub fn with_clustering(mut self, c: &'a Clustering) -> Self {
+        self.clustering = Some(c);
+        self
+    }
+
+    /// Evaluate the timing rules at this toggle rate.
+    pub fn with_toggle(mut self, toggle: f64) -> Self {
+        self.toggle = toggle;
+        self
+    }
+
+    /// Attach a calibration trajectory (enables the trajectory rules).
+    pub fn with_trajectory(mut self, t: &'a Trajectory) -> Self {
+        self.trajectory = Some(t);
+        self
+    }
+
+    /// Declare whether the rails are runtime-calibrated (default true).
+    pub fn with_calibrated(mut self, calibrated: bool) -> Self {
+        self.calibrated = calibrated;
+        self
+    }
+
+    /// Tag every diagnostic with a context string.
+    pub fn with_scope(mut self, scope: impl Into<String>) -> Self {
+        self.scope = scope.into();
+        self
+    }
+}
+
+/// Run the whole catalog over one configuration.
+pub fn check(input: &CheckInput<'_>) -> CheckReport {
+    let mut diags = check_structure(input.netlist, input.clustering, input.partitions);
+    diags.extend(check_rails(input.tech, input.partitions));
+    diags.extend(check_timing(
+        input.netlist,
+        input.tech,
+        input.razor,
+        input.partitions,
+        input.toggle,
+        input.calibrated,
+    ));
+    if let Some(t) = input.trajectory {
+        diags.extend(check_trajectory(t));
+    }
+    for d in &mut diags {
+        d.scope.clone_from(&input.scope);
+    }
+    sort_diagnostics(&mut diags);
+    CheckReport {
+        diagnostics: diags,
+        configurations: 1,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Predicates shared with the pipeline's debug_assert! hooks.
+// ---------------------------------------------------------------------
+
+/// True iff a rail voltage is electrically meaningful at all (finite
+/// and positive) — the weakest predicate, used by the power model's
+/// invariant hook (the power model is defined below `v_th`, where the
+/// delay model is not; figure sweeps legitimately drive it there).
+pub fn rail_is_finite_positive(v: f64) -> bool {
+    v.is_finite() && v > 0.0
+}
+
+/// True iff the delay model is defined at `v` for `tech` — the
+/// `VST008` predicate ([`Technology::delay_factor`] diverges at the
+/// threshold and panics at or below it).
+pub fn rail_is_physical(tech: &Technology, v: f64) -> bool {
+    rail_is_finite_positive(v) && v > tech.v_th
+}
+
+/// The flow-compliance verdict for one rail: which bound rule (if any)
+/// the voltage violates. `VST005`..`VST008` share this predicate.
+pub fn rail_flow_rule(tech: &Technology, v: f64) -> Option<Rule> {
+    if !rail_is_physical(tech, v) {
+        return Some(Rule::RailPhysical);
+    }
+    if v > tech.v_nom + EPS_V {
+        return Some(Rule::RailCeiling);
+    }
+    match tech.flow {
+        FlowKind::Vivado if v < tech.v_min - EPS_V => Some(Rule::GuardBand),
+        FlowKind::Vtr if v < runtime_scheme::physical_floor(tech) - EPS_V => Some(Rule::NtcFloor),
+        _ => None,
+    }
+}
+
+/// True iff the labelling is *total*: one label per point, no noise,
+/// every label inside `0..k` and every cluster inhabited — the
+/// post-`assign_noise_to_nearest` invariant the clustering hot path
+/// `debug_assert!`s.
+pub fn labels_total(c: &Clustering, n_points: usize) -> bool {
+    if c.labels.len() != n_points || c.k == 0 {
+        return false;
+    }
+    let mut used = vec![false; c.k];
+    for &l in &c.labels {
+        if l == NOISE || l >= c.k {
+            return false;
+        }
+        used[l] = true;
+    }
+    used.iter().all(|&u| u)
+}
+
+/// True iff the partitions hold every MAC of a `size` x `size` array
+/// exactly once — the invariant `timing::implement` `debug_assert!`s.
+pub fn partitions_cover(partitions: &[Partition], size: u32) -> bool {
+    let n = (size as usize) * (size as usize);
+    let mut seen = vec![false; n];
+    for p in partitions {
+        for mac in &p.macs {
+            let i = mac.index(size);
+            if i >= n || seen[i] {
+                return false;
+            }
+            seen[i] = true;
+        }
+    }
+    seen.iter().all(|&s| s)
+}
+
+// ---------------------------------------------------------------------
+// Rule families.
+// ---------------------------------------------------------------------
+
+/// Structural soundness (`VST009`..`VST014`): labels are a disjoint
+/// cover, partitions match them, geometry validates.
+pub fn check_structure(
+    netlist: &SystolicNetlist,
+    clustering: Option<&Clustering>,
+    partitions: &[Partition],
+) -> Vec<Diagnostic> {
+    let size = netlist.size;
+    let n = netlist.mac_count();
+    let mut out = Vec::new();
+
+    if let Some(c) = clustering {
+        if c.labels.len() != n {
+            out.push(diag(
+                Rule::LabelCover,
+                Severity::Error,
+                Location::Global,
+                format!("{} labels for {n} MACs", c.labels.len()),
+            ));
+        } else {
+            let mut noise = Vec::new();
+            let mut oob = Vec::new();
+            let mut members = vec![0usize; c.k];
+            for (i, &l) in c.labels.iter().enumerate() {
+                if l == NOISE {
+                    noise.push(i);
+                } else if l >= c.k {
+                    oob.push(i);
+                } else {
+                    members[l] += 1;
+                }
+            }
+            if let Some(&first) = noise.first() {
+                out.push(diag(
+                    Rule::NoiseLeak,
+                    Severity::Error,
+                    Location::MacIndex(first),
+                    format!(
+                        "{} MAC(s) still carry the DBSCAN noise label (first: #{first})",
+                        noise.len()
+                    ),
+                ));
+            }
+            if let Some(&first) = oob.first() {
+                out.push(diag(
+                    Rule::LabelRange,
+                    Severity::Error,
+                    Location::MacIndex(first),
+                    format!(
+                        "{} label(s) outside 0..{} (first: #{first} -> {})",
+                        oob.len(),
+                        c.k,
+                        c.labels[first]
+                    ),
+                ));
+            }
+            for (label, &count) in members.iter().enumerate() {
+                if count == 0 {
+                    out.push(diag(
+                        Rule::EmptyCluster,
+                        Severity::Error,
+                        Location::Partition(label),
+                        format!("cluster {label} has no members (hole in the label range)"),
+                    ));
+                }
+            }
+        }
+        if partitions.len() != c.k {
+            out.push(diag(
+                Rule::PartitionCover,
+                Severity::Error,
+                Location::Global,
+                format!("{} partitions for k = {}", partitions.len(), c.k),
+            ));
+        }
+    }
+
+    // Disjoint exact cover, consistent with the labels where known.
+    let mut owner: Vec<Option<usize>> = vec![None; n];
+    let mut duplicates = 0usize;
+    let mut mislabeled = 0usize;
+    let mut exemplar: Option<MacId> = None;
+    for p in partitions {
+        if p.macs.is_empty() {
+            out.push(diag(
+                Rule::EmptyCluster,
+                Severity::Error,
+                Location::Partition(p.id),
+                format!("partition {} holds no MACs", p.id),
+            ));
+        }
+        for &mac in &p.macs {
+            let i = mac.index(size);
+            if i >= n || owner[i].is_some() {
+                duplicates += 1;
+                exemplar.get_or_insert(mac);
+                continue;
+            }
+            owner[i] = Some(p.id);
+            if let Some(c) = clustering {
+                if let Some(&l) = c.labels.get(i) {
+                    if l != NOISE && l < c.k && l != p.id {
+                        mislabeled += 1;
+                        exemplar.get_or_insert(mac);
+                    }
+                }
+            }
+        }
+    }
+    let missing = owner.iter().filter(|o| o.is_none()).count();
+    if duplicates + missing + mislabeled > 0 {
+        let loc = exemplar.map_or(Location::Global, Location::Mac);
+        out.push(diag(
+            Rule::PartitionCover,
+            Severity::Error,
+            loc,
+            format!(
+                "partitions do not cover the array: {duplicates} duplicate/out-of-array, \
+                 {missing} missing, {mislabeled} label-mismatched MAC(s)"
+            ),
+        ));
+    }
+
+    let device = Device::for_array(size);
+    if let Err(e) = crate::fpga::validate_partitions(&device, partitions) {
+        out.push(diag(
+            Rule::FloorplanGeometry,
+            Severity::Error,
+            Location::Global,
+            e.to_string(),
+        ));
+    }
+    out
+}
+
+/// Flow compliance (`VST005`..`VST008`): every rail against the
+/// FlowKind-aware bounds of [`study::rail_bounds`].
+pub fn check_rails(tech: &Technology, partitions: &[Partition]) -> Vec<Diagnostic> {
+    let floor_name = match tech.flow {
+        FlowKind::Vivado => "vendor guard band",
+        FlowKind::Vtr => "NTC floor",
+    };
+    let mut out = Vec::new();
+    for p in partitions {
+        let Some(rule) = rail_flow_rule(tech, p.vccint) else {
+            continue;
+        };
+        let v = p.vccint;
+        let message = match rule {
+            Rule::RailPhysical => format!(
+                "rail {v} V is not physical for {} (threshold {} V)",
+                tech.name, tech.v_th
+            ),
+            Rule::RailCeiling => format!(
+                "rail {v:.4} V exceeds v_nom {:.2} V on {}",
+                tech.v_nom, tech.name
+            ),
+            Rule::GuardBand => format!(
+                "rail {v:.4} V below the {} {floor_name} (v_min {:.2} V) — the Vivado flow \
+                 cannot drive sub-guard-band rails",
+                tech.name, tech.v_min
+            ),
+            _ => format!(
+                "rail {v:.4} V below the {} {floor_name} ({:.3} V)",
+                tech.name,
+                runtime_scheme::physical_floor(tech)
+            ),
+        };
+        out.push(diag(rule, Severity::Error, Location::Partition(p.id), message));
+    }
+    out
+}
+
+/// Timing safety (`VST001`..`VST004`): per-MAC Razor outcome at the
+/// assigned rail, the slack-ordered placement rule, and wasted margin.
+///
+/// `calibrated` selects the severities of `VST001`/`VST002`: flags on a
+/// calibrated rail contradict the calibration claim (Error/Warn), while
+/// a static Algorithm-1 rail operating in the Razor-protected region is
+/// the paper's designed mode (Info).
+pub fn check_timing(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    partitions: &[Partition],
+    toggle: f64,
+    calibrated: bool,
+) -> Vec<Diagnostic> {
+    let period = netlist.period_ns();
+    let budget = period - timing::CLOCK_UNCERTAINTY_NS;
+    let stretch = razor::activity_stretch(toggle);
+    let (v_lo, v_floor) = study::rail_bounds(tech);
+    let k = partitions.len().max(1);
+    let vs = static_scheme::step(tech.v_nom, v_lo, k.max(4));
+    // Ordering tolerance: one Algorithm-1 step absorbs the static
+    // quantisation, two calibration steps absorb the Algorithm-2
+    // convergence band (a rail settles in [frontier, frontier + 2*vs)),
+    // so a clean configuration can never trip VST003.
+    let order_tol = (tech.v_nom - v_lo) / k as f64 + 2.0 * vs + EPS_V;
+    let mut out = Vec::new();
+
+    // Per-partition criticality: worst static arc delay over its MACs
+    // (larger = less slack = more critical; the quantity cluster 0 is
+    // canonically worst at).
+    let worst_static = |p: &Partition| -> f64 {
+        p.macs
+            .iter()
+            .flat_map(|&m| netlist.arcs_of(m))
+            .map(crate::netlist::TimingArc::total_delay_ns)
+            .fold(0.0, f64::max)
+    };
+    let crit: Vec<f64> = partitions.iter().map(worst_static).collect();
+
+    for (pi, p) in partitions.iter().enumerate() {
+        if !rail_is_physical(tech, p.vccint) {
+            continue; // VST008 already fired; the delay model is undefined here.
+        }
+        let vf = tech.delay_factor(p.vccint);
+        let mut flagged: Vec<(MacId, f64)> = Vec::new();
+        let mut silent: Vec<(MacId, f64)> = Vec::new();
+        for &mac in &p.macs {
+            let d_eff = netlist
+                .arcs_of(mac)
+                .iter()
+                .map(crate::netlist::TimingArc::total_delay_ns)
+                .fold(0.0, f64::max)
+                * vf
+                * stretch;
+            match razor.classify(d_eff, period) {
+                razor::MacOutcome::Silent => silent.push((mac, d_eff)),
+                razor::MacOutcome::Flagged => flagged.push((mac, d_eff)),
+                razor::MacOutcome::Ok => {}
+            }
+        }
+        // A calibrated rail pinned at the flow floor had no room left to
+        // step up — flags there are a surfaced risk of the flow bounds,
+        // not a calibration contradiction, so they downgrade to Warn.
+        let pinned = p.vccint <= v_floor + EPS_V;
+        let mode_note = if !calibrated {
+            " (static Algorithm-1 rail; runtime calibration pending)"
+        } else if pinned {
+            " (rail pinned at the flow floor)"
+        } else {
+            ""
+        };
+        if let Some(&(mac, d)) = silent
+            .iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+        {
+            let severity = if !calibrated {
+                Severity::Info
+            } else if pinned {
+                Severity::Warn
+            } else {
+                Severity::Error
+            };
+            out.push(diag(
+                Rule::TimingSilent,
+                severity,
+                Location::Mac(mac),
+                format!(
+                    "{}/{} MAC(s) in partition {} past the Razor shadow window at rail \
+                     {:.4} V: worst d_eff {:.3} ns vs budget {:.3} + t_del {:.2} ns{}",
+                    silent.len(),
+                    p.macs.len(),
+                    p.id,
+                    p.vccint,
+                    d,
+                    budget,
+                    razor.t_del_ns,
+                    mode_note
+                ),
+            ));
+        }
+        if let Some(&(mac, d)) = flagged
+            .iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+        {
+            let severity = if calibrated { Severity::Warn } else { Severity::Info };
+            out.push(diag(
+                Rule::TimingFlagged,
+                severity,
+                Location::Mac(mac),
+                format!(
+                    "{}/{} MAC(s) in partition {} raise the Razor flag at rail {:.4} V: \
+                     worst d_eff {:.3} ns vs budget {:.3} ns{}",
+                    flagged.len(),
+                    p.macs.len(),
+                    p.id,
+                    p.vccint,
+                    d,
+                    budget,
+                    mode_note
+                ),
+            ));
+        }
+
+        // VST003: a more critical partition must never sit on a lower
+        // rail (tolerance: one Algorithm-1 step absorbs quantisation).
+        for (pj, q) in partitions.iter().enumerate() {
+            if crit[pi] > crit[pj] + 1e-9 && p.vccint + order_tol < q.vccint {
+                out.push(diag(
+                    Rule::RailOrdering,
+                    Severity::Error,
+                    Location::PartitionPair(p.id, q.id),
+                    format!(
+                        "partition {} (worst arc {:.3} ns) rails at {:.4} V below the less \
+                         critical partition {} (worst arc {:.3} ns) at {:.4} V",
+                        p.id, crit[pi], p.vccint, q.id, crit[pj], q.vccint
+                    ),
+                ));
+                break; // one pair per offending partition keeps the report legible
+            }
+        }
+
+        // VST004: reclaimable margin above the flag frontier.
+        let frontier = razor::min_safe_voltage(netlist, tech, &p.macs, toggle);
+        let legal = frontier.max(v_floor);
+        if p.vccint > legal + 2.0 * vs + EPS_V {
+            out.push(diag(
+                Rule::RailMargin,
+                Severity::Info,
+                Location::Partition(p.id),
+                format!(
+                    "rail {:.4} V carries {:.4} V of reclaimable margin above its flag \
+                     frontier {:.4} V (step {:.4} V)",
+                    p.vccint,
+                    p.vccint - legal,
+                    frontier,
+                    vs
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Trajectory invariants (`VST015`..`VST018`): the hysteresis
+/// controller's contract, verified over a recorded voltage trace.
+pub fn check_trajectory(t: &Trajectory) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for rt in &t.rails {
+        let v = &rt.voltages;
+        let p = rt.partition;
+
+        // VST015: clamp bounds hold at every epoch.
+        let oob: Vec<usize> = (0..v.len())
+            .filter(|&e| v[e] < t.v_floor - EPS_V || v[e] > t.v_ceil + EPS_V)
+            .collect();
+        if let Some(&first) = oob.first() {
+            out.push(diag(
+                Rule::TraceBounds,
+                Severity::Error,
+                Location::Epoch { partition: p, epoch: first },
+                format!(
+                    "{} epoch(s) outside the clamp [{:.3}, {:.3}] V (first: {:.4} V at epoch {first})",
+                    oob.len(),
+                    t.v_floor,
+                    t.v_ceil,
+                    v[first]
+                ),
+            ));
+        }
+
+        // VST016: one step per epoch, at most.
+        for e in 1..v.len() {
+            if (v[e] - v[e - 1]).abs() > t.step_v + EPS_V {
+                out.push(diag(
+                    Rule::TraceStep,
+                    Severity::Error,
+                    Location::Epoch { partition: p, epoch: e },
+                    format!(
+                        "rail moved {:.4} V in one epoch (step limit {:.4} V)",
+                        (v[e] - v[e - 1]).abs(),
+                        t.step_v
+                    ),
+                ));
+                break;
+            }
+        }
+
+        // Recovery step-ups drive the cooldown and lock rules.
+        let ups: Vec<usize> = (1..v.len()).filter(|&e| v[e] > v[e - 1] + EPS_V).collect();
+
+        // VST017: no step-down inside the cooldown window after an up.
+        'cooldown: for &u in &ups {
+            let end = (u + t.cooldown_epochs as usize).min(v.len().saturating_sub(1));
+            for e in (u + 1)..=end {
+                if v[e] < v[e - 1] - EPS_V {
+                    out.push(diag(
+                        Rule::TraceCooldown,
+                        Severity::Error,
+                        Location::Epoch { partition: p, epoch: e },
+                        format!(
+                            "rail stepped down {} epoch(s) after the recovery at epoch {u} \
+                             (cooldown {})",
+                            e - u,
+                            t.cooldown_epochs
+                        ),
+                    ));
+                    break 'cooldown;
+                }
+            }
+        }
+
+        // VST018: the second recovery locks the rail for good.
+        if ups.len() >= 2 {
+            let lock = ups[1];
+            for e in (lock + 1)..v.len() {
+                if (v[e] - v[e - 1]).abs() > EPS_V {
+                    out.push(diag(
+                        Rule::TraceLock,
+                        Severity::Error,
+                        Location::Epoch { partition: p, epoch: e },
+                        format!(
+                            "rail moved {:.4} V at epoch {e} after locking at its second \
+                             recovery (epoch {lock})",
+                            (v[e] - v[e - 1]).abs()
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Build a [`Trajectory`] from a finished calibration run's report —
+/// the adapter [`crate::calibrate::run_calibrate`] and `check --smoke`
+/// both verify through.
+pub fn trajectory_of(rep: &crate::calibrate::CalibrateReport) -> Trajectory {
+    Trajectory {
+        v_floor: rep.v_floor,
+        v_ceil: rep.v_ceil,
+        step_v: rep.step_v,
+        cooldown_epochs: rep.cooldown_epochs,
+        rails: rep
+            .partitions
+            .iter()
+            .map(|p| RailTrace {
+                partition: p.partition,
+                voltages: p.voltages.clone(),
+            })
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Whole-pipeline entry points (the `vstpu check` subcommand).
+// ---------------------------------------------------------------------
+
+/// The deterministic single-configuration pipeline `vstpu check` runs:
+/// netlist -> STA -> clustering -> rails, then the full rule catalog.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Technology preset.
+    pub tech: Technology,
+    /// Systolic-array edge.
+    pub array_size: u32,
+    /// Array clock, MHz.
+    pub clock_mhz: f64,
+    /// Clustering algorithm.
+    pub algorithm: Algorithm,
+    /// Run Algorithm-2 runtime calibration after the static scheme.
+    pub runtime_rails: bool,
+    /// Toggle rate the timing rules evaluate at.
+    pub toggle: f64,
+    /// Razor calibration trial cap.
+    pub max_trials: usize,
+    /// Netlist process-variation seed.
+    pub seed: u64,
+}
+
+impl PipelineConfig {
+    /// The default checked flow: 16x16 at 100 MHz, DBSCAN clustering,
+    /// runtime-calibrated rails — the `calibrate`/`sweep` recipe.
+    pub fn paper_default(tech: Technology) -> Self {
+        Self {
+            tech,
+            array_size: 16,
+            clock_mhz: 100.0,
+            algorithm: Algorithm::paper_default(),
+            runtime_rails: true,
+            toggle: DEFAULT_TOGGLE,
+            max_trials: 200,
+            seed: 2021,
+        }
+    }
+}
+
+/// Produce one configuration with the shared `study` recipe and run
+/// the full catalog over it.
+pub fn check_pipeline(cfg: &PipelineConfig) -> Result<CheckReport> {
+    let netlist = SystolicNetlist::generate(cfg.array_size, &cfg.tech, cfg.clock_mhz, cfg.seed);
+    let slacks = timing::synthesize(&netlist).min_slack_values(cfg.array_size);
+    let razor = RazorConfig::default();
+    let clustering = cfg.algorithm.run(&slacks)?.assign_noise_to_nearest(&slacks);
+    let partitions = study::partitions_with_rails(
+        &netlist,
+        &cfg.tech,
+        &razor,
+        &clustering,
+        &slacks,
+        cfg.max_trials,
+        cfg.toggle,
+        cfg.runtime_rails,
+    )?;
+    let mode = if cfg.runtime_rails { "runtime" } else { "static" };
+    let input = CheckInput::new(&netlist, &cfg.tech, &razor, &partitions)
+        .with_clustering(&clustering)
+        .with_toggle(cfg.toggle)
+        .with_calibrated(cfg.runtime_rails)
+        .with_scope(format!(
+            "{}/{}x{}/{mode}",
+            cfg.tech.name, cfg.array_size, cfg.array_size
+        ));
+    Ok(check(&input))
+}
+
+/// CI smoke verification: re-derive every configuration of the sweep
+/// smoke grid (same seeds, same shared-STA recipe as `vstpu sweep
+/// --smoke`) and the quick calibration trajectory (`vstpu calibrate
+/// --quick`), and run the catalog over each — the `check-smoke` job's
+/// entry point. Deterministic, so checking the re-derivation is
+/// checking the uploaded artifacts' configurations.
+pub fn smoke_report(artifacts_dir: &Path) -> Result<CheckReport> {
+    use crate::sweep::{self, RailMode, SweepConfig};
+
+    let cfg = SweepConfig::smoke();
+    let mut report = CheckReport::new();
+    let mut shared: HashMap<(String, u32), sweep::SharedTiming> = HashMap::new();
+    for sc in sweep::enumerate(&cfg) {
+        let key = (sc.tech.clone(), sc.array_size);
+        if !shared.contains_key(&key) {
+            let tech = Technology::by_name(&sc.tech)
+                .ok_or_else(|| crate::Error::Check(format!("unknown tech '{}'", sc.tech)))?;
+            shared.insert(
+                key.clone(),
+                sweep::shared_timing(&tech, sc.array_size, cfg.clock_mhz, cfg.seed),
+            );
+        }
+        let st = &shared[&key];
+        let (clustering, partitions, _noise) = sweep::scenario_configuration(&sc, st, &cfg)?;
+        let input = CheckInput::new(&st.netlist, &st.tech, &cfg.razor, &partitions)
+            .with_clustering(&clustering)
+            .with_toggle(cfg.calib_toggle)
+            .with_calibrated(sc.rail_mode == RailMode::Runtime)
+            .with_scope(format!(
+                "sweep[{}]: {}/{}/{}x{}/{}",
+                sc.index,
+                sc.algo.name(),
+                sc.tech,
+                sc.array_size,
+                sc.array_size,
+                sc.rail_mode.name()
+            ));
+        report.merge(check(&input));
+    }
+
+    // The calibrate-smoke trajectory, via the same quick harness the CI
+    // job measures (run_calibrate itself asserts the trajectory rules;
+    // re-checking here folds its diagnostics into the artifact).
+    let ccfg = crate::calibrate::CalibrateBenchConfig::quick(Technology::academic_22nm());
+    let crep = crate::calibrate::run_calibrate(artifacts_dir, ccfg)?;
+    let traj = trajectory_of(&crep);
+    let mut diags = check_trajectory(&traj);
+    for d in &mut diags {
+        d.scope = format!("calibrate: {}/quick", crep.tech);
+    }
+    report.merge(CheckReport {
+        diagnostics: diags,
+        configurations: 1,
+    });
+    Ok(report)
+}
+
+/// Render the verdict as aligned human-readable text.
+pub fn render(rep: &CheckReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "design-rule check ({CHECK_SCHEMA}): {} rule(s) over {} configuration(s) — \
+         {} error(s), {} warning(s), {} info(s)",
+        Rule::ALL.len(),
+        rep.configurations.max(1),
+        rep.errors(),
+        rep.warnings(),
+        rep.infos()
+    );
+    for d in &rep.diagnostics {
+        let scope = if d.scope.is_empty() {
+            String::new()
+        } else {
+            format!("[{}] ", d.scope)
+        };
+        let _ = writeln!(
+            s,
+            "  {:<5} {} {:<18} {scope}{}: {}",
+            d.severity.name().to_uppercase(),
+            d.rule.id(),
+            d.rule.name(),
+            d.location,
+            d.message
+        );
+    }
+    let _ = writeln!(
+        s,
+        "verdict: {}",
+        if rep.is_clean() { "clean" } else { "VIOLATIONS" }
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_ids_are_stable_unique_and_sequential() {
+        let ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
+        assert_eq!(ids.len(), 18);
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(*id, format!("VST{:03}", i + 1));
+        }
+        let names: std::collections::HashSet<&str> =
+            Rule::ALL.iter().map(|r| r.name()).collect();
+        assert_eq!(names.len(), Rule::ALL.len(), "slug collision");
+    }
+
+    #[test]
+    fn locations_render_compactly() {
+        assert_eq!(Location::Mac(MacId::new(3, 7)).to_string(), "mac (3,7)");
+        assert_eq!(Location::Partition(2).to_string(), "partition 2");
+        assert_eq!(Location::PartitionPair(0, 3).to_string(), "partitions 0/3");
+        assert_eq!(
+            Location::Epoch { partition: 1, epoch: 9 }.to_string(),
+            "partition 1 epoch 9"
+        );
+    }
+
+    #[test]
+    fn flow_rule_predicate_matches_the_landmarks() {
+        let vivado = Technology::artix7_28nm();
+        assert_eq!(rail_flow_rule(&vivado, 0.97), None);
+        assert_eq!(rail_flow_rule(&vivado, 1.05), Some(Rule::RailCeiling));
+        assert_eq!(rail_flow_rule(&vivado, 0.90), Some(Rule::GuardBand));
+        assert_eq!(rail_flow_rule(&vivado, 0.30), Some(Rule::RailPhysical));
+        assert_eq!(rail_flow_rule(&vivado, f64::NAN), Some(Rule::RailPhysical));
+        let vtr = Technology::academic_22nm();
+        let floor = runtime_scheme::physical_floor(&vtr);
+        assert_eq!(rail_flow_rule(&vtr, floor), None, "clamped-at-floor rails pass");
+        assert_eq!(rail_flow_rule(&vtr, floor - 0.005), Some(Rule::NtcFloor));
+        assert_eq!(rail_flow_rule(&vtr, vtr.v_th), Some(Rule::RailPhysical));
+    }
+
+    #[test]
+    fn labels_total_rejects_holes_noise_and_bad_lengths() {
+        let good = Clustering { labels: vec![0, 1, 1, 0], k: 2 };
+        assert!(labels_total(&good, 4));
+        assert!(!labels_total(&good, 5));
+        let hole = Clustering { labels: vec![0, 0, 2, 2], k: 3 };
+        assert!(!labels_total(&hole, 4));
+        let noisy = Clustering { labels: vec![0, NOISE, 1, 1], k: 2 };
+        assert!(!labels_total(&noisy, 4));
+    }
+
+    fn trace(voltages: &[f64]) -> Trajectory {
+        Trajectory {
+            v_floor: 0.47,
+            v_ceil: 1.0,
+            step_v: 0.0125,
+            cooldown_epochs: 2,
+            rails: vec![RailTrace { partition: 0, voltages: voltages.to_vec() }],
+        }
+    }
+
+    fn fires(diags: &[Diagnostic], rule: Rule) -> bool {
+        diags.iter().any(|d| d.rule == rule)
+    }
+
+    #[test]
+    fn trajectory_rules_fire_on_their_fixtures() {
+        // Clean descent with one recovery, cooldown respected.
+        let clean = trace(&[0.95, 0.9375, 0.925, 0.9375, 0.9375, 0.9375, 0.925]);
+        assert!(check_trajectory(&clean).is_empty());
+        // VST015: dips under the floor.
+        let d = check_trajectory(&trace(&[0.48, 0.4675, 0.455]));
+        assert!(fires(&d, Rule::TraceBounds));
+        // VST016: two-step jump in one epoch.
+        let d = check_trajectory(&trace(&[0.95, 0.9, 0.8875]));
+        assert!(fires(&d, Rule::TraceStep));
+        // VST017: down one epoch after a recovery, inside cooldown 2.
+        let d = check_trajectory(&trace(&[0.95, 0.9375, 0.95, 0.9375]));
+        assert!(fires(&d, Rule::TraceCooldown));
+        // VST018: movement after the second (locking) recovery. Keep
+        // each up's cooldown window clean so only the lock rule fires.
+        let d = check_trajectory(&trace(&[
+            0.9375, 0.95, 0.95, 0.95, 0.9375, 0.95, 0.95, 0.95, 0.9375,
+        ]));
+        assert!(fires(&d, Rule::TraceLock));
+        assert!(!fires(&d, Rule::TraceCooldown));
+    }
+
+    #[test]
+    fn error_summary_caps_at_four_findings() {
+        let mut rep = CheckReport::new();
+        for i in 0..6 {
+            rep.diagnostics.push(diag(
+                Rule::RailCeiling,
+                Severity::Error,
+                Location::Partition(i),
+                "over".into(),
+            ));
+        }
+        let s = rep.error_summary();
+        assert!(s.contains("VST005"));
+        assert!(s.contains("(+2 more)"));
+    }
+}

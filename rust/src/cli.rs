@@ -70,6 +70,18 @@ COMMANDS
                     --rails static,runtime (the rail-mode axis)
                     --k N (4)  --threads N (0 = cores)  --seed N (2021)
                     --max-trials N (200)  --json  --out FILE (BENCH_sweep.json)
+  check           static design-rule verifier (S20): run the default
+                    pipeline (netlist -> STA -> clustering -> rails) and
+                    verify the VST001..VST018 catalog — timing safety,
+                    flow compliance, structure, trajectory invariants;
+                    --json writes CHECK_report.json (vstpu-check/v1)
+                    --tech NAME (academic-22nm)  --array-size N (16)
+                    --algo hierarchical|kmeans|meanshift|dbscan  --k N (4)
+                    --rails static|runtime (runtime)  --toggle F (0.125)
+                    --seed N (2021)  --max-trials N (200)
+                    --smoke (verify the sweep-smoke + calibrate-smoke
+                    configurations, as re-derived deterministically)
+                    --deny-warnings  --json  --out FILE (CHECK_report.json)
   e2e             end-to-end accuracy/power sweep (EXPERIMENTS.md E12)
                     --artifacts DIR  --requests N (512)
   tradeoff        partition-count vs power vs accuracy-risk study
@@ -407,6 +419,58 @@ pub fn run() -> Result<()> {
                 )));
             }
         }
+        "check" => {
+            let o = Opts::parse(rest, &["smoke", "deny-warnings", "json"])?;
+            let deny = o.flag("deny-warnings") || config.check.deny_warnings;
+            let rep = if o.flag("smoke") {
+                let artifacts =
+                    PathBuf::from(o.str_or("artifacts", &config.serve.artifacts_dir));
+                vstpu::check::smoke_report(&artifacts)?
+            } else {
+                let tech = tech_by_name(&o.str_or("tech", "academic-22nm"))?;
+                let mut pcfg = vstpu::check::PipelineConfig::paper_default(tech);
+                pcfg.array_size = o.num("array-size", pcfg.array_size)?;
+                pcfg.seed = o.num("seed", pcfg.seed)?;
+                pcfg.max_trials = o.num("max-trials", pcfg.max_trials)?;
+                pcfg.toggle = o.num("toggle", config.check.toggle)?;
+                pcfg.runtime_rails = match o.str_or("rails", "runtime").as_str() {
+                    "runtime" => true,
+                    "static" => false,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unknown rail mode '{other}' (static|runtime)"
+                        )))
+                    }
+                };
+                pcfg.algorithm = algo_from(
+                    &o.str_or("algo", "dbscan"),
+                    o.num("k", 4)?,
+                    o.num("bandwidth", 0.4)?,
+                )?;
+                vstpu::check::check_pipeline(&pcfg)?
+            };
+            print!("{}", vstpu::check::render(&rep));
+            if o.flag("json") {
+                let out = PathBuf::from(o.str_or("out", "CHECK_report.json"));
+                std::fs::write(&out, report::check_json(&rep))?;
+                println!("wrote {}", out.display());
+            }
+            // Human output and artifact are complete either way; the
+            // verdict decides the exit status (the check-smoke CI gate).
+            if !rep.is_clean() {
+                return Err(Error::Check(format!(
+                    "{} error diagnostic(s): {}",
+                    rep.errors(),
+                    rep.error_summary()
+                )));
+            }
+            if deny && rep.warnings() > 0 {
+                return Err(Error::Check(format!(
+                    "{} warning diagnostic(s) rejected by --deny-warnings",
+                    rep.warnings()
+                )));
+            }
+        }
         "e2e" => {
             let o = Opts::parse(rest, &[])?;
             let artifacts = PathBuf::from(o.str_or("artifacts", &config.serve.artifacts_dir));
@@ -610,8 +674,7 @@ fn vstpu_e2e(artifacts: &Path, requests: usize) -> Result<()> {
                     .iter()
                     .enumerate()
                     .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(i, _)| i)
-                    .unwrap_or(0);
+                    .map_or(0, |(i, _)| i);
                 argmaxes.push(arg);
             }
             done += n;

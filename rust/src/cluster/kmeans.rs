@@ -120,8 +120,7 @@ pub fn cluster(data: &[f64], k: usize, seed: u64) -> Result<Clustering> {
                         let db = (*b - centres[labels_nearest(&centres, **b)]).abs();
                         da.total_cmp(&db)
                     })
-                    .map(|(i, _)| i)
-                    .unwrap_or(0);
+                    .map_or(0, |(i, _)| i);
                 moved = moved.max((centres[j] - data[far]).abs());
                 centres[j] = data[far];
                 continue;

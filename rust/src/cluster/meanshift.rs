@@ -32,8 +32,10 @@ pub fn cluster(data: &[f64], bandwidth: f64) -> Result<Clustering> {
     sorted.sort_by(f64::total_cmp);
     let mut prefix = Vec::with_capacity(sorted.len() + 1);
     prefix.push(0.0);
+    let mut acc = 0.0;
     for &v in &sorted {
-        prefix.push(prefix.last().unwrap() + v);
+        acc += v;
+        prefix.push(acc);
     }
 
     let shift_to_mode = |start: f64| -> f64 {

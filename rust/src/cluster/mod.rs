@@ -103,7 +103,14 @@ impl Clustering {
             }
             *l = best.0;
         }
-        self.sorted_by_centroid(data)
+        let out = self.sorted_by_centroid(data);
+        // Same predicate as the S20 rules VST009/VST010/VST011: the
+        // checker and this hot path must agree on what "total" means.
+        debug_assert!(
+            crate::check::labels_total(&out, data.len()),
+            "noise reassignment must produce a total labelling"
+        );
+        out
     }
 
     /// Relabel clusters so cluster 0 has the smallest centroid (most

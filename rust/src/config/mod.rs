@@ -29,6 +29,8 @@ pub struct Config {
     pub sweep: SweepSection,
     /// `[calibrate]` — closed-loop voltage-calibration parameters.
     pub calibrate: CalibrateSection,
+    /// `[check]` — design-rule checker parameters.
+    pub check: CheckSection,
 }
 
 /// `[flow]` — CAD-flow parameters.
@@ -175,6 +177,24 @@ impl CalibrateSection {
     }
 }
 
+/// `[check]` — the S20 static design-rule checker (`vstpu check`).
+#[derive(Debug, Clone)]
+pub struct CheckSection {
+    /// Treat Warn diagnostics as fatal (same as `--deny-warnings`).
+    pub deny_warnings: bool,
+    /// Toggle rate the timing rules evaluate at.
+    pub toggle: f64,
+}
+
+impl Default for CheckSection {
+    fn default() -> Self {
+        Self {
+            deny_warnings: false,
+            toggle: crate::razor::DEFAULT_TOGGLE,
+        }
+    }
+}
+
 /// Strip quotes from a TOML string value.
 fn unquote(v: &str) -> String {
     v.trim().trim_matches('"').to_string()
@@ -212,7 +232,10 @@ impl Config {
             }
             if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
                 section = name.trim().to_string();
-                if !matches!(section.as_str(), "flow" | "serve" | "sweep" | "calibrate") {
+                if !matches!(
+                    section.as_str(),
+                    "flow" | "serve" | "sweep" | "calibrate" | "check"
+                ) {
                     return Err(Error::Config(format!(
                         "line {}: unknown section [{section}]",
                         lineno + 1
@@ -264,6 +287,8 @@ impl Config {
                 self.calibrate.cooldown_epochs = parse_num(key, v)?
             }
             ("calibrate", "step_v") => self.calibrate.step_v = parse_num(key, v)?,
+            ("check", "deny_warnings") => self.check.deny_warnings = parse_bool(key, v)?,
+            ("check", "toggle") => self.check.toggle = parse_num(key, v)?,
             _ => {
                 return Err(Error::Config(format!(
                     "unknown key '{key}' in section [{section}]"
@@ -308,7 +333,11 @@ impl Config {
              high_water = {}\n\
              epoch_batches = {}\n\
              cooldown_epochs = {}\n\
-             step_v = {}\n",
+             step_v = {}\n\
+             \n\
+             [check]\n\
+             deny_warnings = {}\n\
+             toggle = {}\n",
             self.flow.array_size,
             self.flow.tech,
             self.flow.clock_mhz,
@@ -335,6 +364,8 @@ impl Config {
             self.calibrate.epoch_batches,
             self.calibrate.cooldown_epochs,
             self.calibrate.step_v,
+            self.check.deny_warnings,
+            self.check.toggle,
         )
     }
 
@@ -395,6 +426,17 @@ mod tests {
         assert_eq!(back.calibrate.enabled, cfg.calibrate.enabled);
         assert_eq!(back.calibrate.epoch_batches, cfg.calibrate.epoch_batches);
         assert_eq!(back.calibrate.step_v, cfg.calibrate.step_v);
+        assert_eq!(back.check.deny_warnings, cfg.check.deny_warnings);
+        assert_eq!(back.check.toggle, cfg.check.toggle);
+    }
+
+    #[test]
+    fn check_section_parses_and_rejects_typos() {
+        let cfg = Config::parse("[check]\ndeny_warnings = true\ntoggle = 0.25\n").unwrap();
+        assert!(cfg.check.deny_warnings);
+        assert_eq!(cfg.check.toggle, 0.25);
+        assert!(Config::parse("[check]\ndeny_warnigns = true\n").is_err());
+        assert!(Config::parse("[check]\ntoggle = lots\n").is_err());
     }
 
     #[test]

@@ -254,7 +254,7 @@ impl VoltageController {
         let device = Device::for_array(cfg.array_size);
         let mut partitions = floorplan::quadrants(&device, &clustering, cfg.array_size)?;
         let rails = static_scheme::assign(&clustering, &slacks, cfg.v_hi, cfg.v_lo)?;
-        for p in partitions.iter_mut() {
+        for p in &mut partitions {
             p.vccint = rails
                 .iter()
                 .find(|r| r.partition == p.id)
@@ -360,7 +360,7 @@ impl VoltageController {
 
     /// Force every rail (fault-injection/sweep hook).
     pub fn set_rails(&mut self, v: f64) {
-        for p in self.partitions.iter_mut() {
+        for p in &mut self.partitions {
             p.vccint = v;
         }
     }

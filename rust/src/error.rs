@@ -35,6 +35,9 @@ pub enum Error {
     /// Scenario-sweep error (empty grid, unknown axis value, ...).
     Sweep(String),
 
+    /// Design-rule check violation (`vstpu check`, S20).
+    Check(String),
+
     /// I/O failure surfaced from the standard library.
     Io(std::io::Error),
 }
@@ -51,6 +54,7 @@ impl std::fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Serve(m) => write!(f, "serve error: {m}"),
             Error::Sweep(m) => write!(f, "sweep error: {m}"),
+            Error::Check(m) => write!(f, "check error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -83,6 +87,7 @@ mod tests {
         assert!(Error::Config("x".into()).to_string().starts_with("config error: x"));
         assert!(Error::Artifact("y".into()).to_string().contains("artifact error: y"));
         assert!(Error::Sweep("z".into()).to_string().starts_with("sweep error: z"));
+        assert!(Error::Check("w".into()).to_string().starts_with("check error: w"));
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().starts_with("io error:"));
     }

@@ -48,6 +48,10 @@
 //!   x array-size x workload-shift grid on a self-scheduling job pool
 //!   with shared per-`(tech, size)` timing analysis and structured
 //!   failure capture (`vstpu sweep`, `BENCH_sweep.json`),
+//! * [`check`] — the static design-rule checker: a catalog of named
+//!   rules (`VST001`..) over any produced configuration — timing
+//!   safety, flow compliance, structural soundness and calibration
+//!   trajectory invariants (`vstpu check`, `CHECK_report.json`),
 //! * [`report`] — renderers regenerating every table/figure of the paper.
 //!
 //! Quick start (library):
@@ -70,10 +74,14 @@
 //! machine-readable bench artifacts.
 
 #![warn(missing_docs)]
+// Library code must surface failures as `Error`, never panic on an
+// unwrap; tests (cfg(test)) keep unwrap for brevity.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod baseline;
 pub mod cadflow;
 pub mod calibrate;
+pub mod check;
 pub mod cluster;
 pub mod config;
 pub mod constraints;

@@ -72,6 +72,15 @@ impl PowerModel {
     where
         F: Fn(usize) -> f64,
     {
+        // Weakest S20 predicate on purpose: the power model stays
+        // defined below `v_th` (figure sweeps drive it there), but a
+        // non-finite or non-positive rail is always a pipeline bug.
+        debug_assert!(
+            partitions
+                .iter()
+                .all(|p| crate::check::rail_is_finite_positive(p.vccint)),
+            "non-physical rail fed to the power model"
+        );
         self.tech.p_overhead_mw * self.clock_scale()
             + partitions
                 .iter()

@@ -6,6 +6,7 @@ use std::fmt::Write as _;
 
 use crate::cadflow::FlowReport;
 use crate::calibrate::CalibrateReport;
+use crate::check::{CheckReport, Rule};
 use crate::cluster::{Clustering, NOISE};
 use crate::serve::BenchReport;
 use crate::sweep::SweepReport;
@@ -436,6 +437,44 @@ pub fn bench_calibrate_json(rep: &CalibrateReport) -> String {
     s
 }
 
+/// Render `CHECK_report.json` — the machine-readable artifact the CI
+/// `check-smoke` job uploads (schema `vstpu-check/v1`; see
+/// docs/BENCH_SCHEMAS.md). Byte-deterministic for a fixed configuration:
+/// diagnostics are pre-sorted by (severity, rule, scope) and carry no
+/// wall-clock fields.
+pub fn check_json(rep: &CheckReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"schema\": \"{}\",", crate::check::CHECK_SCHEMA);
+    let _ = writeln!(s, "  \"rules_checked\": {},", Rule::ALL.len());
+    let _ = writeln!(s, "  \"configurations\": {},", rep.configurations);
+    let _ = writeln!(s, "  \"errors\": {},", rep.errors());
+    let _ = writeln!(s, "  \"warnings\": {},", rep.warnings());
+    let _ = writeln!(s, "  \"infos\": {},", rep.infos());
+    let _ = writeln!(s, "  \"clean\": {},", rep.is_clean());
+    let _ = writeln!(s, "  \"diagnostics\": [");
+    let cells: Vec<String> = rep
+        .diagnostics
+        .iter()
+        .map(|d| {
+            format!(
+                "    {{\"rule\": \"{}\", \"name\": \"{}\", \"severity\": \"{}\",\n      \
+                 \"scope\": {},\n      \"location\": {},\n      \"message\": {}}}",
+                d.rule.id(),
+                d.rule.name(),
+                d.severity.name(),
+                json_str(&d.scope),
+                json_str(&d.location.to_string()),
+                json_str(&d.message)
+            )
+        })
+        .collect();
+    let _ = writeln!(s, "{}", cells.join(",\n"));
+    let _ = writeln!(s, "  ]");
+    let _ = writeln!(s, "}}");
+    s
+}
+
 /// Human summary of one flow run (the CLI's `flow` output).
 pub fn flow_summary(rep: &FlowReport) -> String {
     let mut s = String::new();
@@ -745,6 +784,59 @@ mod tests {
         for line in json.lines().filter(|l| l.contains("\"wall_s\"")) {
             assert_eq!(line.matches('"').count(), 2, "wall_s shares a line: {line}");
         }
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn check_json_is_well_formed() {
+        use crate::check::{Diagnostic, Location, Rule, Severity};
+        let rep = CheckReport {
+            diagnostics: vec![
+                Diagnostic {
+                    rule: Rule::TimingSilent,
+                    severity: Severity::Error,
+                    scope: "fixture/academic-22nm/16x16/runtime".into(),
+                    location: Location::Mac(crate::netlist::MacId::new(3, 4)),
+                    // Quotes and newlines in messages must be escaped.
+                    message: "silent failure: d_eff \"10.2\" ns\nexceeds the window".into(),
+                },
+                Diagnostic {
+                    rule: Rule::TraceLock,
+                    severity: Severity::Info,
+                    scope: "calibrate: academic-22nm/quick".into(),
+                    location: Location::Epoch { partition: 1, epoch: 7 },
+                    message: "rail moved after its second recovery".into(),
+                },
+            ],
+            configurations: 2,
+        };
+        let json = check_json(&rep);
+        for needle in [
+            "\"schema\": \"vstpu-check/v1\"",
+            "\"rules_checked\": 18",
+            "\"configurations\": 2",
+            "\"errors\": 1",
+            "\"warnings\": 0",
+            "\"infos\": 1",
+            "\"clean\": false",
+            "\"rule\": \"VST001\"",
+            "\"name\": \"timing-silent\"",
+            "\"severity\": \"error\"",
+            "\"location\": \"mac (3,4)\"",
+            "\"location\": \"partition 1 epoch 7\"",
+            "\"message\": \"silent failure: d_eff \\\"10.2\\\" ns\\nexceeds the window\"",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn check_json_renders_an_empty_report() {
+        let json = check_json(&CheckReport::new());
+        assert!(json.contains("\"clean\": true"), "{json}");
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
     }

@@ -765,8 +765,7 @@ pub fn run_bench(artifacts_dir: &Path, cfg: BenchConfig) -> Result<BenchReport> 
         fluctuation: cfg.profile.name(),
         backend: shard_reports
             .first()
-            .map(|r| r.backend)
-            .unwrap_or("reference")
+            .map_or("reference", |r| r.backend)
             .to_string(),
         shard_count: shards,
         max_batch: cfg.engine.max_batch,

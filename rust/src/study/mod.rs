@@ -109,7 +109,7 @@ pub fn partitions_with_rails(
     let mut parts = floorplan::bands(&device, clustering, netlist.size)?;
     let (v_lo, floor) = rail_bounds(tech);
     let rails = static_scheme::assign(clustering, slacks, tech.v_nom, v_lo)?;
-    for p in parts.iter_mut() {
+    for p in &mut parts {
         p.vccint = rails
             .iter()
             .find(|r| r.partition == p.id)
@@ -129,6 +129,16 @@ pub fn partitions_with_rails(
             |_| calib_toggle,
         );
     }
+    // Same predicates as the S20 rules VST005..VST008 and VST013: the
+    // shared recipe must hand out flow-legal rails over an exact cover.
+    debug_assert!(
+        crate::check::check_rails(tech, &parts).is_empty(),
+        "rail assignment escaped its flow bounds"
+    );
+    debug_assert!(
+        crate::check::partitions_cover(&parts, netlist.size),
+        "banded floorplan must cover the array"
+    );
     Ok(parts)
 }
 
@@ -271,8 +281,8 @@ pub fn partition_count_study(cfg: &StudyConfig, counts: &[usize]) -> Result<Vec<
     let base = out
         .iter()
         .find(|p| p.n == 1)
-        .map(|p| p.power_mw)
-        .unwrap_or_else(|| out.first().map(|p| p.power_mw).unwrap_or(f64::NAN));
+        .or_else(|| out.first())
+        .map_or(f64::NAN, |p| p.power_mw);
     for p in &mut out {
         p.power_vs_single = p.power_mw / base;
     }

@@ -39,8 +39,10 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::check;
 use crate::cluster::{dbscan, Algorithm, Clustering};
 use crate::error::{Error, Result};
+use crate::fpga::Partition;
 use crate::netlist::SystolicNetlist;
 use crate::power::PowerModel;
 use crate::razor::{self, RazorConfig, DEFAULT_TOGGLE};
@@ -182,6 +184,10 @@ pub struct SweepConfig {
     pub razor: RazorConfig,
     /// CI smoke mode (recorded in the JSON so gates compare like to like).
     pub quick: bool,
+    /// Fault-injection knob (tests): subtract this many volts from
+    /// partition 0's rail *after* assignment, so the S20 design-rule
+    /// gate can be exercised end to end. `None` in real sweeps.
+    pub rail_fault_v: Option<f64>,
 }
 
 impl SweepConfig {
@@ -207,6 +213,7 @@ impl SweepConfig {
             max_trials: 200,
             razor: RazorConfig::default(),
             quick: false,
+            rail_fault_v: None,
         }
     }
 
@@ -420,7 +427,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
         }
     }
     let threads = if cfg.threads == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        std::thread::available_parallelism().map_or(4, |n| n.get())
     } else {
         cfg.threads
     };
@@ -505,32 +512,66 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
     })
 }
 
+/// The configuration-producing slice of a scenario — clustering (with
+/// noise reassignment), band floorplan and FlowKind-aware rail
+/// assignment — shared by the sweep proper and the `vstpu check
+/// --smoke` verifier, which re-derives exactly these configurations.
+/// Returns the canonical clustering, the railed partitions and the
+/// number of DBSCAN noise points that were reassigned.
+///
+/// `cfg.rail_fault_v` (tests only) subtracts a fault from partition 0's
+/// rail after assignment so the S20 gate can be exercised end to end.
+pub fn scenario_configuration(
+    sc: &Scenario,
+    st: &SharedTiming,
+    cfg: &SweepConfig,
+) -> Result<(Clustering, Vec<Partition>, usize)> {
+    let clustering = cluster_scenario(sc, &st.slacks, cfg)?;
+    let noise_reassigned = clustering.noise_points().len();
+    let clustering = clustering.assign_noise_to_nearest(&st.slacks);
+
+    // Bands -> Algorithm 1 -> (optionally) Algorithm 2, FlowKind-aware
+    // (the shared recipe: commercial techs stay inside the guard band,
+    // academic techs descend toward the NTC floor). The rail-mode axis
+    // decides whether the runtime stage runs at all.
+    let mut parts = study::partitions_with_rails(
+        &st.netlist,
+        &st.tech,
+        &cfg.razor,
+        &clustering,
+        &st.slacks,
+        cfg.max_trials,
+        cfg.calib_toggle,
+        sc.rail_mode == RailMode::Runtime,
+    )?;
+    if let Some(dv) = cfg.rail_fault_v {
+        if let Some(p) = parts.first_mut() {
+            p.vccint -= dv;
+        }
+    }
+    Ok((clustering, parts, noise_reassigned))
+}
+
 /// Cluster, floorplan, calibrate and measure one scenario against the
 /// shared timing view — the single-configuration slice of
 /// `study::partition_count_study`, generalised over the algorithm axis.
 fn run_scenario(sc: &Scenario, st: &SharedTiming, cfg: &SweepConfig) -> Result<ScenarioResult> {
     let t0 = Instant::now();
     let tech = &st.tech;
-    let slacks = &st.slacks;
 
-    let clustering = cluster_scenario(sc, slacks, cfg)?;
-    let noise_reassigned = clustering.noise_points().len();
-    let clustering = clustering.assign_noise_to_nearest(slacks);
+    let (clustering, parts, noise_reassigned) = scenario_configuration(sc, st, cfg)?;
 
-    // Bands -> Algorithm 1 -> (optionally) Algorithm 2, FlowKind-aware
-    // (the shared recipe: commercial techs stay inside the guard band,
-    // academic techs descend toward the NTC floor). The rail-mode axis
-    // decides whether the runtime stage runs at all.
-    let parts = study::partitions_with_rails(
-        &st.netlist,
-        tech,
-        &cfg.razor,
-        &clustering,
-        slacks,
-        cfg.max_trials,
-        cfg.calib_toggle,
-        sc.rail_mode == RailMode::Runtime,
-    )?;
+    // S20 design-rule gate: a configuration that violates the catalog
+    // becomes a structured failure record, never a winner-table entry.
+    let verdict = check::check(
+        &check::CheckInput::new(&st.netlist, tech, &cfg.razor, &parts)
+            .with_clustering(&clustering)
+            .with_toggle(cfg.calib_toggle)
+            .with_calibrated(sc.rail_mode == RailMode::Runtime),
+    );
+    if !verdict.is_clean() {
+        return Err(Error::Check(verdict.error_summary()));
+    }
 
     let model = PowerModel::new(tech.clone(), cfg.clock_mhz);
     let power_mw = model.scaled_mw(&parts, |_| DEFAULT_TOGGLE);

@@ -150,7 +150,7 @@ impl TimingReport {
 
     /// Worst setup slack.
     pub fn worst_slack_ns(&self) -> f64 {
-        self.setup.first().map(|p| p.slack_ns).unwrap_or(f64::NAN)
+        self.setup.first().map_or(f64::NAN, |p| p.slack_ns)
     }
 
     /// Per-MAC minimum setup slack, row-major order — the clustering
@@ -253,6 +253,12 @@ pub fn synthesize(netlist: &SystolicNetlist) -> TimingReport {
 /// clustering these effects are small and order-preserving — this
 /// function is where that claim is testable in our reproduction.
 pub fn implement(netlist: &SystolicNetlist, partitions: &[Partition]) -> TimingReport {
+    // Same predicate as the S20 rule VST013: implementation timing is
+    // only meaningful over a disjoint exact cover of the array.
+    debug_assert!(
+        crate::check::partitions_cover(partitions, netlist.size),
+        "implement() needs partitions forming a disjoint exact cover"
+    );
     let synth = synthesize(netlist);
     let t = netlist.period_ns();
 
@@ -374,8 +380,7 @@ pub fn worst_path_deltas(
             let matched = pb
                 .iter()
                 .find(|q| q.mac == p.mac && q.bit == p.bit)
-                .map(|q| q.total_delay_ns)
-                .unwrap_or(f64::NAN);
+                .map_or(f64::NAN, |q| q.total_delay_ns);
             (p.to(), p.total_delay_ns, matched)
         })
         .collect()

@@ -159,7 +159,7 @@ where
 
     // Final safety pass: any partition still flagging gets stepped up
     // until clean (bounded by the ceiling).
-    for p in partitions.iter_mut() {
+    for p in &mut *partitions {
         let mut guard = 0;
         while guard < 64 {
             let t = trial_partition(netlist, tech, razor, p.id, &p.macs, p.vccint, &toggle_of);

@@ -68,7 +68,7 @@ impl Stream {
         let mut data = Vec::with_capacity(rows * width);
         let mut state: Vec<i32> = (0..width).map(|_| rng.next_i8() as i32).collect();
         for _ in 0..rows {
-            for s in state.iter_mut() {
+            for s in &mut state {
                 match profile {
                     FluctuationProfile::Low => {
                         // +-1 drift.
@@ -103,7 +103,7 @@ impl Stream {
             }
         }
         let denom = ((rows - 1) * 8) as f64;
-        for r in rates.iter_mut() {
+        for r in &mut rates {
             *r /= denom;
         }
         rates

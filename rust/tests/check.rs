@@ -1,0 +1,347 @@
+//! S20 design-rule checker integration tests: the clean default flows
+//! come back green, every rule family fires on a purpose-built broken
+//! fixture, and the sweep gate turns an injected mis-railed
+//! configuration into a structured failure record (never a winner).
+
+use std::path::Path;
+
+use vstpu::check::{self, CheckInput, CheckReport, PipelineConfig, Rule, Severity};
+use vstpu::cluster::{Clustering, NOISE};
+use vstpu::fpga::Partition;
+use vstpu::netlist::SystolicNetlist;
+use vstpu::razor::{self, RazorConfig, DEFAULT_TOGGLE};
+use vstpu::study;
+use vstpu::sweep::{run_sweep, RailMode, SweepAlgo, SweepConfig};
+use vstpu::tech::Technology;
+use vstpu::timing;
+
+const NO_ARTIFACTS: &str = "/nonexistent-vstpu-artifacts";
+
+/// One produced configuration the firing fixtures mutate: 8x8 on the
+/// 22nm VTR node, equal-quantile clustering (deterministic labels and
+/// criticality order), Algorithm-1 + optional Algorithm-2 rails.
+struct Fixture {
+    netlist: SystolicNetlist,
+    tech: Technology,
+    razor: RazorConfig,
+    clustering: Clustering,
+    partitions: Vec<Partition>,
+}
+
+fn fixture(tech: Technology, k: usize, runtime: bool) -> Fixture {
+    let netlist = SystolicNetlist::generate(8, &tech, 100.0, 2021);
+    let slacks = timing::synthesize(&netlist).min_slack_values(8);
+    let razor = RazorConfig::default();
+    let clustering = study::equal_quantile_clustering(&slacks, k);
+    let partitions = study::partitions_with_rails(
+        &netlist,
+        &tech,
+        &razor,
+        &clustering,
+        &slacks,
+        200,
+        DEFAULT_TOGGLE,
+        runtime,
+    )
+    .expect("fixture pipeline");
+    Fixture {
+        netlist,
+        tech,
+        razor,
+        clustering,
+        partitions,
+    }
+}
+
+fn check_of(f: &Fixture, calibrated: bool) -> CheckReport {
+    check::check(
+        &CheckInput::new(&f.netlist, &f.tech, &f.razor, &f.partitions)
+            .with_clustering(&f.clustering)
+            .with_calibrated(calibrated),
+    )
+}
+
+fn fired(rep: &CheckReport, rule: Rule) -> Vec<Severity> {
+    rep.diagnostics
+        .iter()
+        .filter(|d| d.rule == rule)
+        .map(|d| d.severity)
+        .collect()
+}
+
+// ------------------------------------------------------------------
+// Clean flows are green.
+// ------------------------------------------------------------------
+
+#[test]
+fn clean_22nm_runtime_pipeline_is_green() {
+    let rep = check::check_pipeline(&PipelineConfig::paper_default(Technology::academic_22nm()))
+        .expect("pipeline");
+    assert_eq!(rep.errors(), 0, "errors: {}", rep.error_summary());
+    assert_eq!(rep.warnings(), 0, "{:?}", rep.diagnostics);
+    assert_eq!(rep.configurations, 1);
+}
+
+#[test]
+fn clean_22nm_static_pipeline_has_no_errors() {
+    // Static Algorithm-1 rails legitimately sit in the Razor-protected
+    // region below the flag frontier — Info, never Error/Warn.
+    let mut cfg = PipelineConfig::paper_default(Technology::academic_22nm());
+    cfg.runtime_rails = false;
+    let rep = check::check_pipeline(&cfg).expect("pipeline");
+    assert_eq!(rep.errors(), 0, "errors: {}", rep.error_summary());
+    assert_eq!(rep.warnings(), 0, "{:?}", rep.diagnostics);
+}
+
+#[test]
+fn clean_artix7_static_pipeline_has_no_errors() {
+    let mut cfg = PipelineConfig::paper_default(Technology::artix7_28nm());
+    cfg.runtime_rails = false;
+    let rep = check::check_pipeline(&cfg).expect("pipeline");
+    assert_eq!(rep.errors(), 0, "errors: {}", rep.error_summary());
+}
+
+#[test]
+fn fixture_configuration_is_clean() {
+    let f = fixture(Technology::academic_22nm(), 4, true);
+    let rep = check_of(&f, true);
+    assert_eq!(rep.errors(), 0, "errors: {}", rep.error_summary());
+    assert_eq!(rep.warnings(), 0, "{:?}", rep.diagnostics);
+}
+
+#[test]
+fn smoke_report_re_derives_the_ci_grid_clean() {
+    let rep = check::smoke_report(Path::new(NO_ARTIFACTS)).expect("smoke");
+    // 8 sweep smoke scenarios + 1 calibrate trajectory.
+    assert_eq!(rep.configurations, 9);
+    assert_eq!(rep.errors(), 0, "errors: {}", rep.error_summary());
+    assert_eq!(rep.warnings(), 0, "{:?}", rep.diagnostics);
+}
+
+// ------------------------------------------------------------------
+// Timing safety (VST001..VST004).
+// ------------------------------------------------------------------
+
+#[test]
+fn vst001_fires_on_a_silent_failure_rail() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    // Just above the transistor threshold: flow-legal is irrelevant —
+    // every MAC sails past the shadow window.
+    f.partitions[0].vccint = f.tech.v_th + 0.05;
+    let rep = check_of(&f, true);
+    let sev = fired(&rep, Rule::TimingSilent);
+    assert!(sev.contains(&Severity::Error), "got {sev:?}");
+    assert!(!rep.is_clean());
+}
+
+#[test]
+fn vst001_downgrades_to_warn_when_pinned_at_the_flow_floor() {
+    let (_, v_floor) = study::rail_bounds(&Technology::academic_22nm());
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    f.partitions[0].vccint = v_floor; // pinned: no room left to step up
+    let rep = check_of(&f, true);
+    let sev = fired(&rep, Rule::TimingSilent);
+    assert_eq!(sev, vec![Severity::Warn], "got {sev:?}");
+    assert_eq!(rep.errors(), 0, "errors: {}", rep.error_summary());
+}
+
+#[test]
+fn vst001_is_info_on_static_rails() {
+    let mut f = fixture(Technology::academic_22nm(), 4, false);
+    f.partitions[0].vccint = f.tech.v_th + 0.05;
+    let rep = check_of(&f, false);
+    let sev = fired(&rep, Rule::TimingSilent);
+    assert!(sev.iter().all(|&s| s == Severity::Info), "got {sev:?}");
+}
+
+#[test]
+fn vst002_fires_just_below_the_flag_frontier() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    let frontier = razor::min_safe_voltage(
+        &f.netlist,
+        &f.tech,
+        &f.partitions[0].macs,
+        DEFAULT_TOGGLE,
+    );
+    f.partitions[0].vccint = frontier - 0.004;
+    let rep = check_of(&f, true);
+    let sev = fired(&rep, Rule::TimingFlagged);
+    assert_eq!(sev, vec![Severity::Warn], "got {sev:?}");
+}
+
+#[test]
+fn vst003_fires_on_inverted_rail_ordering() {
+    let (v_lo, _) = study::rail_bounds(&Technology::academic_22nm());
+    let mut f = fixture(Technology::academic_22nm(), 8, true);
+    // Most critical partition far below the least critical one — a gap
+    // no quantisation/convergence tolerance can absorb.
+    f.partitions[0].vccint = v_lo;
+    let last = f.partitions.len() - 1;
+    f.partitions[last].vccint = 0.95;
+    let rep = check_of(&f, true);
+    assert!(
+        fired(&rep, Rule::RailOrdering).contains(&Severity::Error),
+        "{:?}",
+        rep.diagnostics
+    );
+}
+
+#[test]
+fn vst004_reports_reclaimable_margin_as_info_only() {
+    let f0 = fixture(Technology::academic_22nm(), 4, true);
+    let (_, v_floor) = study::rail_bounds(&f0.tech);
+    let k = f0.partitions.len();
+    let (v_lo, _) = study::rail_bounds(&f0.tech);
+    let vs = (f0.tech.v_nom - v_lo) / k as f64;
+    let mut f = f0;
+    // Lift the least-critical rail just past the two-step band — enough
+    // for VST004, not enough to break the ordering tolerance.
+    let last = f.partitions.len() - 1;
+    let frontier = razor::min_safe_voltage(
+        &f.netlist,
+        &f.tech,
+        &f.partitions[last].macs,
+        DEFAULT_TOGGLE,
+    );
+    f.partitions[last].vccint = frontier.max(v_floor) + 2.0 * vs + 0.02;
+    let rep = check_of(&f, true);
+    let sev = fired(&rep, Rule::RailMargin);
+    assert_eq!(sev, vec![Severity::Info], "got {sev:?}");
+    assert_eq!(rep.errors(), 0, "errors: {}", rep.error_summary());
+}
+
+// ------------------------------------------------------------------
+// Flow compliance (VST005..VST008).
+// ------------------------------------------------------------------
+
+#[test]
+fn vst005_fires_above_v_nom() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    f.partitions[0].vccint = f.tech.v_nom + 0.05;
+    let rep = check_of(&f, true);
+    assert!(fired(&rep, Rule::RailCeiling).contains(&Severity::Error));
+}
+
+#[test]
+fn vst006_fires_below_the_vivado_guard_band() {
+    let mut f = fixture(Technology::artix7_28nm(), 4, false);
+    f.partitions[0].vccint = 0.90; // inside [v_th, v_min): flow-illegal
+    let rep = check_of(&f, false);
+    assert!(fired(&rep, Rule::GuardBand).contains(&Severity::Error));
+}
+
+#[test]
+fn vst007_fires_below_the_ntc_floor() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    f.partitions[0].vccint = 0.46; // above v_th 0.45, below floor 0.47
+    let rep = check_of(&f, true);
+    assert!(fired(&rep, Rule::NtcFloor).contains(&Severity::Error));
+}
+
+#[test]
+fn vst008_fires_on_non_physical_rails() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    f.partitions[0].vccint = 0.30; // at/below threshold
+    f.partitions[1].vccint = f64::NAN;
+    let rep = check_of(&f, true);
+    assert_eq!(fired(&rep, Rule::RailPhysical).len(), 2, "{:?}", rep.diagnostics);
+    // The delay model is undefined there: no timing rule may evaluate.
+    assert!(fired(&rep, Rule::TimingSilent).is_empty());
+}
+
+// ------------------------------------------------------------------
+// Structural soundness (VST009..VST014).
+// ------------------------------------------------------------------
+
+#[test]
+fn vst009_fires_on_an_out_of_range_label() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    f.clustering.labels[0] = f.clustering.k + 5;
+    let rep = check_of(&f, true);
+    assert!(fired(&rep, Rule::LabelRange).contains(&Severity::Error));
+}
+
+#[test]
+fn vst010_fires_on_a_leaked_noise_label() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    f.clustering.labels[0] = NOISE;
+    let rep = check_of(&f, true);
+    assert!(fired(&rep, Rule::NoiseLeak).contains(&Severity::Error));
+}
+
+#[test]
+fn vst011_fires_on_an_empty_cluster() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    for l in &mut f.clustering.labels {
+        if *l == 0 {
+            *l = 1; // hole: cluster 0 loses every member
+        }
+    }
+    let rep = check_of(&f, true);
+    assert!(fired(&rep, Rule::EmptyCluster).contains(&Severity::Error));
+}
+
+#[test]
+fn vst012_fires_when_the_label_vector_loses_coverage() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    f.clustering.labels.pop();
+    let rep = check_of(&f, true);
+    assert!(fired(&rep, Rule::LabelCover).contains(&Severity::Error));
+}
+
+#[test]
+fn vst013_fires_when_a_mac_goes_unowned() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    f.partitions[0].macs.pop();
+    let rep = check_of(&f, true);
+    assert!(fired(&rep, Rule::PartitionCover).contains(&Severity::Error));
+}
+
+#[test]
+fn vst014_fires_on_overlapping_floorplan_rects() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    f.partitions[0].rect = f.partitions[1].rect;
+    let rep = check_of(&f, true);
+    assert!(fired(&rep, Rule::FloorplanGeometry).contains(&Severity::Error));
+}
+
+// ------------------------------------------------------------------
+// The sweep gate: an injected mis-railed configuration becomes a
+// structured failure record, never a winner.
+// ------------------------------------------------------------------
+
+#[test]
+fn sweep_gate_turns_a_misrailed_configuration_into_a_failure_record() {
+    let mut cfg = SweepConfig::smoke();
+    cfg.algos = vec![SweepAlgo::EqualQuantile];
+    cfg.techs = vec!["academic-22nm".into()];
+    cfg.rail_modes = vec![RailMode::Runtime];
+    cfg.threads = 1;
+    // Drag partition 0's rail ~0.35 V down: sub-threshold, VST008.
+    cfg.rail_fault_v = Some(0.35);
+    let rep = run_sweep(&cfg).expect("the sweep itself must not abort");
+    assert_eq!(rep.scenarios.len(), 1);
+    assert_eq!(rep.ok_count, 0);
+    assert_eq!(rep.failed_count, 1);
+    let err = rep.scenarios[0]
+        .outcome
+        .as_ref()
+        .expect_err("faulted scenario must fail structurally");
+    assert!(err.contains("VST"), "no rule id in the record: {err}");
+    assert!(
+        rep.winners.is_empty(),
+        "a checked-out configuration must never win: {:?}",
+        rep.winners
+    );
+}
+
+#[test]
+fn sweep_without_fault_injection_stays_green() {
+    let mut cfg = SweepConfig::smoke();
+    cfg.algos = vec![SweepAlgo::EqualQuantile];
+    cfg.techs = vec!["academic-22nm".into()];
+    cfg.rail_modes = vec![RailMode::Runtime];
+    cfg.threads = 1;
+    let rep = run_sweep(&cfg).expect("sweep");
+    assert_eq!(rep.failed_count, 0, "{:?}", rep.scenarios[0].outcome);
+}
