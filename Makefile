@@ -8,7 +8,7 @@
 
 PYTHON ?= python3
 
-.PHONY: all build test pytest bench bench-build bench-serve sweep calibrate check doc artifacts fmt lint clean
+.PHONY: all build test pytest bench bench-build bench-serve bench-hotpath sweep calibrate check trend doc artifacts fmt lint clean
 
 all: build
 
@@ -38,6 +38,18 @@ bench-serve:
 # CI smoke form of the parallel scenario sweep; writes BENCH_sweep.json.
 sweep:
 	cargo run --release -- sweep --smoke --json
+
+# S21 hot-path cache harness: cached-vs-uncached wall time per pipeline
+# stage; writes BENCH_hotpath.json and gates the speedup like CI does.
+bench-hotpath:
+	cargo run --release -- bench-hotpath --json
+	python3 bench/check_regression.py BENCH_hotpath.json bench/baseline.json
+
+# The CI wall-time trendline, locally: run both timed smokes, gate them
+# against the rolling median of bench/history.jsonl, and append to it.
+trend: bench-hotpath sweep
+	python3 bench/check_regression.py --trend bench/history.jsonl \
+	  bench/baseline.json BENCH_hotpath.json BENCH_sweep.json
 
 # CI smoke form of the closed-loop runtime voltage calibration; writes
 # BENCH_calibrate.json and gates it like CI does.

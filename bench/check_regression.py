@@ -2,6 +2,7 @@
 """CI regression gate over the vstpu bench artifacts.
 
 Usage: check_regression.py CURRENT.json BASELINE.json
+       check_regression.py --trend HISTORY.jsonl BASELINE.json ARTIFACT...
 
 Dispatches on the current artifact's schema:
 
@@ -16,6 +17,20 @@ Dispatches on the current artifact's schema:
   value must stay below ``before * max_after_to_before_ratio`` (from
   the baseline's ``calibrate`` block, default 0.999 — calibration on
   must never cost energy).
+* ``vstpu-bench-hotpath/v1`` — the S21 hot-path cache gate. Fails when
+  the cached-sweep speedup drops below the baseline ``hotpath``
+  block's ``min_speedup`` (default 3.0), the cache never hit, or any
+  wall-time measurement is missing/non-positive. Wall times of 0 fail
+  closed on purpose: the Rust renderer writes non-finite measurements
+  as 0, so a zero means a corrupted run, never an infinitely fast one
+  — and a *missing* wall field must not be read as 0 either.
+
+``--trend`` is the wall-time trendline gate: for each artifact it
+derives one metric (hotpath -> ``sweep_cached_ms``, sweep ->
+``wall_ms``), compares it against the rolling median of the branch's
+``bench/history.jsonl`` (the baseline ``trend`` block sets ``window``,
+``max_ratio`` and ``min_history``), and appends the new values to the
+history on success. A corrupt history line fails closed.
 
 Common failure modes for both schemas: a missing/corrupt input file,
 missing required fields, an unknown schema, or a schema that
@@ -42,6 +57,7 @@ FILENAME_SCHEMAS = {
     "BENCH_serve": "vstpu-bench-serve/v1",
     "BENCH_calibrate": "vstpu-bench-calibrate/v1",
     "BENCH_sweep": "vstpu-bench-sweep/v1",
+    "BENCH_hotpath": "vstpu-bench-hotpath/v1",
     "CHECK_report": "vstpu-check/v1",
 }
 
@@ -54,6 +70,22 @@ CALIBRATE_REQUIRED = [
     "high_water",
     "energy_per_request_uj",
 ]
+HOTPATH_REQUIRED = [
+    "schema",
+    "scenarios",
+    "stages",
+    "cache",
+    "sweep_uncached_ms",
+    "sweep_cached_ms",
+    "speedup",
+    "wall_ms",
+]
+
+# schema -> (trendline metric name, field of the artifact it reads).
+TREND_METRICS = {
+    "vstpu-bench-hotpath/v1": ("hotpath.sweep_cached_ms", "sweep_cached_ms"),
+    "vstpu-bench-sweep/v1": ("sweep.wall_ms", "wall_ms"),
+}
 
 
 def die(msg: str) -> None:
@@ -78,6 +110,21 @@ def require_number(obj, key: str, where: str):
     v = obj.get(key)
     if not isinstance(v, (int, float)) or isinstance(v, bool):
         die(f"{where} '{key}' is missing or not a number: {v!r}")
+    return v
+
+
+def require_wall(obj, key: str, where: str):
+    """A wall-time measurement must be present and positive. The Rust
+    renderer writes non-finite measurements as 0, so a 0 here means a
+    corrupted run — and a *missing* field must never be read as 0 (a
+    zero wall time would sail through every lower-is-better gate as
+    infinitely fast)."""
+    v = require_number(obj, key, where)
+    if v <= 0:
+        die(
+            f"{where} '{key}' is non-positive ({v!r}) — a zero/missing "
+            f"wall time means a corrupted artifact, not a fast run"
+        )
     return v
 
 
@@ -190,6 +237,154 @@ def check_calibrate(current: dict, baseline: dict, current_path: str) -> None:
     )
 
 
+def check_hotpath(current: dict, baseline: dict, current_path: str) -> None:
+    """The S21 hot-path cache gate over BENCH_hotpath.json."""
+    for key in HOTPATH_REQUIRED:
+        if key not in current:
+            die(f"{current_path} is missing required field '{key}'")
+    # Like-for-like only, same as the other gates.
+    if "quick" in baseline and current.get("quick") != baseline["quick"]:
+        die(
+            f"configuration mismatch: quick={current.get('quick')!r} vs "
+            f"baseline quick={baseline['quick']!r}"
+        )
+    sweep_u = require_wall(current, "sweep_uncached_ms", current_path)
+    sweep_c = require_wall(current, "sweep_cached_ms", current_path)
+    require_wall(current, "wall_ms", current_path)
+    if not isinstance(current["stages"], list) or not current["stages"]:
+        die(f"stages is not a non-empty list: {current['stages']!r}")
+    for i, st in enumerate(current["stages"]):
+        if not isinstance(st, dict) or not st.get("stage"):
+            die(f"stages[{i}] is not a named stage object: {st!r}")
+        require_number(st, "uncached_ms", f"stages[{i}]")
+        require_number(st, "cached_ms", f"stages[{i}]")
+    cache = current["cache"]
+    if not isinstance(cache, dict):
+        die(f"cache is not an object: {cache!r}")
+    hits = require_number(cache, "sta_hits", "cache") + require_number(
+        cache, "configuration_hits", "cache"
+    )
+    if hits <= 0:
+        die(
+            "the cache never hit — the warm passes recomputed everything, "
+            "so the memoization layer is wired out of the hot path"
+        )
+    speedup = require_number(current, "speedup", current_path)
+    hot_base = baseline.get("hotpath", {})
+    if not isinstance(hot_base, dict):
+        die(f"baseline 'hotpath' block is not an object: {hot_base!r}")
+    min_speedup = hot_base.get("min_speedup", 3.0)
+    if not isinstance(min_speedup, (int, float)) or isinstance(min_speedup, bool) \
+            or min_speedup <= 1.0:
+        die(f"baseline min_speedup must be a number > 1: {min_speedup!r}")
+    if speedup < min_speedup:
+        die(
+            f"cached sweep speedup {speedup:.2f}x is below the gate minimum "
+            f"{min_speedup}x ({sweep_u:.1f} ms uncached vs {sweep_c:.1f} ms cached)"
+        )
+    print(
+        f"bench-smoke gate: OK — hot path {speedup:.1f}x cached vs uncached "
+        f"({sweep_u:.1f} -> {sweep_c:.1f} ms, minimum {min_speedup}x), "
+        f"{hits:.0f} cache hit(s)"
+    )
+
+
+def load_history(path: str) -> list:
+    """Parse the branch trendline (one JSON object per line). A missing
+    file is an empty history (first run on the branch); a corrupt line
+    fails closed — a silently dropped prefix would shift the median."""
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        die(f"{path} is not readable: {e}")
+    entries = []
+    for i, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            die(f"{path}:{i} is corrupt JSONL: {e}")
+        if not isinstance(obj, dict) or not isinstance(obj.get("metrics"), dict):
+            die(f"{path}:{i} is not a metrics record: {line[:80]!r}")
+        entries.append(obj)
+    return entries
+
+
+def check_trend(argv: list) -> None:
+    """The wall-time trendline gate: gate each artifact's metric against
+    the rolling median of the branch history, then append to it."""
+    from statistics import median
+
+    if len(argv) < 3:
+        die("usage: check_regression.py --trend HISTORY.jsonl BASELINE.json ARTIFACT...")
+    history_path, baseline_path = argv[0], argv[1]
+    baseline = load(baseline_path)
+    if not isinstance(baseline, dict):
+        die(f"{baseline_path} must be a JSON object")
+    tcfg = baseline.get("trend", {})
+    if not isinstance(tcfg, dict):
+        die(f"baseline 'trend' block is not an object: {tcfg!r}")
+    window = tcfg.get("window", 20)
+    max_ratio = tcfg.get("max_ratio", 1.75)
+    min_history = tcfg.get("min_history", 3)
+    if not isinstance(window, int) or isinstance(window, bool) or window < 1:
+        die(f"trend window must be a positive integer: {window!r}")
+    if not isinstance(max_ratio, (int, float)) or isinstance(max_ratio, bool) \
+            or max_ratio <= 1.0:
+        die(f"trend max_ratio must be a number > 1: {max_ratio!r}")
+    if not isinstance(min_history, int) or isinstance(min_history, bool) or min_history < 1:
+        die(f"trend min_history must be a positive integer: {min_history!r}")
+
+    history = load_history(history_path)
+    new_metrics = {}
+    for path in argv[2:]:
+        current = load(path)
+        if not isinstance(current, dict):
+            die(f"{path} must be a JSON object")
+        schema = current.get("schema")
+        check_filename_schema(path, schema)
+        if schema not in TREND_METRICS:
+            die(f"{path} has no trendline metric for schema {schema!r}")
+        name, field = TREND_METRICS[schema]
+        value = require_wall(current, field, path)
+        series = [
+            m for m in (
+                e["metrics"].get(name) for e in history[-window:]
+            )
+            if isinstance(m, (int, float)) and not isinstance(m, bool) and m > 0
+        ]
+        if len(series) >= min_history:
+            med = median(series)
+            ratio = value / med
+            if ratio > max_ratio:
+                die(
+                    f"{name} {value:.1f} ms is {ratio:.2f}x the rolling median "
+                    f"{med:.1f} ms of the last {len(series)} run(s) "
+                    f"(cap {max_ratio}x) — wall-time regression"
+                )
+            print(
+                f"bench-trend gate: OK — {name} {value:.1f} ms vs rolling "
+                f"median {med:.1f} ms over {len(series)} run(s) "
+                f"(x{ratio:.2f} <= {max_ratio}x)"
+            )
+        else:
+            print(
+                f"bench-trend gate: OK — {name} {value:.1f} ms recorded; "
+                f"{len(series)} prior run(s), gating starts at {min_history}"
+            )
+        new_metrics[name] = value
+
+    try:
+        with open(history_path, "a") as f:
+            f.write(json.dumps({"metrics": new_metrics}) + "\n")
+    except OSError as e:
+        die(f"cannot append to {history_path}: {e}")
+
+
 def check_filename_schema(path: str, schema) -> None:
     """Fail closed when a well-known artifact name carries a foreign
     schema — the symptom of a mis-wired CI upload step."""
@@ -220,6 +415,8 @@ def main(argv: list) -> None:
         check_serve(current, baseline, argv[1], argv[2])
     elif schema == "vstpu-bench-calibrate/v1":
         check_calibrate(current, baseline, argv[1])
+    elif schema == "vstpu-bench-hotpath/v1":
+        check_hotpath(current, baseline, argv[1])
     else:
         die(f"{argv[1]} has unknown schema {schema!r}")
 
@@ -256,6 +453,23 @@ def _selftest() -> None:
         "high_water": 0.5,
         "energy_per_request_uj": {"before": 0.12, "after": 0.10},
     }
+    GOOD_HOT = {
+        "schema": "vstpu-bench-hotpath/v1",
+        "quick": True,
+        "scenarios": 8,
+        "stages": [{"stage": "sta", "uncached_ms": 40.0, "cached_ms": 0.1}],
+        "cache": {
+            "sta_hits": 4,
+            "sta_misses": 2,
+            "configuration_hits": 16,
+            "configuration_misses": 8,
+        },
+        "sweep_uncached_ms": 90.0,
+        "sweep_cached_ms": 10.0,
+        "speedup": 9.0,
+        "wall_ms": 250.0,
+    }
+    GOOD_HOT_BASE = {"quick": True, "hotpath": {"min_speedup": 3.0}}
 
     tmp = tempfile.mkdtemp(prefix="vstpu-gate-selftest-")
 
@@ -350,6 +564,76 @@ def _selftest() -> None:
     cases.append(run("calibrate clean", GOOD_CAL, {}, False,
                      current_name="BENCH_calibrate.json"))
 
+    # Hotpath-gate guards.
+    no_wall = {k: v for k, v in GOOD_HOT.items() if k != "wall_ms"}
+    cases.append(run("hotpath missing wall_ms", no_wall, GOOD_HOT_BASE, True,
+                     current_name="BENCH_hotpath.json",
+                     needle="missing required field"))
+    # The bugfix guard: a wall time of 0 (the renderer's non-finite
+    # fallback) must fail closed, never read as infinitely fast.
+    cases.append(run("hotpath zero wall time", dict(GOOD_HOT, sweep_cached_ms=0.0),
+                     GOOD_HOT_BASE, True, current_name="BENCH_hotpath.json",
+                     needle="corrupted artifact"))
+    cold = dict(GOOD_HOT, cache={"sta_hits": 0, "sta_misses": 2,
+                                 "configuration_hits": 0, "configuration_misses": 8})
+    cases.append(run("hotpath cache never hit", cold, GOOD_HOT_BASE, True,
+                     current_name="BENCH_hotpath.json", needle="never hit"))
+    cases.append(run("hotpath below min speedup", dict(GOOD_HOT, speedup=1.2),
+                     GOOD_HOT_BASE, True, current_name="BENCH_hotpath.json",
+                     needle="below the gate minimum"))
+    cases.append(run("hotpath clean", GOOD_HOT, GOOD_HOT_BASE, False,
+                     current_name="BENCH_hotpath.json"))
+
+    # Trendline-gate guards (their own runner: different argv shape).
+    def run_trend(label, history_lines, artifact, expect_fail, needle=""):
+        hist = os.path.join(tmp, f"history-{label.replace(' ', '-')}.jsonl")
+        if history_lines is not None:
+            with open(hist, "w") as f:
+                for line in history_lines:
+                    f.write(line + "\n")
+        base = write("baseline_trend.json",
+                     {"trend": {"window": 20, "max_ratio": 1.75, "min_history": 3}})
+        cur = write(f"BENCH_hotpath_{label.replace(' ', '-')}.json", artifact)
+        err = io.StringIO()
+        code = 0
+        with contextlib.redirect_stderr(err), contextlib.redirect_stdout(io.StringIO()):
+            try:
+                check_trend([hist, base, cur])
+            except SystemExit as e:
+                code = e.code or 0
+        lines = [l for l in err.getvalue().splitlines() if l.strip()]
+        if expect_fail:
+            ok = (code == 1 and len(lines) == 1
+                  and lines[0].startswith("bench-smoke gate: FAIL")
+                  and needle in lines[0])
+        else:
+            ok = code == 0 and not lines
+        status = "ok" if ok else "BROKEN"
+        print(f"selftest [{status}] {label}: {lines[0] if lines else '(clean)'}")
+        return ok, hist
+
+    steady = json.dumps({"metrics": {"hotpath.sweep_cached_ms": 10.0}})
+    ok, _ = run_trend("trend corrupt history", ["{broken"], GOOD_HOT, True,
+                      needle="corrupt JSONL")
+    cases.append(ok)
+    ok, _ = run_trend("trend wall-time regression", [steady] * 3,
+                      dict(GOOD_HOT, sweep_cached_ms=30.0), True,
+                      needle="wall-time regression")
+    cases.append(ok)
+    ok, hist = run_trend("trend clean appends", [steady] * 3,
+                         dict(GOOD_HOT, sweep_cached_ms=11.0), False)
+    with open(hist) as f:
+        appended = f.read().splitlines()
+    if len(appended) != 4 or "11.0" not in appended[-1]:
+        print(f"selftest [BROKEN] trend clean appends: history not extended: {appended[-1:]}")
+        ok = False
+    cases.append(ok)
+    ok, hist = run_trend("trend cold start records", None, GOOD_HOT, False)
+    if not os.path.exists(hist):
+        print("selftest [BROKEN] trend cold start records: no history written")
+        ok = False
+    cases.append(ok)
+
     broken = cases.count(False)
     if broken:
         print(f"selftest: {broken}/{len(cases)} guard path(s) BROKEN", file=sys.stderr)
@@ -360,5 +644,7 @@ def _selftest() -> None:
 if __name__ == "__main__":
     if len(sys.argv) == 2 and sys.argv[1] == "--selftest":
         _selftest()
+    elif len(sys.argv) >= 2 and sys.argv[1] == "--trend":
+        check_trend(sys.argv[2:])
     else:
         main(sys.argv)

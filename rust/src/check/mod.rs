@@ -1126,7 +1126,7 @@ pub fn smoke_report(artifacts_dir: &Path) -> Result<CheckReport> {
 
     let cfg = SweepConfig::smoke();
     let mut report = CheckReport::new();
-    let mut shared: HashMap<(String, u32), sweep::SharedTiming> = HashMap::new();
+    let mut shared: HashMap<(String, u32), std::sync::Arc<sweep::SharedTiming>> = HashMap::new();
     for sc in sweep::enumerate(&cfg) {
         let key = (sc.tech.clone(), sc.array_size);
         if !shared.contains_key(&key) {
@@ -1137,7 +1137,7 @@ pub fn smoke_report(artifacts_dir: &Path) -> Result<CheckReport> {
                 sweep::shared_timing(&tech, sc.array_size, cfg.clock_mhz, cfg.seed),
             );
         }
-        let st = &shared[&key];
+        let st: &sweep::SharedTiming = &shared[&key];
         let (clustering, partitions, _noise) = sweep::scenario_configuration(&sc, st, &cfg)?;
         let input = CheckInput::new(&st.netlist, &st.tech, &cfg.razor, &partitions)
             .with_clustering(&clustering)

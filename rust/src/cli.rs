@@ -70,6 +70,14 @@ COMMANDS
                     --rails static,runtime (the rail-mode axis)
                     --k N (4)  --threads N (0 = cores)  --seed N (2021)
                     --max-trials N (200)  --json  --out FILE (BENCH_sweep.json)
+  bench-hotpath   S21 hot-path cache harness: run the smoke sweep grid
+                    through each pipeline stage (STA, configuration,
+                    full sweep) with the cache force-disabled and then
+                    warm; report per-stage wall times, hit/miss counters
+                    and the end-to-end speedup the CI trendline gates;
+                    --json writes BENCH_hotpath.json (vstpu-bench-hotpath/v1)
+                    --threads N (1)  --seed N (2021)  --max-trials N
+                    --k N  --json  --out FILE (BENCH_hotpath.json)
   check           static design-rule verifier (S20): run the default
                     pipeline (netlist -> STA -> clustering -> rails) and
                     verify the VST001..VST018 catalog — timing safety,
@@ -155,6 +163,9 @@ pub fn run() -> Result<()> {
         config = Config::load(Path::new(path))?;
         args = &args[2..];
     }
+    // The [hotcache] section is process-wide: every subcommand that
+    // reaches the STA→cluster→rails hot path sees the same settings.
+    config.hotcache.apply();
 
     let Some(cmd) = args.first() else {
         print!("{HELP}");
@@ -417,6 +428,21 @@ pub fn run() -> Result<()> {
                     rep.failed_count,
                     rep.scenarios.len()
                 )));
+            }
+        }
+        "bench-hotpath" => {
+            let o = Opts::parse(rest, &["json"])?;
+            let mut hcfg = vstpu::hotcache::bench::HotpathConfig::smoke();
+            hcfg.sweep.seed = o.num("seed", config.sweep.seed)?;
+            hcfg.sweep.threads = o.num("threads", hcfg.sweep.threads)?;
+            hcfg.sweep.max_trials = o.num("max-trials", config.sweep.max_trials)?;
+            hcfg.sweep.k = o.num("k", hcfg.sweep.k)?;
+            let rep = vstpu::hotcache::bench::run_hotpath_bench(&hcfg)?;
+            print!("{}", vstpu::hotcache::bench::render(&rep));
+            if o.flag("json") {
+                let out = PathBuf::from(o.str_or("out", "BENCH_hotpath.json"));
+                std::fs::write(&out, report::bench_hotpath_json(&rep))?;
+                println!("wrote {}", out.display());
             }
         }
         "check" => {

@@ -31,6 +31,8 @@ pub struct Config {
     pub calibrate: CalibrateSection,
     /// `[check]` — design-rule checker parameters.
     pub check: CheckSection,
+    /// `[hotcache]` — S21 hot-path memoization parameters.
+    pub hotcache: HotcacheSection,
 }
 
 /// `[flow]` — CAD-flow parameters.
@@ -195,6 +197,34 @@ impl Default for CheckSection {
     }
 }
 
+/// `[hotcache]` — the S21 content-keyed memoization layer over the
+/// STA→cluster→rails hot path (`crate::hotcache`). The CLI applies this
+/// section process-wide before dispatching any subcommand.
+#[derive(Debug, Clone)]
+pub struct HotcacheSection {
+    /// Consult the cache at all (`false` forces every consumer down the
+    /// recompute path — what `bench-hotpath` measures as "uncached").
+    pub enabled: bool,
+    /// Entry cap per cache level (reaching it clears that level).
+    pub max_entries: usize,
+}
+
+impl Default for HotcacheSection {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            max_entries: crate::hotcache::DEFAULT_MAX_ENTRIES,
+        }
+    }
+}
+
+impl HotcacheSection {
+    /// Push this section into the process-wide cache settings.
+    pub fn apply(&self) {
+        crate::hotcache::configure(self.enabled, self.max_entries);
+    }
+}
+
 /// Strip quotes from a TOML string value.
 fn unquote(v: &str) -> String {
     v.trim().trim_matches('"').to_string()
@@ -234,7 +264,7 @@ impl Config {
                 section = name.trim().to_string();
                 if !matches!(
                     section.as_str(),
-                    "flow" | "serve" | "sweep" | "calibrate" | "check"
+                    "flow" | "serve" | "sweep" | "calibrate" | "check" | "hotcache"
                 ) {
                     return Err(Error::Config(format!(
                         "line {}: unknown section [{section}]",
@@ -289,6 +319,8 @@ impl Config {
             ("calibrate", "step_v") => self.calibrate.step_v = parse_num(key, v)?,
             ("check", "deny_warnings") => self.check.deny_warnings = parse_bool(key, v)?,
             ("check", "toggle") => self.check.toggle = parse_num(key, v)?,
+            ("hotcache", "enabled") => self.hotcache.enabled = parse_bool(key, v)?,
+            ("hotcache", "max_entries") => self.hotcache.max_entries = parse_num(key, v)?,
             _ => {
                 return Err(Error::Config(format!(
                     "unknown key '{key}' in section [{section}]"
@@ -337,7 +369,11 @@ impl Config {
              \n\
              [check]\n\
              deny_warnings = {}\n\
-             toggle = {}\n",
+             toggle = {}\n\
+             \n\
+             [hotcache]\n\
+             enabled = {}\n\
+             max_entries = {}\n",
             self.flow.array_size,
             self.flow.tech,
             self.flow.clock_mhz,
@@ -366,6 +402,8 @@ impl Config {
             self.calibrate.step_v,
             self.check.deny_warnings,
             self.check.toggle,
+            self.hotcache.enabled,
+            self.hotcache.max_entries,
         )
     }
 
@@ -428,6 +466,20 @@ mod tests {
         assert_eq!(back.calibrate.step_v, cfg.calibrate.step_v);
         assert_eq!(back.check.deny_warnings, cfg.check.deny_warnings);
         assert_eq!(back.check.toggle, cfg.check.toggle);
+        assert_eq!(back.hotcache.enabled, cfg.hotcache.enabled);
+        assert_eq!(back.hotcache.max_entries, cfg.hotcache.max_entries);
+    }
+
+    #[test]
+    fn hotcache_section_parses_and_rejects_typos() {
+        let cfg = Config::parse("[hotcache]\nenabled = false\nmax_entries = 64\n").unwrap();
+        assert!(!cfg.hotcache.enabled);
+        assert_eq!(cfg.hotcache.max_entries, 64);
+        let def = Config::default();
+        assert!(def.hotcache.enabled);
+        assert_eq!(def.hotcache.max_entries, crate::hotcache::DEFAULT_MAX_ENTRIES);
+        assert!(Config::parse("[hotcache]\nenabeld = true\n").is_err());
+        assert!(Config::parse("[hotcache]\nmax_entries = plenty\n").is_err());
     }
 
     #[test]

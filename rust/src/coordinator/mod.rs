@@ -48,7 +48,6 @@ use crate::power::PowerModel;
 use crate::razor::{trial_partition, MacOutcome, RazorConfig, DEFAULT_TOGGLE};
 use crate::runtime::{self, Backend, LoadedModel, ReferenceBackend, Tensor};
 use crate::tech::Technology;
-use crate::timing;
 use crate::util::hash3_unit;
 use crate::voltage::static_scheme;
 
@@ -241,15 +240,15 @@ pub struct VoltageController {
 impl VoltageController {
     /// Build the controller for `cfg`: generate the netlist, cluster by
     /// min slack, floorplan, and seed the rails with Algorithm 1.
+    ///
+    /// The netlist + STA come through the S21 hot-path cache
+    /// ([`crate::hotcache::sta`]): the N per-shard controllers of a
+    /// sharded engine (and every calibration arm on the same substrate)
+    /// synthesize once and clone the shared product.
     pub fn new(cfg: &CoordinatorConfig) -> Result<Self> {
-        let netlist =
-            SystolicNetlist::generate(cfg.array_size, &cfg.tech, cfg.clock_mhz, cfg.seed);
-        let synth = timing::synthesize(&netlist);
-        let slacks: Vec<f64> = synth
-            .min_slack_per_mac(cfg.array_size)
-            .iter()
-            .map(|s| s.min_slack_ns)
-            .collect();
+        let sta = crate::hotcache::sta(&cfg.tech, cfg.array_size, cfg.clock_mhz, cfg.seed);
+        let netlist = sta.netlist.clone();
+        let slacks = sta.slacks.clone();
         let clustering = equal_quartile_clustering(&slacks);
         let device = Device::for_array(cfg.array_size);
         let mut partitions = floorplan::quadrants(&device, &clustering, cfg.array_size)?;

@@ -1,0 +1,300 @@
+//! The `vstpu bench-hotpath` harness: cached-vs-uncached wall time of
+//! the STA→cluster→rails hot path, per stage and end to end.
+//!
+//! The harness runs the smoke sweep grid twice through each stage —
+//! once with the S21 cache force-disabled (every lookup recomputes,
+//! exactly the pre-S21 code path) and once warm — and reports per-stage
+//! wall times, the hit/miss counters and the end-to-end speedup in
+//! `BENCH_hotpath.json` (schema [`HOTPATH_SCHEMA`], rendered by
+//! `report::bench_hotpath_json`). CI's `bench-trendline` job gates the
+//! speedup against `bench/baseline.json` (`hotpath.min_speedup`) and
+//! the cached sweep wall time against a rolling median of
+//! `bench/history.jsonl` (`check_regression.py --trend`).
+//!
+//! **Determinism contract.** Every `*_wall_ms` field and the `speedup`
+//! fields are measurements (each alone on its own line in the JSON so
+//! consumers can filter them); everything else — including the cache
+//! hit/miss counters, which the fixed lookup sequence pins down exactly
+//! — is byte-identical across runs at a fixed configuration.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::sweep::{self, pool, SharedTiming, SweepConfig};
+use crate::tech::Technology;
+
+use super::Stats;
+
+/// `BENCH_hotpath.json` schema identifier.
+pub const HOTPATH_SCHEMA: &str = "vstpu-bench-hotpath/v1";
+
+/// Configuration of the hotpath bench: the sweep grid both passes run.
+#[derive(Debug, Clone)]
+pub struct HotpathConfig {
+    /// The grid (and flow knobs) under measurement.
+    pub sweep: SweepConfig,
+}
+
+impl HotpathConfig {
+    /// The CI smoke configuration: the sweep smoke grid on one thread
+    /// (single-threaded so stage wall times measure work, not
+    /// scheduling, and the hit/miss sequence is strictly ordered).
+    pub fn smoke() -> Self {
+        let mut sweep = SweepConfig::smoke();
+        sweep.threads = 1;
+        Self { sweep }
+    }
+}
+
+/// One pipeline stage, timed uncached then cached.
+#[derive(Debug, Clone)]
+pub struct StageTiming {
+    /// Stage name (`"sta"`, `"configuration"`, `"sweep"`).
+    pub stage: &'static str,
+    /// Wall time with the cache force-disabled, ms.
+    pub uncached_ms: f64,
+    /// Wall time against the warm cache, ms.
+    pub cached_ms: f64,
+}
+
+impl StageTiming {
+    /// Uncached-over-cached ratio (guarded against a ~0 denominator).
+    pub fn speedup(&self) -> f64 {
+        self.uncached_ms / self.cached_ms.max(1e-6)
+    }
+}
+
+/// Everything one hotpath bench run produces.
+#[derive(Debug, Clone)]
+pub struct HotpathReport {
+    /// Schema identifier ([`HOTPATH_SCHEMA`]).
+    pub schema: &'static str,
+    /// CI smoke mode flag (from the sweep config).
+    pub quick: bool,
+    /// Base sweep seed.
+    pub seed: u64,
+    /// Worker threads of the timed sweeps.
+    pub threads: usize,
+    /// Grid cells per pass.
+    pub scenarios: usize,
+    /// Distinct `(tech, size)` STA pairs per pass.
+    pub unique_sta_pairs: usize,
+    /// Per-stage timings, pipeline order.
+    pub stages: Vec<StageTiming>,
+    /// Cache counters after the cached passes (deterministic — the
+    /// lookup sequence is fixed by the grid).
+    pub cache: Stats,
+    /// Full smoke sweep, cache disabled, ms.
+    pub sweep_uncached_ms: f64,
+    /// Full smoke sweep, warm cache, ms.
+    pub sweep_cached_ms: f64,
+    /// `sweep_uncached_ms / sweep_cached_ms` — the gated number
+    /// (baseline `hotpath.min_speedup`, default 3.0).
+    pub speedup: f64,
+    /// Total harness wall time, ms.
+    pub wall_ms: f64,
+}
+
+/// Run the cached-vs-uncached comparison. Restores the cache's enabled
+/// flag on every exit path; the cache itself ends warm (cold-started at
+/// each pass boundary via [`super::reset`]).
+pub fn run_hotpath_bench(cfg: &HotpathConfig) -> Result<HotpathReport> {
+    let scfg = &cfg.sweep;
+    let t_total = Instant::now();
+
+    // Resolve the grid up front — same validation surface as run_sweep.
+    let mut techs: HashMap<String, Technology> = HashMap::new();
+    for name in &scfg.techs {
+        let t = Technology::by_name(name)
+            .ok_or_else(|| Error::Sweep(format!("unknown tech '{name}'")))?;
+        techs.insert(name.clone(), t);
+    }
+    let scenarios = sweep::enumerate(scfg);
+    if scenarios.is_empty() {
+        return Err(Error::Sweep(
+            "hotpath bench needs a non-empty sweep grid".into(),
+        ));
+    }
+    let mut pairs: Vec<(String, u32)> = Vec::new();
+    for sc in &scenarios {
+        let key = (sc.tech.clone(), sc.array_size);
+        if !pairs.contains(&key) {
+            pairs.push(key);
+        }
+    }
+
+    let was_enabled = super::enabled();
+    let measured = (|| -> Result<_> {
+        let mut arena = pool::Arena::new();
+
+        // ---- Pass 1: cache force-disabled (the pre-S21 code path). ----
+        super::set_enabled(false);
+        super::reset();
+
+        let t = Instant::now();
+        let mut shared: HashMap<(String, u32), Arc<SharedTiming>> = HashMap::new();
+        for (name, size) in &pairs {
+            let st = sweep::shared_timing(&techs[name], *size, scfg.clock_mhz, scfg.seed);
+            shared.insert((name.clone(), *size), st);
+        }
+        let sta_uncached_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        let t = Instant::now();
+        for sc in &scenarios {
+            let st = &shared[&(sc.tech.clone(), sc.array_size)];
+            sweep::scenario_substrate(sc, st, scfg, &mut arena)?;
+        }
+        let config_uncached_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        let t = Instant::now();
+        sweep::run_sweep(scfg)?;
+        let sweep_uncached_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        // ---- Pass 2: cache enabled, cold start, then warm stages. ----
+        super::set_enabled(true);
+        super::reset();
+        sweep::run_sweep(scfg)?; // populate (every lookup is a miss)
+
+        let t = Instant::now();
+        for (name, size) in &pairs {
+            sweep::shared_timing(&techs[name], *size, scfg.clock_mhz, scfg.seed);
+        }
+        let sta_cached_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        let t = Instant::now();
+        for sc in &scenarios {
+            let st = &shared[&(sc.tech.clone(), sc.array_size)];
+            sweep::scenario_substrate(sc, st, scfg, &mut arena)?;
+        }
+        let config_cached_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        let t = Instant::now();
+        sweep::run_sweep(scfg)?;
+        let sweep_cached_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        Ok((
+            sta_uncached_ms,
+            config_uncached_ms,
+            sweep_uncached_ms,
+            sta_cached_ms,
+            config_cached_ms,
+            sweep_cached_ms,
+            super::stats(),
+        ))
+    })();
+    super::set_enabled(was_enabled);
+    let (sta_u, config_u, sweep_u, sta_c, config_c, sweep_c, cache) = measured?;
+
+    let threads = if scfg.threads == 0 {
+        std::thread::available_parallelism().map_or(4, |n| n.get())
+    } else {
+        scfg.threads
+    };
+    Ok(HotpathReport {
+        schema: HOTPATH_SCHEMA,
+        quick: scfg.quick,
+        seed: scfg.seed,
+        threads,
+        scenarios: scenarios.len(),
+        unique_sta_pairs: pairs.len(),
+        stages: vec![
+            StageTiming {
+                stage: "sta",
+                uncached_ms: sta_u,
+                cached_ms: sta_c,
+            },
+            StageTiming {
+                stage: "configuration",
+                uncached_ms: config_u,
+                cached_ms: config_c,
+            },
+            StageTiming {
+                stage: "sweep",
+                uncached_ms: sweep_u,
+                cached_ms: sweep_c,
+            },
+        ],
+        cache,
+        sweep_uncached_ms: sweep_u,
+        sweep_cached_ms: sweep_c,
+        speedup: sweep_u / sweep_c.max(1e-6),
+        wall_ms: t_total.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Render the report as aligned text (the CLI's human output).
+pub fn render(rep: &HotpathReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "hotpath bench: {} scenarios over {} STA pairs, {} thread(s), {:.0} ms total",
+        rep.scenarios, rep.unique_sta_pairs, rep.threads, rep.wall_ms
+    );
+    let _ = writeln!(
+        s,
+        "{:<15} {:>12} {:>12} {:>9}",
+        "stage", "uncached ms", "cached ms", "speedup"
+    );
+    for st in &rep.stages {
+        let _ = writeln!(
+            s,
+            "{:<15} {:>12.2} {:>12.2} {:>8.1}x",
+            st.stage,
+            st.uncached_ms,
+            st.cached_ms,
+            st.speedup()
+        );
+    }
+    let _ = writeln!(
+        s,
+        "cache: sta {}/{} hit/miss, configuration {}/{} hit/miss, hit rate {:.1}%",
+        rep.cache.sta_hits,
+        rep.cache.sta_misses,
+        rep.cache.configuration_hits,
+        rep.cache.configuration_misses,
+        100.0 * rep.cache.hit_rate()
+    );
+    let _ = writeln!(s, "sweep speedup vs uncached: {:.1}x", rep.speedup);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_speedup_guards_zero_denominator() {
+        let st = StageTiming {
+            stage: "sta",
+            uncached_ms: 10.0,
+            cached_ms: 0.0,
+        };
+        assert!(st.speedup().is_finite());
+        let st = StageTiming {
+            stage: "sta",
+            uncached_ms: 9.0,
+            cached_ms: 3.0,
+        };
+        assert!((st.speedup() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_unknown_techs_and_empty_grids() {
+        let mut cfg = HotpathConfig::smoke();
+        cfg.sweep.techs = vec!["7nm-dreams".into()];
+        assert!(run_hotpath_bench(&cfg).is_err());
+        let mut cfg = HotpathConfig::smoke();
+        cfg.sweep.algos.clear();
+        assert!(run_hotpath_bench(&cfg).is_err());
+    }
+
+    #[test]
+    fn smoke_config_is_single_threaded() {
+        let cfg = HotpathConfig::smoke();
+        assert_eq!(cfg.sweep.threads, 1);
+        assert!(cfg.sweep.quick);
+    }
+}

@@ -52,6 +52,10 @@
 //!   rules (`VST001`..) over any produced configuration — timing
 //!   safety, flow compliance, structural soundness and calibration
 //!   trajectory invariants (`vstpu check`, `CHECK_report.json`),
+//! * [`hotcache`] — the content-keyed memoization layer over the
+//!   STA→cluster→rails hot path shared by sweep/calibrate/serve/check,
+//!   with the `bench-hotpath` cached-vs-uncached harness
+//!   (`vstpu bench-hotpath`, `BENCH_hotpath.json`),
 //! * [`report`] — renderers regenerating every table/figure of the paper.
 //!
 //! Quick start (library):
@@ -70,7 +74,7 @@
 //! ```
 //!
 //! ARCHITECTURE.md holds the top-down tour (module map, request
-//! lifecycle, data flow); docs/BENCH_SCHEMAS.md documents the three
+//! lifecycle, data flow); docs/BENCH_SCHEMAS.md documents the five
 //! machine-readable bench artifacts.
 
 #![warn(missing_docs)]
@@ -89,6 +93,7 @@ pub mod coordinator;
 pub mod error;
 pub mod floorplan;
 pub mod fpga;
+pub mod hotcache;
 pub mod metrics;
 pub mod netlist;
 pub mod power;

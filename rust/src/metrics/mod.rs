@@ -1,6 +1,62 @@
-//! Shared statistics helpers: summaries, percentiles and a fixed-bucket
-//! latency histogram for the serving coordinator.
+//! Shared statistics helpers: summaries, percentiles, a fixed-bucket
+//! latency histogram for the serving coordinator, and the hit/miss
+//! counters behind the S21 hot-path cache (`crate::hotcache`).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread-safe hit/miss counters for a memoization layer. Relaxed
+/// atomics: the counts are observability, never synchronization — the
+/// cached values themselves travel through the cache's own lock.
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CacheCounters {
+    /// Fresh zeroed counters (usable in `static` initializers).
+    pub const fn new() -> Self {
+        Self {
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one cache hit.
+    pub fn hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one cache miss (including bypasses while disabled — a
+    /// recompute is a miss from the consumer's point of view).
+    pub fn miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current `(hits, misses)` snapshot.
+    pub fn snapshot(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Hits over total lookups, in [0, 1] (0 when never consulted).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.snapshot();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// Zero both counters.
+    pub fn reset(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
 
 /// Summary statistics of a sample.
 #[derive(Debug, Clone, Copy)]
@@ -143,6 +199,21 @@ impl LatencyHistogram {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cache_counters_track_hits_misses_and_reset() {
+        let c = CacheCounters::new();
+        assert_eq!(c.snapshot(), (0, 0));
+        assert_eq!(c.hit_rate(), 0.0);
+        c.hit();
+        c.hit();
+        c.hit();
+        c.miss();
+        assert_eq!(c.snapshot(), (3, 1));
+        assert!((c.hit_rate() - 0.75).abs() < 1e-12);
+        c.reset();
+        assert_eq!(c.snapshot(), (0, 0));
+    }
 
     #[test]
     fn summary_basics() {

@@ -8,6 +8,7 @@ use crate::cadflow::FlowReport;
 use crate::calibrate::CalibrateReport;
 use crate::check::{CheckReport, Rule};
 use crate::cluster::{Clustering, NOISE};
+use crate::hotcache::bench::HotpathReport;
 use crate::serve::BenchReport;
 use crate::sweep::SweepReport;
 use crate::timing::{PathRecord, TimingReport};
@@ -437,6 +438,70 @@ pub fn bench_calibrate_json(rep: &CalibrateReport) -> String {
     s
 }
 
+/// Render `BENCH_hotpath.json` — the machine-readable artifact the CI
+/// `bench-trendline` job consumes (schema `vstpu-bench-hotpath/v1`; see
+/// docs/BENCH_SCHEMAS.md). Everything except the `*_ms` and `speedup`
+/// measurements — including the cache hit/miss counters, which the
+/// fixed lookup sequence pins down — is byte-deterministic at a fixed
+/// configuration; every measurement sits alone on its own line so
+/// consumers (and the determinism test) can filter them out.
+pub fn bench_hotpath_json(rep: &HotpathReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"schema\": \"{}\",", rep.schema);
+    let _ = writeln!(s, "  \"quick\": {},", rep.quick);
+    let _ = writeln!(s, "  \"seed\": {},", rep.seed);
+    let _ = writeln!(s, "  \"threads\": {},", rep.threads);
+    let _ = writeln!(s, "  \"scenarios\": {},", rep.scenarios);
+    let _ = writeln!(s, "  \"unique_sta_pairs\": {},", rep.unique_sta_pairs);
+    let _ = writeln!(s, "  \"stages\": [");
+    let cells: Vec<String> = rep
+        .stages
+        .iter()
+        .map(|st| {
+            format!(
+                "    {{\n      \"stage\": \"{}\",\n      \
+                 \"uncached_ms\": {},\n      \
+                 \"cached_ms\": {},\n      \
+                 \"speedup\": {}\n    }}",
+                st.stage,
+                json_f64(st.uncached_ms),
+                json_f64(st.cached_ms),
+                json_f64(st.speedup())
+            )
+        })
+        .collect();
+    let _ = writeln!(s, "{}", cells.join(",\n"));
+    let _ = writeln!(s, "  ],");
+    let _ = writeln!(s, "  \"cache\": {{");
+    let _ = writeln!(s, "    \"sta_hits\": {},", rep.cache.sta_hits);
+    let _ = writeln!(s, "    \"sta_misses\": {},", rep.cache.sta_misses);
+    let _ = writeln!(
+        s,
+        "    \"configuration_hits\": {},",
+        rep.cache.configuration_hits
+    );
+    let _ = writeln!(
+        s,
+        "    \"configuration_misses\": {},",
+        rep.cache.configuration_misses
+    );
+    let _ = writeln!(s, "    \"sta_entries\": {},", rep.cache.sta_entries);
+    let _ = writeln!(
+        s,
+        "    \"configuration_entries\": {},",
+        rep.cache.configuration_entries
+    );
+    let _ = writeln!(s, "    \"hit_rate\": {}", json_f64(rep.cache.hit_rate()));
+    let _ = writeln!(s, "  }},");
+    let _ = writeln!(s, "  \"sweep_uncached_ms\": {},", json_f64(rep.sweep_uncached_ms));
+    let _ = writeln!(s, "  \"sweep_cached_ms\": {},", json_f64(rep.sweep_cached_ms));
+    let _ = writeln!(s, "  \"speedup\": {},", json_f64(rep.speedup));
+    let _ = writeln!(s, "  \"wall_ms\": {}", json_f64(rep.wall_ms));
+    let _ = writeln!(s, "}}");
+    s
+}
+
 /// Render `CHECK_report.json` — the machine-readable artifact the CI
 /// `check-smoke` job uploads (schema `vstpu-check/v1`; see
 /// docs/BENCH_SCHEMAS.md). Byte-deterministic for a fixed configuration:
@@ -783,6 +848,71 @@ mod tests {
         // determinism contract (strip wall_s, compare the rest) holds.
         for line in json.lines().filter(|l| l.contains("\"wall_s\"")) {
             assert_eq!(line.matches('"').count(), 2, "wall_s shares a line: {line}");
+        }
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn bench_hotpath_json_is_well_formed() {
+        use crate::hotcache::bench::{HotpathReport, StageTiming, HOTPATH_SCHEMA};
+        use crate::hotcache::Stats;
+        let rep = HotpathReport {
+            schema: HOTPATH_SCHEMA,
+            quick: true,
+            seed: 2021,
+            threads: 1,
+            scenarios: 8,
+            unique_sta_pairs: 2,
+            stages: vec![
+                StageTiming {
+                    stage: "sta",
+                    uncached_ms: 40.0,
+                    cached_ms: 0.1,
+                },
+                StageTiming {
+                    stage: "configuration",
+                    uncached_ms: 12.0,
+                    cached_ms: f64::NAN, // must render as a valid number
+                },
+            ],
+            cache: Stats {
+                sta_hits: 4,
+                sta_misses: 2,
+                configuration_hits: 16,
+                configuration_misses: 8,
+                sta_entries: 2,
+                configuration_entries: 8,
+            },
+            sweep_uncached_ms: 90.0,
+            sweep_cached_ms: 10.0,
+            speedup: 9.0,
+            wall_ms: 250.0,
+        };
+        let json = bench_hotpath_json(&rep);
+        for needle in [
+            "\"schema\": \"vstpu-bench-hotpath/v1\"",
+            "\"unique_sta_pairs\": 2",
+            "\"stage\": \"sta\"",
+            "\"stage\": \"configuration\"",
+            "\"sta_hits\": 4",
+            "\"configuration_misses\": 8",
+            "\"hit_rate\": 0.666667",
+            "\"sweep_cached_ms\": 10.000000",
+            "\"speedup\": 9.000000",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert!(!json.contains("NaN"));
+        // Every measurement (`*_ms`, `speedup`) sits alone on its line so
+        // the determinism contract (strip those lines, compare the rest)
+        // holds structurally; the cache counters are NOT measurements and
+        // stay inside the byte contract.
+        for line in json
+            .lines()
+            .filter(|l| l.contains("_ms\"") || l.contains("\"speedup\""))
+        {
+            assert_eq!(line.matches('"').count(), 2, "measurement shares a line: {line}");
         }
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());

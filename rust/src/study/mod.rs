@@ -178,18 +178,44 @@ pub fn silent_mac_fraction(
     partitions: &[Partition],
     shifted_toggle: f64,
 ) -> f64 {
+    let mut worst = Vec::new();
+    worst_arc_delays_into(netlist, &mut worst);
+    silent_fraction_from_worst(netlist, tech, razor, partitions, shifted_toggle, &worst)
+}
+
+/// Per-MAC worst arc delay at nominal voltage, row-major, written into
+/// `out` (cleared first) — the netlist-only staging half of
+/// [`silent_mac_fraction`], split out so sweep workers can lease the
+/// buffer from their [`crate::sweep::pool::Arena`] instead of
+/// reallocating it once per scenario (S21).
+pub fn worst_arc_delays_into(netlist: &SystolicNetlist, out: &mut Vec<f64>) {
+    out.clear();
+    out.extend(netlist.macs().map(|mac| {
+        netlist
+            .arcs_of(mac)
+            .iter()
+            .map(|a| a.total_delay_ns())
+            .fold(0.0, f64::max)
+    }));
+}
+
+/// [`silent_mac_fraction`] over a precomputed worst-delay buffer (from
+/// [`worst_arc_delays_into`]) — the identical arithmetic, minus the
+/// per-call staging allocation.
+pub fn silent_fraction_from_worst(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    partitions: &[Partition],
+    shifted_toggle: f64,
+    worst: &[f64],
+) -> f64 {
     let budget = netlist.period_ns() - timing::CLOCK_UNCERTAINTY_NS;
     let mut silent = 0usize;
     for p in partitions {
         let stretch = tech.delay_factor(p.vccint) * activity_stretch(shifted_toggle);
         for &mac in &p.macs {
-            let worst = netlist
-                .arcs_of(mac)
-                .iter()
-                .map(|a| a.total_delay_ns())
-                .fold(0.0, f64::max)
-                * stretch;
-            if worst > budget + razor.t_del_ns {
+            if worst[mac.index(netlist.size)] * stretch > budget + razor.t_del_ns {
                 silent += 1;
             }
         }

@@ -17,7 +17,11 @@
 //!
 //! * **shared STA** — the netlist + synthesis timing of each
 //!   `(tech, array)` pair is computed once and shared (`Arc`) by every
-//!   clustering variant that stresses it, never recomputed;
+//!   clustering variant that stresses it, never recomputed — since S21
+//!   through the process-wide [`crate::hotcache`] layer, so repeated
+//!   sweeps (and the serve/calibrate/check paths) reuse it too, and the
+//!   whole cluster→rails product of each scenario is content-keyed as
+//!   well ([`scenario_substrate`]);
 //! * **per-scenario deterministic seeds** — derived from the sweep seed
 //!   and the grid coordinates via [`crate::util::hash3`], so the same
 //!   configuration always reproduces byte-identical results
@@ -43,12 +47,11 @@ use crate::check;
 use crate::cluster::{dbscan, Algorithm, Clustering};
 use crate::error::{Error, Result};
 use crate::fpga::Partition;
-use crate::netlist::SystolicNetlist;
+use crate::hotcache;
 use crate::power::PowerModel;
 use crate::razor::{self, RazorConfig, DEFAULT_TOGGLE};
 use crate::study;
 use crate::tech::Technology;
-use crate::timing;
 use crate::util::hash3;
 
 /// `BENCH_sweep.json` schema identifier (see README "BENCH_sweep.json").
@@ -331,25 +334,14 @@ pub struct SweepReport {
 
 /// Once-computed synthesis view of one `(tech, array)` pair, shared by
 /// every clustering variant of that pair — algorithm scenarios must
-/// never redo STA.
-pub struct SharedTiming {
-    /// The technology the pair was synthesized on.
-    pub tech: Technology,
-    /// The generated netlist.
-    pub netlist: SystolicNetlist,
-    /// Per-MAC minimum slack, row-major (the clustering input).
-    pub slacks: Vec<f64>,
-}
+/// never redo STA. Since S21 this *is* the hot-path cache's STA entry,
+/// so the sharing extends across sweeps and across subsystems.
+pub type SharedTiming = hotcache::StaEntry;
 
-/// Build the shared view for one pair.
-pub fn shared_timing(tech: &Technology, size: u32, clock_mhz: f64, seed: u64) -> SharedTiming {
-    let netlist = SystolicNetlist::generate(size, tech, clock_mhz, seed);
-    let slacks = timing::synthesize(&netlist).min_slack_values(size);
-    SharedTiming {
-        tech: tech.clone(),
-        netlist,
-        slacks,
-    }
+/// Build the shared view for one pair — or fetch it: the S21 cache
+/// memoizes the pair on its content key ([`hotcache::sta_key`]).
+pub fn shared_timing(tech: &Technology, size: u32, clock_mhz: f64, seed: u64) -> Arc<SharedTiming> {
+    hotcache::sta(tech, size, clock_mhz, seed)
 }
 
 /// FNV-1a over an axis *value*'s name — the seed key must depend on
@@ -449,7 +441,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
         .map(|(name, size)| {
             let tech = techs[name].clone();
             let (size, clock, seed) = (*size, cfg.clock_mhz, cfg.seed);
-            move || Arc::new(shared_timing(&tech, size, clock, seed))
+            move || shared_timing(&tech, size, clock, seed)
         })
         .collect();
     let mut shared: HashMap<(String, u32), Arc<SharedTiming>> = HashMap::new();
@@ -470,16 +462,17 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
         }
     }
 
-    // Phase 2: the scenarios themselves, panic-isolated.
+    // Phase 2: the scenarios themselves, panic-isolated, with per-worker
+    // arena scratch (S21) threaded through every job.
     let jobs: Vec<_> = scenarios
         .iter()
         .map(|sc| {
             let st = Arc::clone(&shared[&(sc.tech.clone(), sc.array_size)]);
             let sc = sc.clone();
-            move || run_scenario(&sc, &st, cfg)
+            move |arena: &mut pool::Arena| run_scenario(&sc, &st, cfg, arena)
         })
         .collect();
-    let raw = pool::run_parallel(threads, jobs);
+    let raw = pool::run_parallel_arena(threads, jobs);
 
     let records: Vec<ScenarioRecord> = scenarios
         .into_iter()
@@ -512,16 +505,35 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
     })
 }
 
-/// The configuration-producing slice of a scenario — clustering (with
-/// noise reassignment), band floorplan and FlowKind-aware rail
-/// assignment — shared by the sweep proper and the `vstpu check
-/// --smoke` verifier, which re-derives exactly these configurations.
-/// Returns the canonical clustering, the railed partitions and the
-/// number of DBSCAN noise points that were reassigned.
-///
-/// `cfg.rail_fault_v` (tests only) subtracts a fault from partition 0's
-/// rail after assignment so the S20 gate can be exercised end to end.
-pub fn scenario_configuration(
+/// Content key of one scenario's cluster→rails substrate: the STA key
+/// plus *every* knob the product depends on — algorithm, rail mode,
+/// per-scenario seed, workload shift, cluster count, trial cap,
+/// calibration toggle and the Razor shadow window. Deliberately NOT
+/// keyed on `cfg.rail_fault_v`: the fault is injected downstream of the
+/// cache so the cached substrate stays the clean configuration.
+pub fn substrate_key(sc: &Scenario, st: &SharedTiming, cfg: &SweepConfig) -> u64 {
+    hotcache::Digest::new("vstpu/hotcache/config/v1")
+        .u64(hotcache::sta_key(
+            &st.tech,
+            sc.array_size,
+            cfg.clock_mhz,
+            cfg.seed,
+        ))
+        .str(sc.algo.name())
+        .str(sc.rail_mode.name())
+        .u64(sc.seed)
+        .f64(sc.shift_toggle)
+        .usize(cfg.k)
+        .usize(cfg.max_trials)
+        .f64(cfg.calib_toggle)
+        .f64(cfg.razor.t_del_ns)
+        .finish()
+}
+
+/// The uncached configuration build: clustering (with noise
+/// reassignment), band floorplan and FlowKind-aware rail assignment —
+/// exactly the recipe the pre-S21 sweep ran inline per scenario.
+fn build_configuration(
     sc: &Scenario,
     st: &SharedTiming,
     cfg: &SweepConfig,
@@ -534,7 +546,7 @@ pub fn scenario_configuration(
     // (the shared recipe: commercial techs stay inside the guard band,
     // academic techs descend toward the NTC floor). The rail-mode axis
     // decides whether the runtime stage runs at all.
-    let mut parts = study::partitions_with_rails(
+    let parts = study::partitions_with_rails(
         &st.netlist,
         &st.tech,
         &cfg.razor,
@@ -544,28 +556,105 @@ pub fn scenario_configuration(
         cfg.calib_toggle,
         sc.rail_mode == RailMode::Runtime,
     )?;
+    Ok((clustering, parts, noise_reassigned))
+}
+
+/// The memoized cluster→rails substrate of one scenario: clustering,
+/// railed partitions, per-partition frontiers and the silent-MAC
+/// fraction, fetched from (or inserted into) the S21 cache under
+/// [`substrate_key`]. Staging scratch comes from the worker's `arena`
+/// (callers outside the pool pass a fresh one — it allocates nothing
+/// until leased from).
+pub fn scenario_substrate(
+    sc: &Scenario,
+    st: &SharedTiming,
+    cfg: &SweepConfig,
+    arena: &mut pool::Arena,
+) -> Result<Arc<hotcache::ConfigEntry>> {
+    hotcache::configuration(substrate_key(sc, st, cfg), || {
+        let (clustering, parts, noise_reassigned) = build_configuration(sc, st, cfg)?;
+        let frontiers = parts
+            .iter()
+            .map(|p| razor::min_safe_voltage(&st.netlist, &st.tech, &p.macs, cfg.calib_toggle))
+            .collect();
+        let mut worst = arena.lease(st.netlist.mac_count());
+        study::worst_arc_delays_into(&st.netlist, &mut worst);
+        let silent = study::silent_fraction_from_worst(
+            &st.netlist,
+            &st.tech,
+            &cfg.razor,
+            &parts,
+            sc.shift_toggle,
+            &worst,
+        );
+        arena.reclaim(worst);
+        Ok(hotcache::ConfigEntry {
+            clustering,
+            partitions: parts,
+            noise_reassigned,
+            frontiers,
+            silent_mac_fraction: silent,
+        })
+    })
+}
+
+/// The configuration-producing slice of a scenario — shared by the
+/// sweep proper and the `vstpu check --smoke` verifier, which
+/// re-derives exactly these configurations. Returns the canonical
+/// clustering, the railed partitions and the number of DBSCAN noise
+/// points that were reassigned (cloned out of the cached substrate).
+///
+/// `cfg.rail_fault_v` (tests only) subtracts a fault from partition 0's
+/// rail after assignment — downstream of the cache, so the S20 gate can
+/// be exercised end to end without poisoning cached entries.
+pub fn scenario_configuration(
+    sc: &Scenario,
+    st: &SharedTiming,
+    cfg: &SweepConfig,
+) -> Result<(Clustering, Vec<Partition>, usize)> {
+    let entry = scenario_substrate(sc, st, cfg, &mut pool::Arena::new())?;
+    let mut parts = entry.partitions.clone();
     if let Some(dv) = cfg.rail_fault_v {
         if let Some(p) = parts.first_mut() {
             p.vccint -= dv;
         }
     }
-    Ok((clustering, parts, noise_reassigned))
+    Ok((entry.clustering.clone(), parts, entry.noise_reassigned))
 }
 
 /// Cluster, floorplan, calibrate and measure one scenario against the
 /// shared timing view — the single-configuration slice of
 /// `study::partition_count_study`, generalised over the algorithm axis.
-fn run_scenario(sc: &Scenario, st: &SharedTiming, cfg: &SweepConfig) -> Result<ScenarioResult> {
+/// Everything derived from the scenario key comes from the cached
+/// substrate; only the fault-injection path recomputes (on a faulted
+/// clone, so cached entries stay clean).
+fn run_scenario(
+    sc: &Scenario,
+    st: &SharedTiming,
+    cfg: &SweepConfig,
+    arena: &mut pool::Arena,
+) -> Result<ScenarioResult> {
     let t0 = Instant::now();
     let tech = &st.tech;
 
-    let (clustering, parts, noise_reassigned) = scenario_configuration(sc, st, cfg)?;
+    let entry = scenario_substrate(sc, st, cfg, arena)?;
+    let faulted: Option<Vec<Partition>> = cfg.rail_fault_v.map(|dv| {
+        let mut parts = entry.partitions.clone();
+        if let Some(p) = parts.first_mut() {
+            p.vccint -= dv;
+        }
+        parts
+    });
+    let parts: &[Partition] = faulted.as_deref().unwrap_or(&entry.partitions);
 
     // S20 design-rule gate: a configuration that violates the catalog
     // becomes a structured failure record, never a winner-table entry.
+    // Runs on the substrate a cache hit returns — byte-identical to the
+    // uncached build, so the verdict (and every debug_assert predicate
+    // underneath) sees identical values either way.
     let verdict = check::check(
-        &check::CheckInput::new(&st.netlist, tech, &cfg.razor, &parts)
-            .with_clustering(&clustering)
+        &check::CheckInput::new(&st.netlist, tech, &cfg.razor, parts)
+            .with_clustering(&entry.clustering)
             .with_toggle(cfg.calib_toggle)
             .with_calibrated(sc.rail_mode == RailMode::Runtime),
     );
@@ -574,19 +663,33 @@ fn run_scenario(sc: &Scenario, st: &SharedTiming, cfg: &SweepConfig) -> Result<S
     }
 
     let model = PowerModel::new(tech.clone(), cfg.clock_mhz);
-    let power_mw = model.scaled_mw(&parts, |_| DEFAULT_TOGGLE);
+    let power_mw = model.scaled_mw(parts, |_| DEFAULT_TOGGLE);
     let baseline_mw = model.baseline_mw(st.netlist.mac_count(), tech.v_nom);
-    let frontiers: Vec<f64> = parts
-        .iter()
-        .map(|p| razor::min_safe_voltage(&st.netlist, tech, &p.macs, cfg.calib_toggle))
-        .collect();
-    let silent = study::silent_mac_fraction(&st.netlist, tech, &cfg.razor, &parts, sc.shift_toggle);
+    let silent = match &faulted {
+        // Fault injection moved a rail, so the silent fraction must be
+        // recomputed on the faulted clone (scratch from the arena).
+        Some(parts) => {
+            let mut worst = arena.lease(st.netlist.mac_count());
+            study::worst_arc_delays_into(&st.netlist, &mut worst);
+            let s = study::silent_fraction_from_worst(
+                &st.netlist,
+                tech,
+                &cfg.razor,
+                parts,
+                sc.shift_toggle,
+                &worst,
+            );
+            arena.reclaim(worst);
+            s
+        }
+        None => entry.silent_mac_fraction,
+    };
 
     Ok(ScenarioResult {
-        k: clustering.k,
-        noise_reassigned,
+        k: entry.clustering.k,
+        noise_reassigned: entry.noise_reassigned,
         rails: parts.iter().map(|p| p.vccint).collect(),
-        frontiers,
+        frontiers: entry.frontiers.clone(),
         power_mw,
         baseline_mw,
         reduction_pct: 100.0 * (baseline_mw - power_mw) / baseline_mw,

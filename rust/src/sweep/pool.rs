@@ -14,16 +14,80 @@
 //! scenario surfaces as an `Err` in its own slot and the rest of the
 //! sweep completes — the structured failure capture the sweep report
 //! relies on.
+//!
+//! Since S21, each worker also owns an [`Arena`] of reusable `Vec<f64>`
+//! scratch buffers that it threads through every job it claims
+//! ([`run_parallel_arena`]), so per-scenario staging buffers stop
+//! hitting the allocator once per job.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Per-worker scratch arena (S21): a pool of reusable `Vec<f64>`
+/// buffers that keep their allocation across the many short jobs one
+/// worker runs. A sweep scenario leases its scratch (per-MAC worst-path
+/// staging and the like), fills it, and reclaims it on the way out —
+/// the *next* scenario on the same worker gets the same backing
+/// allocation instead of hitting the allocator again. Jobs of one
+/// worker run strictly sequentially, so the arena needs no locking.
+#[derive(Debug, Default)]
+pub struct Arena {
+    free: Vec<Vec<f64>>,
+}
+
+impl Arena {
+    /// Empty arena — buffers are allocated lazily on first lease.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lease an empty `Vec<f64>` with at least `capacity` reserved,
+    /// reusing a reclaimed buffer when one is pooled.
+    pub fn lease(&mut self, capacity: usize) -> Vec<f64> {
+        let mut buf = self.free.pop().unwrap_or_default();
+        buf.clear();
+        buf.reserve(capacity);
+        buf
+    }
+
+    /// Return a leased buffer to the pool (contents are discarded). A
+    /// buffer that escapes into a result instead is simply never
+    /// reclaimed — the arena only ever holds spares.
+    pub fn reclaim(&mut self, mut buf: Vec<f64>) {
+        buf.clear();
+        self.free.push(buf);
+    }
+
+    /// Buffers currently pooled (tests/observability).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
 /// Run `jobs` on up to `threads` workers; results are returned in job
 /// order, with a panicking job's payload captured as `Err` in its slot.
+/// Arena-free convenience wrapper over [`run_parallel_arena`].
 pub fn run_parallel<J, T>(threads: usize, jobs: Vec<J>) -> Vec<std::thread::Result<T>>
 where
     J: FnOnce() -> T + Send,
+    T: Send,
+{
+    let jobs: Vec<_> = jobs
+        .into_iter()
+        .map(|j| move |_: &mut Arena| j())
+        .collect();
+    run_parallel_arena(threads, jobs)
+}
+
+/// [`run_parallel`] with per-worker scratch: every worker owns one
+/// [`Arena`] for its whole lifetime and hands it to each job it claims,
+/// so leased-and-reclaimed buffers amortise across that worker's share
+/// of the sweep. A panicking job forfeits whatever it had on lease
+/// (the buffers moved into the job); the arena itself stays usable.
+pub fn run_parallel_arena<J, T>(threads: usize, jobs: Vec<J>) -> Vec<std::thread::Result<T>>
+where
+    J: FnOnce(&mut Arena) -> T + Send,
     T: Send,
 {
     let n = jobs.len();
@@ -40,18 +104,21 @@ where
 
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                let mut arena = Arena::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let job = queue[i]
+                        .lock()
+                        .expect("job slot poisoned")
+                        .take()
+                        .expect("job claimed exactly once");
+                    let out = catch_unwind(AssertUnwindSafe(|| job(&mut arena)));
+                    *results[i].lock().expect("result slot poisoned") = Some(out);
                 }
-                let job = queue[i]
-                    .lock()
-                    .expect("job slot poisoned")
-                    .take()
-                    .expect("job claimed exactly once");
-                let out = catch_unwind(AssertUnwindSafe(job));
-                *results[i].lock().expect("result slot poisoned") = Some(out);
             });
         }
     });
@@ -126,6 +193,47 @@ mod tests {
                 assert!(msg.contains("blew up"), "{msg}");
             } else {
                 assert_eq!(*r.as_ref().unwrap(), i * 2);
+            }
+        }
+    }
+
+    #[test]
+    fn arena_reuses_reclaimed_buffers() {
+        let mut a = Arena::new();
+        let mut b1 = a.lease(128);
+        assert!(b1.is_empty() && b1.capacity() >= 128);
+        b1.extend((0..100).map(|i| i as f64));
+        let p1 = b1.as_ptr();
+        a.reclaim(b1);
+        assert_eq!(a.pooled(), 1);
+        let b2 = a.lease(64);
+        assert_eq!(b2.as_ptr(), p1, "reclaimed allocation must be reused");
+        assert!(b2.is_empty(), "leases always start cleared");
+        assert_eq!(a.pooled(), 0);
+    }
+
+    #[test]
+    fn arena_jobs_share_per_worker_scratch() {
+        // One worker runs the jobs strictly in order, so job i > 0 must
+        // find the buffer job i-1 reclaimed already pooled.
+        let jobs: Vec<_> = (0..4usize)
+            .map(|i| {
+                move |arena: &mut Arena| {
+                    let pooled_before = arena.pooled();
+                    let mut buf = arena.lease(32);
+                    buf.push(i as f64);
+                    let v = buf[0];
+                    arena.reclaim(buf);
+                    (pooled_before, v)
+                }
+            })
+            .collect();
+        let out = run_parallel_arena(1, jobs);
+        for (i, r) in out.iter().enumerate() {
+            let (pooled_before, v) = r.as_ref().unwrap();
+            assert_eq!(*v, i as f64);
+            if i > 0 {
+                assert_eq!(*pooled_before, 1, "job {i} lost the shared scratch");
             }
         }
     }

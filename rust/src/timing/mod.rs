@@ -22,9 +22,20 @@
 //! implementation materialised two `String`s per record; at 64x64 that
 //! is 139 264 allocations per analysis and dominated the flow (454 ms →
 //! see the §Perf table for the after).
+//!
+//! S21 addendum: the per-MAC min-slack reduction — the single hottest
+//! loop of the STA→cluster→rails pipeline — no longer walks the sorted
+//! `Vec<PathRecord>` (AoS, 80-byte stride, indirect `mac.index()`
+//! scatter). Every report also carries [`SlackLanes`]: flat SoA
+//! `Vec<f64>` slack/arrival/required lanes in generation order
+//! (MAC-major, bit-minor), so the reduction is a branch-free
+//! `chunks_exact(MAC_OUT_BITS)` fold over contiguous doubles that the
+//! compiler autovectorizes. Both layouts hold the same multiset of
+//! slacks, so the reduction result is bit-identical either way (the
+//! tests pin that down).
 
 use crate::fpga::Partition;
-use crate::netlist::{MacId, SystolicNetlist};
+use crate::netlist::{MacId, SystolicNetlist, MAC_OUT_BITS};
 use crate::util::hash3_unit;
 
 /// Clock uncertainty (skew + jitter) subtracted from every setup slack,
@@ -107,6 +118,78 @@ pub struct MacSlack {
     pub min_slack_ns: f64,
 }
 
+/// Flat structure-of-arrays timing lanes in **generation order**
+/// (MAC-major, bit-minor: lane index `mac.index(size) * MAC_OUT_BITS +
+/// bit`), parallel to the *setup* analysis. Where [`PathRecord`] is the
+/// report row (sorted worst-first for Table I), the lanes are the
+/// compute layout: per-MAC reductions become `chunks_exact(17)` folds
+/// over contiguous `f64`s — no 80-byte AoS stride, no index scatter —
+/// which autovectorizes.
+///
+/// Invariant: `slack_ns[i] == required_ns[i] - arrival_ns[i]` for every
+/// lane (arrival = total path delay, required = period minus clock
+/// uncertainty).
+#[derive(Debug, Clone, Default)]
+pub struct SlackLanes {
+    /// Setup slack per arc, ns.
+    pub slack_ns: Vec<f64>,
+    /// Data arrival (total path delay) per arc, ns.
+    pub arrival_ns: Vec<f64>,
+    /// Required time (period − uncertainty) per arc, ns.
+    pub required_ns: Vec<f64>,
+}
+
+impl SlackLanes {
+    /// Zero-filled lanes for `n` arcs (filled by position — generation
+    /// order is independent of the report's slack sort).
+    pub fn zeroed(n: usize) -> Self {
+        Self {
+            slack_ns: vec![0.0; n],
+            arrival_ns: vec![0.0; n],
+            required_ns: vec![0.0; n],
+        }
+    }
+
+    /// Set all three lanes of arc `i`.
+    pub fn set(&mut self, i: usize, slack: f64, arrival: f64, required: f64) {
+        self.slack_ns[i] = slack;
+        self.arrival_ns[i] = arrival;
+        self.required_ns[i] = required;
+    }
+
+    /// Arc count.
+    pub fn len(&self) -> usize {
+        self.slack_ns.len()
+    }
+
+    /// Whether the lanes are empty (a hand-built report without lanes).
+    pub fn is_empty(&self) -> bool {
+        self.slack_ns.is_empty()
+    }
+
+    /// Per-MAC minimum setup slack, row-major — the vectorized
+    /// reduction. `None` when the lanes do not cover exactly the
+    /// `size²·MAC_OUT_BITS` arcs of a full array (callers fall back to
+    /// the record walk).
+    pub fn per_mac_min_slack(&self, size: u32) -> Option<Vec<f64>> {
+        let bits = MAC_OUT_BITS as usize;
+        if self.slack_ns.len() != (size * size) as usize * bits {
+            return None;
+        }
+        Some(
+            self.slack_ns
+                .chunks_exact(bits)
+                .map(|c| {
+                    // Same comparison the record walk uses (strict `<`
+                    // from +inf), so the reduction is bit-identical.
+                    c.iter()
+                        .fold(f64::INFINITY, |m, &v| if v < m { v } else { m })
+                })
+                .collect(),
+        )
+    }
+}
+
 /// A full timing view (synthesis or implementation).
 #[derive(Debug, Clone)]
 pub struct TimingReport {
@@ -114,6 +197,9 @@ pub struct TimingReport {
     pub setup: Vec<PathRecord>,
     /// Hold paths, sorted worst first.
     pub hold: Vec<PathRecord>,
+    /// Flat SoA view of the setup analysis, generation order (S21 —
+    /// the min-slack reduction input).
+    pub lanes: SlackLanes,
     /// Clock the analysis ran at, MHz.
     pub clock_mhz: f64,
     /// Which stage produced the view.
@@ -157,13 +243,19 @@ impl TimingReport {
     /// input (paper §II-D: "clustering is performed on MACs using their
     /// minimum slack values").
     pub fn min_slack_per_mac(&self, size: u32) -> Vec<MacSlack> {
-        let mut best = vec![f64::INFINITY; (size * size) as usize];
-        for p in &self.setup {
-            let i = p.mac.index(size);
-            if p.slack_ns < best[i] {
-                best[i] = p.slack_ns;
+        // Fast path: the SoA lanes reduce with a contiguous chunked
+        // fold. Fallback (hand-built reports without lanes): walk the
+        // sorted records — same comparisons, same result.
+        let best = self.lanes.per_mac_min_slack(size).unwrap_or_else(|| {
+            let mut best = vec![f64::INFINITY; (size * size) as usize];
+            for p in &self.setup {
+                let i = p.mac.index(size);
+                if p.slack_ns < best[i] {
+                    best[i] = p.slack_ns;
+                }
             }
-        }
+            best
+        });
         (0..size)
             .flat_map(|r| (0..size).map(move |c| MacId::new(r, c)))
             .map(|mac| MacSlack {
@@ -190,8 +282,12 @@ pub fn synthesize(netlist: &SystolicNetlist) -> TimingReport {
     let t = netlist.period_ns();
     let mut setup: Vec<PathRecord> = Vec::with_capacity(netlist.arcs.len());
     let mut hold: Vec<PathRecord> = Vec::with_capacity(netlist.arcs.len());
-    for arc in &netlist.arcs {
+    // `netlist.arcs` is generation order (MAC-major, bit-minor), so the
+    // lanes fill by plain push here — no scatter needed.
+    let mut lanes = SlackLanes::zeroed(netlist.arcs.len());
+    for (i, arc) in netlist.arcs.iter().enumerate() {
         let total = arc.total_delay_ns();
+        lanes.set(i, t - CLOCK_UNCERTAINTY_NS - total, total, t - CLOCK_UNCERTAINTY_NS);
         setup.push(PathRecord {
             rank: 0,
             slack_ns: t - CLOCK_UNCERTAINTY_NS - total,
@@ -236,6 +332,7 @@ pub fn synthesize(netlist: &SystolicNetlist) -> TimingReport {
     TimingReport {
         setup,
         hold,
+        lanes,
         clock_mhz: netlist.clock_mhz,
         stage: Stage::Synthesis,
     }
@@ -296,6 +393,9 @@ pub fn implement(netlist: &SystolicNetlist, partitions: &[Partition]) -> TimingR
         0.002 * ((ax - bx).abs() + (ay - by).abs())
     };
 
+    // Iterating the *sorted* synthesis records, so the lanes fill by
+    // generation-order scatter (`mac.index · MAC_OUT_BITS + bit`).
+    let mut lanes = SlackLanes::zeroed(synth.setup.len());
     let mut setup: Vec<PathRecord> = synth
         .setup
         .iter()
@@ -309,6 +409,13 @@ pub fn implement(netlist: &SystolicNetlist, partitions: &[Partition]) -> TimingR
                     );
             let net = p.net_delay_ns * jit + crossing_penalty(p.mac);
             let total = p.logic_delay_ns + net;
+            let lane = p.mac.index(netlist.size) * MAC_OUT_BITS as usize + p.bit as usize;
+            lanes.set(
+                lane,
+                t - CLOCK_UNCERTAINTY_NS - total,
+                total,
+                t - CLOCK_UNCERTAINTY_NS,
+            );
             PathRecord {
                 net_delay_ns: net,
                 total_delay_ns: total,
@@ -346,6 +453,7 @@ pub fn implement(netlist: &SystolicNetlist, partitions: &[Partition]) -> TimingR
     TimingReport {
         setup,
         hold,
+        lanes,
         clock_mhz: netlist.clock_mhz,
         stage: Stage::Implementation,
     }
@@ -552,5 +660,62 @@ mod tests {
             .unwrap();
         assert_eq!(p.to(), q.to());
         assert_eq!(p.from(), q.from());
+    }
+
+    #[test]
+    fn lanes_mirror_generation_order_and_reduce_identically() {
+        let nl = netlist16();
+        let rep = synthesize(&nl);
+        assert_eq!(rep.lanes.len(), nl.arcs.len());
+        for (i, arc) in nl.arcs.iter().enumerate() {
+            assert_eq!(rep.lanes.arrival_ns[i], arc.total_delay_ns());
+            let residual =
+                rep.lanes.required_ns[i] - rep.lanes.arrival_ns[i] - rep.lanes.slack_ns[i];
+            assert!(residual.abs() < 1e-12, "lane {i} invariant broke");
+        }
+        // The SoA chunked fold and the AoS record walk must agree bit
+        // for bit — this is what lets min_slack_per_mac switch layout
+        // without perturbing clustering inputs anywhere downstream.
+        let fast = rep.lanes.per_mac_min_slack(16).unwrap();
+        let mut slow = vec![f64::INFINITY; 256];
+        for p in &rep.setup {
+            let i = p.mac.index(16);
+            if p.slack_ns < slow[i] {
+                slow[i] = p.slack_ns;
+            }
+        }
+        assert_eq!(fast.len(), 256);
+        for (a, b) in fast.iter().zip(&slow) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn implementation_lanes_scatter_to_generation_order() {
+        let nl = netlist16();
+        let rep = implement(&nl, &four_partitions(16));
+        // Each sorted record's generation-order lane holds its slack.
+        for p in rep.setup.iter().take(200) {
+            let lane = p.mac.index(16) * MAC_OUT_BITS as usize + p.bit as usize;
+            assert_eq!(rep.lanes.slack_ns[lane].to_bits(), p.slack_ns.to_bits());
+        }
+        let fast = rep.lanes.per_mac_min_slack(16).unwrap();
+        let recs = rep.min_slack_per_mac(16);
+        for (v, r) in fast.iter().zip(&recs) {
+            assert_eq!(*v, r.min_slack_ns);
+        }
+    }
+
+    #[test]
+    fn empty_lanes_fall_back_to_the_record_walk() {
+        // Hand-built reports (no lanes) must still reduce correctly.
+        let mut rep = synthesize(&netlist16());
+        rep.lanes = SlackLanes::default();
+        assert!(rep.lanes.is_empty());
+        assert!(rep.lanes.per_mac_min_slack(16).is_none());
+        let vals = rep.min_slack_values(16);
+        let laned = synthesize(&netlist16()).min_slack_values(16);
+        assert_eq!(vals.len(), 256);
+        assert_eq!(vals, laned);
     }
 }

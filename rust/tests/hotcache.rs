@@ -1,0 +1,177 @@
+//! Integration tests for the S21 hot-path cache: the determinism
+//! contract (cached byte-identical to uncached across the whole smoke
+//! grid), the check gate (zero new diagnostics with the cache on), the
+//! key discipline (a changed workload shift is a miss) and the
+//! `bench-hotpath` harness counters.
+//!
+//! The cache is process-global, so every test that touches its enabled
+//! flag or counters serializes on one static mutex — the test harness
+//! runs this binary's tests on multiple threads.
+
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use vstpu::hotcache::{self, bench::run_hotpath_bench, bench::HotpathConfig};
+use vstpu::report::{bench_hotpath_json, bench_sweep_json, check_json};
+use vstpu::sweep::{self, pool, run_sweep, RailMode, Scenario, SweepAlgo, SweepConfig};
+use vstpu::tech::Technology;
+
+/// Serialize tests that flip the process-global cache state.
+fn lock_cache() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Drop the measurement lines (`*_ms`, `speedup`) — everything else in
+/// the bench artifacts is part of the determinism contract.
+fn strip_measurements(json: &str) -> String {
+    json.lines()
+        .filter(|l| !(l.contains("_ms\"") || l.contains("\"speedup\"")))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn cached_sweep_is_byte_identical_to_uncached_across_the_smoke_grid() {
+    let _g = lock_cache();
+    let cfg = SweepConfig::smoke();
+
+    hotcache::set_enabled(false);
+    hotcache::reset();
+    let uncached = run_sweep(&cfg).unwrap();
+
+    hotcache::set_enabled(true);
+    hotcache::reset();
+    let cold = run_sweep(&cfg).unwrap(); // every lookup misses
+    let warm = run_sweep(&cfg).unwrap(); // every lookup hits
+    let stats = hotcache::stats();
+    hotcache::set_enabled(true);
+
+    assert_eq!(uncached.failed_count, 0, "smoke grid must be all-green");
+    assert_eq!(uncached.scenarios.len(), 8);
+    let want = strip_measurements(&bench_sweep_json(&uncached));
+    assert_eq!(
+        want,
+        strip_measurements(&bench_sweep_json(&cold)),
+        "cold cached run must be byte-identical to the uncached run"
+    );
+    assert_eq!(
+        want,
+        strip_measurements(&bench_sweep_json(&warm)),
+        "warm cached run must be byte-identical to the uncached run"
+    );
+    // 2 (tech, size) pairs and 8 scenario configurations: the cold run
+    // misses each once, the warm run hits each once.
+    assert_eq!(stats.sta_hits, 2, "{stats:?}");
+    assert_eq!(stats.sta_misses, 2, "{stats:?}");
+    assert_eq!(stats.configuration_hits, 8, "{stats:?}");
+    assert_eq!(stats.configuration_misses, 8, "{stats:?}");
+    assert_eq!(stats.sta_entries, 2, "{stats:?}");
+    assert_eq!(stats.configuration_entries, 8, "{stats:?}");
+}
+
+#[test]
+fn check_smoke_sees_zero_new_diagnostics_with_the_cache_on() {
+    let _g = lock_cache();
+    let no_artifacts = Path::new("/nonexistent-vstpu-artifacts");
+
+    hotcache::set_enabled(false);
+    hotcache::reset();
+    let uncached = vstpu::check::smoke_report(no_artifacts).unwrap();
+
+    hotcache::set_enabled(true);
+    hotcache::reset();
+    let cold = vstpu::check::smoke_report(no_artifacts).unwrap();
+    let warm = vstpu::check::smoke_report(no_artifacts).unwrap();
+
+    assert_eq!(uncached.errors(), 0, "{}", uncached.error_summary());
+    assert_eq!(uncached.warnings(), 0, "{:?}", uncached.diagnostics);
+    // CHECK_report.json carries no wall-clock fields: full-byte compare.
+    let want = check_json(&uncached);
+    assert_eq!(want, check_json(&cold));
+    assert_eq!(want, check_json(&warm));
+}
+
+/// Smoke-grid scenario literal (the key tests vary one axis at a time).
+fn scenario(index: usize, shift_toggle: f64, seed: u64) -> Scenario {
+    Scenario {
+        index,
+        algo: SweepAlgo::Dbscan,
+        tech: "academic-22nm".into(),
+        array_size: 16,
+        shift_toggle,
+        rail_mode: RailMode::Runtime,
+        seed,
+    }
+}
+
+#[test]
+fn changed_workload_shift_is_a_cache_miss() {
+    let _g = lock_cache();
+    hotcache::set_enabled(true);
+    hotcache::reset();
+    let cfg = SweepConfig::smoke();
+    let tech = Technology::by_name("academic-22nm").unwrap();
+    let st = sweep::shared_timing(&tech, 16, cfg.clock_mhz, cfg.seed);
+
+    let sc_a = scenario(0, 0.45, 99);
+    let sc_b = scenario(0, 0.25, 99); // same cell, shifted workload
+    let sc_c = scenario(17, 0.45, 99); // position in the grid is not identity
+    assert_ne!(
+        sweep::substrate_key(&sc_a, &st, &cfg),
+        sweep::substrate_key(&sc_b, &st, &cfg),
+        "workload shift must be part of the configuration key"
+    );
+    assert_eq!(
+        sweep::substrate_key(&sc_a, &st, &cfg),
+        sweep::substrate_key(&sc_c, &st, &cfg),
+        "the scenario index must not be part of the configuration key"
+    );
+
+    hotcache::reset_stats();
+    let mut arena = pool::Arena::new();
+    sweep::scenario_substrate(&sc_a, &st, &cfg, &mut arena).unwrap();
+    sweep::scenario_substrate(&sc_b, &st, &cfg, &mut arena).unwrap();
+    let s = hotcache::stats();
+    assert_eq!((s.configuration_hits, s.configuration_misses), (0, 2));
+    sweep::scenario_substrate(&sc_a, &st, &cfg, &mut arena).unwrap();
+    let s = hotcache::stats();
+    assert_eq!((s.configuration_hits, s.configuration_misses), (1, 2));
+}
+
+#[test]
+fn hotpath_bench_counters_and_artifact_are_deterministic() {
+    let _g = lock_cache();
+    hotcache::set_enabled(true);
+    let cfg = HotpathConfig::smoke();
+    let a = run_hotpath_bench(&cfg).unwrap();
+    let b = run_hotpath_bench(&cfg).unwrap();
+
+    assert_eq!(a.scenarios, 8);
+    assert_eq!(a.unique_sta_pairs, 2);
+    assert_eq!(a.threads, 1);
+    let names: Vec<&str> = a.stages.iter().map(|s| s.stage).collect();
+    assert_eq!(names, ["sta", "configuration", "sweep"]);
+    // The lookup sequence is fixed by the grid: populate (2 + 8 misses),
+    // then three cached stages (2 + 8 + 2 + 8 hits).
+    assert_eq!(a.cache.sta_hits, 4, "{:?}", a.cache);
+    assert_eq!(a.cache.sta_misses, 2, "{:?}", a.cache);
+    assert_eq!(a.cache.configuration_hits, 16, "{:?}", a.cache);
+    assert_eq!(a.cache.configuration_misses, 8, "{:?}", a.cache);
+    assert!(a.speedup.is_finite() && a.speedup > 0.0);
+    assert!(hotcache::enabled(), "bench must restore the enabled flag");
+
+    // Everything but the measurements — counters included — is
+    // byte-identical across runs; every measurement sits alone on its
+    // own line so consumers can strip them.
+    let ja = bench_hotpath_json(&a);
+    for line in ja
+        .lines()
+        .filter(|l| l.contains("_ms\"") || l.contains("\"speedup\""))
+    {
+        assert_eq!(line.matches('"').count(), 2, "measurement shares a line: {line}");
+    }
+    assert_eq!(strip_measurements(&ja), strip_measurements(&bench_hotpath_json(&b)));
+}
