@@ -8,7 +8,7 @@
 
 PYTHON ?= python3
 
-.PHONY: all build test pytest bench bench-build bench-serve bench-hotpath sweep calibrate check trend doc artifacts fmt lint clean
+.PHONY: all build test pytest bench bench-build bench-serve bench-hotpath bench-recovery sweep calibrate check trend doc artifacts fmt lint clean
 
 all: build
 
@@ -56,6 +56,13 @@ trend: bench-hotpath sweep
 calibrate:
 	cargo run --release -- calibrate --quick --json
 	python3 bench/check_regression.py BENCH_calibrate.json bench/baseline.json
+
+# CI smoke form of the S22 timing-error recovery frontier: A/B the
+# policies over the calibration harness; writes BENCH_recovery.json and
+# gates it like CI does.
+bench-recovery:
+	cargo run --release -- bench-recovery --quick --json
+	python3 bench/check_regression.py BENCH_recovery.json bench/baseline.json
 
 # CI smoke form of the S20 design-rule checker: re-derive the sweep
 # smoke grid + quick calibration trajectory and run the full rule

@@ -24,6 +24,13 @@ Dispatches on the current artifact's schema:
   closed on purpose: the Rust renderer writes non-finite measurements
   as 0, so a zero means a corrupted run, never an infinitely fast one
   — and a *missing* wall field must not be read as 0 either.
+* ``vstpu-bench-recovery/v1`` — the S22 timing-error-recovery gate.
+  Fails when any policy arm did not converge, an accuracy field is
+  missing or non-numeric (a missing loss must never read as lossless),
+  a recovering arm's accuracy loss escapes the declared budget, or the
+  te-drop arm did not converge below the none arm's voltage floor by
+  at least the baseline ``recovery`` block's ``min_v_headroom`` —
+  recovery that buys no voltage is a wiring bug, not a frontier.
 
 ``--trend`` is the wall-time trendline gate: for each artifact it
 derives one metric (hotpath -> ``sweep_cached_ms``, sweep ->
@@ -58,6 +65,7 @@ FILENAME_SCHEMAS = {
     "BENCH_calibrate": "vstpu-bench-calibrate/v1",
     "BENCH_sweep": "vstpu-bench-sweep/v1",
     "BENCH_hotpath": "vstpu-bench-hotpath/v1",
+    "BENCH_recovery": "vstpu-bench-recovery/v1",
     "CHECK_report": "vstpu-check/v1",
 }
 
@@ -80,6 +88,7 @@ HOTPATH_REQUIRED = [
     "speedup",
     "wall_ms",
 ]
+RECOVERY_REQUIRED = ["schema", "requests", "accuracy_budget", "policies", "wall_s"]
 
 # schema -> (trendline metric name, field of the artifact it reads).
 TREND_METRICS = {
@@ -289,6 +298,78 @@ def check_hotpath(current: dict, baseline: dict, current_path: str) -> None:
     )
 
 
+def check_recovery(current: dict, baseline: dict, current_path: str) -> None:
+    """The S22 timing-error-recovery gate over BENCH_recovery.json."""
+    for key in RECOVERY_REQUIRED:
+        if key not in current:
+            die(f"{current_path} is missing required field '{key}'")
+    # Like-for-like only, same as the other gates.
+    if "quick" in baseline and current.get("quick") != baseline["quick"]:
+        die(
+            f"configuration mismatch: quick={current.get('quick')!r} vs "
+            f"baseline quick={baseline['quick']!r}"
+        )
+    require_wall(current, "wall_s", current_path)
+    budget = require_number(current, "accuracy_budget", current_path)
+    rows = current["policies"]
+    if not isinstance(rows, list) or not rows:
+        die(f"policies is not a non-empty list: {rows!r}")
+    by_name = {}
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict) or not row.get("policy"):
+            die(f"policies[{i}] is not a named policy row: {row!r}")
+        name = row["policy"]
+        if row.get("converged") is not True:
+            die(f"policy arm '{name}' did not converge")
+        v_mean = require_number(row, "convergence_v_mean", f"policies[{i}]")
+        # Fail closed on the accuracy telemetry: the Rust renderer writes
+        # non-finite values as 0, and a *missing* loss field must never
+        # be read as lossless — require the numbers explicitly.
+        loss = require_number(row, "accuracy_loss", f"policies[{i}]")
+        overhead = require_number(row, "replay_overhead", f"policies[{i}]")
+        energy = require_number(row, "energy_uj_per_request", f"policies[{i}]")
+        if v_mean <= 0 or energy <= 0:
+            die(
+                f"policy arm '{name}' carries a non-positive voltage/energy "
+                f"({v_mean!r} V, {energy!r} uJ) — corrupted run"
+            )
+        if loss < 0 or overhead < 0:
+            die(f"policy arm '{name}' carries negative recovery telemetry")
+        if name != "none" and loss > budget + 1e-9:
+            die(
+                f"policy arm '{name}' accuracy loss {loss:.4f} escaped the "
+                f"declared budget {budget:.4f}"
+            )
+        by_name[name] = row
+    for want in ("none", "te-drop"):
+        if want not in by_name:
+            die(
+                f"{current_path} has no '{want}' policy row — the frontier "
+                f"comparison needs both arms"
+            )
+    rec_base = baseline.get("recovery", {})
+    if not isinstance(rec_base, dict):
+        die(f"baseline 'recovery' block is not an object: {rec_base!r}")
+    min_headroom = rec_base.get("min_v_headroom", 1e-6)
+    if not isinstance(min_headroom, (int, float)) or isinstance(min_headroom, bool) \
+            or min_headroom <= 0:
+        die(f"baseline min_v_headroom must be a positive number: {min_headroom!r}")
+    none_v = by_name["none"]["convergence_v_mean"]
+    drop_v = by_name["te-drop"]["convergence_v_mean"]
+    if drop_v > none_v - min_headroom:
+        die(
+            f"te-drop converged at {drop_v:.4f} V, not below the none floor "
+            f"{none_v:.4f} V by the required {min_headroom} V — recovery "
+            f"bought no voltage"
+        )
+    print(
+        f"bench-smoke gate: OK — recovery frontier holds: te-drop "
+        f"{drop_v:.4f} V vs none {none_v:.4f} V, loss "
+        f"{by_name['te-drop']['accuracy_loss']:.4f} <= budget {budget:.4f}, "
+        f"{len(rows)} policy arm(s)"
+    )
+
+
 def load_history(path: str) -> list:
     """Parse the branch trendline (one JSON object per line). A missing
     file is an empty history (first run on the branch); a corrupt line
@@ -417,6 +498,8 @@ def main(argv: list) -> None:
         check_calibrate(current, baseline, argv[1])
     elif schema == "vstpu-bench-hotpath/v1":
         check_hotpath(current, baseline, argv[1])
+    elif schema == "vstpu-bench-recovery/v1":
+        check_recovery(current, baseline, argv[1])
     else:
         die(f"{argv[1]} has unknown schema {schema!r}")
 
@@ -470,6 +553,32 @@ def _selftest() -> None:
         "wall_ms": 250.0,
     }
     GOOD_HOT_BASE = {"quick": True, "hotpath": {"min_speedup": 3.0}}
+    GOOD_REC = {
+        "schema": "vstpu-bench-recovery/v1",
+        "quick": True,
+        "requests": 4096,
+        "accuracy_budget": 0.05,
+        "policies": [
+            {"policy": "none", "converged": True, "convergence_v_mean": 0.955,
+             "flag_rate_final": 0.0, "accuracy_loss": 0.0, "replay_overhead": 0.0,
+             "energy_uj_per_request": 0.12},
+            {"policy": "te-drop", "converged": True, "convergence_v_mean": 0.9425,
+             "flag_rate_final": 0.2, "accuracy_loss": 0.008, "replay_overhead": 0.0,
+             "energy_uj_per_request": 0.11},
+        ],
+        "wall_s": 2.0,
+    }
+    GOOD_REC_BASE = {"quick": True, "recovery": {"min_v_headroom": 0.000001}}
+
+    def rec_with(**target):
+        """GOOD_REC with the te-drop row's fields overridden (None deletes)."""
+        rows = [dict(r) for r in GOOD_REC["policies"]]
+        for k, v in target.items():
+            if v is None:
+                rows[1].pop(k, None)
+            else:
+                rows[1][k] = v
+        return dict(GOOD_REC, policies=rows)
 
     tmp = tempfile.mkdtemp(prefix="vstpu-gate-selftest-")
 
@@ -583,6 +692,28 @@ def _selftest() -> None:
                      needle="below the gate minimum"))
     cases.append(run("hotpath clean", GOOD_HOT, GOOD_HOT_BASE, False,
                      current_name="BENCH_hotpath.json"))
+
+    # Recovery-gate guards.
+    only_none = dict(GOOD_REC, policies=[dict(GOOD_REC["policies"][0])])
+    cases.append(run("recovery missing te-drop arm", only_none, GOOD_REC_BASE, True,
+                     current_name="BENCH_recovery.json", needle="no 'te-drop'"))
+    cases.append(run("recovery arm not converged", rec_with(converged=False),
+                     GOOD_REC_BASE, True, current_name="BENCH_recovery.json",
+                     needle="did not converge"))
+    # The fail-closed guard: a missing accuracy_loss must never be read
+    # as a lossless arm.
+    cases.append(run("recovery missing accuracy loss", rec_with(accuracy_loss=None),
+                     GOOD_REC_BASE, True, current_name="BENCH_recovery.json",
+                     needle="not a number"))
+    cases.append(run("recovery loss over budget", rec_with(accuracy_loss=0.2),
+                     GOOD_REC_BASE, True, current_name="BENCH_recovery.json",
+                     needle="escaped the declared budget"))
+    cases.append(run("recovery no voltage headroom",
+                     rec_with(convergence_v_mean=0.955), GOOD_REC_BASE, True,
+                     current_name="BENCH_recovery.json",
+                     needle="bought no voltage"))
+    cases.append(run("recovery clean", GOOD_REC, GOOD_REC_BASE, False,
+                     current_name="BENCH_recovery.json"))
 
     # Trendline-gate guards (their own runner: different argv shape).
     def run_trend(label, history_lines, artifact, expect_fail, needle=""):

@@ -52,6 +52,7 @@ use crate::error::{Error, Result};
 use crate::fpga::Partition;
 use crate::power::PowerModel;
 use crate::razor::DEFAULT_TOGGLE;
+use crate::recover::{self, RecoverConfig, SILENT_TOL};
 use crate::runtime::MODEL_LAYERS;
 use crate::study;
 use crate::tech::Technology;
@@ -88,6 +89,11 @@ pub struct CalibrateConfig {
     /// entry point takes), or a quarter of the clamp range when a
     /// [`Calibrator`] is constructed directly from bounds.
     pub step_v: f64,
+    /// Timing-error recovery (S22): with a recovering policy the
+    /// hysteresis loop trades Razor flags for recovery cost and may
+    /// descend *below* the flag-rate floor, stopping at the
+    /// accuracy-loss budget instead (the `[recover]` config section).
+    pub recover: RecoverConfig,
 }
 
 impl Default for CalibrateConfig {
@@ -98,6 +104,7 @@ impl Default for CalibrateConfig {
             epoch_batches: 4,
             cooldown_epochs: 2,
             step_v: 0.0125,
+            recover: RecoverConfig::default(),
         }
     }
 }
@@ -126,7 +133,7 @@ impl CalibrateConfig {
         if self.epoch_batches == 0 {
             return Err(Error::Config("calibrate epoch_batches must be >= 1".into()));
         }
-        Ok(())
+        self.recover.validate()
     }
 }
 
@@ -163,6 +170,13 @@ pub struct Calibrator {
     /// Flags observed per partition in the current epoch.
     flag_counts: Vec<u64>,
     batches_in_epoch: usize,
+    /// Flagged-MAC fraction sums of the current epoch (S22 telemetry,
+    /// fed by [`Calibrator::observe_recovery`]).
+    flagged_frac_sum: Vec<f64>,
+    /// Silent-MAC fraction sums of the current epoch.
+    silent_frac_sum: Vec<f64>,
+    /// Batches that carried recovery telemetry this epoch.
+    recovery_batches: usize,
     cooldown: Vec<u32>,
     /// Step-up events per partition; the second one locks the rail.
     up_events: Vec<u32>,
@@ -175,6 +189,11 @@ pub struct Calibrator {
     voltage_trace: Vec<Vec<f64>>,
     /// Per-partition flag rate of each completed epoch.
     flag_rate_trace: Vec<Vec<f64>>,
+    /// Per-partition mean flagged-MAC fraction of each completed epoch
+    /// (S22; lockstep with [`Calibrator::flag_rate_trace`]).
+    flagged_frac_trace: Vec<Vec<f64>>,
+    /// Per-partition mean silent-MAC fraction of each completed epoch.
+    silent_frac_trace: Vec<Vec<f64>>,
 }
 
 impl Calibrator {
@@ -195,6 +214,9 @@ impl Calibrator {
             v_ceil,
             flag_counts: vec![0; n],
             batches_in_epoch: 0,
+            flagged_frac_sum: vec![0.0; n],
+            silent_frac_sum: vec![0.0; n],
+            recovery_batches: 0,
             cooldown: vec![0; n],
             up_events: vec![0; n],
             locked: vec![false; n],
@@ -202,6 +224,8 @@ impl Calibrator {
             last_move: vec![0; n],
             voltage_trace: vec![initial_rails.to_vec()],
             flag_rate_trace: Vec::new(),
+            flagged_frac_trace: Vec::new(),
+            silent_frac_trace: Vec::new(),
         }
     }
 
@@ -244,6 +268,45 @@ impl Calibrator {
         &self.flag_rate_trace
     }
 
+    /// Per-partition mean flagged-MAC fraction of every completed epoch
+    /// (S22 recovery telemetry; lockstep with
+    /// [`Calibrator::flag_rate_trace`], zeros when no recovery
+    /// telemetry was observed).
+    pub fn flagged_frac_trace(&self) -> &[Vec<f64>] {
+        &self.flagged_frac_trace
+    }
+
+    /// Per-partition mean silent-MAC fraction of every completed epoch.
+    pub fn silent_frac_trace(&self) -> &[Vec<f64>] {
+        &self.silent_frac_trace
+    }
+
+    /// Flag rate of partition `i` over the epoch *in progress*, or
+    /// `None` when the epoch has observed no batches yet. Zero
+    /// telemetry is "no evidence", never a `0/0 = NaN` rate — callers
+    /// (and [`Calibrator::end_epoch`] itself) must treat `None` as
+    /// hold-state.
+    pub fn epoch_flag_rate(&self, i: usize) -> Option<f64> {
+        if self.batches_in_epoch == 0 {
+            None
+        } else {
+            Some(self.flag_counts[i] as f64 / self.batches_in_epoch as f64)
+        }
+    }
+
+    /// Mean (flagged, silent) MAC fractions of partition `i` over the
+    /// epoch in progress, or `None` when no batch carried recovery
+    /// telemetry — the same hold-state contract as
+    /// [`Calibrator::epoch_flag_rate`].
+    pub fn epoch_recovery_fractions(&self, i: usize) -> Option<(f64, f64)> {
+        if self.recovery_batches == 0 {
+            None
+        } else {
+            let n = self.recovery_batches as f64;
+            Some((self.flagged_frac_sum[i] / n, self.silent_frac_sum[i] / n))
+        }
+    }
+
     /// Epoch (1-based) of partition `i`'s last rail movement; 0 if the
     /// rail never moved. In a live run that outlasted
     /// [`MAX_TRACE_EPOCHS`] this may point past the recorded trace.
@@ -270,34 +333,97 @@ impl Calibrator {
         self.batches_in_epoch += 1;
     }
 
+    /// Fold one batch's per-partition (flagged, silent) MAC fractions
+    /// into the current epoch — the S22 telemetry the recovery branch
+    /// of [`Calibrator::end_epoch`] decides on. The coordinator calls
+    /// this right after [`Calibrator::observe_batch`]; only `owned`
+    /// partitions are accumulated.
+    pub fn observe_recovery(&mut self, flagged_frac: &[f64], silent_frac: &[f64], owned: &[usize]) {
+        for &i in owned {
+            self.flagged_frac_sum[i] += flagged_frac[i];
+            self.silent_frac_sum[i] += silent_frac[i];
+        }
+        self.recovery_batches += 1;
+    }
+
     /// Close the epoch: compute per-partition flag rates, apply the
     /// hysteresis decision to every `owned` rail in `partitions`, and
     /// record the trajectory. An epoch with no observed batches carries
     /// no evidence, so it records an all-hold epoch (no rail moves).
     /// Recording stops after [`MAX_TRACE_EPOCHS`] (decisions continue)
     /// so a long-lived serving shard never grows unbounded state.
+    ///
+    /// With a recovering [`RecoverConfig::policy`] the decision is not
+    /// the flag-rate waters but the accuracy-loss budget (S22): a rail
+    /// steps **up** only when the epoch-mean silent fraction escapes
+    /// [`SILENT_TOL`] (past the shadow window nothing recovers) or the
+    /// modeled [`recover::weighted_loss`] escapes the budget; it steps
+    /// **down** while the loss sits under half the budget (hysteresis
+    /// band between the two); epochs without recovery telemetry hold —
+    /// the same no-evidence contract as zero batches.
     pub fn end_epoch(&mut self, partitions: &mut [Partition], owned: &[usize]) {
         let record = self.flag_rate_trace.len() < MAX_TRACE_EPOCHS;
         self.epochs_run += 1;
+        let n = self.flag_counts.len();
         if self.batches_in_epoch == 0 {
             // Zero telemetry: hold every rail rather than mistaking
             // silence for a flag-free epoch.
             if record {
-                self.flag_rate_trace
-                    .push(vec![0.0f64; self.flag_counts.len()]);
+                self.flag_rate_trace.push(vec![0.0f64; n]);
+                self.flagged_frac_trace.push(vec![0.0f64; n]);
+                self.silent_frac_trace.push(vec![0.0f64; n]);
                 self.voltage_trace
                     .push(partitions.iter().map(|p| p.vccint).collect());
             }
+            self.flagged_frac_sum.fill(0.0);
+            self.silent_frac_sum.fill(0.0);
+            self.recovery_batches = 0;
             return;
         }
         let batches = self.batches_in_epoch as f64;
         let epoch = self.epochs_run; // 1-based
-        let mut rates = vec![0.0f64; self.flag_counts.len()];
+        let recovering = self.cfg.recover.policy.recovers();
+        let budget = self.cfg.recover.accuracy_budget;
+        let mut rates = vec![0.0f64; n];
+        let mut flagged_means = vec![0.0f64; n];
+        let mut silent_means = vec![0.0f64; n];
         for &i in owned {
             rates[i] = self.flag_counts[i] as f64 / batches;
+            let fractions = self.epoch_recovery_fractions(i);
+            if let Some((f, s)) = fractions {
+                flagged_means[i] = f;
+                silent_means[i] = s;
+            }
             let p = &mut partitions[i];
             let before = p.vccint;
-            if rates[i] >= self.cfg.high_water {
+            if recovering {
+                match fractions {
+                    // No recovery telemetry this epoch: no evidence,
+                    // hold (never a NaN-driven decision).
+                    None => self.cooldown[i] = self.cooldown[i].saturating_sub(1),
+                    Some((f, s)) => {
+                        let loss = recover::weighted_loss(self.cfg.recover.policy, f, s);
+                        if s > SILENT_TOL || loss > budget {
+                            // Past the shadow window, or the recovery
+                            // cost escaped the budget: step up; the
+                            // second recovery locks the frontier.
+                            p.vccint = (p.vccint + self.step).min(self.v_ceil);
+                            self.cooldown[i] = self.cfg.cooldown_epochs;
+                            self.up_events[i] += 1;
+                            if self.up_events[i] >= 2 {
+                                self.locked[i] = true;
+                            }
+                        } else if loss <= 0.5 * budget && self.cooldown[i] == 0 && !self.locked[i]
+                        {
+                            p.vccint = (p.vccint - self.step).max(self.v_floor);
+                        } else {
+                            // Inside the loss hysteresis band, cooling
+                            // down, or locked: hold.
+                            self.cooldown[i] = self.cooldown[i].saturating_sub(1);
+                        }
+                    }
+                }
+            } else if rates[i] >= self.cfg.high_water {
                 // Errors: recover one step, arm the cooldown; a second
                 // recovery at the same frontier locks the rail there.
                 p.vccint = (p.vccint + self.step).min(self.v_ceil);
@@ -322,11 +448,16 @@ impl Calibrator {
         }
         if record {
             self.flag_rate_trace.push(rates);
+            self.flagged_frac_trace.push(flagged_means);
+            self.silent_frac_trace.push(silent_means);
             self.voltage_trace
                 .push(partitions.iter().map(|p| p.vccint).collect());
         }
         self.flag_counts.fill(0);
+        self.flagged_frac_sum.fill(0.0);
+        self.silent_frac_sum.fill(0.0);
         self.batches_in_epoch = 0;
+        self.recovery_batches = 0;
     }
 }
 
@@ -441,6 +572,15 @@ pub struct CalibrateReport {
     pub converged: bool,
     /// Mean per-partition flag rate of the final epoch.
     pub flag_rate_final: f64,
+    /// Timing-error recovery policy the controller ran under (S22).
+    pub recovery_policy: &'static str,
+    /// Accuracy-loss budget of the recovery branch.
+    pub accuracy_budget: f64,
+    /// Modeled accuracy loss at the final epoch
+    /// ([`recover::weighted_loss`] over the mean MAC fractions).
+    pub accuracy_loss_final: f64,
+    /// Modeled replay throughput overhead at the final epoch.
+    pub replay_overhead_final: f64,
     /// Energy per request at the static (epoch-0) rails, microjoules.
     pub energy_uj_before: f64,
     /// Mean energy per request over the epochs after convergence.
@@ -613,6 +753,24 @@ pub fn run_calibrate(
             / n_parts.max(1) as f64
     };
 
+    // S22: final-epoch mean MAC outcome fractions (each partition read
+    // from its owning shard — every partition holds the same MAC count,
+    // so the plain mean is MAC-weighted), folded into the modeled
+    // accuracy loss and replay overhead under the configured policy.
+    let policy = cfg.controller.recover.policy;
+    let (mut flagged_final, mut silent_final) = (0.0f64, 0.0f64);
+    if epochs > 0 {
+        for p in 0..n_parts {
+            let cal = &calibrators[p % cfg.shards];
+            flagged_final += cal.flagged_frac_trace()[epochs - 1][p];
+            silent_final += cal.silent_frac_trace()[epochs - 1][p];
+        }
+        flagged_final /= n_parts.max(1) as f64;
+        silent_final /= n_parts.max(1) as f64;
+    }
+    let accuracy_loss_final = recover::weighted_loss(policy, flagged_final, silent_final);
+    let replay_overhead_final = recover::replay_overhead(policy, flagged_final);
+
     // Energy per request at each epoch boundary, from the model alone.
     // The template (any shard's partition set — identical geometry and
     // MAC counts everywhere) carries the real per-partition MAC counts;
@@ -693,6 +851,10 @@ pub fn run_calibrate(
         convergence_epoch,
         converged,
         flag_rate_final,
+        recovery_policy: policy.name(),
+        accuracy_budget: cfg.controller.recover.accuracy_budget,
+        accuracy_loss_final,
+        replay_overhead_final,
         energy_uj_before,
         energy_uj_after,
         wall_s: t0.elapsed().as_secs_f64(),
@@ -724,6 +886,11 @@ pub fn render(rep: &CalibrateReport) -> String {
         s,
         "  converged: {} at epoch {}; final flag rate {:.3}",
         rep.converged, rep.convergence_epoch, rep.flag_rate_final
+    );
+    let _ = writeln!(
+        s,
+        "  recovery: {} (budget {:.3}); loss {:.4}, replay overhead {:.4}",
+        rep.recovery_policy, rep.accuracy_budget, rep.accuracy_loss_final, rep.replay_overhead_final
     );
     let _ = writeln!(
         s,
@@ -896,6 +1063,122 @@ mod tests {
         };
         assert!(no_epoch.validate().is_err());
         assert!(CalibrateConfig::default().validate().is_ok());
+    }
+
+    fn te_drop_config() -> CalibrateConfig {
+        CalibrateConfig {
+            recover: RecoverConfig {
+                policy: crate::recover::RecoveryPolicy::TeDrop,
+                accuracy_budget: 0.05,
+            },
+            ..CalibrateConfig::default()
+        }
+    }
+
+    /// One epoch with synthetic recovery telemetry: the partition flags
+    /// (fraction `flagged`) / corrupts (fraction `silent`) every batch.
+    fn drive_recovery_epoch(
+        cal: &mut Calibrator,
+        parts: &mut [Partition],
+        flagged: f64,
+        silent: f64,
+    ) {
+        for _ in 0..cal.config().epoch_batches {
+            cal.observe_batch(&[flagged > 0.0 || silent > 0.0], &[0]);
+            cal.observe_recovery(&[flagged], &[silent], &[0]);
+        }
+        cal.end_epoch(parts, &[0]);
+    }
+
+    #[test]
+    fn te_drop_descends_below_the_flag_frontier() {
+        // Synthetic frontier at 0.95: every MAC flags below it, none is
+        // silent. The None policy locks at/above the frontier (see
+        // `second_step_up_locks_the_rail`); TE-Drop holds *below* it —
+        // full flagging costs DROP_LOSS_WEIGHT = 0.04 <= budget 0.05.
+        let mut parts = one_partition(0.98);
+        let mut cal = Calibrator::new(te_drop_config(), 0.90, 1.0, &[0.98]);
+        for _ in 0..20 {
+            let flagged = if parts[0].vccint < 0.95 - 1e-12 { 1.0 } else { 0.0 };
+            drive_recovery_epoch(&mut cal, &mut parts, flagged, 0.0);
+        }
+        assert!(
+            parts[0].vccint < 0.95 - 1e-12,
+            "TE-Drop stopped at {} — never crossed the flag frontier",
+            parts[0].vccint
+        );
+        // And it settles (holds) instead of oscillating.
+        let trace = cal.voltage_trace();
+        let v_final = parts[0].vccint;
+        for snap in &trace[trace.len() - 4..] {
+            assert_eq!(snap[0], v_final, "recovery hold band oscillates");
+        }
+    }
+
+    #[test]
+    fn recovery_steps_up_on_silent_corruption() {
+        // The shadow window is the hard wall: persistent silent
+        // corruption must drive the rail back up and lock, recovery
+        // policy or not.
+        let mut parts = one_partition(0.98);
+        let mut cal = Calibrator::new(te_drop_config(), 0.90, 1.0, &[0.98]);
+        for _ in 0..30 {
+            let silent = if parts[0].vccint < 0.95 - 1e-12 { 0.01 } else { 0.0 };
+            let flagged = if silent > 0.0 { 1.0 } else { 0.0 };
+            drive_recovery_epoch(&mut cal, &mut parts, flagged, silent);
+        }
+        assert!(cal.is_locked(0), "silent wall must lock the rail");
+        assert!(parts[0].vccint >= 0.95 - 1e-12, "{}", parts[0].vccint);
+    }
+
+    #[test]
+    fn recovery_respects_a_tight_budget() {
+        // Budget below DROP_LOSS_WEIGHT: full flagging escapes it, so
+        // TE-Drop behaves like None — recover and lock at the frontier.
+        let mut cfg = te_drop_config();
+        cfg.recover.accuracy_budget = 0.02;
+        let mut parts = one_partition(0.98);
+        let mut cal = Calibrator::new(cfg, 0.90, 1.0, &[0.98]);
+        for _ in 0..30 {
+            let flagged = if parts[0].vccint < 0.95 - 1e-12 { 1.0 } else { 0.0 };
+            drive_recovery_epoch(&mut cal, &mut parts, flagged, 0.0);
+        }
+        assert!(cal.is_locked(0));
+        assert!(parts[0].vccint >= 0.95 - 1e-12, "{}", parts[0].vccint);
+    }
+
+    #[test]
+    fn recovering_policy_without_telemetry_holds() {
+        // A recovering policy with no observe_recovery feed has no
+        // evidence to descend on: every epoch holds.
+        let mut parts = one_partition(0.98);
+        let mut cal = Calibrator::new(te_drop_config(), 0.90, 1.0, &[0.98]);
+        for _ in 0..4 {
+            cal.observe_batch(&[false], &[0]);
+        }
+        cal.end_epoch(&mut parts, &[0]);
+        assert_eq!(parts[0].vccint, 0.98);
+        assert_eq!(cal.converged_epoch(0), 0);
+    }
+
+    #[test]
+    fn zero_batch_epoch_rates_are_none_never_nan() {
+        // Satellite regression: a zero-evaluation epoch must surface as
+        // `None` (hold-state), and nothing NaN may reach the traces.
+        let mut parts = one_partition(0.98);
+        let mut cal = Calibrator::new(CalibrateConfig::default(), 0.90, 1.0, &[0.98]);
+        assert_eq!(cal.epoch_flag_rate(0), None);
+        assert_eq!(cal.epoch_recovery_fractions(0), None);
+        cal.end_epoch(&mut parts, &[0]);
+        cal.observe_batch(&[true], &[0]);
+        assert_eq!(cal.epoch_flag_rate(0), Some(1.0));
+        cal.end_epoch(&mut parts, &[0]);
+        for trace in [cal.flag_rate_trace(), cal.flagged_frac_trace(), cal.silent_frac_trace()] {
+            for epoch in trace {
+                assert!(epoch.iter().all(|r| r.is_finite()), "NaN leaked: {epoch:?}");
+            }
+        }
+        assert_eq!(cal.epochs(), 2);
     }
 
     #[test]

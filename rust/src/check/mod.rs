@@ -27,6 +27,11 @@
 //! * **Trajectory invariants** (`VST015`..`VST018`) — calibrator steps
 //!   respect clamp bounds, step quantisation and the cooldown/lock
 //!   semantics of the hysteresis controller.
+//! * **Recovery contract** (`VST019`..`VST020`) — the S22 timing-error
+//!   recovery claims: a calibrated rail below its flag frontier must
+//!   declare a recovering policy ([`crate::recover::RecoveryPolicy`]),
+//!   and a declared policy's analytic accuracy loss at the assessment
+//!   toggle must stay inside its declared budget.
 //!
 //! Severities are calibration-aware: a Razor flag (or silent MAC) on a
 //! *runtime-calibrated* rail contradicts the calibration claim and is a
@@ -53,6 +58,7 @@ use crate::error::Result;
 use crate::fpga::{Device, Partition};
 use crate::netlist::{MacId, SystolicNetlist};
 use crate::razor::{self, RazorConfig, DEFAULT_TOGGLE};
+use crate::recover::{self, RecoveryPolicy, POLICY_DESCENT_STEPS};
 use crate::study;
 use crate::tech::{FlowKind, Technology};
 use crate::timing;
@@ -135,11 +141,17 @@ pub enum Rule {
     TraceCooldown,
     /// VST018 — a rail moves again after its second recovery locked it.
     TraceLock,
+    /// VST019 — a calibrated rail sits below its flag frontier without
+    /// a recovering timing-error policy declared.
+    RecoveryPolicyMissing,
+    /// VST020 — a declared recovery policy's analytic accuracy loss
+    /// exceeds its declared budget.
+    RecoveryBudget,
 }
 
 impl Rule {
     /// Every rule, in id order.
-    pub const ALL: [Rule; 18] = [
+    pub const ALL: [Rule; 20] = [
         Rule::TimingSilent,
         Rule::TimingFlagged,
         Rule::RailOrdering,
@@ -158,9 +170,11 @@ impl Rule {
         Rule::TraceStep,
         Rule::TraceCooldown,
         Rule::TraceLock,
+        Rule::RecoveryPolicyMissing,
+        Rule::RecoveryBudget,
     ];
 
-    /// Stable rule id (`VST001`..`VST018`).
+    /// Stable rule id (`VST001`..`VST020`).
     pub fn id(self) -> &'static str {
         match self {
             Rule::TimingSilent => "VST001",
@@ -181,6 +195,8 @@ impl Rule {
             Rule::TraceStep => "VST016",
             Rule::TraceCooldown => "VST017",
             Rule::TraceLock => "VST018",
+            Rule::RecoveryPolicyMissing => "VST019",
+            Rule::RecoveryBudget => "VST020",
         }
     }
 
@@ -205,6 +221,8 @@ impl Rule {
             Rule::TraceStep => "trace-step",
             Rule::TraceCooldown => "trace-cooldown",
             Rule::TraceLock => "trace-lock",
+            Rule::RecoveryPolicyMissing => "recovery-policy",
+            Rule::RecoveryBudget => "recovery-budget",
         }
     }
 
@@ -241,6 +259,12 @@ impl Rule {
             Rule::TraceStep => "calibration trajectories move at most one step per epoch",
             Rule::TraceCooldown => "no rail steps down inside the post-recovery cooldown window",
             Rule::TraceLock => "a rail locked by its second recovery never moves again",
+            Rule::RecoveryPolicyMissing => {
+                "a calibrated rail below its flag frontier declares a recovering policy"
+            }
+            Rule::RecoveryBudget => {
+                "a declared recovery policy's analytic accuracy loss stays inside its budget"
+            }
         }
     }
 
@@ -439,6 +463,12 @@ pub struct CheckInput<'a> {
     /// True iff the rails claim to be runtime-calibrated — Razor flags
     /// then contradict the claim and fire at full severity.
     pub calibrated: bool,
+    /// Declared timing-error recovery contract, when the producing
+    /// pipeline made one: `(policy, accuracy budget)`. `Some((None, _))`
+    /// is an explicit declared-none; `Option::None` is a legacy input
+    /// that predates the recovery subsystem (`VST019`/`VST020` then
+    /// judge it as undeclared).
+    pub recovery: Option<(RecoveryPolicy, f64)>,
     /// Context tag copied onto every diagnostic.
     pub scope: String,
 }
@@ -461,6 +491,7 @@ impl<'a> CheckInput<'a> {
             partitions,
             trajectory: None,
             calibrated: true,
+            recovery: None,
             scope: String::new(),
         }
     }
@@ -489,6 +520,14 @@ impl<'a> CheckInput<'a> {
         self
     }
 
+    /// Declare the timing-error recovery contract the configuration was
+    /// produced under (enables `VST019`/`VST020` and relaxes the flag
+    /// rules a recovering policy tolerates by design).
+    pub fn with_recovery(mut self, policy: RecoveryPolicy, accuracy_budget: f64) -> Self {
+        self.recovery = Some((policy, accuracy_budget));
+        self
+    }
+
     /// Tag every diagnostic with a context string.
     pub fn with_scope(mut self, scope: impl Into<String>) -> Self {
         self.scope = scope.into();
@@ -507,6 +546,7 @@ pub fn check(input: &CheckInput<'_>) -> CheckReport {
         input.partitions,
         input.toggle,
         input.calibrated,
+        input.recovery,
     ));
     if let Some(t) = input.trajectory {
         diags.extend(check_trajectory(t));
@@ -768,13 +808,18 @@ pub fn check_rails(tech: &Technology, partitions: &[Partition]) -> Vec<Diagnosti
     out
 }
 
-/// Timing safety (`VST001`..`VST004`): per-MAC Razor outcome at the
-/// assigned rail, the slack-ordered placement rule, and wasted margin.
+/// Timing safety (`VST001`..`VST004`) plus the recovery contract
+/// (`VST019`..`VST020`): per-MAC Razor outcome at the assigned rail,
+/// the slack-ordered placement rule, wasted margin, and the S22
+/// policy/budget declarations.
 ///
 /// `calibrated` selects the severities of `VST001`/`VST002`: flags on a
 /// calibrated rail contradict the calibration claim (Error/Warn), while
 /// a static Algorithm-1 rail operating in the Razor-protected region is
-/// the paper's designed mode (Info).
+/// the paper's designed mode (Info). A declared *recovering* policy
+/// ([`RecoveryPolicy::recovers`]) further downgrades `VST002` to Info —
+/// flags are then the policy's input, not a contradiction — and widens
+/// the `VST003` ordering tolerance by the policy's descent allowance.
 pub fn check_timing(
     netlist: &SystolicNetlist,
     tech: &Technology,
@@ -782,6 +827,7 @@ pub fn check_timing(
     partitions: &[Partition],
     toggle: f64,
     calibrated: bool,
+    recovery: Option<(RecoveryPolicy, f64)>,
 ) -> Vec<Diagnostic> {
     let period = netlist.period_ns();
     let budget = period - timing::CLOCK_UNCERTAINTY_NS;
@@ -789,12 +835,23 @@ pub fn check_timing(
     let (v_lo, v_floor) = study::rail_bounds(tech);
     let k = partitions.len().max(1);
     let vs = static_scheme::step(tech.v_nom, v_lo, k.max(4));
+    let recovering = recovery.is_some_and(|(p, _)| p.recovers());
     // Ordering tolerance: one Algorithm-1 step absorbs the static
     // quantisation, two calibration steps absorb the Algorithm-2
     // convergence band (a rail settles in [frontier, frontier + 2*vs)),
-    // so a clean configuration can never trip VST003.
-    let order_tol = (tech.v_nom - v_lo) / k as f64 + 2.0 * vs + EPS_V;
+    // so a clean configuration can never trip VST003. A recovering
+    // policy may deliberately descend each rail a further
+    // [`POLICY_DESCENT_STEPS`] below its frontier, so the tolerance
+    // widens by that allowance when one is declared.
+    let recovery_tol = if recovering {
+        POLICY_DESCENT_STEPS as f64 * vs
+    } else {
+        0.0
+    };
+    let order_tol = (tech.v_nom - v_lo) / k as f64 + 2.0 * vs + recovery_tol + EPS_V;
     let mut out = Vec::new();
+    let mut flagged_total = 0usize;
+    let mut silent_total = 0usize;
 
     // Per-partition criticality: worst static arc delay over its MACs
     // (larger = less slack = more critical; the quantity cluster 0 is
@@ -829,6 +886,8 @@ pub fn check_timing(
                 razor::MacOutcome::Ok => {}
             }
         }
+        flagged_total += flagged.len();
+        silent_total += silent.len();
         // A calibrated rail pinned at the flow floor had no room left to
         // step up — flags there are a surfaced risk of the flow bounds,
         // not a calibration contradiction, so they downgrade to Warn.
@@ -873,7 +932,14 @@ pub fn check_timing(
             .iter()
             .max_by(|a, b| a.1.total_cmp(&b.1))
         {
-            let severity = if calibrated { Severity::Warn } else { Severity::Info };
+            // A recovering policy turns flags into its working input
+            // (replayed or dropped, see `crate::recover`), so they stop
+            // contradicting the calibration claim.
+            let severity = if calibrated && !recovering {
+                Severity::Warn
+            } else {
+                Severity::Info
+            };
             out.push(diag(
                 Rule::TimingFlagged,
                 severity,
@@ -927,6 +993,59 @@ pub fn check_timing(
                     vs
                 ),
             ));
+        }
+
+        // VST019: a calibrated rail may only sit below its flag
+        // frontier if a recovering policy was declared to absorb the
+        // resulting flags (the S22 contract). A rail pinned at the
+        // flow floor is exempt — the flow bounds forced it there, no
+        // policy chose the descent (mirroring the VST001/VST002
+        // pinned-rail downgrade above).
+        if calibrated && !pinned && p.vccint < frontier - EPS_V && !recovering {
+            let declared = recovery.map_or("undeclared", |(pol, _)| pol.name());
+            out.push(diag(
+                Rule::RecoveryPolicyMissing,
+                Severity::Error,
+                Location::Partition(p.id),
+                format!(
+                    "calibrated rail {:.4} V sits below its flag frontier {:.4} V with no \
+                     recovering timing-error policy (declared: {declared})",
+                    p.vccint, frontier
+                ),
+            ));
+        }
+    }
+
+    // VST020: the declared policy's analytic accuracy loss at the
+    // assessment toggle must honour the declared budget. Only judged on
+    // calibrated configurations — on static Algorithm-1 rails the
+    // recovery loop has not run yet, so the budget is not yet a claim.
+    if let Some((policy, acc_budget)) = recovery {
+        if calibrated && policy.recovers() {
+            let n = netlist.mac_count().max(1) as f64;
+            let loss = recover::weighted_loss(
+                policy,
+                flagged_total as f64 / n,
+                silent_total as f64 / n,
+            );
+            if loss > acc_budget + EPS_V {
+                out.push(diag(
+                    Rule::RecoveryBudget,
+                    Severity::Error,
+                    Location::Global,
+                    format!(
+                        "policy {} loses {:.4} of accuracy at toggle {:.3} ({} flagged, {} \
+                         silent of {} MACs) — over the declared budget {:.4}",
+                        policy.name(),
+                        loss,
+                        toggle,
+                        flagged_total,
+                        silent_total,
+                        netlist.mac_count(),
+                        acc_budget
+                    ),
+                ));
+            }
         }
     }
     out
@@ -1143,14 +1262,16 @@ pub fn smoke_report(artifacts_dir: &Path) -> Result<CheckReport> {
             .with_clustering(&clustering)
             .with_toggle(cfg.calib_toggle)
             .with_calibrated(sc.rail_mode == RailMode::Runtime)
+            .with_recovery(sc.policy, cfg.accuracy_budget)
             .with_scope(format!(
-                "sweep[{}]: {}/{}/{}x{}/{}",
+                "sweep[{}]: {}/{}/{}x{}/{}/{}",
                 sc.index,
                 sc.algo.name(),
                 sc.tech,
                 sc.array_size,
                 sc.array_size,
-                sc.rail_mode.name()
+                sc.rail_mode.name(),
+                sc.policy.name()
             ));
         report.merge(check(&input));
     }
@@ -1217,7 +1338,7 @@ mod tests {
     #[test]
     fn rule_ids_are_stable_unique_and_sequential() {
         let ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
-        assert_eq!(ids.len(), 18);
+        assert_eq!(ids.len(), 20);
         for (i, id) in ids.iter().enumerate() {
             assert_eq!(*id, format!("VST{:03}", i + 1));
         }
@@ -1298,6 +1419,94 @@ mod tests {
         ]));
         assert!(fires(&d, Rule::TraceLock));
         assert!(!fires(&d, Rule::TraceCooldown));
+    }
+
+    #[test]
+    fn recovery_rules_judge_the_sub_frontier_contract() {
+        let tech = Technology::academic_45nm();
+        let sta = crate::hotcache::sta(&tech, 16, 100.0, 2021);
+        let razor = RazorConfig::default();
+        let clustering = study::equal_quantile_clustering(&sta.slacks, 4);
+        let mut parts = study::calibrated_partitions(
+            &sta.netlist,
+            &tech,
+            &razor,
+            &clustering,
+            &sta.slacks,
+            400,
+            DEFAULT_TOGGLE,
+        )
+        .expect("calibration");
+
+        // Calibrated at the frontier: clean under every declaration.
+        let base = check_timing(&sta.netlist, &tech, &razor, &parts, DEFAULT_TOGGLE, true, None);
+        assert!(!fires(&base, Rule::RecoveryPolicyMissing));
+        assert!(!fires(&base, Rule::RecoveryBudget));
+
+        // Co-optimize the rails below the frontier, as the sweep does
+        // for a recovering policy.
+        let (v_lo, v_floor) = study::rail_bounds(&tech);
+        let vs = static_scheme::step(tech.v_nom, v_lo, parts.len().max(4));
+        let rc = recover::RecoverConfig {
+            policy: RecoveryPolicy::TeDrop,
+            accuracy_budget: 0.05,
+        };
+        let steps = recover::co_optimize_rails(
+            &sta.netlist,
+            &tech,
+            &razor,
+            &mut parts,
+            DEFAULT_TOGGLE,
+            &rc,
+            vs,
+            v_floor,
+        );
+        assert!(steps >= 1, "no rail descended below the flag floor");
+
+        // Sub-frontier calibrated rails with no (or a non-recovering)
+        // declaration: VST019.
+        let d = check_timing(&sta.netlist, &tech, &razor, &parts, DEFAULT_TOGGLE, true, None);
+        assert!(fires(&d, Rule::RecoveryPolicyMissing));
+        let d = check_timing(
+            &sta.netlist,
+            &tech,
+            &razor,
+            &parts,
+            DEFAULT_TOGGLE,
+            true,
+            Some((RecoveryPolicy::None, 0.05)),
+        );
+        assert!(fires(&d, Rule::RecoveryPolicyMissing));
+
+        // Declared TeDrop within budget: the whole timing family is
+        // Info-only (flags are the policy's working input).
+        let d = check_timing(
+            &sta.netlist,
+            &tech,
+            &razor,
+            &parts,
+            DEFAULT_TOGGLE,
+            true,
+            Some((RecoveryPolicy::TeDrop, 0.05)),
+        );
+        assert!(!fires(&d, Rule::RecoveryPolicyMissing));
+        assert!(!fires(&d, Rule::RecoveryBudget));
+        assert!(
+            d.iter().all(|x| x.severity == Severity::Info),
+            "recovering policy within budget must not error or warn: {d:?}"
+        );
+
+        // An implausibly tight declared budget flips VST020.
+        let d = check_timing(
+            &sta.netlist,
+            &tech,
+            &razor,
+            &parts,
+            DEFAULT_TOGGLE,
+            true,
+            Some((RecoveryPolicy::TeDrop, 1e-9)),
+        );
+        assert!(fires(&d, Rule::RecoveryBudget));
     }
 
     #[test]

@@ -10,6 +10,7 @@ use vstpu::cluster::{hierarchical, Algorithm};
 use vstpu::config::Config;
 use vstpu::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
 use vstpu::netlist::SystolicNetlist;
+use vstpu::recover::{run_recovery_bench, RecoveryBenchConfig, RecoveryPolicy};
 use vstpu::report;
 use vstpu::serve::BenchConfig;
 use vstpu::sweep::{RailMode, SweepAlgo, SweepConfig};
@@ -43,6 +44,19 @@ COMMANDS
                     --requests N (8192)  --epoch-batches N (4)
                     --step-v F (0.0125)  --low-water F (0.05)
                     --high-water F (0.5)  --cooldown N (2)  --seed N (7)
+                    --policy none|replay|te-drop (the [recover] config
+                    section; a recovering policy lets the controller
+                    descend below the flag-rate floor)  --budget F (0.05)
+                    --quick (CI smoke)  --json  --out FILE
+  bench-recovery  S22 timing-error recovery frontier: run the closed-loop
+                    calibration once per recovery-policy arm (none /
+                    replay / te-drop) on one seeded workload and report
+                    each arm's convergence voltage, modeled accuracy
+                    loss, replay overhead and energy per request; --json
+                    writes BENCH_recovery.json (vstpu-bench-recovery/v1)
+                    --tech NAME (academic-45nm)  --shards N (2)
+                    --requests N (8192)  --seed N (7)
+                    --policies none,replay,te-drop  --budget F (0.05)
                     --quick (CI smoke)  --json  --out FILE
   serve           serve synthetic requests through the runtime backend
                     (falls back to the built-in reference backend when
@@ -64,10 +78,13 @@ COMMANDS
                     x tech x array-size x workload-shift grid on a job
                     pool, with shared per-(tech,size) timing analysis;
                     --json writes the machine-readable BENCH_sweep.json
-                    --smoke (CI grid: 2 algos x 2 techs x 1 size x 2 rail modes)
+                    --smoke (CI grid: 2 algos x 2 techs x 1 size
+                    x 2 rail modes x 2 policies)
                     --algos hierarchical,kmeans,meanshift,dbscan,equal-quantile
                     --techs NAMES  --sizes 8,16,32,64  --shifts 0.25,0.45
                     --rails static,runtime (the rail-mode axis)
+                    --policies none,replay,te-drop (the recovery axis)
+                    --budget F (0.05, the recovering arms' loss budget)
                     --k N (4)  --threads N (0 = cores)  --seed N (2021)
                     --max-trials N (200)  --json  --out FILE (BENCH_sweep.json)
   bench-hotpath   S21 hot-path cache harness: run the smoke sweep grid
@@ -80,7 +97,7 @@ COMMANDS
                     --k N  --json  --out FILE (BENCH_hotpath.json)
   check           static design-rule verifier (S20): run the default
                     pipeline (netlist -> STA -> clustering -> rails) and
-                    verify the VST001..VST018 catalog — timing safety,
+                    verify the VST001..VST020 catalog — timing safety,
                     flow compliance, structure, trajectory invariants;
                     --json writes CHECK_report.json (vstpu-check/v1)
                     --tech NAME (academic-22nm)  --array-size N (16)
@@ -271,12 +288,53 @@ pub fn run() -> Result<()> {
             ccfg.controller.high_water = o.num("high-water", ccfg.controller.high_water)?;
             ccfg.controller.cooldown_epochs =
                 o.num("cooldown", ccfg.controller.cooldown_epochs)?;
+            // Recovery co-optimization (S22): the [recover] config
+            // section seeds the policy; --policy / --budget override it.
+            ccfg.controller.recover = config.resolve_recover()?;
+            if let Some(p) = o.get("policy") {
+                ccfg.controller.recover.policy = RecoveryPolicy::from_name(p)?;
+            }
+            ccfg.controller.recover.accuracy_budget =
+                o.num("budget", ccfg.controller.recover.accuracy_budget)?;
+            ccfg.controller.recover.validate()?;
             let artifacts = PathBuf::from(o.str_or("artifacts", &config.serve.artifacts_dir));
             let rep = run_calibrate(&artifacts, ccfg)?;
             print!("{}", vstpu::calibrate::render(&rep));
             if o.flag("json") {
                 let out = PathBuf::from(o.str_or("out", "BENCH_calibrate.json"));
                 std::fs::write(&out, report::bench_calibrate_json(&rep))?;
+                println!("wrote {}", out.display());
+            }
+        }
+        "bench-recovery" => {
+            let o = Opts::parse(rest, &["quick", "json"])?;
+            // academic-45nm by default: its guard-band voltage step is
+            // provably non-silent inside the Razor shadow window, so the
+            // TE-Drop arm lands strictly below the None floor (see
+            // rust/src/recover docs for the step-vs-window argument).
+            let tech = tech_by_name(&o.str_or("tech", "academic-45nm"))?;
+            let mut rcfg = if o.flag("quick") {
+                RecoveryBenchConfig::quick(tech)
+            } else {
+                RecoveryBenchConfig::paper_default(tech)
+            };
+            rcfg.base.shards = o.num("shards", rcfg.base.shards)?;
+            rcfg.base.requests = o.num("requests", rcfg.base.requests)?;
+            rcfg.base.seed = o.num("seed", rcfg.base.seed)?;
+            rcfg.base.profile = profile_from(&o.str_or("fluctuation", "medium"))?;
+            if let Some(v) = o.get("policies") {
+                rcfg.policies = v
+                    .split(',')
+                    .map(RecoveryPolicy::from_name)
+                    .collect::<Result<_>>()?;
+            }
+            rcfg.accuracy_budget = o.num("budget", config.recover.accuracy_budget)?;
+            let artifacts = PathBuf::from(o.str_or("artifacts", &config.serve.artifacts_dir));
+            let rep = run_recovery_bench(&artifacts, rcfg)?;
+            print!("{}", vstpu::recover::render(&rep));
+            if o.flag("json") {
+                let out = PathBuf::from(o.str_or("out", "BENCH_recovery.json"));
+                std::fs::write(&out, report::bench_recovery_json(&rep))?;
                 println!("wrote {}", out.display());
             }
         }
@@ -413,6 +471,13 @@ pub fn run() -> Result<()> {
                     .map(RailMode::from_name)
                     .collect::<Result<_>>()?;
             }
+            if let Some(v) = o.get("policies") {
+                scfg.policies = v
+                    .split(',')
+                    .map(RecoveryPolicy::from_name)
+                    .collect::<Result<_>>()?;
+            }
+            scfg.accuracy_budget = o.num("budget", config.recover.accuracy_budget)?;
             let rep = vstpu::sweep::run_sweep(&scfg)?;
             print!("{}", vstpu::sweep::render(&rep));
             if o.flag("json") {

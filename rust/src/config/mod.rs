@@ -16,6 +16,7 @@ use std::path::Path;
 use crate::calibrate::CalibrateConfig;
 use crate::cluster::Algorithm;
 use crate::error::{Error, Result};
+use crate::recover::{RecoverConfig, RecoveryPolicy};
 use crate::tech::Technology;
 
 /// Top-level configuration file.
@@ -29,6 +30,8 @@ pub struct Config {
     pub sweep: SweepSection,
     /// `[calibrate]` — closed-loop voltage-calibration parameters.
     pub calibrate: CalibrateSection,
+    /// `[recover]` — S22 timing-error recovery parameters.
+    pub recover: RecoverSection,
     /// `[check]` — design-rule checker parameters.
     pub check: CheckSection,
     /// `[hotcache]` — S21 hot-path memoization parameters.
@@ -167,7 +170,10 @@ impl Default for CalibrateSection {
 }
 
 impl CalibrateSection {
-    /// The controller knobs this section configures.
+    /// The controller knobs this section configures. The recovery
+    /// branch comes from the sibling `[recover]` section
+    /// ([`Config::resolve_recover`]); on its own this section runs the
+    /// pre-S22 policy-free controller.
     pub fn controller(&self) -> CalibrateConfig {
         CalibrateConfig {
             low_water: self.low_water,
@@ -175,6 +181,28 @@ impl CalibrateSection {
             epoch_batches: self.epoch_batches,
             cooldown_epochs: self.cooldown_epochs,
             step_v: self.step_v,
+            recover: RecoverConfig::default(),
+        }
+    }
+}
+
+/// `[recover]` — S22 timing-error recovery: what the serving path does
+/// with Razor-flagged MACs, and how much modeled accuracy loss the
+/// recovery-enabled calibrator may trade for voltage headroom.
+#[derive(Debug, Clone)]
+pub struct RecoverSection {
+    /// Recovery policy: "none" | "replay" | "te-drop".
+    pub policy: String,
+    /// Accuracy-loss budget of the recovery-enabled calibrator.
+    pub accuracy_budget: f64,
+}
+
+impl Default for RecoverSection {
+    fn default() -> Self {
+        let r = RecoverConfig::default();
+        Self {
+            policy: r.policy.name().into(),
+            accuracy_budget: r.accuracy_budget,
         }
     }
 }
@@ -264,7 +292,7 @@ impl Config {
                 section = name.trim().to_string();
                 if !matches!(
                     section.as_str(),
-                    "flow" | "serve" | "sweep" | "calibrate" | "check" | "hotcache"
+                    "flow" | "serve" | "sweep" | "calibrate" | "recover" | "check" | "hotcache"
                 ) {
                     return Err(Error::Config(format!(
                         "line {}: unknown section [{section}]",
@@ -317,6 +345,10 @@ impl Config {
                 self.calibrate.cooldown_epochs = parse_num(key, v)?
             }
             ("calibrate", "step_v") => self.calibrate.step_v = parse_num(key, v)?,
+            ("recover", "policy") => self.recover.policy = unquote(v),
+            ("recover", "accuracy_budget") => {
+                self.recover.accuracy_budget = parse_num(key, v)?
+            }
             ("check", "deny_warnings") => self.check.deny_warnings = parse_bool(key, v)?,
             ("check", "toggle") => self.check.toggle = parse_num(key, v)?,
             ("hotcache", "enabled") => self.hotcache.enabled = parse_bool(key, v)?,
@@ -367,6 +399,10 @@ impl Config {
              cooldown_epochs = {}\n\
              step_v = {}\n\
              \n\
+             [recover]\n\
+             policy = \"{}\"\n\
+             accuracy_budget = {}\n\
+             \n\
              [check]\n\
              deny_warnings = {}\n\
              toggle = {}\n\
@@ -400,11 +436,25 @@ impl Config {
             self.calibrate.epoch_batches,
             self.calibrate.cooldown_epochs,
             self.calibrate.step_v,
+            self.recover.policy,
+            self.recover.accuracy_budget,
             self.check.deny_warnings,
             self.check.toggle,
             self.hotcache.enabled,
             self.hotcache.max_entries,
         )
+    }
+
+    /// Resolve the `[recover]` section into a validated
+    /// [`RecoverConfig`] (unknown policy names and out-of-range budgets
+    /// are errors, same contract as the parser's typo rejection).
+    pub fn resolve_recover(&self) -> Result<RecoverConfig> {
+        let rc = RecoverConfig {
+            policy: RecoveryPolicy::from_name(&self.recover.policy)?,
+            accuracy_budget: self.recover.accuracy_budget,
+        };
+        rc.validate()?;
+        Ok(rc)
     }
 
     /// Resolve the `[flow]` section into concrete flow inputs.
@@ -464,6 +514,8 @@ mod tests {
         assert_eq!(back.calibrate.enabled, cfg.calibrate.enabled);
         assert_eq!(back.calibrate.epoch_batches, cfg.calibrate.epoch_batches);
         assert_eq!(back.calibrate.step_v, cfg.calibrate.step_v);
+        assert_eq!(back.recover.policy, cfg.recover.policy);
+        assert_eq!(back.recover.accuracy_budget, cfg.recover.accuracy_budget);
         assert_eq!(back.check.deny_warnings, cfg.check.deny_warnings);
         assert_eq!(back.check.toggle, cfg.check.toggle);
         assert_eq!(back.hotcache.enabled, cfg.hotcache.enabled);
@@ -507,6 +559,29 @@ mod tests {
         assert_eq!(c.step_v, 0.025);
         assert!(Config::parse("[calibrate]\nenabeld = true\n").is_err());
         assert!(Config::parse("[calibrate]\nlow_water = soggy\n").is_err());
+    }
+
+    #[test]
+    fn recover_section_parses_resolves_and_rejects_typos() {
+        let cfg = Config::parse("[recover]\npolicy = \"te-drop\"\naccuracy_budget = 0.02\n")
+            .unwrap();
+        assert_eq!(cfg.recover.policy, "te-drop");
+        assert_eq!(cfg.recover.accuracy_budget, 0.02);
+        let rc = cfg.resolve_recover().unwrap();
+        assert_eq!(rc.policy, RecoveryPolicy::TeDrop);
+        assert_eq!(rc.accuracy_budget, 0.02);
+        // Default section resolves to the policy-free pre-S22 behaviour.
+        assert_eq!(
+            Config::default().resolve_recover().unwrap().policy,
+            RecoveryPolicy::None
+        );
+        // Typos and invalid values fail loudly, never silently default.
+        assert!(Config::parse("[recover]\npolcy = \"replay\"\n").is_err());
+        assert!(Config::parse("[recover]\naccuracy_budget = generous\n").is_err());
+        let bad = Config::parse("[recover]\npolicy = \"drop-te\"\n").unwrap();
+        assert!(bad.resolve_recover().is_err());
+        let bad = Config::parse("[recover]\naccuracy_budget = 1.5\n").unwrap();
+        assert!(bad.resolve_recover().is_err());
     }
 
     #[test]

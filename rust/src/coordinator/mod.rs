@@ -46,6 +46,7 @@ use crate::metrics::LatencyHistogram;
 use crate::netlist::{MacId, SystolicNetlist};
 use crate::power::PowerModel;
 use crate::razor::{trial_partition, MacOutcome, RazorConfig, DEFAULT_TOGGLE};
+use crate::recover::RecoveryPolicy;
 use crate::runtime::{self, Backend, LoadedModel, ReferenceBackend, Tensor};
 use crate::tech::Technology;
 use crate::util::hash3_unit;
@@ -149,6 +150,12 @@ pub struct TelemetrySnapshot {
     /// (partition index, rail V, dynamic power mW) for every partition
     /// this coordinator owns (all of them outside sharded serving).
     pub per_partition_power_mw: Vec<(usize, f64, f64)>,
+    /// MACs re-executed under [`RecoveryPolicy::Replay`], per partition
+    /// (S22; zeros for unowned partitions and non-replay policies).
+    pub replayed_macs: Vec<u64>,
+    /// MAC partial sums zeroed under [`RecoveryPolicy::TeDrop`], per
+    /// partition.
+    pub dropped_macs: Vec<u64>,
 }
 
 /// Fixed-size batcher: collects single samples into the artifact batch,
@@ -379,6 +386,24 @@ impl VoltageController {
         )
     }
 
+    /// Per-MAC (flagged, silent) outcome fractions of partition `i` at
+    /// its current rail and measured per-row activity — the S22
+    /// recovery telemetry a batch feeds into
+    /// [`crate::calibrate::Calibrator::observe_recovery`].
+    pub fn outcome_fractions(&self, i: usize) -> (f64, f64) {
+        let p = &self.partitions[i];
+        let toggles = &self.row_toggle;
+        let size = toggles.len();
+        crate::recover::outcome_fractions(
+            &self.netlist,
+            &self.tech,
+            &self.razor,
+            &p.macs,
+            p.vccint,
+            |m: MacId| toggles[m.row as usize % size],
+        )
+    }
+
     /// Does any arc of this partition run silently past the shadow
     /// window at the current rail + activity? (Used per batch.)
     pub fn silent_now(&self, i: usize) -> bool {
@@ -423,6 +448,12 @@ pub struct Coordinator {
     senses: u64,
     /// Sense passes where at least one owned partition flagged.
     flag_batches: u64,
+    /// S22: MACs re-executed under [`RecoveryPolicy::Replay`], per
+    /// partition.
+    replayed_macs: Vec<u64>,
+    /// S22: MAC partial sums zeroed under [`RecoveryPolicy::TeDrop`],
+    /// per partition.
+    dropped_macs: Vec<u64>,
 }
 
 impl Coordinator {
@@ -446,6 +477,7 @@ impl Coordinator {
     pub fn with_backend(backend: &dyn Backend, config: CoordinatorConfig) -> Result<Self> {
         let model = backend.load("model_fwd")?;
         let controller = VoltageController::new(&config)?;
+        let n_parts = controller.partitions.len();
         let power_model = PowerModel::new(config.tech.clone(), config.clock_mhz);
         let batcher = Batcher::new(config.batch, MODEL_INPUT);
         Ok(Self {
@@ -461,6 +493,8 @@ impl Coordinator {
             requests: 0,
             senses: 0,
             flag_batches: 0,
+            replayed_macs: vec![0; n_parts],
+            dropped_macs: vec![0; n_parts],
         })
     }
 
@@ -564,6 +598,40 @@ impl Coordinator {
         if let Some(cal) = self.calibrator.as_mut() {
             self.controller.sense();
             cal.observe_batch(&self.controller.flagged, self.controller.owned());
+            // S22: per-partition MAC outcome fractions feed the
+            // recovery decision, the replay/drop counters, and (under
+            // TE-Drop) the live partial-sum effect on the logits.
+            let n = self.controller.partitions.len();
+            let mut flagged_frac = vec![0.0f64; n];
+            let mut silent_frac = vec![0.0f64; n];
+            let policy = cal.config().recover.policy;
+            for &i in self.controller.owned() {
+                let (fr, sr) = self.controller.outcome_fractions(i);
+                flagged_frac[i] = fr;
+                silent_frac[i] = sr;
+                let macs = self.controller.partitions[i].macs.len() as f64;
+                let flagged_macs = (fr * macs).round() as u64;
+                match policy {
+                    RecoveryPolicy::Replay => self.replayed_macs[i] += flagged_macs,
+                    RecoveryPolicy::TeDrop => {
+                        self.dropped_macs[i] += flagged_macs;
+                        // Zeroed partial sums attenuate the partition's
+                        // logit columns — the bounded, recoverable
+                        // counterpart of the silent corruption above.
+                        if fr > 0.0 && sr == 0.0 {
+                            let (lo, hi) = self.controller.col_span(i);
+                            let gain = (1.0 - crate::recover::DROP_LOSS_WEIGHT * fr) as f32;
+                            for b in 0..reqs.len() {
+                                for l in lo as usize..=(hi as usize).min(MODEL_OUTPUT - 1) {
+                                    logits[b * MODEL_OUTPUT + l] *= gain;
+                                }
+                            }
+                        }
+                    }
+                    RecoveryPolicy::None => {}
+                }
+            }
+            cal.observe_recovery(&flagged_frac, &silent_frac, self.controller.owned());
             if self.batches % cal.config().epoch_batches as u64 == 0 {
                 let owned = self.controller.owned().to_vec();
                 cal.end_epoch(&mut self.controller.partitions, &owned);
@@ -632,6 +700,8 @@ impl Coordinator {
                 self.flag_batches as f64 / self.senses as f64
             },
             per_partition_power_mw,
+            replayed_macs: self.replayed_macs.clone(),
+            dropped_macs: self.dropped_macs.clone(),
         }
     }
 

@@ -32,6 +32,10 @@ pub enum Error {
     /// Serving-path error (queue closed, request rejected, ...).
     Serve(String),
 
+    /// A sharded-engine worker died (panic or error); carries the shard
+    /// id so the caller knows which island's rail state is gone.
+    ShardFailed(usize, String),
+
     /// Scenario-sweep error (empty grid, unknown axis value, ...).
     Sweep(String),
 
@@ -53,6 +57,7 @@ impl std::fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Serve(m) => write!(f, "serve error: {m}"),
+            Error::ShardFailed(shard, m) => write!(f, "shard {shard} failed: {m}"),
             Error::Sweep(m) => write!(f, "sweep error: {m}"),
             Error::Check(m) => write!(f, "check error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
@@ -88,6 +93,9 @@ mod tests {
         assert!(Error::Artifact("y".into()).to_string().contains("artifact error: y"));
         assert!(Error::Sweep("z".into()).to_string().starts_with("sweep error: z"));
         assert!(Error::Check("w".into()).to_string().starts_with("check error: w"));
+        assert!(Error::ShardFailed(3, "panicked".into())
+            .to_string()
+            .starts_with("shard 3 failed: panicked"));
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().starts_with("io error:"));
     }

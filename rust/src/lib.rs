@@ -43,7 +43,13 @@
 //!   telemetry (`vstpu calibrate`, `BENCH_calibrate.json`),
 //! * [`serve`] — the sharded multi-worker engine: N coordinator threads
 //!   behind a deterministic router with dynamic batching, bounded-queue
-//!   backpressure and the `bench-serve` perf harness,
+//!   backpressure, panic-isolated workers and the `bench-serve` perf
+//!   harness,
+//! * [`recover`] — timing-error recovery (S22): the Replay / TE-Drop
+//!   policies that tolerate Razor flags instead of backing the rails
+//!   off, the rail+policy co-optimizer and the `bench-recovery`
+//!   energy-vs-accuracy harness (`vstpu bench-recovery`,
+//!   `BENCH_recovery.json`),
 //! * [`sweep`] — the parallel scenario sweep: the full clustering x tech
 //!   x array-size x workload-shift grid on a self-scheduling job pool
 //!   with shared per-`(tech, size)` timing analysis and structured
@@ -74,7 +80,7 @@
 //! ```
 //!
 //! ARCHITECTURE.md holds the top-down tour (module map, request
-//! lifecycle, data flow); docs/BENCH_SCHEMAS.md documents the five
+//! lifecycle, data flow); docs/BENCH_SCHEMAS.md documents the six
 //! machine-readable bench artifacts.
 
 #![warn(missing_docs)]
@@ -98,6 +104,7 @@ pub mod metrics;
 pub mod netlist;
 pub mod power;
 pub mod razor;
+pub mod recover;
 pub mod report;
 pub mod runtime;
 pub mod serve;

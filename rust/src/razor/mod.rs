@@ -233,6 +233,30 @@ mod tests {
     }
 
     #[test]
+    fn classify_boundaries_are_inclusive() {
+        // Pin the boundary semantics the recovery subsystem (S22) leans
+        // on: both window edges are *inclusive* on the safe side. A MAC
+        // landing exactly on the budget still meets the main edge (Ok);
+        // one landing exactly on the shadow edge is still caught by the
+        // shadow register (Flagged, recoverable) — only strictly beyond
+        // it is corruption silent.
+        let r = RazorConfig::default();
+        let t = 10.0;
+        let budget = t - crate::timing::CLOCK_UNCERTAINTY_NS;
+        assert_eq!(r.classify(budget, t), MacOutcome::Ok);
+        assert_eq!(r.classify(budget + r.t_del_ns, t), MacOutcome::Flagged);
+        assert_eq!(
+            r.classify(budget + r.t_del_ns + 1e-12, t),
+            MacOutcome::Silent
+        );
+        // d_eff exactly at the *period* exceeds the uncertainty-derated
+        // budget by CLOCK_UNCERTAINTY_NS = 0.29 ns, which sits inside
+        // the 0.60 ns shadow window: flagged, not silent.
+        assert!(crate::timing::CLOCK_UNCERTAINTY_NS < r.t_del_ns);
+        assert_eq!(r.classify(t, t), MacOutcome::Flagged);
+    }
+
+    #[test]
     fn nominal_voltage_is_clean() {
         let (nl, tech) = setup();
         let razor = RazorConfig::default();

@@ -1,0 +1,669 @@
+//! S22 — Timing-error *recovery*: tolerate Razor flags instead of
+//! backing off (TE-Drop / Replay), and co-optimize rail + policy.
+//!
+//! Every earlier subsystem treats a Razor flag as a signal to retreat:
+//! Algorithm 2 steps the rail up, the closed-loop [`crate::calibrate`]
+//! controller recovers and locks at the flag-rate frontier. ThUnderVolt
+//! (see PAPERS.md) showed the larger energy win comes from *tolerating*
+//! the error instead — catch the flagged MAC's partial sum and either
+//! re-execute it (Replay) or zero it (TE-Drop) — and Salami et al.'s
+//! reduced-voltage FPGA study confirms the graceful-degradation region
+//! below the flag frontier is where the remaining margin lives.
+//!
+//! ```text
+//!   Razor flag --+-- RecoveryPolicy::None   -> flagged value is wrong
+//!                |                             (full accuracy loss)
+//!                +-- RecoveryPolicy::Replay -> re-execute the MAC in a
+//!                |                             stolen cycle: zero loss,
+//!                |                             +flagged_frac throughput
+//!                +-- RecoveryPolicy::TeDrop -> zero the partial sum:
+//!                                              zero latency cost,
+//!                                              DROP_LOSS_WEIGHT * frac
+//!                                              accuracy loss
+//! ```
+//!
+//! With recovery enabled the calibrator may descend *below* the
+//! flag-rate floor: the stopping condition becomes a configurable
+//! accuracy-loss budget (plus the hard silent-corruption wall — beyond
+//! the shadow window nothing can recover). [`co_optimize_rails`] is the
+//! analytic (sweep-side) form of the same trade; the live form is the
+//! recovery branch of [`crate::calibrate::Calibrator::end_epoch`], fed
+//! per-batch by [`Calibrator::observe_recovery`] from the coordinator.
+//!
+//! [`run_recovery_bench`] runs the closed-loop harness once per policy
+//! and folds the results into the energy-vs-accuracy frontier artifact
+//! `BENCH_recovery.json` (schema [`RECOVERY_SCHEMA`], written by
+//! `report::bench_recovery_json`, gated by the CI `recovery-smoke` job).
+//! The default technology is **academic-45nm**: at its delay-vs-voltage
+//! sensitivity one calibration step stretches delay by ~5.7% while the
+//! Razor shadow window is ~6.2% of the budget, so a rail one step below
+//! the flag frontier is provably still inside the recoverable window —
+//! TE-Drop descends at least one full step below the `None` floor on
+//! every critical partition, for any grid offset.
+//!
+//! [`Calibrator::observe_recovery`]: crate::calibrate::Calibrator::observe_recovery
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::calibrate::{run_calibrate, CalibrateBenchConfig};
+use crate::error::{Error, Result};
+use crate::fpga::Partition;
+use crate::netlist::{MacId, SystolicNetlist};
+use crate::razor::{activity_stretch, MacOutcome, RazorConfig};
+use crate::tech::Technology;
+
+/// `BENCH_recovery.json` schema identifier (see docs/BENCH_SCHEMAS.md).
+pub const RECOVERY_SCHEMA: &str = "vstpu-bench-recovery/v1";
+
+/// Modeled accuracy loss per unit *flagged* MAC fraction under
+/// [`RecoveryPolicy::TeDrop`]. Dropping a partial sum zeroes one term of
+/// an output accumulation, not the output itself — ThUnderVolt measured
+/// well under 1% end accuracy loss with every flagged MAC dropped, so a
+/// fully-flagged array costs `0.04` of the accuracy proxy here (inside
+/// the default `0.05` budget: a partition may hold *at* full flagging).
+pub const DROP_LOSS_WEIGHT: f64 = 0.04;
+
+/// Most calibration steps the analytic co-optimizer
+/// ([`co_optimize_rails`]) descends below a partition's flag frontier.
+/// Two steps bound the search inside the shadow window on every
+/// supported technology (one step stretches delay by less than the
+/// window; two may already cross it — the silent wall stops the walk).
+pub const POLICY_DESCENT_STEPS: u32 = 2;
+
+/// Epoch-mean silent-MAC fraction above which the calibrator's recovery
+/// branch treats a partition as genuinely past the shadow window and
+/// steps up. Transient single-batch excursions (EWMA toggle jitter near
+/// the boundary) stay below it; persistent silence does not.
+pub const SILENT_TOL: f64 = 1e-3;
+
+/// What the array does with a Razor-flagged MAC result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RecoveryPolicy {
+    /// No recovery: a flagged value is simply wrong (the pre-S22
+    /// behaviour — the calibrator must avoid flags entirely).
+    None,
+    /// Re-execute the flagged MAC in a stolen cycle: zero accuracy
+    /// loss, throughput cost proportional to the flagged fraction.
+    Replay,
+    /// Zero the flagged partial sum (ThUnderVolt TE-Drop): zero latency
+    /// cost, bounded accuracy loss ([`DROP_LOSS_WEIGHT`] per unit
+    /// flagged fraction).
+    TeDrop,
+}
+
+impl RecoveryPolicy {
+    /// The full policy axis, in canonical order.
+    pub fn all() -> [Self; 3] {
+        [Self::None, Self::Replay, Self::TeDrop]
+    }
+
+    /// Stable axis-value name (also the JSON field value).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Replay => "replay",
+            Self::TeDrop => "te-drop",
+        }
+    }
+
+    /// Parse a CLI `--policy` / `--policies` element.
+    pub fn from_name(name: &str) -> Result<Self> {
+        Self::all()
+            .into_iter()
+            .find(|p| p.name() == name.trim())
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown recovery policy '{name}' (expected none|replay|te-drop)"
+                ))
+            })
+    }
+
+    /// True when flagged MACs are recovered (the calibrator may descend
+    /// below the flag-rate floor).
+    pub fn recovers(self) -> bool {
+        !matches!(self, Self::None)
+    }
+
+    /// Accuracy-loss weight per unit flagged-MAC fraction: `1.0` when
+    /// flags go unrecovered, `0.0` under Replay, [`DROP_LOSS_WEIGHT`]
+    /// under TE-Drop. (Silent MACs always weigh `1.0` — nothing past the
+    /// shadow window is recoverable.)
+    pub fn loss_weight(self) -> f64 {
+        match self {
+            Self::None => 1.0,
+            Self::Replay => 0.0,
+            Self::TeDrop => DROP_LOSS_WEIGHT,
+        }
+    }
+}
+
+/// The `[recover]` config section: policy + accuracy-loss budget.
+#[derive(Debug, Clone, Copy)]
+pub struct RecoverConfig {
+    /// What to do with flagged MACs.
+    pub policy: RecoveryPolicy,
+    /// Stopping condition of the recovery-enabled calibrator: the
+    /// modeled accuracy loss ([`weighted_loss`]) a partition may carry.
+    pub accuracy_budget: f64,
+}
+
+impl Default for RecoverConfig {
+    fn default() -> Self {
+        Self {
+            policy: RecoveryPolicy::None,
+            accuracy_budget: 0.05,
+        }
+    }
+}
+
+impl RecoverConfig {
+    /// Validate the budget (finite, inside `[0, 1)`).
+    pub fn validate(&self) -> Result<()> {
+        if !self.accuracy_budget.is_finite() || !(0.0..1.0).contains(&self.accuracy_budget) {
+            return Err(Error::Config(format!(
+                "recover accuracy_budget {} must be finite and in [0, 1)",
+                self.accuracy_budget
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Modeled accuracy loss of one partition (or a whole array) given its
+/// flagged and silent MAC fractions under `policy`: silent corruption is
+/// always a full loss, flagged MACs cost [`RecoveryPolicy::loss_weight`].
+pub fn weighted_loss(policy: RecoveryPolicy, flagged_frac: f64, silent_frac: f64) -> f64 {
+    silent_frac + policy.loss_weight() * flagged_frac
+}
+
+/// Modeled throughput overhead of `policy` at a flagged-MAC fraction:
+/// Replay steals one cycle per flagged MAC, the others are free.
+pub fn replay_overhead(policy: RecoveryPolicy, flagged_frac: f64) -> f64 {
+    match policy {
+        RecoveryPolicy::Replay => flagged_frac,
+        RecoveryPolicy::None | RecoveryPolicy::TeDrop => 0.0,
+    }
+}
+
+/// Per-MAC outcome fractions of `macs` at rail `vccint`: the fraction
+/// whose worst arc lands in the Razor shadow window (flagged) and the
+/// fraction past it (silent). `toggle_of(mac)` supplies the measured
+/// per-MAC toggle rate, as in [`crate::razor::trial_partition`]. The
+/// telemetry the recovery-enabled calibrator consumes each batch.
+pub fn outcome_fractions<F>(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    macs: &[MacId],
+    vccint: f64,
+    toggle_of: F,
+) -> (f64, f64)
+where
+    F: Fn(MacId) -> f64,
+{
+    if macs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let period = netlist.period_ns();
+    let vf = tech.delay_factor(vccint); // hoisted: one powf per partition
+    let (mut flagged, mut silent) = (0usize, 0usize);
+    for &mac in macs {
+        let stretch = vf * activity_stretch(toggle_of(mac));
+        // classify() is monotone in delay, so the MAC's worst outcome is
+        // the classification of its worst scaled arc.
+        let worst = netlist
+            .arcs_of(mac)
+            .iter()
+            .map(|a| a.total_delay_ns() * stretch)
+            .fold(0.0, f64::max);
+        match razor.classify(worst, period) {
+            MacOutcome::Silent => silent += 1,
+            MacOutcome::Flagged => flagged += 1,
+            MacOutcome::Ok => {}
+        }
+    }
+    let n = macs.len() as f64;
+    (flagged as f64 / n, silent as f64 / n)
+}
+
+/// Analytic rail + policy co-optimization (the sweep-side counterpart of
+/// the calibrator's recovery branch): walk every partition's rail down
+/// from its calibrated frontier, up to [`POLICY_DESCENT_STEPS`] steps of
+/// `step_v`, accepting a candidate only while
+///
+/// * it stays at or above `v_floor` and strictly above `tech.v_th`,
+/// * **zero** MACs classify silent at the candidate (the hard wall), and
+/// * the partition's [`weighted_loss`] stays inside the budget.
+///
+/// Returns the total steps taken across all partitions (0 when the
+/// policy does not recover). Uniform `toggle` — this is the analytic
+/// trial-run view, matching `study::partitions_with_rails`.
+#[allow(clippy::too_many_arguments)]
+pub fn co_optimize_rails(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    partitions: &mut [Partition],
+    toggle: f64,
+    recover: &RecoverConfig,
+    step_v: f64,
+    v_floor: f64,
+) -> usize {
+    if !recover.policy.recovers() || step_v <= 0.0 {
+        return 0;
+    }
+    let mut steps = 0usize;
+    for p in partitions.iter_mut() {
+        for _ in 0..POLICY_DESCENT_STEPS {
+            let cand = p.vccint - step_v;
+            if cand < v_floor - 1e-9 || cand <= tech.v_th {
+                break;
+            }
+            let (flagged, silent) =
+                outcome_fractions(netlist, tech, razor, &p.macs, cand, |_| toggle);
+            if silent > 0.0 || weighted_loss(recover.policy, flagged, silent) > recover.accuracy_budget
+            {
+                break;
+            }
+            p.vccint = cand;
+            steps += 1;
+        }
+    }
+    steps
+}
+
+// ---------------------------------------------------------------------------
+// The per-policy A/B harness behind `vstpu bench-recovery`.
+// ---------------------------------------------------------------------------
+
+/// Configuration of one [`run_recovery_bench`] run: the closed-loop
+/// calibration harness, repeated once per policy arm.
+#[derive(Debug, Clone)]
+pub struct RecoveryBenchConfig {
+    /// The underlying calibration harness (its `controller.recover`
+    /// section is overwritten per policy arm).
+    pub base: CalibrateBenchConfig,
+    /// Policy arms to compare, in order.
+    pub policies: Vec<RecoveryPolicy>,
+    /// Accuracy-loss budget applied to every recovering arm.
+    pub accuracy_budget: f64,
+}
+
+impl RecoveryBenchConfig {
+    /// Default frontier comparison on `tech`: all three policies over
+    /// the paper-default harness. Callers wanting the provable
+    /// TE-Drop-below-None gap use [`Technology::academic_45nm`] (see the
+    /// module docs for the step-vs-window argument).
+    pub fn paper_default(tech: Technology) -> Self {
+        Self {
+            base: CalibrateBenchConfig::paper_default(tech),
+            policies: RecoveryPolicy::all().to_vec(),
+            accuracy_budget: RecoverConfig::default().accuracy_budget,
+        }
+    }
+
+    /// The CI smoke configuration (`vstpu bench-recovery --quick`).
+    pub fn quick(tech: Technology) -> Self {
+        let mut cfg = Self::paper_default(tech);
+        cfg.base = CalibrateBenchConfig::quick(cfg.base.coordinator.tech.clone());
+        cfg
+    }
+}
+
+/// One policy arm's row in `BENCH_recovery.json` — a point on the
+/// energy-vs-accuracy frontier.
+#[derive(Debug, Clone)]
+pub struct PolicyRow {
+    /// Policy name (`none` / `replay` / `te-drop`).
+    pub policy: &'static str,
+    /// True when no rail moved over the arm's final two epochs.
+    pub converged: bool,
+    /// Epoch of the last rail movement across all partitions.
+    pub convergence_epoch: usize,
+    /// Mean final rail voltage across partitions — the convergence
+    /// voltage the acceptance gate compares across arms.
+    pub convergence_v_mean: f64,
+    /// Mean per-partition flag rate of the final epoch.
+    pub flag_rate_final: f64,
+    /// Modeled accuracy loss at convergence ([`weighted_loss`], MAC
+    /// fraction-weighted mean over partitions).
+    pub accuracy_loss: f64,
+    /// Modeled throughput overhead at convergence ([`replay_overhead`]).
+    pub replay_overhead: f64,
+    /// Energy per request at the converged rails, including the replay
+    /// throughput overhead (microjoules).
+    pub energy_uj_per_request: f64,
+}
+
+/// Everything one recovery bench produces —
+/// `report::bench_recovery_json` renders it as `BENCH_recovery.json`.
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    /// Schema identifier ([`RECOVERY_SCHEMA`]).
+    pub schema: &'static str,
+    /// CI smoke mode flag.
+    pub quick: bool,
+    /// Workload seed.
+    pub seed: u64,
+    /// Technology preset name.
+    pub tech: String,
+    /// Runtime backend the arms served on.
+    pub backend: String,
+    /// Shard count per arm.
+    pub shards: usize,
+    /// Requests served per arm.
+    pub requests: u64,
+    /// Accuracy-loss budget applied to the recovering arms.
+    pub accuracy_budget: f64,
+    /// One row per policy arm, configuration order.
+    pub policies: Vec<PolicyRow>,
+    /// Wall time (measurement; excluded from the determinism contract).
+    pub wall_s: f64,
+}
+
+/// Run the closed-loop calibration harness once per policy arm and fold
+/// the outcomes into the energy-vs-accuracy frontier report. Every arm
+/// shares the workload seed, shard slicing and epoch grid, so the rows
+/// differ only by policy — and the whole artifact is byte-deterministic
+/// modulo its wall-time line.
+pub fn run_recovery_bench(artifacts_dir: &Path, cfg: RecoveryBenchConfig) -> Result<RecoveryReport> {
+    if cfg.policies.is_empty() {
+        return Err(Error::Config("recovery bench needs at least one policy".into()));
+    }
+    RecoverConfig {
+        policy: RecoveryPolicy::None,
+        accuracy_budget: cfg.accuracy_budget,
+    }
+    .validate()?;
+    let t0 = Instant::now();
+    let mut rows = Vec::with_capacity(cfg.policies.len());
+    let mut backend = String::from("reference");
+    for &policy in &cfg.policies {
+        let mut bcfg = cfg.base.clone();
+        bcfg.controller.recover = RecoverConfig {
+            policy,
+            accuracy_budget: cfg.accuracy_budget,
+        };
+        let rep = run_calibrate(artifacts_dir, bcfg)?;
+        // Fail closed: a non-finite or negative loss rendered by json_f64
+        // would read as a perfect 0.000000 to the lower-is-better gate.
+        if !rep.accuracy_loss_final.is_finite()
+            || rep.accuracy_loss_final < 0.0
+            || !rep.replay_overhead_final.is_finite()
+            || rep.replay_overhead_final < 0.0
+        {
+            return Err(Error::Serve(format!(
+                "recovery arm '{}' produced corrupt accuracy telemetry \
+                 (loss {}, overhead {})",
+                policy.name(),
+                rep.accuracy_loss_final,
+                rep.replay_overhead_final
+            )));
+        }
+        let n = rep.partitions.len().max(1) as f64;
+        let convergence_v_mean = rep
+            .partitions
+            .iter()
+            .map(|p| p.voltages.last().copied().unwrap_or(f64::NAN))
+            .sum::<f64>()
+            / n;
+        if !convergence_v_mean.is_finite() {
+            return Err(Error::Serve(format!(
+                "recovery arm '{}' produced a non-finite convergence voltage",
+                policy.name()
+            )));
+        }
+        backend = rep.backend.clone();
+        rows.push(PolicyRow {
+            policy: policy.name(),
+            converged: rep.converged,
+            convergence_epoch: rep.convergence_epoch,
+            convergence_v_mean,
+            flag_rate_final: rep.flag_rate_final,
+            accuracy_loss: rep.accuracy_loss_final,
+            replay_overhead: rep.replay_overhead_final,
+            energy_uj_per_request: rep.energy_uj_after * (1.0 + rep.replay_overhead_final),
+        });
+    }
+    Ok(RecoveryReport {
+        schema: RECOVERY_SCHEMA,
+        quick: cfg.base.quick,
+        seed: cfg.base.seed,
+        tech: cfg.base.coordinator.tech.name.clone(),
+        backend,
+        shards: cfg.base.shards,
+        requests: cfg.base.requests as u64,
+        accuracy_budget: cfg.accuracy_budget,
+        policies: rows,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Render the recovery bench as aligned text (the CLI's human output).
+pub fn render(rep: &RecoveryReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "timing-error recovery frontier on {} ({} shards, {} requests/arm, budget {:.3}):",
+        rep.tech, rep.shards, rep.requests, rep.accuracy_budget
+    );
+    let _ = writeln!(
+        s,
+        "{:>8} {:>10} {:>12} {:>10} {:>10} {:>10} {:>12}",
+        "policy", "converged", "conv. epoch", "mean V", "loss", "overhead", "uJ/request"
+    );
+    for row in &rep.policies {
+        let _ = writeln!(
+            s,
+            "{:>8} {:>10} {:>12} {:>10.4} {:>10.4} {:>10.4} {:>12.4}",
+            row.policy,
+            row.converged,
+            row.convergence_epoch,
+            row.convergence_v_mean,
+            row.accuracy_loss,
+            row.replay_overhead,
+            row.energy_uj_per_request
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::razor::DEFAULT_TOGGLE;
+    use crate::study;
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in RecoveryPolicy::all() {
+            assert_eq!(RecoveryPolicy::from_name(p.name()).unwrap(), p);
+        }
+        assert!(RecoveryPolicy::from_name("triple-vote").is_err());
+    }
+
+    #[test]
+    fn loss_weights_order_the_policies() {
+        // Replay is lossless, TE-Drop bounded, no recovery a full loss.
+        assert_eq!(RecoveryPolicy::Replay.loss_weight(), 0.0);
+        assert!(RecoveryPolicy::TeDrop.loss_weight() < RecoveryPolicy::None.loss_weight());
+        assert!(RecoveryPolicy::TeDrop.loss_weight() > 0.0);
+        assert!(!RecoveryPolicy::None.recovers());
+        assert!(RecoveryPolicy::Replay.recovers());
+        assert!(RecoveryPolicy::TeDrop.recovers());
+    }
+
+    #[test]
+    fn weighted_loss_and_overhead_math() {
+        // Silent MACs always cost in full; flagged MACs cost the weight.
+        let l = weighted_loss(RecoveryPolicy::TeDrop, 0.5, 0.01);
+        assert!((l - (0.01 + DROP_LOSS_WEIGHT * 0.5)).abs() < 1e-15);
+        assert_eq!(weighted_loss(RecoveryPolicy::Replay, 1.0, 0.0), 0.0);
+        assert_eq!(weighted_loss(RecoveryPolicy::None, 0.3, 0.0), 0.3);
+        assert_eq!(replay_overhead(RecoveryPolicy::Replay, 0.25), 0.25);
+        assert_eq!(replay_overhead(RecoveryPolicy::TeDrop, 0.25), 0.0);
+        assert_eq!(replay_overhead(RecoveryPolicy::None, 0.25), 0.0);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_budgets() {
+        let mut cfg = RecoverConfig::default();
+        assert!(cfg.validate().is_ok());
+        cfg.accuracy_budget = 1.0;
+        assert!(cfg.validate().is_err());
+        cfg.accuracy_budget = -0.1;
+        assert!(cfg.validate().is_err());
+        cfg.accuracy_budget = f64::NAN;
+        assert!(cfg.validate().is_err());
+    }
+
+    /// The calibrated-rails recipe the sweep uses, on the tech whose
+    /// step-vs-window geometry guarantees a recoverable band below the
+    /// flag frontier (see the module docs).
+    fn calibrated_45nm() -> (std::sync::Arc<crate::hotcache::StaEntry>, Vec<Partition>, f64) {
+        let tech = Technology::academic_45nm();
+        let sta = crate::hotcache::sta(&tech, 16, 100.0, 2021);
+        let razor = RazorConfig::default();
+        let clustering = study::equal_quantile_clustering(&sta.slacks, 4);
+        let parts = study::calibrated_partitions(
+            &sta.netlist,
+            &tech,
+            &razor,
+            &clustering,
+            &sta.slacks,
+            400,
+            DEFAULT_TOGGLE,
+        )
+        .unwrap();
+        let (_, floor) = study::rail_bounds(&tech);
+        (sta, parts, floor)
+    }
+
+    #[test]
+    fn outcome_fractions_are_clean_at_nominal_and_flag_below_frontier() {
+        let (sta, parts, _) = calibrated_45nm();
+        let razor = RazorConfig::default();
+        for p in &parts {
+            let (f, s) = outcome_fractions(&sta.netlist, &sta.tech, &razor, &p.macs, sta.tech.v_nom, |_| {
+                DEFAULT_TOGGLE
+            });
+            assert_eq!((f, s), (0.0, 0.0), "partition {} dirty at v_nom", p.id);
+        }
+        // One step below the calibrated (flag-free) rail at least one
+        // partition flags, and nothing is silent yet — the recoverable
+        // band the whole subsystem rides on.
+        let mut any_flagged = false;
+        for p in &parts {
+            let (f, s) = outcome_fractions(
+                &sta.netlist,
+                &sta.tech,
+                &razor,
+                &p.macs,
+                p.vccint - 0.0125,
+                |_| DEFAULT_TOGGLE,
+            );
+            assert_eq!(s, 0.0, "silent one step below the frontier on 45nm");
+            any_flagged = any_flagged || f > 0.0;
+        }
+        assert!(any_flagged, "no partition flags one step below its frontier");
+    }
+
+    #[test]
+    fn co_optimize_descends_below_the_flag_floor_within_budget() {
+        let (sta, mut parts, floor) = calibrated_45nm();
+        let razor = RazorConfig::default();
+        let before: Vec<f64> = parts.iter().map(|p| p.vccint).collect();
+        let recover = RecoverConfig {
+            policy: RecoveryPolicy::TeDrop,
+            accuracy_budget: 0.05,
+        };
+        let steps = co_optimize_rails(
+            &sta.netlist,
+            &sta.tech,
+            &razor,
+            &mut parts,
+            DEFAULT_TOGGLE,
+            &recover,
+            0.0125,
+            floor,
+        );
+        assert!(steps >= 1, "TE-Drop must descend on academic-45nm");
+        for (p, &b) in parts.iter().zip(&before) {
+            assert!(p.vccint <= b + 1e-15);
+            assert!(b - p.vccint <= POLICY_DESCENT_STEPS as f64 * 0.0125 + 1e-12);
+            assert!(p.vccint >= floor - 1e-9);
+            assert!(p.vccint > sta.tech.v_th);
+            let (f, s) = outcome_fractions(&sta.netlist, &sta.tech, &razor, &p.macs, p.vccint, |_| {
+                DEFAULT_TOGGLE
+            });
+            assert_eq!(s, 0.0, "co-optimized rail went silent");
+            assert!(
+                weighted_loss(recover.policy, f, s) <= recover.accuracy_budget + 1e-12,
+                "loss escaped the budget"
+            );
+        }
+    }
+
+    #[test]
+    fn co_optimize_is_a_no_op_without_recovery() {
+        let (sta, mut parts, floor) = calibrated_45nm();
+        let razor = RazorConfig::default();
+        let before: Vec<f64> = parts.iter().map(|p| p.vccint).collect();
+        let steps = co_optimize_rails(
+            &sta.netlist,
+            &sta.tech,
+            &razor,
+            &mut parts,
+            DEFAULT_TOGGLE,
+            &RecoverConfig::default(), // policy None
+            0.0125,
+            floor,
+        );
+        assert_eq!(steps, 0);
+        for (p, &b) in parts.iter().zip(&before) {
+            assert_eq!(p.vccint, b, "None policy moved a rail");
+        }
+    }
+
+    #[test]
+    fn replay_descends_at_least_as_far_as_te_drop() {
+        let (sta, parts, floor) = calibrated_45nm();
+        let razor = RazorConfig::default();
+        let mut drop_parts = parts.clone();
+        let mut replay_parts = parts;
+        let budget = 0.05;
+        co_optimize_rails(
+            &sta.netlist,
+            &sta.tech,
+            &razor,
+            &mut drop_parts,
+            DEFAULT_TOGGLE,
+            &RecoverConfig {
+                policy: RecoveryPolicy::TeDrop,
+                accuracy_budget: budget,
+            },
+            0.0125,
+            floor,
+        );
+        co_optimize_rails(
+            &sta.netlist,
+            &sta.tech,
+            &razor,
+            &mut replay_parts,
+            DEFAULT_TOGGLE,
+            &RecoverConfig {
+                policy: RecoveryPolicy::Replay,
+                accuracy_budget: budget,
+            },
+            0.0125,
+            floor,
+        );
+        // Replay's loss term is zero, so its feasible set contains
+        // TE-Drop's: rail by rail it ends at or below TE-Drop.
+        for (r, d) in replay_parts.iter().zip(&drop_parts) {
+            assert!(r.vccint <= d.vccint + 1e-15);
+        }
+    }
+}

@@ -9,6 +9,7 @@ use crate::calibrate::CalibrateReport;
 use crate::check::{CheckReport, Rule};
 use crate::cluster::{Clustering, NOISE};
 use crate::hotcache::bench::HotpathReport;
+use crate::recover::RecoveryReport;
 use crate::serve::BenchReport;
 use crate::sweep::SweepReport;
 use crate::timing::{PathRecord, TimingReport};
@@ -316,12 +317,14 @@ pub fn bench_sweep_json(rep: &SweepReport) -> String {
             let sc = &r.scenario;
             let head = format!(
                 "    {{\n      \"algo\": \"{}\", \"tech\": \"{}\", \"array_size\": {}, \
-                 \"shift_toggle\": {}, \"rail_mode\": \"{}\", \"seed\": {},",
+                 \"shift_toggle\": {}, \"rail_mode\": \"{}\", \"policy\": \"{}\", \
+                 \"seed\": {},",
                 sc.algo.name(),
                 sc.tech,
                 sc.array_size,
                 json_f64(sc.shift_toggle),
                 sc.rail_mode.name(),
+                sc.policy.name(),
                 sc.seed
             );
             match &r.outcome {
@@ -331,6 +334,7 @@ pub fn bench_sweep_json(rep: &SweepReport) -> String {
                      \"rails\": {},\n      \"frontiers\": {},\n      \
                      \"power_mw\": {}, \"baseline_mw\": {}, \"reduction_pct\": {}, \
                      \"silent_mac_fraction\": {},\n      \
+                     \"accuracy_loss\": {}, \"replay_overhead\": {},\n      \
                      \"wall_ms\": {}\n    }}",
                     res.k,
                     res.noise_reassigned,
@@ -340,6 +344,8 @@ pub fn bench_sweep_json(rep: &SweepReport) -> String {
                     json_f64(res.baseline_mw),
                     json_f64(res.reduction_pct),
                     json_f64(res.silent_mac_fraction),
+                    json_f64(res.accuracy_loss),
+                    json_f64(res.replay_overhead),
                     json_f64(res.wall_ms)
                 ),
                 Err(e) => format!(
@@ -359,17 +365,20 @@ pub fn bench_sweep_json(rep: &SweepReport) -> String {
         .map(|w| {
             format!(
                 "    {{\"tech\": \"{}\", \"array_size\": {}, \"shift_toggle\": {}, \
-                 \"rail_mode\": \"{}\", \
+                 \"rail_mode\": \"{}\", \"policy\": \"{}\", \
                  \"best_power_algo\": \"{}\", \"best_power_mw\": {}, \
-                 \"best_accuracy_algo\": \"{}\", \"best_silent_fraction\": {}}}",
+                 \"best_accuracy_algo\": \"{}\", \"best_silent_fraction\": {}, \
+                 \"best_accuracy_loss\": {}}}",
                 w.tech,
                 w.array_size,
                 json_f64(w.shift_toggle),
                 w.rail_mode,
+                w.policy,
                 w.best_power_algo,
                 json_f64(w.best_power_mw),
                 w.best_accuracy_algo,
-                json_f64(w.best_silent_fraction)
+                json_f64(w.best_silent_fraction),
+                json_f64(w.best_accuracy_loss)
             )
         })
         .collect();
@@ -411,6 +420,22 @@ pub fn bench_calibrate_json(rep: &CalibrateReport) -> String {
         "  \"flag_rate_final\": {},",
         json_f64(rep.flag_rate_final)
     );
+    let _ = writeln!(s, "  \"recovery_policy\": \"{}\",", rep.recovery_policy);
+    let _ = writeln!(
+        s,
+        "  \"accuracy_budget\": {},",
+        json_f64(rep.accuracy_budget)
+    );
+    let _ = writeln!(
+        s,
+        "  \"accuracy_loss_final\": {},",
+        json_f64(rep.accuracy_loss_final)
+    );
+    let _ = writeln!(
+        s,
+        "  \"replay_overhead_final\": {},",
+        json_f64(rep.replay_overhead_final)
+    );
     let _ = writeln!(s, "  \"energy_per_request_uj\": {{");
     let _ = writeln!(s, "    \"before\": {},", json_f64(rep.energy_uj_before));
     let _ = writeln!(s, "    \"after\": {}", json_f64(rep.energy_uj_after));
@@ -429,6 +454,60 @@ pub fn bench_calibrate_json(rep: &CalibrateReport) -> String {
                 p.converged_epoch,
                 json_f64_list(&p.voltages),
                 json_f64_list(&p.flag_rates)
+            )
+        })
+        .collect();
+    let _ = writeln!(s, "{}", cells.join(",\n"));
+    let _ = writeln!(s, "  ]");
+    let _ = writeln!(s, "}}");
+    s
+}
+
+/// Render `BENCH_recovery.json` — the machine-readable artifact the CI
+/// `recovery-smoke` job uploads (schema `vstpu-bench-recovery/v1`; see
+/// docs/BENCH_SCHEMAS.md). One row per recovery-policy arm of the same
+/// closed-loop calibration run: the energy-vs-accuracy frontier the
+/// rail+policy co-optimization trades along. Everything except the
+/// `wall_s` line is byte-deterministic across runs at a fixed seed;
+/// `wall_s` sits alone on its own line so consumers (and the
+/// determinism test) can filter it out.
+pub fn bench_recovery_json(rep: &RecoveryReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"schema\": \"{}\",", rep.schema);
+    let _ = writeln!(s, "  \"quick\": {},", rep.quick);
+    let _ = writeln!(s, "  \"seed\": {},", rep.seed);
+    let _ = writeln!(s, "  \"tech\": \"{}\",", rep.tech);
+    let _ = writeln!(s, "  \"backend\": \"{}\",", rep.backend);
+    let _ = writeln!(s, "  \"shards\": {},", rep.shards);
+    let _ = writeln!(s, "  \"requests\": {},", rep.requests);
+    let _ = writeln!(
+        s,
+        "  \"accuracy_budget\": {},",
+        json_f64(rep.accuracy_budget)
+    );
+    let _ = writeln!(s, "  \"wall_s\": {},", json_f64(rep.wall_s));
+    let _ = writeln!(s, "  \"policies\": [");
+    let cells: Vec<String> = rep
+        .policies
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\n      \"policy\": \"{}\",\n      \
+                 \"converged\": {}, \"convergence_epoch\": {},\n      \
+                 \"convergence_v_mean\": {},\n      \
+                 \"flag_rate_final\": {},\n      \
+                 \"accuracy_loss\": {},\n      \
+                 \"replay_overhead\": {},\n      \
+                 \"energy_uj_per_request\": {}\n    }}",
+                p.policy,
+                p.converged,
+                p.convergence_epoch,
+                json_f64(p.convergence_v_mean),
+                json_f64(p.flag_rate_final),
+                json_f64(p.accuracy_loss),
+                json_f64(p.replay_overhead),
+                json_f64(p.energy_uj_per_request)
             )
         })
         .collect();
@@ -716,6 +795,7 @@ mod tests {
 
     #[test]
     fn bench_sweep_json_is_well_formed() {
+        use crate::recover::RecoveryPolicy;
         use crate::sweep::{
             RailMode, Scenario, ScenarioRecord, ScenarioResult, SweepAlgo, SweepReport,
             WinnerRow, SWEEP_SCHEMA,
@@ -734,6 +814,7 @@ mod tests {
                         array_size: 16,
                         shift_toggle: 0.45,
                         rail_mode: RailMode::Runtime,
+                        policy: RecoveryPolicy::TeDrop,
                         seed: 99,
                     },
                     outcome: Ok(ScenarioResult {
@@ -745,6 +826,8 @@ mod tests {
                         baseline_mw: 270.0,
                         reduction_pct: 25.9,
                         silent_mac_fraction: 0.01,
+                        accuracy_loss: 0.014,
+                        replay_overhead: 0.0,
                         wall_ms: 12.0,
                     }),
                 },
@@ -756,6 +839,7 @@ mod tests {
                         array_size: 16,
                         shift_toggle: 0.45,
                         rail_mode: RailMode::Static,
+                        policy: RecoveryPolicy::None,
                         seed: 100,
                     },
                     // Quotes and newlines in the message must be escaped.
@@ -767,10 +851,12 @@ mod tests {
                 array_size: 16,
                 shift_toggle: 0.45,
                 rail_mode: "runtime",
+                policy: "te-drop",
                 best_power_algo: "dbscan".into(),
                 best_power_mw: 200.0,
                 best_accuracy_algo: "dbscan".into(),
                 best_silent_fraction: 0.01,
+                best_accuracy_loss: 0.014,
             }],
             ok_count: 1,
             failed_count: 1,
@@ -786,6 +872,11 @@ mod tests {
             "\"noise_reassigned\": 3",
             "\"rail_mode\": \"runtime\"",
             "\"rail_mode\": \"static\"",
+            "\"policy\": \"te-drop\"",
+            "\"policy\": \"none\"",
+            "\"accuracy_loss\": 0.014000",
+            "\"replay_overhead\": 0.000000",
+            "\"best_accuracy_loss\": 0.014000",
         ] {
             assert!(json.contains(needle), "missing {needle} in:\n{json}");
         }
@@ -822,6 +913,10 @@ mod tests {
             convergence_epoch: 2,
             converged: true,
             flag_rate_final: 0.0,
+            recovery_policy: "te-drop",
+            accuracy_budget: 0.05,
+            accuracy_loss_final: 0.004,
+            replay_overhead_final: 0.0,
             energy_uj_before: 0.12,
             energy_uj_after: f64::NAN, // must render as a valid number
             wall_s: 1.5,
@@ -840,6 +935,68 @@ mod tests {
             "\"convergence_epoch\": 2",
             "\"voltages\": [0.990000,0.970000,0.960000,0.960000]",
             "\"after\": 0.000000",
+            "\"recovery_policy\": \"te-drop\"",
+            "\"accuracy_budget\": 0.050000",
+            "\"accuracy_loss_final\": 0.004000",
+            "\"replay_overhead_final\": 0.000000",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert!(!json.contains("NaN"));
+        // The wall-time measurement sits alone on its line so the
+        // determinism contract (strip wall_s, compare the rest) holds.
+        for line in json.lines().filter(|l| l.contains("\"wall_s\"")) {
+            assert_eq!(line.matches('"').count(), 2, "wall_s shares a line: {line}");
+        }
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn bench_recovery_json_is_well_formed() {
+        use crate::recover::{PolicyRow, RecoveryReport, RECOVERY_SCHEMA};
+        let rep = RecoveryReport {
+            schema: RECOVERY_SCHEMA,
+            quick: true,
+            seed: 7,
+            tech: "academic-45nm".into(),
+            backend: "reference".into(),
+            shards: 2,
+            requests: 1024,
+            accuracy_budget: 0.05,
+            policies: vec![
+                PolicyRow {
+                    policy: "none",
+                    converged: true,
+                    convergence_epoch: 3,
+                    convergence_v_mean: 0.955,
+                    flag_rate_final: 0.0,
+                    accuracy_loss: 0.0,
+                    replay_overhead: 0.0,
+                    energy_uj_per_request: 0.12,
+                },
+                PolicyRow {
+                    policy: "te-drop",
+                    converged: true,
+                    convergence_epoch: 4,
+                    convergence_v_mean: 0.9425,
+                    flag_rate_final: 0.8,
+                    accuracy_loss: f64::NAN, // must render as a valid number
+                    replay_overhead: 0.0,
+                    energy_uj_per_request: 0.11,
+                },
+            ],
+            wall_s: 2.5,
+        };
+        let json = bench_recovery_json(&rep);
+        for needle in [
+            "\"schema\": \"vstpu-bench-recovery/v1\"",
+            "\"accuracy_budget\": 0.050000",
+            "\"policy\": \"none\"",
+            "\"policy\": \"te-drop\"",
+            "\"convergence_v_mean\": 0.942500",
+            "\"accuracy_loss\": 0.000000",
+            "\"energy_uj_per_request\": 0.110000",
         ] {
             assert!(json.contains(needle), "missing {needle} in:\n{json}");
         }
@@ -944,7 +1101,7 @@ mod tests {
         let json = check_json(&rep);
         for needle in [
             "\"schema\": \"vstpu-check/v1\"",
-            "\"rules_checked\": 18",
+            "\"rules_checked\": 20",
             "\"configurations\": 2",
             "\"errors\": 1",
             "\"warnings\": 0",

@@ -89,6 +89,11 @@ pub struct EngineConfig {
     /// [`crate::calibrate::Calibrator`] to its coordinator and the raw
     /// Algorithm-2 epoch is replaced by the hysteresis controller.
     pub calibrate: Option<CalibrateConfig>,
+    /// Fault-injection knob (tests): this shard's worker panics on
+    /// startup, so the panic-isolation path — dead queue, structured
+    /// [`Error::ShardFailed`], surviving shards draining cleanly — can
+    /// be exercised end to end. `None` in real engines.
+    pub poison_shard: Option<usize>,
 }
 
 impl EngineConfig {
@@ -103,6 +108,7 @@ impl EngineConfig {
             queue_depth: 2 * coordinator.batch,
             coordinator,
             calibrate: None,
+            poison_shard: None,
         }
     }
 }
@@ -269,9 +275,24 @@ impl ShardedEngine {
             let (tx, rx) = mpsc::sync_channel::<Envelope>(cfg.queue_depth.max(1));
             let worker_cfg = cfg.clone();
             let dir = artifacts_dir.to_path_buf();
+            // Panic isolation: a worker that panics (backend bug, poisoned
+            // arithmetic, test injection) must surface as a structured
+            // `ShardFailed` carrying its shard id — never as an opaque
+            // joined-thread panic — so callers know which island's rail
+            // state is gone while the other shards drain normally.
             let handle = std::thread::Builder::new()
                 .name(format!("vstpu-shard-{shard}"))
-                .spawn(move || worker(shard, dir, worker_cfg, rx))?;
+                .spawn(move || {
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        worker(shard, dir, worker_cfg, rx)
+                    })) {
+                        Ok(result) => result,
+                        Err(p) => Err(Error::ShardFailed(
+                            shard,
+                            crate::sweep::pool::panic_message(p.as_ref()),
+                        )),
+                    }
+                })?;
             senders.push(tx);
             handles.push(handle);
         }
@@ -373,8 +394,13 @@ impl ShardedEngine {
                 Ok(Ok(report)) => reports.push(report),
                 Ok(Err(e)) => first_err = first_err.or(Some(e)),
                 Err(_) => {
-                    first_err =
-                        first_err.or_else(|| Some(Error::Serve(format!("shard {shard} panicked"))))
+                    // The catch_unwind inside the worker converts panics to
+                    // ShardFailed already; this arm only fires if the
+                    // wrapper itself dies (e.g. the panic payload's Drop
+                    // panicked). Keep the structured error either way.
+                    first_err = first_err.or_else(|| {
+                        Some(Error::ShardFailed(shard, "worker thread panicked".into()))
+                    })
                 }
             }
         }
@@ -396,6 +422,9 @@ fn worker(
     cfg: EngineConfig,
     rx: Receiver<Envelope>,
 ) -> Result<ShardReport> {
+    if cfg.poison_shard == Some(shard) {
+        panic!("shard {shard} poisoned by test configuration");
+    }
     let mut coord = Coordinator::open(&artifacts_dir, cfg.coordinator.clone())?;
     coord.set_shard(shard, cfg.shards)?;
     if let Some(cal) = &cfg.calibrate {

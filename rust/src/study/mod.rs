@@ -223,6 +223,37 @@ pub fn silent_fraction_from_worst(
     silent as f64 / netlist.mac_count() as f64
 }
 
+/// Whole-array (flagged, silent) MAC fractions at `shifted_toggle` over
+/// a precomputed worst-delay buffer — the S22 generalisation of
+/// [`silent_fraction_from_worst`]: a MAC whose worst scaled arc lands
+/// inside the Razor shadow window counts flagged (recoverable under a
+/// [`crate::recover::RecoveryPolicy`]), one landing past it counts
+/// silent. Identical arithmetic, same leased-buffer discipline.
+pub fn outcome_fractions_from_worst(
+    netlist: &SystolicNetlist,
+    tech: &Technology,
+    razor: &RazorConfig,
+    partitions: &[Partition],
+    shifted_toggle: f64,
+    worst: &[f64],
+) -> (f64, f64) {
+    let budget = netlist.period_ns() - timing::CLOCK_UNCERTAINTY_NS;
+    let (mut flagged, mut silent) = (0usize, 0usize);
+    for p in partitions {
+        let stretch = tech.delay_factor(p.vccint) * activity_stretch(shifted_toggle);
+        for &mac in &p.macs {
+            let d = worst[mac.index(netlist.size)] * stretch;
+            if d > budget + razor.t_del_ns {
+                silent += 1;
+            } else if d > budget {
+                flagged += 1;
+            }
+        }
+    }
+    let n = netlist.mac_count() as f64;
+    (flagged as f64 / n, silent as f64 / n)
+}
+
 /// Configuration of the study.
 #[derive(Debug, Clone)]
 pub struct StudyConfig {
@@ -401,6 +432,48 @@ mod tests {
         for w in rails.windows(2) {
             assert!(w[0] >= w[1] - 1e-9, "rails not ordered: {rails:?}");
         }
+    }
+
+    #[test]
+    fn outcome_fractions_silent_half_matches_silent_fraction() {
+        // The S22 split must agree with the pre-existing accuracy proxy
+        // on its silent component, and flagged MACs are by construction
+        // disjoint from silent ones.
+        let cfg = StudyConfig::paper_default(Technology::academic_22nm());
+        let netlist =
+            SystolicNetlist::generate(cfg.array_size, &cfg.tech, cfg.clock_mhz, cfg.seed);
+        let slacks = timing::synthesize(&netlist).min_slack_values(cfg.array_size);
+        let clustering = equal_quantile_clustering(&slacks, 4);
+        let parts = calibrated_partitions(
+            &netlist,
+            &cfg.tech,
+            &cfg.razor,
+            &clustering,
+            &slacks,
+            400,
+            cfg.calib_toggle,
+        )
+        .unwrap();
+        let mut worst = Vec::new();
+        worst_arc_delays_into(&netlist, &mut worst);
+        let (flagged, silent) = outcome_fractions_from_worst(
+            &netlist,
+            &cfg.tech,
+            &cfg.razor,
+            &parts,
+            cfg.shifted_toggle,
+            &worst,
+        );
+        let silent_only = silent_fraction_from_worst(
+            &netlist,
+            &cfg.tech,
+            &cfg.razor,
+            &parts,
+            cfg.shifted_toggle,
+            &worst,
+        );
+        assert!((silent - silent_only).abs() < 1e-15);
+        assert!(flagged >= 0.0 && flagged + silent <= 1.0 + 1e-15);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! ```text
 //! {hierarchical, kmeans, meanshift, dbscan, equal-quantile}
 //!   x {22nm, 45nm, 130nm} x array sizes {8..64} x workload shifts
+//!   x rail modes {static, runtime} x recovery policies {none, replay, te-drop}
 //! ```
 //!
 //! and executes it on the self-scheduling job pool in [`pool`], with:
@@ -50,9 +51,11 @@ use crate::fpga::Partition;
 use crate::hotcache;
 use crate::power::PowerModel;
 use crate::razor::{self, RazorConfig, DEFAULT_TOGGLE};
+use crate::recover::{self, RecoveryPolicy};
 use crate::study;
 use crate::tech::Technology;
 use crate::util::hash3;
+use crate::voltage::static_scheme;
 
 /// `BENCH_sweep.json` schema identifier (see README "BENCH_sweep.json").
 pub const SWEEP_SCHEMA: &str = "vstpu-bench-sweep/v1";
@@ -149,12 +152,14 @@ impl RailMode {
 /// Sweep configuration: the grid axes plus the shared flow knobs.
 ///
 /// ```
+/// use vstpu::recover::RecoveryPolicy;
 /// use vstpu::sweep::{run_sweep, RailMode, SweepAlgo, SweepConfig};
 ///
 /// let mut cfg = SweepConfig::smoke();
 /// cfg.algos = vec![SweepAlgo::EqualQuantile];
 /// cfg.techs = vec!["academic-22nm".into()];
 /// cfg.rail_modes = vec![RailMode::Runtime];
+/// cfg.policies = vec![RecoveryPolicy::None];
 /// let rep = run_sweep(&cfg).unwrap();
 /// assert_eq!(rep.failed_count, 0);
 /// assert_eq!(rep.scenarios.len(), 1);
@@ -171,6 +176,13 @@ pub struct SweepConfig {
     pub shifts: Vec<f64>,
     /// Rail-preparation modes (static-only vs static+runtime).
     pub rail_modes: Vec<RailMode>,
+    /// Timing-error recovery policies (the S22 axis): how Razor flags
+    /// are tolerated once a recovering policy lets the calibrated rails
+    /// descend below the flag frontier.
+    pub policies: Vec<RecoveryPolicy>,
+    /// Accuracy-loss budget every recovering policy must honour
+    /// (enforced per scenario by the `VST020` design-rule gate).
+    pub accuracy_budget: f64,
     /// Cluster count for hierarchical / kmeans / equal-quantile.
     pub k: usize,
     /// Array clock, MHz.
@@ -208,6 +220,8 @@ impl SweepConfig {
             sizes: vec![8, 16, 32, 64],
             shifts: vec![0.25, 0.45],
             rail_modes: RailMode::all(),
+            policies: RecoveryPolicy::all().to_vec(),
+            accuracy_budget: 0.05,
             k: 4,
             clock_mhz: 100.0,
             calib_toggle: DEFAULT_TOGGLE,
@@ -221,7 +235,8 @@ impl SweepConfig {
     }
 
     /// The CI smoke grid (`vstpu sweep --smoke`): 2 algorithms x 2 techs
-    /// x 1 size x 1 shift x 2 rail modes = 8 scenarios.
+    /// x 1 size x 1 shift x 2 rail modes x 2 recovery policies = 16
+    /// scenarios.
     pub fn smoke() -> Self {
         let mut cfg = Self::full_grid();
         cfg.quick = true;
@@ -229,6 +244,7 @@ impl SweepConfig {
         cfg.techs = vec!["academic-22nm".into(), "academic-45nm".into()];
         cfg.sizes = vec![16];
         cfg.shifts = vec![0.45];
+        cfg.policies = vec![RecoveryPolicy::None, RecoveryPolicy::TeDrop];
         cfg
     }
 }
@@ -248,6 +264,9 @@ pub struct Scenario {
     pub shift_toggle: f64,
     /// Rail-preparation mode (static-only vs static+runtime).
     pub rail_mode: RailMode,
+    /// Timing-error recovery policy the scenario declares (and, on
+    /// runtime rails, co-optimizes its rails against).
+    pub policy: RecoveryPolicy,
     /// Deterministic per-scenario seed (k-means++ seeding etc.).
     pub seed: u64,
 }
@@ -272,6 +291,13 @@ pub struct ScenarioResult {
     pub reduction_pct: f64,
     /// Accuracy-risk proxy under the workload shift.
     pub silent_mac_fraction: f64,
+    /// Analytic accuracy loss of the declared recovery policy under the
+    /// workload shift ([`recover::weighted_loss`]): silent corruption
+    /// plus the policy-weighted flagged fraction.
+    pub accuracy_loss: f64,
+    /// Replay latency overhead fraction of the declared policy under
+    /// the workload shift ([`recover::replay_overhead`]).
+    pub replay_overhead: f64,
     /// Scenario wall time (measurement; excluded from determinism).
     pub wall_ms: f64,
 }
@@ -286,8 +312,12 @@ pub struct ScenarioRecord {
     pub outcome: std::result::Result<ScenarioResult, String>,
 }
 
-/// Per-`(tech, size, shift, rail-mode)` cross-algorithm comparison — the
-/// sweep's analogue of the paper's Table II/III "which scheme wins" rows.
+/// Per-`(tech, size, shift, rail-mode, policy)` cross-algorithm
+/// comparison — the sweep's analogue of the paper's Table II/III "which
+/// scheme wins" rows. With the recovery-policy axis in the key, the
+/// rows of one `(tech, size, shift, rail-mode)` cell read as an
+/// energy-vs-accuracy frontier: each policy's cheapest power against
+/// the accuracy loss it pays for it.
 #[derive(Debug, Clone)]
 pub struct WinnerRow {
     /// Technology preset name.
@@ -298,15 +328,19 @@ pub struct WinnerRow {
     pub shift_toggle: f64,
     /// Rail-preparation mode of this comparison group.
     pub rail_mode: &'static str,
+    /// Recovery policy of this comparison group.
+    pub policy: &'static str,
     /// Algorithm with the lowest calibrated power.
     pub best_power_algo: String,
     /// That algorithm's power, mW.
     pub best_power_mw: f64,
-    /// Algorithm with the lowest silent-corruption fraction (power
+    /// Algorithm with the lowest policy-weighted accuracy loss (power
     /// breaks ties).
     pub best_accuracy_algo: String,
     /// That algorithm's silent-MAC fraction.
     pub best_silent_fraction: f64,
+    /// That algorithm's policy-weighted accuracy loss.
+    pub best_accuracy_loss: f64,
 }
 
 /// Everything one sweep run produces.
@@ -353,9 +387,9 @@ fn axis_tag(s: &str) -> u64 {
     h.0
 }
 
-/// Enumerate the grid in canonical (tech, size, shift, algo, rail-mode)
-/// order — scenarios of one `(tech, size)` pair are adjacent, which
-/// keeps the shared-STA working set warm on the pool.
+/// Enumerate the grid in canonical (tech, size, shift, algo, rail-mode,
+/// policy) order — scenarios of one `(tech, size)` pair are adjacent,
+/// which keeps the shared-STA working set warm on the pool.
 pub fn enumerate(cfg: &SweepConfig) -> Vec<Scenario> {
     let mut out = Vec::new();
     for tech in &cfg.techs {
@@ -363,28 +397,36 @@ pub fn enumerate(cfg: &SweepConfig) -> Vec<Scenario> {
             for &shift in &cfg.shifts {
                 for &algo in &cfg.algos {
                     for &mode in &cfg.rail_modes {
-                        let index = out.len();
-                        out.push(Scenario {
-                            index,
-                            algo,
-                            tech: tech.clone(),
-                            array_size: size,
-                            shift_toggle: shift,
-                            rail_mode: mode,
-                            // Keyed on the grid coordinate *values* (see
-                            // `axis_tag`; full shift bits — near-identical
-                            // shifts must not collide), never on indices.
-                            // Deliberately NOT keyed on the rail mode:
-                            // both arms of a cell must cluster the array
-                            // identically (same k-means seed) so the
-                            // static-vs-runtime delta isolates the rail
-                            // stage, not clustering variance.
-                            seed: hash3(
-                                cfg.seed,
-                                axis_tag(tech).wrapping_add(axis_tag(algo.name()).rotate_left(17)),
-                                hash3(size as u64, shift.to_bits(), 0x5157),
-                            ),
-                        });
+                        for &policy in &cfg.policies {
+                            let index = out.len();
+                            out.push(Scenario {
+                                index,
+                                algo,
+                                tech: tech.clone(),
+                                array_size: size,
+                                shift_toggle: shift,
+                                rail_mode: mode,
+                                policy,
+                                // Keyed on the grid coordinate *values*
+                                // (see `axis_tag`; full shift bits —
+                                // near-identical shifts must not
+                                // collide), never on indices.
+                                // Deliberately NOT keyed on the rail
+                                // mode or the recovery policy: every
+                                // arm of a cell must cluster the array
+                                // identically (same k-means seed) so
+                                // the static-vs-runtime and
+                                // policy-vs-policy deltas isolate the
+                                // rail/recovery stages, not clustering
+                                // variance.
+                                seed: hash3(
+                                    cfg.seed,
+                                    axis_tag(tech)
+                                        .wrapping_add(axis_tag(algo.name()).rotate_left(17)),
+                                    hash3(size as u64, shift.to_bits(), 0x5157),
+                                ),
+                            });
+                        }
                     }
                 }
             }
@@ -402,8 +444,16 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
         || cfg.sizes.is_empty()
         || cfg.shifts.is_empty()
         || cfg.rail_modes.is_empty()
+        || cfg.policies.is_empty()
     {
         return Err(Error::Sweep("every grid axis needs at least one value".into()));
+    }
+    for &policy in &cfg.policies {
+        recover::RecoverConfig {
+            policy,
+            accuracy_budget: cfg.accuracy_budget,
+        }
+        .validate()?;
     }
     let mut techs: HashMap<String, Technology> = HashMap::new();
     for name in &cfg.techs {
@@ -507,10 +557,11 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
 
 /// Content key of one scenario's cluster→rails substrate: the STA key
 /// plus *every* knob the product depends on — algorithm, rail mode,
-/// per-scenario seed, workload shift, cluster count, trial cap,
-/// calibration toggle and the Razor shadow window. Deliberately NOT
-/// keyed on `cfg.rail_fault_v`: the fault is injected downstream of the
-/// cache so the cached substrate stays the clean configuration.
+/// recovery policy (and its budget: a recovering policy co-optimizes
+/// the rails), per-scenario seed, workload shift, cluster count, trial
+/// cap, calibration toggle and the Razor shadow window. Deliberately
+/// NOT keyed on `cfg.rail_fault_v`: the fault is injected downstream of
+/// the cache so the cached substrate stays the clean configuration.
 pub fn substrate_key(sc: &Scenario, st: &SharedTiming, cfg: &SweepConfig) -> u64 {
     hotcache::Digest::new("vstpu/hotcache/config/v1")
         .u64(hotcache::sta_key(
@@ -521,6 +572,8 @@ pub fn substrate_key(sc: &Scenario, st: &SharedTiming, cfg: &SweepConfig) -> u64
         ))
         .str(sc.algo.name())
         .str(sc.rail_mode.name())
+        .str(sc.policy.name())
+        .f64(cfg.accuracy_budget)
         .u64(sc.seed)
         .f64(sc.shift_toggle)
         .usize(cfg.k)
@@ -546,7 +599,7 @@ fn build_configuration(
     // (the shared recipe: commercial techs stay inside the guard band,
     // academic techs descend toward the NTC floor). The rail-mode axis
     // decides whether the runtime stage runs at all.
-    let parts = study::partitions_with_rails(
+    let mut parts = study::partitions_with_rails(
         &st.netlist,
         &st.tech,
         &cfg.razor,
@@ -556,6 +609,29 @@ fn build_configuration(
         cfg.calib_toggle,
         sc.rail_mode == RailMode::Runtime,
     )?;
+
+    // S22: a recovering policy lets calibrated rails descend below the
+    // flag frontier — flags are replayed or dropped instead of avoided
+    // — bounded by the accuracy budget (the VST020 contract) and the
+    // same per-policy step allowance the checker tolerates.
+    if sc.policy.recovers() && sc.rail_mode == RailMode::Runtime {
+        let (v_lo, v_floor) = study::rail_bounds(&st.tech);
+        let vs = static_scheme::step(st.tech.v_nom, v_lo, parts.len().max(4));
+        let rc = recover::RecoverConfig {
+            policy: sc.policy,
+            accuracy_budget: cfg.accuracy_budget,
+        };
+        recover::co_optimize_rails(
+            &st.netlist,
+            &st.tech,
+            &cfg.razor,
+            &mut parts,
+            cfg.calib_toggle,
+            &rc,
+            vs,
+            v_floor,
+        );
+    }
     Ok((clustering, parts, noise_reassigned))
 }
 
@@ -656,7 +732,8 @@ fn run_scenario(
         &check::CheckInput::new(&st.netlist, tech, &cfg.razor, parts)
             .with_clustering(&entry.clustering)
             .with_toggle(cfg.calib_toggle)
-            .with_calibrated(sc.rail_mode == RailMode::Runtime),
+            .with_calibrated(sc.rail_mode == RailMode::Runtime)
+            .with_recovery(sc.policy, cfg.accuracy_budget),
     );
     if !verdict.is_clean() {
         return Err(Error::Check(verdict.error_summary()));
@@ -665,25 +742,22 @@ fn run_scenario(
     let model = PowerModel::new(tech.clone(), cfg.clock_mhz);
     let power_mw = model.scaled_mw(parts, |_| DEFAULT_TOGGLE);
     let baseline_mw = model.baseline_mw(st.netlist.mac_count(), tech.v_nom);
-    let silent = match &faulted {
-        // Fault injection moved a rail, so the silent fraction must be
-        // recomputed on the faulted clone (scratch from the arena).
-        Some(parts) => {
-            let mut worst = arena.lease(st.netlist.mac_count());
-            study::worst_arc_delays_into(&st.netlist, &mut worst);
-            let s = study::silent_fraction_from_worst(
-                &st.netlist,
-                tech,
-                &cfg.razor,
-                parts,
-                sc.shift_toggle,
-                &worst,
-            );
-            arena.reclaim(worst);
-            s
-        }
-        None => entry.silent_mac_fraction,
-    };
+    // Razor outcomes under the workload shift on whatever rails the
+    // scenario actually measures (the faulted clone when injection is
+    // active, the cached substrate otherwise; scratch from the arena).
+    // The silent component is byte-identical to the cached
+    // `silent_mac_fraction` in the unfaulted case.
+    let mut worst = arena.lease(st.netlist.mac_count());
+    study::worst_arc_delays_into(&st.netlist, &mut worst);
+    let (flagged_frac, silent) = study::outcome_fractions_from_worst(
+        &st.netlist,
+        tech,
+        &cfg.razor,
+        parts,
+        sc.shift_toggle,
+        &worst,
+    );
+    arena.reclaim(worst);
 
     Ok(ScenarioResult {
         k: entry.clustering.k,
@@ -694,6 +768,8 @@ fn run_scenario(
         baseline_mw,
         reduction_pct: 100.0 * (baseline_mw - power_mw) / baseline_mw,
         silent_mac_fraction: silent,
+        accuracy_loss: recover::weighted_loss(sc.policy, flagged_frac, silent),
+        replay_overhead: recover::replay_overhead(sc.policy, flagged_frac),
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
     })
 }
@@ -728,11 +804,11 @@ fn cluster_scenario(sc: &Scenario, slacks: &[f64], cfg: &SweepConfig) -> Result<
     }
 }
 
-/// Fold scenario records into per-`(tech, size, shift, rail-mode)`
-/// winner rows, preserving grid order. Groups whose scenarios all
-/// failed are skipped.
+/// Fold scenario records into per-`(tech, size, shift, rail-mode,
+/// policy)` winner rows, preserving grid order. Groups whose scenarios
+/// all failed are skipped.
 fn winner_tables(records: &[ScenarioRecord]) -> Vec<WinnerRow> {
-    type Key = (String, u32, u64, &'static str);
+    type Key = (String, u32, u64, &'static str, &'static str);
     let mut order: Vec<Key> = Vec::new();
     let mut groups: HashMap<Key, Vec<&ScenarioRecord>> = HashMap::new();
     for r in records {
@@ -741,6 +817,7 @@ fn winner_tables(records: &[ScenarioRecord]) -> Vec<WinnerRow> {
             r.scenario.array_size,
             r.scenario.shift_toggle.to_bits(),
             r.scenario.rail_mode.name(),
+            r.scenario.policy.name(),
         );
         if !groups.contains_key(&key) {
             order.push(key.clone());
@@ -762,8 +839,8 @@ fn winner_tables(records: &[ScenarioRecord]) -> Vec<WinnerRow> {
         let ba = ok
             .iter()
             .min_by(|a, b| {
-                a.1.silent_mac_fraction
-                    .total_cmp(&b.1.silent_mac_fraction)
+                a.1.accuracy_loss
+                    .total_cmp(&b.1.accuracy_loss)
                     .then(a.1.power_mw.total_cmp(&b.1.power_mw))
             })
             .expect("non-empty ok set");
@@ -772,10 +849,12 @@ fn winner_tables(records: &[ScenarioRecord]) -> Vec<WinnerRow> {
             array_size: key.1,
             shift_toggle: f64::from_bits(key.2),
             rail_mode: key.3,
+            policy: key.4,
             best_power_algo: bp.0.name().to_string(),
             best_power_mw: bp.1.power_mw,
             best_accuracy_algo: ba.0.name().to_string(),
             best_silent_fraction: ba.1.silent_mac_fraction,
+            best_accuracy_loss: ba.1.accuracy_loss,
         });
     }
     rows
@@ -796,8 +875,9 @@ pub fn render(rep: &SweepReport) -> String {
     );
     let _ = writeln!(
         s,
-        "{:<15} {:<15} {:>5} {:>6} {:>8} {:>3} {:>10} {:>7} {:>8}",
-        "algo", "tech", "size", "shift", "rails", "k", "power mW", "red %", "silent %"
+        "{:<15} {:<15} {:>5} {:>6} {:>8} {:>8} {:>3} {:>10} {:>7} {:>8} {:>7}",
+        "algo", "tech", "size", "shift", "rails", "policy", "k", "power mW", "red %", "silent %",
+        "loss"
     );
     for r in &rep.scenarios {
         let sc = &r.scenario;
@@ -805,46 +885,52 @@ pub fn render(rep: &SweepReport) -> String {
             Ok(res) => {
                 let _ = writeln!(
                     s,
-                    "{:<15} {:<15} {:>5} {:>6.2} {:>8} {:>3} {:>10.1} {:>7.2} {:>8.2}",
+                    "{:<15} {:<15} {:>5} {:>6.2} {:>8} {:>8} {:>3} {:>10.1} {:>7.2} {:>8.2} {:>7.4}",
                     sc.algo.name(),
                     sc.tech,
                     sc.array_size,
                     sc.shift_toggle,
                     sc.rail_mode.name(),
+                    sc.policy.name(),
                     res.k,
                     res.power_mw,
                     res.reduction_pct,
-                    100.0 * res.silent_mac_fraction
+                    100.0 * res.silent_mac_fraction,
+                    res.accuracy_loss
                 );
             }
             Err(e) => {
                 let _ = writeln!(
                     s,
-                    "{:<15} {:<15} {:>5} {:>6.2} {:>8} FAILED: {e}",
+                    "{:<15} {:<15} {:>5} {:>6.2} {:>8} {:>8} FAILED: {e}",
                     sc.algo.name(),
                     sc.tech,
                     sc.array_size,
                     sc.shift_toggle,
-                    sc.rail_mode.name()
+                    sc.rail_mode.name(),
+                    sc.policy.name()
                 );
             }
         }
     }
     if !rep.winners.is_empty() {
-        let _ = writeln!(s, "\nwinners (per tech x size x shift x rail mode):");
+        let _ = writeln!(s, "\nwinners (per tech x size x shift x rail mode x policy):");
         for w in &rep.winners {
             let _ = writeln!(
                 s,
-                "  {} {}x{} shift {:.2} {}: power -> {} ({:.1} mW), accuracy -> {} ({:.2}% silent)",
+                "  {} {}x{} shift {:.2} {} {}: power -> {} ({:.1} mW), accuracy -> {} \
+                 ({:.2}% silent, loss {:.4})",
                 w.tech,
                 w.array_size,
                 w.array_size,
                 w.shift_toggle,
                 w.rail_mode,
+                w.policy,
                 w.best_power_algo,
                 w.best_power_mw,
                 w.best_accuracy_algo,
-                100.0 * w.best_silent_fraction
+                100.0 * w.best_silent_fraction,
+                w.best_accuracy_loss
             );
         }
     }
@@ -866,11 +952,13 @@ mod tests {
                 * cfg.sizes.len()
                 * cfg.shifts.len()
                 * cfg.rail_modes.len()
+                * cfg.policies.len()
         );
         // Indices are the enumeration order. Seeds are distinct per
         // (tech, algo, size, shift) cell, but deliberately *shared*
-        // across the rail-mode arms of one cell: both arms must
-        // cluster identically for the static-vs-runtime comparison.
+        // across the rail-mode and recovery-policy arms of one cell:
+        // every arm must cluster identically for the static-vs-runtime
+        // and policy-vs-policy comparisons.
         let mut cell_seeds = std::collections::HashMap::new();
         for (i, sc) in scenarios.iter().enumerate() {
             assert_eq!(sc.index, i);
@@ -881,7 +969,7 @@ mod tests {
                 sc.shift_toggle.to_bits(),
             );
             if let Some(&seed) = cell_seeds.get(&cell) {
-                assert_eq!(seed, sc.seed, "rail-mode arms diverged for {sc:?}");
+                assert_eq!(seed, sc.seed, "rail-mode/policy arms diverged for {sc:?}");
             } else {
                 assert!(
                     cell_seeds.values().all(|&s| s != sc.seed),
@@ -904,6 +992,7 @@ mod tests {
         swapped.sizes.reverse();
         swapped.shifts.reverse();
         swapped.rail_modes.reverse();
+        swapped.policies.reverse();
         let a = enumerate(&cfg);
         let b = enumerate(&swapped);
         assert_eq!(a.len(), b.len());
@@ -916,6 +1005,7 @@ mod tests {
                         && s.array_size == sa.array_size
                         && s.shift_toggle == sa.shift_toggle
                         && s.rail_mode == sa.rail_mode
+                        && s.policy == sa.policy
                 })
                 .unwrap();
             assert_eq!(sa.seed, sb.seed, "{sa:?} vs {sb:?}");
@@ -935,6 +1025,12 @@ mod tests {
         assert!(run_sweep(&cfg).is_err());
         let mut cfg = SweepConfig::smoke();
         cfg.rail_modes.clear();
+        assert!(run_sweep(&cfg).is_err());
+        let mut cfg = SweepConfig::smoke();
+        cfg.policies.clear();
+        assert!(run_sweep(&cfg).is_err());
+        let mut cfg = SweepConfig::smoke();
+        cfg.accuracy_budget = f64::NAN;
         assert!(run_sweep(&cfg).is_err());
     }
 

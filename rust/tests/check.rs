@@ -10,6 +10,7 @@ use vstpu::cluster::{Clustering, NOISE};
 use vstpu::fpga::Partition;
 use vstpu::netlist::SystolicNetlist;
 use vstpu::razor::{self, RazorConfig, DEFAULT_TOGGLE};
+use vstpu::recover::RecoveryPolicy;
 use vstpu::study;
 use vstpu::sweep::{run_sweep, RailMode, SweepAlgo, SweepConfig};
 use vstpu::tech::Technology;
@@ -112,8 +113,9 @@ fn fixture_configuration_is_clean() {
 #[test]
 fn smoke_report_re_derives_the_ci_grid_clean() {
     let rep = check::smoke_report(Path::new(NO_ARTIFACTS)).expect("smoke");
-    // 8 sweep smoke scenarios + 1 calibrate trajectory.
-    assert_eq!(rep.configurations, 9);
+    // 16 sweep smoke scenarios (incl. the recovery-policy axis) + 1
+    // calibrate trajectory.
+    assert_eq!(rep.configurations, 17);
     assert_eq!(rep.errors(), 0, "errors: {}", rep.error_summary());
     assert_eq!(rep.warnings(), 0, "{:?}", rep.diagnostics);
 }
@@ -208,6 +210,49 @@ fn vst004_reports_reclaimable_margin_as_info_only() {
     let sev = fired(&rep, Rule::RailMargin);
     assert_eq!(sev, vec![Severity::Info], "got {sev:?}");
     assert_eq!(rep.errors(), 0, "errors: {}", rep.error_summary());
+}
+
+#[test]
+fn vst019_vst020_judge_the_recovery_contract() {
+    let mut f = fixture(Technology::academic_22nm(), 4, true);
+    let frontier = razor::min_safe_voltage(
+        &f.netlist,
+        &f.tech,
+        &f.partitions[0].macs,
+        DEFAULT_TOGGLE,
+    );
+    f.partitions[0].vccint = frontier - 0.004;
+    // Undeclared: a calibrated sub-frontier rail violates the S22
+    // contract — something must absorb the flags it invites.
+    let rep = check_of(&f, true);
+    assert!(
+        fired(&rep, Rule::RecoveryPolicyMissing).contains(&Severity::Error),
+        "{:?}",
+        rep.diagnostics
+    );
+    // Declared TE-Drop inside its budget: the same rail is legal, and
+    // the flags downgrade to Info (they are the policy's working input).
+    let rep = check::check(
+        &CheckInput::new(&f.netlist, &f.tech, &f.razor, &f.partitions)
+            .with_clustering(&f.clustering)
+            .with_calibrated(true)
+            .with_recovery(RecoveryPolicy::TeDrop, 0.05),
+    );
+    assert!(fired(&rep, Rule::RecoveryPolicyMissing).is_empty());
+    assert!(fired(&rep, Rule::RecoveryBudget).is_empty());
+    assert_eq!(rep.errors(), 0, "errors: {}", rep.error_summary());
+    // A vanishing budget turns the identical declaration into VST020.
+    let rep = check::check(
+        &CheckInput::new(&f.netlist, &f.tech, &f.razor, &f.partitions)
+            .with_clustering(&f.clustering)
+            .with_calibrated(true)
+            .with_recovery(RecoveryPolicy::TeDrop, 0.0),
+    );
+    assert!(
+        fired(&rep, Rule::RecoveryBudget).contains(&Severity::Error),
+        "{:?}",
+        rep.diagnostics
+    );
 }
 
 // ------------------------------------------------------------------
@@ -316,6 +361,7 @@ fn sweep_gate_turns_a_misrailed_configuration_into_a_failure_record() {
     cfg.algos = vec![SweepAlgo::EqualQuantile];
     cfg.techs = vec!["academic-22nm".into()];
     cfg.rail_modes = vec![RailMode::Runtime];
+    cfg.policies = vec![RecoveryPolicy::None];
     cfg.threads = 1;
     // Drag partition 0's rail ~0.35 V down: sub-threshold, VST008.
     cfg.rail_fault_v = Some(0.35);
@@ -341,6 +387,7 @@ fn sweep_without_fault_injection_stays_green() {
     cfg.algos = vec![SweepAlgo::EqualQuantile];
     cfg.techs = vec!["academic-22nm".into()];
     cfg.rail_modes = vec![RailMode::Runtime];
+    cfg.policies = vec![RecoveryPolicy::None];
     cfg.threads = 1;
     let rep = run_sweep(&cfg).expect("sweep");
     assert_eq!(rep.failed_count, 0, "{:?}", rep.scenarios[0].outcome);

@@ -12,6 +12,7 @@ use std::path::Path;
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
 use vstpu::hotcache::{self, bench::run_hotpath_bench, bench::HotpathConfig};
+use vstpu::recover::RecoveryPolicy;
 use vstpu::report::{bench_hotpath_json, bench_sweep_json, check_json};
 use vstpu::sweep::{self, pool, run_sweep, RailMode, Scenario, SweepAlgo, SweepConfig};
 use vstpu::tech::Technology;
@@ -50,7 +51,7 @@ fn cached_sweep_is_byte_identical_to_uncached_across_the_smoke_grid() {
     hotcache::set_enabled(true);
 
     assert_eq!(uncached.failed_count, 0, "smoke grid must be all-green");
-    assert_eq!(uncached.scenarios.len(), 8);
+    assert_eq!(uncached.scenarios.len(), 16);
     let want = strip_measurements(&bench_sweep_json(&uncached));
     assert_eq!(
         want,
@@ -62,14 +63,15 @@ fn cached_sweep_is_byte_identical_to_uncached_across_the_smoke_grid() {
         strip_measurements(&bench_sweep_json(&warm)),
         "warm cached run must be byte-identical to the uncached run"
     );
-    // 2 (tech, size) pairs and 8 scenario configurations: the cold run
-    // misses each once, the warm run hits each once.
+    // 2 (tech, size) pairs and 16 scenario configurations (the recovery
+    // policy is part of the configuration key): the cold run misses each
+    // once, the warm run hits each once.
     assert_eq!(stats.sta_hits, 2, "{stats:?}");
     assert_eq!(stats.sta_misses, 2, "{stats:?}");
-    assert_eq!(stats.configuration_hits, 8, "{stats:?}");
-    assert_eq!(stats.configuration_misses, 8, "{stats:?}");
+    assert_eq!(stats.configuration_hits, 16, "{stats:?}");
+    assert_eq!(stats.configuration_misses, 16, "{stats:?}");
     assert_eq!(stats.sta_entries, 2, "{stats:?}");
-    assert_eq!(stats.configuration_entries, 8, "{stats:?}");
+    assert_eq!(stats.configuration_entries, 16, "{stats:?}");
 }
 
 #[test]
@@ -103,6 +105,7 @@ fn scenario(index: usize, shift_toggle: f64, seed: u64) -> Scenario {
         array_size: 16,
         shift_toggle,
         rail_mode: RailMode::Runtime,
+        policy: RecoveryPolicy::None,
         seed,
     }
 }
@@ -129,6 +132,13 @@ fn changed_workload_shift_is_a_cache_miss() {
         sweep::substrate_key(&sc_c, &st, &cfg),
         "the scenario index must not be part of the configuration key"
     );
+    let mut sc_d = scenario(0, 0.45, 99);
+    sc_d.policy = RecoveryPolicy::TeDrop;
+    assert_ne!(
+        sweep::substrate_key(&sc_a, &st, &cfg),
+        sweep::substrate_key(&sc_d, &st, &cfg),
+        "the recovery policy co-optimizes rails, so it must key the cache"
+    );
 
     hotcache::reset_stats();
     let mut arena = pool::Arena::new();
@@ -149,17 +159,17 @@ fn hotpath_bench_counters_and_artifact_are_deterministic() {
     let a = run_hotpath_bench(&cfg).unwrap();
     let b = run_hotpath_bench(&cfg).unwrap();
 
-    assert_eq!(a.scenarios, 8);
+    assert_eq!(a.scenarios, 16);
     assert_eq!(a.unique_sta_pairs, 2);
     assert_eq!(a.threads, 1);
     let names: Vec<&str> = a.stages.iter().map(|s| s.stage).collect();
     assert_eq!(names, ["sta", "configuration", "sweep"]);
-    // The lookup sequence is fixed by the grid: populate (2 + 8 misses),
-    // then three cached stages (2 + 8 + 2 + 8 hits).
+    // The lookup sequence is fixed by the grid: populate (2 + 16 misses),
+    // then three cached stages (2 + 16 + 2 + 16 hits).
     assert_eq!(a.cache.sta_hits, 4, "{:?}", a.cache);
     assert_eq!(a.cache.sta_misses, 2, "{:?}", a.cache);
-    assert_eq!(a.cache.configuration_hits, 16, "{:?}", a.cache);
-    assert_eq!(a.cache.configuration_misses, 8, "{:?}", a.cache);
+    assert_eq!(a.cache.configuration_hits, 32, "{:?}", a.cache);
+    assert_eq!(a.cache.configuration_misses, 16, "{:?}", a.cache);
     assert!(a.speedup.is_finite() && a.speedup > 0.0);
     assert!(hotcache::enabled(), "bench must restore the enabled flag");
 

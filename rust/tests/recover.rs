@@ -1,0 +1,176 @@
+//! Integration tests for the S22 timing-error recovery subsystem: the
+//! acceptance contract of `vstpu bench-recovery` (a recovering policy
+//! converges strictly below the no-recovery floor within its
+//! accuracy-loss budget on academic-45nm), the byte-determinism of
+//! `BENCH_recovery.json` modulo its wall-time line, and the live
+//! coordinator path (TE-Drop counts dropped MACs, never replays).
+//!
+//! Everything runs on the pure-Rust reference backend (the artifacts
+//! directory deliberately does not exist), so the suite is green on a
+//! fresh clone with no Python and no network.
+
+use std::path::Path;
+
+use vstpu::calibrate::CalibrateConfig;
+use vstpu::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest, MODEL_INPUT};
+use vstpu::recover::{
+    run_recovery_bench, RecoverConfig, RecoveryBenchConfig, RecoveryPolicy, RECOVERY_SCHEMA,
+};
+use vstpu::report::bench_recovery_json;
+use vstpu::tech::Technology;
+
+const NO_ARTIFACTS: &str = "/nonexistent-vstpu-artifacts";
+
+/// The quick CI configuration with shorter epochs so all three policy
+/// arms converge inside the test's time budget. academic-45nm is the
+/// acceptance technology: one 0.0125 V step stretches delay by less
+/// than the Razor shadow window, so a provably recoverable band exists
+/// below the flag-rate floor.
+fn fast_cfg() -> RecoveryBenchConfig {
+    let mut cfg = RecoveryBenchConfig::quick(Technology::academic_45nm());
+    cfg.base.requests = 2048;
+    cfg.base.controller.epoch_batches = 1;
+    cfg
+}
+
+/// Drop the wall-time measurement line — everything else in
+/// `BENCH_recovery.json` is part of the determinism contract.
+fn strip_wall(json: &str) -> String {
+    json.lines()
+        .filter(|l| !l.contains("\"wall_s\""))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn te_drop_converges_strictly_below_the_none_floor_within_budget() {
+    let rep = run_recovery_bench(Path::new(NO_ARTIFACTS), fast_cfg()).unwrap();
+    assert_eq!(rep.schema, RECOVERY_SCHEMA);
+    assert_eq!(rep.tech, "academic-45nm");
+    assert_eq!(rep.backend, "reference");
+    assert_eq!(rep.policies.len(), 3, "quick config compares all three arms");
+    let row = |name: &str| {
+        rep.policies
+            .iter()
+            .find(|r| r.policy == name)
+            .unwrap_or_else(|| panic!("missing policy row '{name}'"))
+    };
+    let none = row("none");
+    let drop = row("te-drop");
+    let replay = row("replay");
+    for r in &rep.policies {
+        assert!(r.converged, "'{}' arm did not converge", r.policy);
+        assert!(r.convergence_v_mean.is_finite() && r.convergence_v_mean > 0.0);
+    }
+    // The acceptance gate: tolerating flags buys voltage headroom the
+    // flag-rate floor forbids.
+    assert!(
+        drop.convergence_v_mean < none.convergence_v_mean - 1e-6,
+        "TE-Drop must converge strictly below the None floor: {} vs {}",
+        drop.convergence_v_mean,
+        none.convergence_v_mean
+    );
+    // Replay's loss term is zero, so its feasible set contains TE-Drop's.
+    assert!(
+        replay.convergence_v_mean <= drop.convergence_v_mean + 1e-9,
+        "Replay stopped above TE-Drop: {} vs {}",
+        replay.convergence_v_mean,
+        drop.convergence_v_mean
+    );
+    // Accuracy stays inside the declared budget on every recovering arm.
+    assert!(drop.accuracy_loss >= 0.0);
+    assert!(
+        drop.accuracy_loss <= rep.accuracy_budget + 1e-9,
+        "TE-Drop loss {} escaped the budget {}",
+        drop.accuracy_loss,
+        rep.accuracy_budget
+    );
+    assert!(
+        replay.accuracy_loss <= 1e-9,
+        "Replay is lossless by construction, got {}",
+        replay.accuracy_loss
+    );
+    // Overheads: only Replay steals cycles.
+    assert_eq!(none.replay_overhead, 0.0);
+    assert_eq!(drop.replay_overhead, 0.0, "TE-Drop never replays");
+    assert!(replay.replay_overhead >= 0.0);
+    // The voltage headroom buys energy per request.
+    assert!(
+        drop.energy_uj_per_request < none.energy_uj_per_request,
+        "TE-Drop energy {} must beat None {}",
+        drop.energy_uj_per_request,
+        none.energy_uj_per_request
+    );
+}
+
+#[test]
+fn recovery_artifact_is_byte_deterministic_modulo_wall_time() {
+    let a = run_recovery_bench(Path::new(NO_ARTIFACTS), fast_cfg()).unwrap();
+    let b = run_recovery_bench(Path::new(NO_ARTIFACTS), fast_cfg()).unwrap();
+    let ja = bench_recovery_json(&a);
+    let jb = bench_recovery_json(&b);
+    assert!(ja.contains("\"schema\": \"vstpu-bench-recovery/v1\""));
+    // Wall time sits alone on its line so consumers can strip it.
+    let wall_lines: Vec<&str> = ja.lines().filter(|l| l.contains("\"wall_s\"")).collect();
+    assert_eq!(wall_lines.len(), 1, "exactly one wall-time line");
+    assert_eq!(
+        wall_lines[0].matches('"').count(),
+        2,
+        "wall-time shares a line: {}",
+        wall_lines[0]
+    );
+    assert_eq!(
+        strip_wall(&ja),
+        strip_wall(&jb),
+        "same configuration must reproduce byte-identical results"
+    );
+}
+
+#[test]
+fn bench_rejects_empty_policies_and_bad_budgets() {
+    let mut cfg = fast_cfg();
+    cfg.policies.clear();
+    assert!(run_recovery_bench(Path::new(NO_ARTIFACTS), cfg).is_err());
+    let mut cfg = fast_cfg();
+    cfg.accuracy_budget = 1.5;
+    assert!(run_recovery_bench(Path::new(NO_ARTIFACTS), cfg).is_err());
+}
+
+#[test]
+fn live_te_drop_coordinator_counts_dropped_macs() {
+    // The live path: a coordinator with a TE-Drop calibrator descends
+    // below the flag floor and starts zeroing flagged partial sums —
+    // the per-partition drop counters must surface in the telemetry.
+    let ccfg = CoordinatorConfig::paper_default(Technology::academic_45nm());
+    let mut coord = Coordinator::reference(ccfg).unwrap();
+    let mut cal = CalibrateConfig {
+        epoch_batches: 1,
+        ..Default::default()
+    };
+    cal.recover = RecoverConfig {
+        policy: RecoveryPolicy::TeDrop,
+        accuracy_budget: 0.05,
+    };
+    coord.attach_calibrator(cal).unwrap();
+    for id in 0..256u64 {
+        let reqs = [InferenceRequest {
+            id,
+            input: vec![3i8; MODEL_INPUT],
+        }];
+        let resps = coord.infer_batch(&reqs).unwrap();
+        assert_eq!(resps.len(), 1);
+    }
+    let snap = coord.snapshot();
+    assert!(
+        snap.dropped_macs.iter().sum::<u64>() > 0,
+        "TE-Drop below the flag floor must count dropped MACs: {:?}",
+        snap.dropped_macs
+    );
+    assert_eq!(
+        snap.replayed_macs.iter().sum::<u64>(),
+        0,
+        "TE-Drop must never touch the replay counters"
+    );
+    // The counters are per-partition and sized to the floorplan.
+    assert_eq!(snap.dropped_macs.len(), snap.rails.len());
+}

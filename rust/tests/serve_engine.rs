@@ -153,6 +153,31 @@ fn router_rejects_malformed_requests_without_killing_shards() {
 }
 
 #[test]
+fn poisoned_shard_surfaces_as_structured_error_while_siblings_serve() {
+    // Fault injection: shard 1 panics on startup. The healthy shard 0
+    // must keep answering (even ids route there via id % shards), and
+    // shutdown must surface the death as a structured ShardFailed that
+    // names the shard — not an opaque joined-thread panic.
+    let mut cfg = engine_config();
+    cfg.shards = 2;
+    cfg.max_batch = 1;
+    cfg.poison_shard = Some(1);
+    let engine = ShardedEngine::start(Path::new(NO_ARTIFACTS), cfg).unwrap();
+    let (tx, rx) = mpsc::channel();
+    for id in [0u64, 2, 4, 6] {
+        engine.submit(req(id), tx.clone()).unwrap();
+    }
+    drop(tx);
+    assert_eq!(recv_n(&rx, 4), vec![0, 2, 4, 6]);
+    let err = engine.shutdown().expect_err("a dead shard must fail shutdown");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("shard 1 failed") && msg.contains("poisoned"),
+        "error must carry the shard id and the panic message: {msg}"
+    );
+}
+
+#[test]
 fn responses_match_the_single_coordinator_path() {
     // The sharded engine must return exactly the logits the plain
     // coordinator computes for the same inputs (sharding changes the

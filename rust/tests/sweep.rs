@@ -3,6 +3,7 @@
 //! and the cross-algorithm rails-above-frontier sanity the clustering ->
 //! partition path must uphold under every algorithm.
 
+use vstpu::recover::RecoveryPolicy;
 use vstpu::report::bench_sweep_json;
 use vstpu::sweep::{pool, run_sweep, RailMode, SweepAlgo, SweepConfig};
 
@@ -21,8 +22,8 @@ fn smoke_sweep_is_deterministic_modulo_wall_time() {
     let a = run_sweep(&cfg).unwrap();
     let b = run_sweep(&cfg).unwrap();
     assert_eq!(a.failed_count, 0, "smoke grid must be all-green");
-    // 2 algos x 2 techs x 1 size x 1 shift x 2 rail modes.
-    assert_eq!(a.scenarios.len(), 8);
+    // 2 algos x 2 techs x 1 size x 1 shift x 2 rail modes x 2 policies.
+    assert_eq!(a.scenarios.len(), 16);
     assert!(!a.winners.is_empty());
     assert_eq!(
         strip_wall(&bench_sweep_json(&a)),
@@ -79,6 +80,7 @@ fn failing_scenario_is_captured_not_fatal() {
     cfg.algos = vec![SweepAlgo::KMeans, SweepAlgo::Dbscan];
     cfg.techs = vec!["academic-22nm".into()];
     cfg.rail_modes = vec![RailMode::Runtime];
+    cfg.policies = vec![RecoveryPolicy::None];
     // k far beyond the MAC count: the kmeans scenario must fail with a
     // structured record while the dbscan scenario completes.
     cfg.k = 100_000;
@@ -107,6 +109,7 @@ fn rail_mode_axis_compares_static_vs_runtime() {
     let mut cfg = SweepConfig::smoke();
     cfg.algos = vec![SweepAlgo::EqualQuantile];
     cfg.techs = vec!["academic-22nm".into()];
+    cfg.policies = vec![RecoveryPolicy::None];
     let rep = run_sweep(&cfg).unwrap(); // 1 algo x 1 tech x both rail modes
     assert_eq!(rep.failed_count, 0);
     assert_eq!(rep.scenarios.len(), 2);
@@ -140,6 +143,51 @@ fn rail_mode_axis_compares_static_vs_runtime() {
 }
 
 #[test]
+fn recovery_policy_axis_descends_below_the_frontier_on_45nm() {
+    // academic-45nm: one guard-band step is provably non-silent inside
+    // the Razor shadow window, so the TE-Drop arm's rail+policy
+    // co-optimization must land strictly below the None arm's rails.
+    let mut cfg = SweepConfig::smoke();
+    cfg.algos = vec![SweepAlgo::EqualQuantile];
+    cfg.techs = vec!["academic-45nm".into()];
+    cfg.rail_modes = vec![RailMode::Runtime];
+    cfg.policies = vec![RecoveryPolicy::None, RecoveryPolicy::TeDrop];
+    let rep = run_sweep(&cfg).unwrap();
+    assert_eq!(rep.failed_count, 0, "both policy arms must complete");
+    assert_eq!(rep.scenarios.len(), 2);
+    let get = |p: RecoveryPolicy| {
+        rep.scenarios
+            .iter()
+            .find(|r| r.scenario.policy == p)
+            .unwrap()
+            .outcome
+            .as_ref()
+            .unwrap()
+    };
+    let none = get(RecoveryPolicy::None);
+    let drop = get(RecoveryPolicy::TeDrop);
+    let sum = |rails: &[f64]| rails.iter().sum::<f64>();
+    assert!(
+        sum(&drop.rails) < sum(&none.rails) - 1e-9,
+        "TE-Drop rails {:?} must sit below the None rails {:?}",
+        drop.rails,
+        none.rails
+    );
+    assert!(
+        drop.power_mw < none.power_mw,
+        "the voltage headroom must buy power: {} vs {} mW",
+        drop.power_mw,
+        none.power_mw
+    );
+    assert!(drop.accuracy_loss.is_finite() && drop.accuracy_loss >= 0.0);
+    assert_eq!(drop.replay_overhead, 0.0, "TE-Drop never replays");
+    // Each policy forms its own winner row — the energy-vs-accuracy
+    // frontier the report renders.
+    assert!(rep.winners.iter().any(|w| w.policy == "none"));
+    assert!(rep.winners.iter().any(|w| w.policy == "te-drop"));
+}
+
+#[test]
 fn every_algorithm_calibrates_rails_at_or_above_its_frontier() {
     let mut cfg = SweepConfig::smoke();
     cfg.algos = SweepAlgo::all();
@@ -147,6 +195,10 @@ fn every_algorithm_calibrates_rails_at_or_above_its_frontier() {
     cfg.sizes = vec![16];
     cfg.shifts = vec![0.45];
     cfg.rail_modes = vec![RailMode::Runtime];
+    // Policy None: a recovering policy deliberately descends below the
+    // frontier (see the recovery-axis test), which this invariant pins
+    // down for the policy-free path.
+    cfg.policies = vec![RecoveryPolicy::None];
     let rep = run_sweep(&cfg).unwrap();
     assert_eq!(rep.failed_count, 0, "all five algorithms must complete");
     for r in &rep.scenarios {
