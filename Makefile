@@ -8,7 +8,7 @@
 
 PYTHON ?= python3
 
-.PHONY: all build test pytest bench bench-build bench-serve bench-hotpath bench-recovery sweep calibrate check trend doc artifacts fmt lint clean
+.PHONY: all build test pytest bench bench-build bench-serve bench-hotpath bench-recovery sweep calibrate check prove trend doc artifacts fmt lint clean
 
 all: build
 
@@ -69,6 +69,14 @@ bench-recovery:
 # catalog; writes CHECK_report.json. Warnings are fatal, like CI.
 check:
 	cargo run --release -- check --smoke --deny-warnings --json
+
+# CI form of the S23 controller certifier: exhaustively certify the
+# default calibration x recovery suite; writes PROVE_report.json and
+# gates it like CI does (fail-closed on any refuted or missing
+# property).
+prove:
+	cargo run --release -- prove --json
+	python3 bench/check_regression.py PROVE_report.json bench/baseline.json
 
 # Public API docs with the CI gate's strictness (zero rustdoc warnings).
 doc:

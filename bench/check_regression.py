@@ -31,6 +31,13 @@ Dispatches on the current artifact's schema:
   te-drop arm did not converge below the none arm's voltage floor by
   at least the baseline ``recovery`` block's ``min_v_headroom`` —
   recovery that buys no voltage is a wiring bug, not a frontier.
+* ``vstpu-prove/v1`` — the S23 controller-certification gate. Fails
+  when any (tech, policy) case refutes a property, a case's property
+  set is not exactly ``PRV001``..``PRV005`` in catalog order (a shrunk
+  or reordered catalog must never read as fully certified), a refuted
+  property's counterexample did not replay through the concrete
+  calibrator, or the per-case/artifact ``certified`` flags contradict
+  the per-property verdicts.
 
 ``--trend`` is the wall-time trendline gate: for each artifact it
 derives one metric (hotpath -> ``sweep_cached_ms``, sweep ->
@@ -67,6 +74,7 @@ FILENAME_SCHEMAS = {
     "BENCH_hotpath": "vstpu-bench-hotpath/v1",
     "BENCH_recovery": "vstpu-bench-recovery/v1",
     "CHECK_report": "vstpu-check/v1",
+    "PROVE_report": "vstpu-prove/v1",
 }
 
 SERVE_REQUIRED = ["schema", "requests", "requests_per_s", "latency_us", "shard_results"]
@@ -89,6 +97,11 @@ HOTPATH_REQUIRED = [
     "wall_ms",
 ]
 RECOVERY_REQUIRED = ["schema", "requests", "accuracy_budget", "policies", "wall_s"]
+PROVE_REQUIRED = ["schema", "max_states", "certified", "cases"]
+# The full S23 property catalog, catalog order. The gate pins the exact
+# list: a case missing (or reordering) a property must fail closed —
+# "every property I checked passed" is not "every property passed".
+PROVE_PROPERTY_IDS = ["PRV001", "PRV002", "PRV003", "PRV004", "PRV005"]
 
 # schema -> (trendline metric name, field of the artifact it reads).
 TREND_METRICS = {
@@ -370,6 +383,76 @@ def check_recovery(current: dict, baseline: dict, current_path: str) -> None:
     )
 
 
+def check_prove(current: dict, current_path: str) -> None:
+    """The S23 controller-certification gate over PROVE_report.json."""
+    for key in PROVE_REQUIRED:
+        if key not in current:
+            die(f"{current_path} is missing required field '{key}'")
+    max_states = require_number(current, "max_states", current_path)
+    if max_states <= 0:
+        die(f"max_states is non-positive ({max_states!r}) — corrupted run")
+    cases = current["cases"]
+    if not isinstance(cases, list) or not cases:
+        die(f"cases is not a non-empty list: {cases!r}")
+    for i, case in enumerate(cases):
+        if not isinstance(case, dict) or not case.get("tech") or not case.get("policy"):
+            die(f"cases[{i}] is not a (tech, policy) proof case: {case!r}")
+        where = f"cases[{i}] ({case['tech']}/{case['policy']})"
+        states = require_number(case, "states", where)
+        if states <= 0:
+            die(f"{where} explored no states ({states!r}) — an empty "
+                f"exploration must never read as a certificate")
+        move_bound = require_number(case, "move_bound", where)
+        if move_bound < 0:
+            die(f"{where} carries a negative move_bound: {move_bound!r}")
+        props = case.get("properties")
+        if not isinstance(props, list):
+            die(f"{where} 'properties' is not a list: {props!r}")
+        ids = [p.get("id") for p in props if isinstance(p, dict)]
+        if ids != PROVE_PROPERTY_IDS:
+            die(
+                f"{where} property set is {ids!r}, expected exactly "
+                f"{PROVE_PROPERTY_IDS!r} — a shrunk or reordered catalog "
+                f"must never read as fully certified"
+            )
+        for p in props:
+            cex = p.get("counterexample")
+            if p.get("certified") is True:
+                if cex is not None:
+                    die(
+                        f"{where} property {p['id']} is marked certified but "
+                        f"carries a counterexample — inconsistent report"
+                    )
+                continue
+            # Refuted (or unknown — a missing verdict fails closed too).
+            if isinstance(cex, dict) and cex.get("replayed") is True:
+                die(
+                    f"{where} property {p['id']} ({p.get('name')}) is "
+                    f"refuted (counterexample replays on the concrete "
+                    f"calibrator): {p.get('detail')}"
+                )
+            die(
+                f"{where} property {p['id']} ({p.get('name')}) is refuted "
+                f"and its counterexample did not replay — the abstraction "
+                f"and the controller disagree: {p.get('detail')}"
+            )
+        if case.get("certified") is not True:
+            die(
+                f"{where} is flagged refuted while every property verdict "
+                f"is green — inconsistent report"
+            )
+    if current["certified"] is not True:
+        die(
+            "artifact-level certified flag is false while every case is "
+            "green — inconsistent report"
+        )
+    print(
+        f"bench-smoke gate: OK — {len(cases)} proof case(s) certified, "
+        f"all {len(PROVE_PROPERTY_IDS)} properties green per case "
+        f"(state cap {max_states:.0f})"
+    )
+
+
 def load_history(path: str) -> list:
     """Parse the branch trendline (one JSON object per line). A missing
     file is an empty history (first run on the branch); a corrupt line
@@ -500,6 +583,8 @@ def main(argv: list) -> None:
         check_hotpath(current, baseline, argv[1])
     elif schema == "vstpu-bench-recovery/v1":
         check_recovery(current, baseline, argv[1])
+    elif schema == "vstpu-prove/v1":
+        check_prove(current, argv[1])
     else:
         die(f"{argv[1]} has unknown schema {schema!r}")
 
@@ -569,6 +654,46 @@ def _selftest() -> None:
         "wall_s": 2.0,
     }
     GOOD_REC_BASE = {"quick": True, "recovery": {"min_v_headroom": 0.000001}}
+
+    PROVE_NAMES = [
+        "rail-clamp-bounds",
+        "no-thrash",
+        "bounded-convergence",
+        "locked-absorbing",
+        "budget-reactivity",
+    ]
+
+    def prove_props(**override):
+        """The five green property verdicts, with one overridable by id
+        (e.g. PRV002={"certified": False, ...})."""
+        props = [
+            {"id": pid, "name": name, "certified": True,
+             "detail": "certified", "counterexample": None}
+            for pid, name in zip(PROVE_PROPERTY_IDS, PROVE_NAMES)
+        ]
+        for pid, patch in override.items():
+            for p in props:
+                if p["id"] == pid:
+                    p.update(patch)
+        return props
+
+    def prove_case(**target):
+        case = {
+            "tech": "academic-22nm", "flow": "vtr", "policy": "te-drop",
+            "v_floor": 0.55, "v_ceil": 0.8, "states": 1200,
+            "transitions": 6000, "rail_levels": 21, "move_bound": 24,
+            "epoch_bound": 73, "certified": True,
+            "properties": prove_props(),
+        }
+        case.update(target)
+        return case
+
+    GOOD_PROVE = {
+        "schema": "vstpu-prove/v1",
+        "max_states": 200000,
+        "certified": True,
+        "cases": [prove_case()],
+    }
 
     def rec_with(**target):
         """GOOD_REC with the te-drop row's fields overridden (None deletes)."""
@@ -714,6 +839,50 @@ def _selftest() -> None:
                      needle="bought no voltage"))
     cases.append(run("recovery clean", GOOD_REC, GOOD_REC_BASE, False,
                      current_name="BENCH_recovery.json"))
+
+    # Prove-gate guards (S23).
+    refuted = dict(GOOD_PROVE, certified=False, cases=[prove_case(
+        certified=False,
+        properties=prove_props(PRV002={
+            "certified": False,
+            "detail": "step-down one epoch after a step-up",
+            "counterexample": {
+                "trace": ["rate-low", "rate-high", "rate-low"],
+                "replayed": True,
+            },
+        }),
+    )])
+    cases.append(run("prove refuted property", refuted, {}, True,
+                     current_name="PROVE_report.json",
+                     needle="PRV002"))
+    no_replay = dict(GOOD_PROVE, certified=False, cases=[prove_case(
+        certified=False,
+        properties=prove_props(PRV005={
+            "certified": False,
+            "detail": "breach answered with hold",
+            "counterexample": {"trace": ["budget-breach"], "replayed": False},
+        }),
+    )])
+    cases.append(run("prove counterexample did not replay", no_replay, {}, True,
+                     current_name="PROVE_report.json",
+                     needle="did not replay"))
+    # The fail-closed guard: "every property I checked passed" must not
+    # be read as "every property passed".
+    shrunk = dict(GOOD_PROVE, cases=[prove_case(
+        properties=prove_props()[:4],
+    )])
+    cases.append(run("prove shrunk property catalog", shrunk, {}, True,
+                     current_name="PROVE_report.json",
+                     needle="property set"))
+    cases.append(run("prove empty case list", dict(GOOD_PROVE, cases=[]),
+                     {}, True, current_name="PROVE_report.json",
+                     needle="non-empty"))
+    inconsistent = dict(GOOD_PROVE, certified=False)
+    cases.append(run("prove inconsistent certified flag", inconsistent, {}, True,
+                     current_name="PROVE_report.json",
+                     needle="inconsistent"))
+    cases.append(run("prove clean", GOOD_PROVE, {}, False,
+                     current_name="PROVE_report.json"))
 
     # Trendline-gate guards (their own runner: different argv shape).
     def run_trend(label, history_lines, artifact, expect_fail, needle=""):

@@ -211,7 +211,7 @@ impl CadFlow {
             p.vccint = rails
                 .iter()
                 .find(|r| r.partition == p.id)
-                .expect("rail per partition")
+                .ok_or_else(|| Error::Voltage(format!("no rail assigned to partition {}", p.id)))?
                 .vccint;
         }
         let static_rails: Vec<f64> = partitions.iter().map(|p| p.vccint).collect();

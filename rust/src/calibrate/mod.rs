@@ -133,6 +133,17 @@ impl CalibrateConfig {
         if self.epoch_batches == 0 {
             return Err(Error::Config("calibrate epoch_batches must be >= 1".into()));
         }
+        if self.cooldown_epochs == 0 {
+            // A zero cooldown silently disables the post-recovery hold
+            // (the saturating_sub path in end_epoch never holds), so a
+            // step-down may immediately follow a step-up — the PRV002
+            // thrash cycle `vstpu prove` refutes with a counterexample.
+            return Err(Error::Config(
+                "calibrate cooldown_epochs must be >= 1 (0 disables the \
+                 post-recovery hold and the controller may thrash)"
+                    .into(),
+            ));
+        }
         self.recover.validate()
     }
 }
@@ -632,6 +643,21 @@ pub fn run_calibrate(
     cfg: CalibrateBenchConfig,
 ) -> Result<CalibrateReport> {
     cfg.controller.validate()?;
+    // S23 pre-flight gate: the closed loop only runs under a controller
+    // whose product automaton certifies green over every telemetry
+    // interleaving. The proof is memoized (hotcache) on the controller
+    // config + clamp geometry, so repeat harness runs pay nothing.
+    if crate::prove::enabled() {
+        let proof = crate::prove::certify_cached(&cfg.controller, &cfg.coordinator.tech)?;
+        if !proof.certified {
+            return Err(Error::Prove(format!(
+                "calibration controller refuted by static certification \
+                 on {}: {}",
+                proof.tech,
+                proof.failure_summary()
+            )));
+        }
+    }
     if cfg.shards == 0 {
         return Err(Error::Serve("calibrate needs at least one shard".into()));
     }
@@ -1062,6 +1088,14 @@ mod tests {
             ..CalibrateConfig::default()
         };
         assert!(no_epoch.validate().is_err());
+        // cooldown_epochs = 0 silently disables the post-recovery hold
+        // (the controller may thrash — see prove's PRV002): reject it.
+        let no_cooldown = CalibrateConfig {
+            cooldown_epochs: 0,
+            ..CalibrateConfig::default()
+        };
+        let err = no_cooldown.validate().unwrap_err();
+        assert!(err.to_string().contains("cooldown_epochs"));
         assert!(CalibrateConfig::default().validate().is_ok());
     }
 

@@ -32,6 +32,10 @@
 //!   declare a recovering policy ([`crate::recover::RecoveryPolicy`]),
 //!   and a declared policy's analytic accuracy loss at the assessment
 //!   toggle must stay inside its declared budget.
+//! * **Controller certification** (`VST021`) — the S23 static proof:
+//!   a runtime-calibrated configuration must carry a green
+//!   state-space certificate of its calibration controller
+//!   ([`crate::prove`]); refuted is an error, missing a warning.
 //!
 //! Severities are calibration-aware: a Razor flag (or silent MAC) on a
 //! *runtime-calibrated* rail contradicts the calibration claim and is a
@@ -147,11 +151,15 @@ pub enum Rule {
     /// VST020 — a declared recovery policy's analytic accuracy loss
     /// exceeds its declared budget.
     RecoveryBudget,
+    /// VST021 — a calibrated configuration's controller carries no
+    /// green state-space certificate (`vstpu prove`, S23): refuted is
+    /// an error, missing is a warning.
+    ProofCertified,
 }
 
 impl Rule {
     /// Every rule, in id order.
-    pub const ALL: [Rule; 20] = [
+    pub const ALL: [Rule; 21] = [
         Rule::TimingSilent,
         Rule::TimingFlagged,
         Rule::RailOrdering,
@@ -172,9 +180,10 @@ impl Rule {
         Rule::TraceLock,
         Rule::RecoveryPolicyMissing,
         Rule::RecoveryBudget,
+        Rule::ProofCertified,
     ];
 
-    /// Stable rule id (`VST001`..`VST020`).
+    /// Stable rule id (`VST001`..`VST021`).
     pub fn id(self) -> &'static str {
         match self {
             Rule::TimingSilent => "VST001",
@@ -197,6 +206,7 @@ impl Rule {
             Rule::TraceLock => "VST018",
             Rule::RecoveryPolicyMissing => "VST019",
             Rule::RecoveryBudget => "VST020",
+            Rule::ProofCertified => "VST021",
         }
     }
 
@@ -223,6 +233,7 @@ impl Rule {
             Rule::TraceLock => "trace-lock",
             Rule::RecoveryPolicyMissing => "recovery-policy",
             Rule::RecoveryBudget => "recovery-budget",
+            Rule::ProofCertified => "proof-certified",
         }
     }
 
@@ -264,6 +275,9 @@ impl Rule {
             }
             Rule::RecoveryBudget => {
                 "a declared recovery policy's analytic accuracy loss stays inside its budget"
+            }
+            Rule::ProofCertified => {
+                "a calibrated configuration's controller carries a green state-space certificate"
             }
         }
     }
@@ -469,6 +483,12 @@ pub struct CheckInput<'a> {
     /// that predates the recovery subsystem (`VST019`/`VST020` then
     /// judge it as undeclared).
     pub recovery: Option<(RecoveryPolicy, f64)>,
+    /// Outcome of the S23 static controller certification
+    /// (`crate::prove`), when the producing pipeline ran it:
+    /// `Some(true)` = green certificate, `Some(false)` = refuted,
+    /// `None` = never certified (legacy caller or proving disabled).
+    /// Judged by `VST021` on calibrated configurations only.
+    pub proof: Option<bool>,
     /// Context tag copied onto every diagnostic.
     pub scope: String,
 }
@@ -492,6 +512,7 @@ impl<'a> CheckInput<'a> {
             trajectory: None,
             calibrated: true,
             recovery: None,
+            proof: None,
             scope: String::new(),
         }
     }
@@ -528,6 +549,14 @@ impl<'a> CheckInput<'a> {
         self
     }
 
+    /// Record the outcome of the static controller certification
+    /// (`crate::prove::certify_cached`): `true` = green, `false` =
+    /// refuted (enables `VST021` at full severity).
+    pub fn with_proof(mut self, certified: bool) -> Self {
+        self.proof = Some(certified);
+        self
+    }
+
     /// Tag every diagnostic with a context string.
     pub fn with_scope(mut self, scope: impl Into<String>) -> Self {
         self.scope = scope.into();
@@ -551,6 +580,7 @@ pub fn check(input: &CheckInput<'_>) -> CheckReport {
     if let Some(t) = input.trajectory {
         diags.extend(check_trajectory(t));
     }
+    diags.extend(check_proof(input.calibrated, input.proof));
     for d in &mut diags {
         d.scope.clone_from(&input.scope);
     }
@@ -558,6 +588,33 @@ pub fn check(input: &CheckInput<'_>) -> CheckReport {
     CheckReport {
         diagnostics: diags,
         configurations: 1,
+    }
+}
+
+/// `VST021`: a configuration that claims runtime-calibrated rails must
+/// carry a green static certificate for its calibration controller
+/// (`crate::prove`). A refuted certificate fires at full severity; a
+/// missing one (legacy caller, or proving disabled via `[prove]`)
+/// downgrades to a warning, mirroring the `VST001`/`VST002` pattern.
+/// Uncalibrated configurations have no controller to certify.
+pub fn check_proof(calibrated: bool, proof: Option<bool>) -> Vec<Diagnostic> {
+    if !calibrated {
+        return Vec::new();
+    }
+    match proof {
+        Some(true) => Vec::new(),
+        Some(false) => vec![diag(
+            Rule::ProofCertified,
+            Severity::Error,
+            Location::Global,
+            "calibration controller certificate is refuted (see `vstpu prove`)".into(),
+        )],
+        None => vec![diag(
+            Rule::ProofCertified,
+            Severity::Warn,
+            Location::Global,
+            "calibrated configuration carries no static controller certificate".into(),
+        )],
     }
 }
 
@@ -1223,7 +1280,7 @@ pub fn check_pipeline(cfg: &PipelineConfig) -> Result<CheckReport> {
         cfg.runtime_rails,
     )?;
     let mode = if cfg.runtime_rails { "runtime" } else { "static" };
-    let input = CheckInput::new(&netlist, &cfg.tech, &razor, &partitions)
+    let mut input = CheckInput::new(&netlist, &cfg.tech, &razor, &partitions)
         .with_clustering(&clustering)
         .with_toggle(cfg.toggle)
         .with_calibrated(cfg.runtime_rails)
@@ -1231,6 +1288,14 @@ pub fn check_pipeline(cfg: &PipelineConfig) -> Result<CheckReport> {
             "{}/{}x{}/{mode}",
             cfg.tech.name, cfg.array_size, cfg.array_size
         ));
+    // S23: certify the (default) calibration controller the runtime
+    // stage runs, so VST021 can judge the claim. Skipped when proving
+    // is disabled — the rule then downgrades to a warning.
+    if cfg.runtime_rails && crate::prove::enabled() {
+        let proof =
+            crate::prove::certify_cached(&crate::calibrate::CalibrateConfig::default(), &cfg.tech)?;
+        input = input.with_proof(proof.certified);
+    }
     Ok(check(&input))
 }
 
@@ -1258,7 +1323,7 @@ pub fn smoke_report(artifacts_dir: &Path) -> Result<CheckReport> {
         }
         let st: &sweep::SharedTiming = &shared[&key];
         let (clustering, partitions, _noise) = sweep::scenario_configuration(&sc, st, &cfg)?;
-        let input = CheckInput::new(&st.netlist, &st.tech, &cfg.razor, &partitions)
+        let mut input = CheckInput::new(&st.netlist, &st.tech, &cfg.razor, &partitions)
             .with_clustering(&clustering)
             .with_toggle(cfg.calib_toggle)
             .with_calibrated(sc.rail_mode == RailMode::Runtime)
@@ -1273,6 +1338,20 @@ pub fn smoke_report(artifacts_dir: &Path) -> Result<CheckReport> {
                 sc.rail_mode.name(),
                 sc.policy.name()
             ));
+        // Same controller contract the sweep's runtime scenarios run
+        // under — certified once per (policy, tech) thanks to the
+        // hotcache proof store.
+        if sc.rail_mode == RailMode::Runtime && crate::prove::enabled() {
+            let ctrl = crate::calibrate::CalibrateConfig {
+                recover: crate::recover::RecoverConfig {
+                    policy: sc.policy,
+                    accuracy_budget: cfg.accuracy_budget,
+                },
+                ..Default::default()
+            };
+            let proof = crate::prove::certify_cached(&ctrl, &st.tech)?;
+            input = input.with_proof(proof.certified);
+        }
         report.merge(check(&input));
     }
 
@@ -1338,7 +1417,7 @@ mod tests {
     #[test]
     fn rule_ids_are_stable_unique_and_sequential() {
         let ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
-        assert_eq!(ids.len(), 20);
+        assert_eq!(ids.len(), 21);
         for (i, id) in ids.iter().enumerate() {
             assert_eq!(*id, format!("VST{:03}", i + 1));
         }
@@ -1507,6 +1586,23 @@ mod tests {
             Some((RecoveryPolicy::TeDrop, 1e-9)),
         );
         assert!(fires(&d, Rule::RecoveryBudget));
+    }
+
+    #[test]
+    fn proof_rule_judges_calibrated_configurations_only() {
+        // Uncalibrated rails have no controller claim to certify.
+        assert!(check_proof(false, None).is_empty());
+        assert!(check_proof(false, Some(false)).is_empty());
+        // Green certificate: silent.
+        assert!(check_proof(true, Some(true)).is_empty());
+        // Refuted: full-severity VST021.
+        let d = check_proof(true, Some(false));
+        assert!(fires(&d, Rule::ProofCertified));
+        assert_eq!(d[0].severity, Severity::Error);
+        // Never certified: the legacy-caller warning.
+        let d = check_proof(true, None);
+        assert!(fires(&d, Rule::ProofCertified));
+        assert_eq!(d[0].severity, Severity::Warn);
     }
 
     #[test]

@@ -97,7 +97,7 @@ COMMANDS
                     --k N  --json  --out FILE (BENCH_hotpath.json)
   check           static design-rule verifier (S20): run the default
                     pipeline (netlist -> STA -> clustering -> rails) and
-                    verify the VST001..VST020 catalog — timing safety,
+                    verify the VST001..VST021 catalog — timing safety,
                     flow compliance, structure, trajectory invariants;
                     --json writes CHECK_report.json (vstpu-check/v1)
                     --tech NAME (academic-22nm)  --array-size N (16)
@@ -107,6 +107,17 @@ COMMANDS
                     --smoke (verify the sweep-smoke + calibrate-smoke
                     configurations, as re-derived deterministically)
                     --deny-warnings  --json  --out FILE (CHECK_report.json)
+  prove           state-space certifier (S23): exhaustively explore the
+                    calibrator x recovery-policy product automaton per
+                    tech and certify the PRV001..PRV005 property catalog
+                    (clamp bounds, no-thrash, bounded convergence, lock
+                    absorption, budget reactivity); violations carry
+                    minimal counterexample traces replayed through the
+                    real controller; --json writes PROVE_report.json
+                    (vstpu-prove/v1)
+                    --techs academic-22nm,artix7-28nm (the suite)
+                    --policies none,replay,te-drop  --budget F (0.05)
+                    --max-states N (200000)  --json  --out FILE
   e2e             end-to-end accuracy/power sweep (EXPERIMENTS.md E12)
                     --artifacts DIR  --requests N (512)
   tradeoff        partition-count vs power vs accuracy-risk study
@@ -183,6 +194,9 @@ pub fn run() -> Result<()> {
     // The [hotcache] section is process-wide: every subcommand that
     // reaches the STA→cluster→rails hot path sees the same settings.
     config.hotcache.apply();
+    // Likewise [prove]: the pre-flight certification gates in
+    // calibrate/sweep/check consult the same process-wide settings.
+    config.prove.apply();
 
     let Some(cmd) = args.first() else {
         print!("{HELP}");
@@ -559,6 +573,40 @@ pub fn run() -> Result<()> {
                 return Err(Error::Check(format!(
                     "{} warning diagnostic(s) rejected by --deny-warnings",
                     rep.warnings()
+                )));
+            }
+        }
+        "prove" => {
+            let o = Opts::parse(rest, &["json"])?;
+            let mut pcfg = vstpu::prove::ProveRunConfig::default();
+            if let Some(v) = o.get("techs") {
+                pcfg.techs = v
+                    .split(',')
+                    .map(|n| tech_by_name(n.trim()))
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(v) = o.get("policies") {
+                pcfg.policies = v
+                    .split(',')
+                    .map(RecoveryPolicy::from_name)
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            pcfg.controller.recover.accuracy_budget = o.num("budget", 0.05)?;
+            vstpu::prove::set_max_states(o.num("max-states", vstpu::prove::max_states())?);
+            let rep = vstpu::prove::run_prove(&pcfg)?;
+            print!("{}", vstpu::prove::render(&rep));
+            if o.flag("json") {
+                let out = PathBuf::from(o.str_or("out", "PROVE_report.json"));
+                std::fs::write(&out, report::prove_json(&rep))?;
+                println!("wrote {}", out.display());
+            }
+            // The verdict decides the exit status (the prove-smoke CI
+            // gate), after the artifact is on disk either way.
+            if !rep.certified {
+                return Err(Error::Prove(format!(
+                    "{} of {} case(s) refuted",
+                    rep.cases.iter().filter(|c| !c.certified).count(),
+                    rep.cases.len()
                 )));
             }
         }

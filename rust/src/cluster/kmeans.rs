@@ -52,11 +52,12 @@ fn seed_centres(data: &[f64], k: usize, rng: &mut SplitMix64) -> Vec<f64> {
         // Floating-point rounding can exhaust the mass before a pick;
         // fall back to the farthest remaining point (d2 > 0 by `total`).
         let pick = pick.unwrap_or_else(|| {
+            // Index 0 is unreachable here (`data` is non-empty whenever
+            // a centre is being seeded) but beats a panic path.
             d2.iter()
                 .enumerate()
                 .max_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(i, _)| i)
-                .expect("non-empty data")
+                .map_or(0, |(i, _)| i)
         });
         let c = data[pick];
         centres.push(c);

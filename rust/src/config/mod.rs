@@ -36,6 +36,8 @@ pub struct Config {
     pub check: CheckSection,
     /// `[hotcache]` — S21 hot-path memoization parameters.
     pub hotcache: HotcacheSection,
+    /// `[prove]` — S23 static controller-certification parameters.
+    pub prove: ProveSection,
 }
 
 /// `[flow]` — CAD-flow parameters.
@@ -253,6 +255,34 @@ impl HotcacheSection {
     }
 }
 
+/// `[prove]` — the S23 static state-space certifier (`vstpu prove`).
+/// The CLI applies this section process-wide before dispatching any
+/// subcommand, mirroring `[hotcache]`.
+#[derive(Debug, Clone)]
+pub struct ProveSection {
+    /// Run the pre-flight certification gates at all (`false` skips
+    /// them; `VST021` then downgrades to its missing-proof warning).
+    pub enabled: bool,
+    /// Abort exploration past this many automaton states (fail closed).
+    pub max_states: usize,
+}
+
+impl Default for ProveSection {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            max_states: crate::prove::DEFAULT_MAX_STATES,
+        }
+    }
+}
+
+impl ProveSection {
+    /// Push this section into the process-wide prover settings.
+    pub fn apply(&self) {
+        crate::prove::configure(self.enabled, self.max_states);
+    }
+}
+
 /// Strip quotes from a TOML string value.
 fn unquote(v: &str) -> String {
     v.trim().trim_matches('"').to_string()
@@ -292,7 +322,14 @@ impl Config {
                 section = name.trim().to_string();
                 if !matches!(
                     section.as_str(),
-                    "flow" | "serve" | "sweep" | "calibrate" | "recover" | "check" | "hotcache"
+                    "flow"
+                        | "serve"
+                        | "sweep"
+                        | "calibrate"
+                        | "recover"
+                        | "check"
+                        | "hotcache"
+                        | "prove"
                 ) {
                     return Err(Error::Config(format!(
                         "line {}: unknown section [{section}]",
@@ -353,6 +390,8 @@ impl Config {
             ("check", "toggle") => self.check.toggle = parse_num(key, v)?,
             ("hotcache", "enabled") => self.hotcache.enabled = parse_bool(key, v)?,
             ("hotcache", "max_entries") => self.hotcache.max_entries = parse_num(key, v)?,
+            ("prove", "enabled") => self.prove.enabled = parse_bool(key, v)?,
+            ("prove", "max_states") => self.prove.max_states = parse_num(key, v)?,
             _ => {
                 return Err(Error::Config(format!(
                     "unknown key '{key}' in section [{section}]"
@@ -409,7 +448,11 @@ impl Config {
              \n\
              [hotcache]\n\
              enabled = {}\n\
-             max_entries = {}\n",
+             max_entries = {}\n\
+             \n\
+             [prove]\n\
+             enabled = {}\n\
+             max_states = {}\n",
             self.flow.array_size,
             self.flow.tech,
             self.flow.clock_mhz,
@@ -442,6 +485,8 @@ impl Config {
             self.check.toggle,
             self.hotcache.enabled,
             self.hotcache.max_entries,
+            self.prove.enabled,
+            self.prove.max_states,
         )
     }
 
@@ -520,6 +565,8 @@ mod tests {
         assert_eq!(back.check.toggle, cfg.check.toggle);
         assert_eq!(back.hotcache.enabled, cfg.hotcache.enabled);
         assert_eq!(back.hotcache.max_entries, cfg.hotcache.max_entries);
+        assert_eq!(back.prove.enabled, cfg.prove.enabled);
+        assert_eq!(back.prove.max_states, cfg.prove.max_states);
     }
 
     #[test]
@@ -532,6 +579,18 @@ mod tests {
         assert_eq!(def.hotcache.max_entries, crate::hotcache::DEFAULT_MAX_ENTRIES);
         assert!(Config::parse("[hotcache]\nenabeld = true\n").is_err());
         assert!(Config::parse("[hotcache]\nmax_entries = plenty\n").is_err());
+    }
+
+    #[test]
+    fn prove_section_parses_and_rejects_typos() {
+        let cfg = Config::parse("[prove]\nenabled = false\nmax_states = 4096\n").unwrap();
+        assert!(!cfg.prove.enabled);
+        assert_eq!(cfg.prove.max_states, 4096);
+        let def = Config::default();
+        assert!(def.prove.enabled);
+        assert_eq!(def.prove.max_states, crate::prove::DEFAULT_MAX_STATES);
+        assert!(Config::parse("[prove]\nenbaled = true\n").is_err());
+        assert!(Config::parse("[prove]\nmax_states = heaps\n").is_err());
     }
 
     #[test]

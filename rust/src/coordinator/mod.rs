@@ -264,7 +264,7 @@ impl VoltageController {
             p.vccint = rails
                 .iter()
                 .find(|r| r.partition == p.id)
-                .expect("rail")
+                .ok_or_else(|| Error::Voltage(format!("no rail assigned to partition {}", p.id)))?
                 .vccint;
         }
         let n = partitions.len();

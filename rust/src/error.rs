@@ -42,6 +42,11 @@ pub enum Error {
     /// Design-rule check violation (`vstpu check`, S20).
     Check(String),
 
+    /// State-space certification failure (`vstpu prove`, S23): a
+    /// refuted property, an unexplorable automaton, or an abstraction
+    /// inconsistency.
+    Prove(String),
+
     /// I/O failure surfaced from the standard library.
     Io(std::io::Error),
 }
@@ -60,6 +65,7 @@ impl std::fmt::Display for Error {
             Error::ShardFailed(shard, m) => write!(f, "shard {shard} failed: {m}"),
             Error::Sweep(m) => write!(f, "sweep error: {m}"),
             Error::Check(m) => write!(f, "check error: {m}"),
+            Error::Prove(m) => write!(f, "prove error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -93,6 +99,7 @@ mod tests {
         assert!(Error::Artifact("y".into()).to_string().contains("artifact error: y"));
         assert!(Error::Sweep("z".into()).to_string().starts_with("sweep error: z"));
         assert!(Error::Check("w".into()).to_string().starts_with("check error: w"));
+        assert!(Error::Prove("p".into()).to_string().starts_with("prove error: p"));
         assert!(Error::ShardFailed(3, "panicked".into())
             .to_string()
             .starts_with("shard 3 failed: panicked"));

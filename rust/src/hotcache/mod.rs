@@ -304,6 +304,7 @@ static ENABLED: AtomicBool = AtomicBool::new(true);
 static MAX_ENTRIES: AtomicUsize = AtomicUsize::new(DEFAULT_MAX_ENTRIES);
 static STA_COUNTERS: CacheCounters = CacheCounters::new();
 static CONFIG_COUNTERS: CacheCounters = CacheCounters::new();
+static PROVE_COUNTERS: CacheCounters = CacheCounters::new();
 
 fn sta_store() -> &'static Store<StaEntry> {
     static S: OnceLock<Store<StaEntry>> = OnceLock::new();
@@ -312,6 +313,11 @@ fn sta_store() -> &'static Store<StaEntry> {
 
 fn config_store() -> &'static Store<ConfigEntry> {
     static S: OnceLock<Store<ConfigEntry>> = OnceLock::new();
+    S.get_or_init(Store::new)
+}
+
+fn prove_store() -> &'static Store<crate::prove::ProofCase> {
+    static S: OnceLock<Store<crate::prove::ProofCase>> = OnceLock::new();
     S.get_or_init(Store::new)
 }
 
@@ -348,12 +354,14 @@ pub fn configure(enabled: bool, max_entries: usize) {
 pub fn clear() {
     sta_store().clear();
     config_store().clear();
+    prove_store().clear();
 }
 
 /// Zero the hit/miss counters (entries stay cached).
 pub fn reset_stats() {
     STA_COUNTERS.reset();
     CONFIG_COUNTERS.reset();
+    PROVE_COUNTERS.reset();
 }
 
 /// Cold start: drop every entry *and* zero the counters.
@@ -448,6 +456,30 @@ pub fn configuration(
     build: impl FnOnce() -> Result<ConfigEntry>,
 ) -> Result<Arc<ConfigEntry>> {
     config_store().get_or_build(key, enabled(), &CONFIG_COUNTERS, build)
+}
+
+/// Memoized S23 proof certificate under a caller-built content key
+/// ([`crate::prove::proof_key`] — controller config + clamp geometry).
+/// Proofs are pure functions of their key, and the sweep re-certifies
+/// the same few controller × tech combinations once per scenario, so a
+/// warm store turns every gate after the first into a lookup. Refuted
+/// certificates are ordinary values and cache like green ones (the
+/// gates fail on `certified = false`); build *errors* (invalid config,
+/// state-cap overrun) recompute deterministically, never cache. The
+/// store counts hits/misses on its own counters ([`proof_stats`]),
+/// outside [`Stats`] — the two-level struct is a stable literal in
+/// bench fixtures.
+pub fn proof(
+    key: u64,
+    build: impl FnOnce() -> Result<crate::prove::ProofCase>,
+) -> Result<Arc<crate::prove::ProofCase>> {
+    prove_store().get_or_build(key, enabled(), &PROVE_COUNTERS, build)
+}
+
+/// `(hits, misses, entries)` of the proof level (see [`proof`]).
+pub fn proof_stats() -> (u64, u64, usize) {
+    let (h, m) = PROVE_COUNTERS.snapshot();
+    (h, m, prove_store().len())
 }
 
 #[cfg(test)]

@@ -62,6 +62,11 @@
 //!   STA→cluster→rails hot path shared by sweep/calibrate/serve/check,
 //!   with the `bench-hotpath` cached-vs-uncached harness
 //!   (`vstpu bench-hotpath`, `BENCH_hotpath.json`),
+//! * [`prove`] — the exhaustive state-space certifier (S23): every
+//!   calibration × recovery product automaton is explored over all
+//!   telemetry interleavings and certified against the `PRV001..`
+//!   property catalog, with replayable counterexamples on refutation
+//!   (`vstpu prove`, `PROVE_report.json`),
 //! * [`report`] — renderers regenerating every table/figure of the paper.
 //!
 //! Quick start (library):
@@ -80,13 +85,14 @@
 //! ```
 //!
 //! ARCHITECTURE.md holds the top-down tour (module map, request
-//! lifecycle, data flow); docs/BENCH_SCHEMAS.md documents the six
+//! lifecycle, data flow); docs/BENCH_SCHEMAS.md documents the seven
 //! machine-readable bench artifacts.
 
 #![warn(missing_docs)]
 // Library code must surface failures as `Error`, never panic on an
-// unwrap; tests (cfg(test)) keep unwrap for brevity.
+// unwrap or an expect; tests (cfg(test)) keep both for brevity.
 #![cfg_attr(not(test), deny(clippy::unwrap_used))]
+#![cfg_attr(not(test), deny(clippy::expect_used))]
 
 pub mod baseline;
 pub mod cadflow;
@@ -103,6 +109,7 @@ pub mod hotcache;
 pub mod metrics;
 pub mod netlist;
 pub mod power;
+pub mod prove;
 pub mod razor;
 pub mod recover;
 pub mod report;

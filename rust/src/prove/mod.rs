@@ -1,0 +1,1378 @@
+//! S23 — `prove`: exhaustive state-space certification of the
+//! calibration × recovery automaton.
+//!
+//! The closed-loop controller ([`crate::calibrate::Calibrator`]) and the
+//! S22 recovery policies are validated elsewhere by *sampling*: a
+//! handful of seeded trajectories, spot-checked by the S20 rules
+//! (VST011..VST014, VST019/VST020). Salami et al.'s reduced-voltage
+//! study shows exactly why that is not enough — undervolting failures
+//! hide in telemetry corners a few sampled traces never reach. This
+//! module certifies the controller over **all** telemetry interleavings
+//! instead: it exhaustively explores the quantized product automaton of
+//! one per-partition hysteresis state machine × one
+//! [`RecoveryPolicy`], and proves (or refutes, with a minimal concrete
+//! counterexample) a catalog of named properties.
+//!
+//! ```text
+//!   state  = (rail level, cooldown, up-events[sat 2], loss bucket)
+//!   locked = up-events >= 2                  (derived, not stored twice)
+//!   input  = rate<=low | in-band | rate>=high | silent | budget-breach
+//!   edge   = the LITERAL end_epoch decision logic applied to a
+//!            deterministic concrete evidence sample of the input class
+//! ```
+//!
+//! Two design rules make the certificate trustworthy:
+//!
+//! 1. **No abstraction gap on the rail.** The state stores the *exact*
+//!    `f64` rail value produced by the same `(v + step).min(ceil)` /
+//!    `(v - step).max(floor)` arithmetic the concrete controller runs,
+//!    keyed by bit pattern. The reachable rail lattice is finite (the
+//!    clamp-and-step dynamics revisit a bounded value set; the
+//!    [`max_states`] cap fails closed if a pathological step ever made
+//!    it explode). Cooldown is bounded by the config, up-events saturate
+//!    at 2 (behaviour depends only on `locked = up_events >= 2`), and
+//!    the loss bucket is one of {under-half-budget, in-band, breach}.
+//! 2. **Transitions run the real decision code.** Each abstract input is
+//!    mapped to one concrete evidence sample — a flag rate `k/B`
+//!    realizable as `k` flagged batches out of `B`, or an exact
+//!    `(flagged, silent)` fraction pair — and the successor is computed
+//!    by the same branch structure (and the same float comparisons) as
+//!    [`Calibrator::end_epoch`]. A violated property therefore replays:
+//!    [`replay`] drives the counterexample trace through a real
+//!    [`Calibrator`] and reproduces the violation on its voltage trace.
+//!
+//! The properties carry stable ids (see `docs/PROVE_PROPERTIES.md`):
+//!
+//! | id | name | invariant |
+//! |----|------|-----------|
+//! | PRV001 | rail-clamp-bounds | every reachable rail stays inside the FlowKind clamp `[v_floor, v_ceil]` |
+//! | PRV002 | no-thrash | a strict step-down never immediately follows a strict step-up (the cooldown hold is real) |
+//! | PRV003 | bounded-convergence | no reachable cycle contains a rail movement, and the longest movement chain is finite (computed bound) |
+//! | PRV004 | locked-absorbing | once locked, no input ever steps the rail down |
+//! | PRV005 | budget-reactivity | evidence whose modeled loss escapes the declared budget always takes the recovery (step-up) branch |
+//!
+//! [`run_prove`] is the harness behind `vstpu prove`: it certifies the
+//! default suite ({academic-22nm, vivado artix7-28nm} × {none, replay,
+//! te-drop}) and renders `PROVE_report.json` (schema [`PROVE_SCHEMA`],
+//! written by `report::prove_json`, gated by the CI `prove-smoke` job).
+//! [`certify_cached`] is the content-keyed (S21 hotcache) entry the
+//! `calibrate` pre-flight gate, the sweep's rail-mode axis and the S20
+//! rule VST021 all share.
+//!
+//! [`Calibrator`]: crate::calibrate::Calibrator
+//! [`Calibrator::end_epoch`]: crate::calibrate::Calibrator::end_epoch
+//! [`RecoveryPolicy`]: crate::recover::RecoveryPolicy
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use crate::calibrate::{CalibrateConfig, Calibrator};
+use crate::error::{Error, Result};
+use crate::fpga::{Partition, Rect};
+use crate::hotcache::Digest;
+use crate::recover::{self, SILENT_TOL};
+use crate::study;
+use crate::tech::{FlowKind, Technology};
+
+/// `PROVE_report.json` schema identifier (see docs/BENCH_SCHEMAS.md).
+pub const PROVE_SCHEMA: &str = "vstpu-prove/v1";
+
+/// Default cap on explored product-automaton states. Far above any real
+/// configuration (the default controllers close under 3k states); the
+/// cap exists so a pathological float step fails closed instead of
+/// spinning.
+pub const DEFAULT_MAX_STATES: usize = 200_000;
+
+/// Strict-move detection threshold — the same predicate
+/// [`crate::calibrate::Calibrator::end_epoch`] uses for `last_move`.
+const MOVE_EPS: f64 = 1e-15;
+
+/// Clamp tolerance for PRV001 (matches the S20 rail checks).
+const BOUND_EPS: f64 = 1e-9;
+
+// ---------------------------------------------------------------------
+// Process-global `[prove]` configuration (mirrors `hotcache`).
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static MAX_STATES: AtomicUsize = AtomicUsize::new(DEFAULT_MAX_STATES);
+
+/// Globally enable/disable the pre-flight proof gates (`calibrate`, the
+/// sweep's runtime rail arm). `vstpu prove` itself always proves.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether the pre-flight proof gates run.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Cap the explored state count (minimum 16; exploration past the cap
+/// returns a structured [`Error::Prove`], never a partial certificate).
+pub fn set_max_states(n: usize) {
+    MAX_STATES.store(n.max(16), Ordering::Relaxed);
+}
+
+/// Current state-count cap.
+pub fn max_states() -> usize {
+    MAX_STATES.load(Ordering::Relaxed)
+}
+
+/// Apply a `[prove]` config-file section in one call.
+pub fn configure(enabled: bool, max_states: usize) {
+    set_enabled(enabled);
+    set_max_states(max_states);
+}
+
+// ---------------------------------------------------------------------
+// The abstract telemetry alphabet
+// ---------------------------------------------------------------------
+
+/// One abstract telemetry input — an equivalence class of what a
+/// decision epoch can observe. Each class carries one deterministic
+/// concrete evidence sample (a realizable flag rate, or an exact
+/// `(flagged, silent)` fraction pair) so abstract transitions and
+/// concrete replays agree by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TelemetryInput {
+    /// Epoch flag rate at or below `low_water` (quiet: descend).
+    RateLow,
+    /// Flag rate strictly between the waters (hysteresis band: hold).
+    RateInBand,
+    /// Flag rate at or above `high_water` (errors: recover).
+    RateHigh,
+    /// Epoch-mean silent-MAC fraction past [`SILENT_TOL`] (past the
+    /// shadow window nothing recovers — recovering policies only).
+    SilentCorruption,
+    /// Evidence whose modeled [`recover::weighted_loss`] escapes the
+    /// declared accuracy budget (recovering policies only).
+    BudgetBreach,
+}
+
+impl TelemetryInput {
+    /// Stable name (also the JSON trace-element value).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::RateLow => "rate-low",
+            Self::RateInBand => "rate-in-band",
+            Self::RateHigh => "rate-high",
+            Self::SilentCorruption => "silent-corruption",
+            Self::BudgetBreach => "budget-breach",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property catalog
+// ---------------------------------------------------------------------
+
+/// The certified properties, with stable ids (`PRV001..`). See the
+/// module docs and `docs/PROVE_PROPERTIES.md` for the invariants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Property {
+    /// PRV001 — every reachable rail stays inside the FlowKind clamps.
+    RailClampBounds,
+    /// PRV002 — no strict down immediately after a strict up.
+    NoThrash,
+    /// PRV003 — no reachable cycle moves a rail; movement count bounded.
+    BoundedConvergence,
+    /// PRV004 — locked is absorbing for step-downs.
+    LockedAbsorbing,
+    /// PRV005 — over-budget evidence always takes the step-up branch.
+    BudgetReactivity,
+}
+
+impl Property {
+    /// Every property, catalog order.
+    pub const ALL: [Property; 5] = [
+        Property::RailClampBounds,
+        Property::NoThrash,
+        Property::BoundedConvergence,
+        Property::LockedAbsorbing,
+        Property::BudgetReactivity,
+    ];
+
+    /// Stable id (`PRV001`..).
+    pub fn id(self) -> &'static str {
+        match self {
+            Self::RailClampBounds => "PRV001",
+            Self::NoThrash => "PRV002",
+            Self::BoundedConvergence => "PRV003",
+            Self::LockedAbsorbing => "PRV004",
+            Self::BudgetReactivity => "PRV005",
+        }
+    }
+
+    /// Stable kebab-case name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::RailClampBounds => "rail-clamp-bounds",
+            Self::NoThrash => "no-thrash",
+            Self::BoundedConvergence => "bounded-convergence",
+            Self::LockedAbsorbing => "locked-absorbing",
+            Self::BudgetReactivity => "budget-reactivity",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Result records
+// ---------------------------------------------------------------------
+
+/// A refutation: the shortest input trace (BFS-minimal prefix) that
+/// drives the automaton — and, replayed, a real [`Calibrator`] — into
+/// the violation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Counterexample {
+    /// The violating input sequence, one element per decision epoch.
+    pub trace: Vec<TelemetryInput>,
+    /// True when [`replay`] reproduced the violation on a concrete
+    /// `Calibrator` ([`certify_raw`] fails loudly when it does not —
+    /// a non-replaying counterexample would mean the abstraction lied).
+    pub replayed: bool,
+}
+
+/// One property's verdict inside a [`ProofCase`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PropertyResult {
+    /// Stable id (`PRV001`..).
+    pub id: &'static str,
+    /// Stable kebab-case name.
+    pub name: &'static str,
+    /// True when the exhaustive exploration found no violation.
+    pub certified: bool,
+    /// Deterministic human-readable evidence (state counts, bounds, or
+    /// the violation description).
+    pub detail: String,
+    /// Present exactly when `certified` is false.
+    pub counterexample: Option<Counterexample>,
+}
+
+/// The certificate (or refutation) of one controller × policy × tech
+/// configuration — one row of `PROVE_report.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProofCase {
+    /// Technology preset name.
+    pub tech: String,
+    /// Flow of the clamp bounds (`vivado` / `vtr`).
+    pub flow: &'static str,
+    /// Recovery policy name (`none` / `replay` / `te-drop`).
+    pub policy: &'static str,
+    /// Rail clamp floor the automaton ran against.
+    pub v_floor: f64,
+    /// Rail clamp ceiling (the nominal rail).
+    pub v_ceil: f64,
+    /// Reachable product-automaton states.
+    pub states: usize,
+    /// Explored transitions.
+    pub transitions: usize,
+    /// Distinct reachable rail levels.
+    pub rail_levels: usize,
+    /// Proven cap on strict rail movements over any input interleaving
+    /// (the PRV003 longest-movement-chain bound).
+    pub move_bound: usize,
+    /// Derived cap on the epoch of the last possible rail movement under
+    /// persistently-driving evidence: `move_bound * (cooldown + 1) + 1`.
+    pub epoch_bound: usize,
+    /// True when every property certified.
+    pub certified: bool,
+    /// One verdict per catalog property, catalog order.
+    pub properties: Vec<PropertyResult>,
+}
+
+impl ProofCase {
+    /// One-line summary of every violated property (empty when green).
+    pub fn failure_summary(&self) -> String {
+        self.properties
+            .iter()
+            .filter(|p| !p.certified)
+            .map(|p| format!("{} {}: {}", p.id, p.name, p.detail))
+            .collect::<Vec<_>>()
+            .join("; ")
+    }
+}
+
+/// Everything one `vstpu prove` run produces — `report::prove_json`
+/// renders it as `PROVE_report.json`. Deliberately carries **no wall
+/// line: the artifact is byte-deterministic end to end.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProveReport {
+    /// Schema identifier ([`PROVE_SCHEMA`]).
+    pub schema: &'static str,
+    /// State-count cap the exploration ran under.
+    pub max_states: usize,
+    /// True when every case certified.
+    pub certified: bool,
+    /// One case per tech × policy, suite order.
+    pub cases: Vec<ProofCase>,
+}
+
+// ---------------------------------------------------------------------
+// The product automaton
+// ---------------------------------------------------------------------
+
+/// Quantized product state. `v_bits` is the exact bit pattern of the
+/// concrete rail value — see the module docs for why no index
+/// abstraction sits between the certificate and the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct StateKey {
+    v_bits: u64,
+    cooldown: u32,
+    /// Saturated at 2 (`locked` is `up_events >= 2`).
+    up_events: u8,
+    /// Last transition's loss bucket: 0 under half budget, 1 in the
+    /// hysteresis band, 2 breached (NaN-safe: a non-comparable loss
+    /// buckets as breach).
+    loss_bucket: u8,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    key: StateKey,
+    /// BFS parent: (node index, input taken), None for the root.
+    parent: Option<(usize, TelemetryInput)>,
+    depth: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct EdgeRec {
+    from: usize,
+    to: usize,
+    input: TelemetryInput,
+    /// -1 strict down, 0 hold/clamp, +1 strict up.
+    dv: i8,
+    /// True when the step-up (recovery) branch was the one taken.
+    up_branch: bool,
+    /// Modeled loss the evidence implied (0 for rate-only inputs).
+    loss: f64,
+    /// True when `loss > 0 && !(loss <= budget)` (NaN-safe) under a
+    /// recovering policy.
+    breach: bool,
+}
+
+struct Automaton {
+    cfg: CalibrateConfig,
+    step: f64,
+    v_floor: f64,
+    v_ceil: f64,
+    /// Realizable in-band flag rate as `(flagged, batches)`; `None`
+    /// when the hysteresis band contains no small rational (the input
+    /// is then dropped from the non-recovering alphabet).
+    in_band: Option<(u64, u64)>,
+}
+
+impl Automaton {
+    fn new(cfg: CalibrateConfig, v_floor: f64, v_ceil: f64) -> Self {
+        let step = if cfg.step_v > 0.0 {
+            cfg.step_v
+        } else {
+            (v_ceil - v_floor) / 4.0
+        };
+        let mut in_band = None;
+        'outer: for b in 1..=256u64 {
+            for k in 1..b {
+                let r = k as f64 / b as f64;
+                if r > cfg.low_water && r < cfg.high_water {
+                    in_band = Some((k, b));
+                    break 'outer;
+                }
+            }
+        }
+        Self {
+            cfg,
+            step,
+            v_floor,
+            v_ceil,
+            in_band,
+        }
+    }
+
+    fn recovering(&self) -> bool {
+        self.cfg.recover.policy.recovers()
+    }
+
+    fn alphabet(&self) -> Vec<TelemetryInput> {
+        if self.recovering() {
+            vec![
+                TelemetryInput::RateLow,
+                TelemetryInput::RateInBand,
+                TelemetryInput::RateHigh,
+                TelemetryInput::SilentCorruption,
+                TelemetryInput::BudgetBreach,
+            ]
+        } else {
+            let mut a = vec![TelemetryInput::RateLow];
+            if self.in_band.is_some() {
+                a.push(TelemetryInput::RateInBand);
+            }
+            a.push(TelemetryInput::RateHigh);
+            a
+        }
+    }
+
+    /// Concrete `(flagged, silent)` evidence sample of `input` under the
+    /// recovering policy — chosen so the literal branch comparisons land
+    /// the input in its intended class whenever that class is non-empty
+    /// for this policy/budget, and NaN-free even for pathological
+    /// (validation-bypassing) budgets.
+    fn fractions(&self, input: TelemetryInput) -> (f64, f64) {
+        let w = self.cfg.recover.policy.loss_weight();
+        let b = self.cfg.recover.accuracy_budget;
+        match input {
+            TelemetryInput::RateLow => (0.0, 0.0),
+            TelemetryInput::RateInBand => {
+                let f = if w > 0.0 {
+                    (0.75 * b / w).clamp(0.0, 1.0)
+                } else {
+                    1.0
+                };
+                (if f.is_finite() { f } else { 1.0 }, 0.0)
+            }
+            TelemetryInput::RateHigh => (1.0, 0.0),
+            TelemetryInput::SilentCorruption => (0.0, 2.0 * SILENT_TOL),
+            TelemetryInput::BudgetBreach => {
+                // Push the modeled loss past the budget with the least
+                // silent fraction that gets there; a non-comparable
+                // budget (NaN, bypassing validation) degrades to pure
+                // flagged evidence — exactly the sample PRV005 needs.
+                let deficit = b - w;
+                let s = if deficit >= 0.0 {
+                    deficit + (0.5 * b).max(2.0 * SILENT_TOL)
+                } else {
+                    0.0
+                };
+                (1.0, s)
+            }
+        }
+    }
+
+    /// Concrete flag-count evidence `(flagged_batches, batches)` of a
+    /// rate input for the non-recovering controller.
+    fn rate_batches(&self, input: TelemetryInput) -> (u64, u64) {
+        match input {
+            TelemetryInput::RateLow => (0, 1),
+            TelemetryInput::RateHigh => (1, 1),
+            TelemetryInput::RateInBand => self.in_band.unwrap_or((0, 1)),
+            // Unreachable for non-recovering alphabets; keep total.
+            _ => (1, 1),
+        }
+    }
+
+    /// Apply one decision epoch — the literal
+    /// [`Calibrator::end_epoch`](crate::calibrate::Calibrator::end_epoch)
+    /// branch logic on the evidence sample — to `st`.
+    fn transition(&self, st: StateKey, input: TelemetryInput) -> (StateKey, i8, bool, f64, bool) {
+        let v = f64::from_bits(st.v_bits);
+        let locked = st.up_events >= 2;
+        let cd = st.cooldown;
+        let budget = self.cfg.recover.accuracy_budget;
+        let mut nv = v;
+        let mut ncd = cd;
+        let mut nup = st.up_events;
+        let mut up_branch = false;
+        let mut loss = 0.0;
+        let mut breach = false;
+        if self.recovering() {
+            let (f, s) = self.fractions(input);
+            loss = recover::weighted_loss(self.cfg.recover.policy, f, s);
+            // NaN-safe: a positive loss that is not demonstrably within
+            // the budget escaped it (a zero loss never breaches).
+            breach = loss > 0.0 && !(loss <= budget);
+            if s > SILENT_TOL || loss > budget {
+                nv = (v + self.step).min(self.v_ceil);
+                ncd = self.cfg.cooldown_epochs;
+                nup = (st.up_events + 1).min(2);
+                up_branch = true;
+            } else if loss <= 0.5 * budget && cd == 0 && !locked {
+                nv = (v - self.step).max(self.v_floor);
+            } else {
+                ncd = cd.saturating_sub(1);
+            }
+        } else {
+            let (k, b) = self.rate_batches(input);
+            let rate = k as f64 / b as f64;
+            if rate >= self.cfg.high_water {
+                nv = (v + self.step).min(self.v_ceil);
+                ncd = self.cfg.cooldown_epochs;
+                nup = (st.up_events + 1).min(2);
+                up_branch = true;
+            } else if rate <= self.cfg.low_water {
+                if cd > 0 {
+                    ncd = cd - 1;
+                } else if !locked {
+                    nv = (v - self.step).max(self.v_floor);
+                }
+            } else {
+                ncd = cd.saturating_sub(1);
+            }
+        }
+        let dv = if nv - v > MOVE_EPS {
+            1i8
+        } else if v - nv > MOVE_EPS {
+            -1i8
+        } else {
+            0i8
+        };
+        let bucket = if self.recovering() {
+            if loss <= 0.5 * budget {
+                0
+            } else if loss <= budget {
+                1
+            } else {
+                2
+            }
+        } else {
+            let (k, b) = self.rate_batches(input);
+            let rate = k as f64 / b as f64;
+            if rate >= self.cfg.high_water {
+                2
+            } else if rate <= self.cfg.low_water {
+                0
+            } else {
+                1
+            }
+        };
+        (
+            StateKey {
+                v_bits: nv.to_bits(),
+                cooldown: ncd,
+                up_events: nup,
+                loss_bucket: bucket,
+            },
+            dv,
+            up_branch,
+            loss,
+            breach,
+        )
+    }
+}
+
+/// The fully-explored reachable graph.
+struct Explored {
+    nodes: Vec<Node>,
+    edges: Vec<EdgeRec>,
+    alphabet: Vec<TelemetryInput>,
+}
+
+/// Breadth-first closure of the reachable state space from the
+/// ceiling-seeded initial state. Deterministic: successors are expanded
+/// in alphabet order, so node ids, edge order and every BFS-minimal
+/// counterexample are stable across runs.
+fn explore(auto: &Automaton, cap: usize) -> Result<Explored> {
+    let alphabet = auto.alphabet();
+    let root = StateKey {
+        v_bits: auto.v_ceil.to_bits(),
+        cooldown: 0,
+        up_events: 0,
+        loss_bucket: 0,
+    };
+    let mut index: HashMap<StateKey, usize> = HashMap::new();
+    let mut nodes = vec![Node {
+        key: root,
+        parent: None,
+        depth: 0,
+    }];
+    index.insert(root, 0);
+    let mut edges = Vec::new();
+    let mut head = 0usize;
+    while head < nodes.len() {
+        let (key, depth) = (nodes[head].key, nodes[head].depth);
+        for &input in &alphabet {
+            let (next, dv, up_branch, loss, breach) = auto.transition(key, input);
+            let to = match index.get(&next) {
+                Some(&i) => i,
+                None => {
+                    if nodes.len() >= cap {
+                        return Err(Error::Prove(format!(
+                            "state space exceeded max_states {cap} \
+                             (step {} over [{:.4}, {:.4}] does not close)",
+                            auto.step, auto.v_floor, auto.v_ceil
+                        )));
+                    }
+                    let i = nodes.len();
+                    nodes.push(Node {
+                        key: next,
+                        parent: Some((head, input)),
+                        depth: depth + 1,
+                    });
+                    index.insert(next, i);
+                    i
+                }
+            };
+            edges.push(EdgeRec {
+                from: head,
+                to,
+                input,
+                dv,
+                up_branch,
+                loss,
+                breach,
+            });
+        }
+        head += 1;
+    }
+    Ok(Explored {
+        nodes,
+        edges,
+        alphabet,
+    })
+}
+
+/// BFS-minimal input trace from the root to `node`.
+fn path_to(g: &Explored, node: usize) -> Vec<TelemetryInput> {
+    let mut trace = Vec::new();
+    let mut cur = node;
+    while let Some((p, input)) = g.nodes[cur].parent {
+        trace.push(input);
+        cur = p;
+    }
+    trace.reverse();
+    trace
+}
+
+// ---------------------------------------------------------------------
+// Cycle analysis (PRV003)
+// ---------------------------------------------------------------------
+
+/// Iterative Tarjan SCC. Returns `scc[node]`; components are numbered
+/// in reverse topological order of the condensation (a component is
+/// completed only after every component it reaches), which is exactly
+/// the order the longest-movement-chain DP wants.
+fn sccs(g: &Explored) -> (Vec<usize>, usize) {
+    let n = g.nodes.len();
+    let mut adj = vec![Vec::new(); n];
+    for e in &g.edges {
+        adj[e.from].push(e.to);
+    }
+    let mut idx = vec![usize::MAX; n];
+    let mut low = vec![0usize; n];
+    let mut on_stack = vec![false; n];
+    let mut stack = Vec::new();
+    let mut scc = vec![usize::MAX; n];
+    let (mut next_idx, mut next_scc) = (0usize, 0usize);
+    // Explicit call stack: (node, next child position).
+    let mut call: Vec<(usize, usize)> = Vec::new();
+    for root in 0..n {
+        if idx[root] != usize::MAX {
+            continue;
+        }
+        call.push((root, 0));
+        while let Some(&mut (v, ref mut ci)) = call.last_mut() {
+            if *ci == 0 {
+                idx[v] = next_idx;
+                low[v] = next_idx;
+                next_idx += 1;
+                stack.push(v);
+                on_stack[v] = true;
+            }
+            if *ci < adj[v].len() {
+                let w = adj[v][*ci];
+                *ci += 1;
+                if idx[w] == usize::MAX {
+                    call.push((w, 0));
+                } else if on_stack[w] {
+                    low[v] = low[v].min(idx[w]);
+                }
+            } else {
+                call.pop();
+                if let Some(&(p, _)) = call.last() {
+                    low[p] = low[p].min(low[v]);
+                }
+                if low[v] == idx[v] {
+                    while let Some(w) = stack.pop() {
+                        on_stack[w] = false;
+                        scc[w] = next_scc;
+                        if w == v {
+                            break;
+                        }
+                    }
+                    next_scc += 1;
+                }
+            }
+        }
+    }
+    (scc, next_scc)
+}
+
+/// PRV003 analysis: a strict-move edge inside an SCC lies on a cycle
+/// (unbounded movement — livelock); otherwise the longest chain of
+/// strict moves over the condensation DAG bounds total rail movement on
+/// *any* interleaving. Returns `(violating_edge, move_bound)`.
+fn movement_analysis(g: &Explored) -> (Option<usize>, usize) {
+    let (scc, count) = sccs(g);
+    for (i, e) in g.edges.iter().enumerate() {
+        if e.dv != 0 && scc[e.from] == scc[e.to] {
+            return (Some(i), g.nodes.len());
+        }
+    }
+    // Components are numbered reverse-topologically: component 0 only
+    // reaches itself, and every edge target has a lower (or equal)
+    // component id than its source — so ascending id order is a valid
+    // DP order for "longest strict-move chain from here".
+    let mut best = vec![0usize; count];
+    let mut by_scc: Vec<Vec<&EdgeRec>> = vec![Vec::new(); count];
+    for e in &g.edges {
+        by_scc[scc[e.from]].push(e);
+    }
+    for c in 0..count {
+        for e in &by_scc[c] {
+            let t = scc[e.to];
+            if t != c {
+                let cand = best[t] + usize::from(e.dv != 0);
+                best[c] = best[c].max(cand);
+            }
+        }
+    }
+    (None, best[scc[0]])
+}
+
+// ---------------------------------------------------------------------
+// Concrete replay
+// ---------------------------------------------------------------------
+
+/// Drive `trace` through a real single-partition [`Calibrator`] seeded
+/// at the ceiling (the automaton's initial state) and decide whether the
+/// property's violation reproduces concretely. Evidence per input is the
+/// same sample the abstract transition consumed, so agreement is by
+/// construction — a `false` here means the abstraction lied and
+/// [`certify_raw`] turns it into a hard error.
+pub fn replay(
+    cfg: &CalibrateConfig,
+    v_floor: f64,
+    v_ceil: f64,
+    property: Property,
+    trace: &[TelemetryInput],
+    move_bound: usize,
+) -> bool {
+    let auto = Automaton::new(cfg.clone(), v_floor, v_ceil);
+    let mut parts = vec![Partition {
+        id: 0,
+        rect: Rect::new(0, 0, 3, 3),
+        macs: vec![],
+        vccint: v_ceil,
+    }];
+    let mut cal = Calibrator::new(cfg.clone(), v_floor, v_ceil, &[v_ceil]);
+    let mut locked_before = Vec::with_capacity(trace.len());
+    for &input in trace {
+        locked_before.push(cal.is_locked(0));
+        if auto.recovering() {
+            let (f, s) = auto.fractions(input);
+            cal.observe_batch(&[f > 0.0], &[0]);
+            cal.observe_recovery(&[f], &[s], &[0]);
+        } else {
+            let (k, b) = auto.rate_batches(input);
+            for j in 0..b {
+                cal.observe_batch(&[j < k], &[0]);
+            }
+        }
+        cal.end_epoch(&mut parts, &[0]);
+    }
+    let vt: Vec<f64> = cal.voltage_trace().iter().map(|v| v[0]).collect();
+    let strict_up = |e: usize| vt[e + 1] - vt[e] > MOVE_EPS;
+    let strict_down = |e: usize| vt[e] - vt[e + 1] > MOVE_EPS;
+    match property {
+        Property::RailClampBounds => vt
+            .iter()
+            .any(|&v| v < v_floor - BOUND_EPS || v > v_ceil + BOUND_EPS),
+        Property::NoThrash => (0..vt.len().saturating_sub(2))
+            .any(|e| strict_up(e) && strict_down(e + 1)),
+        Property::BoundedConvergence => {
+            (0..vt.len() - 1).filter(|&e| strict_up(e) || strict_down(e)).count() > move_bound
+        }
+        Property::LockedAbsorbing => {
+            (0..vt.len() - 1).any(|e| locked_before.get(e) == Some(&true) && strict_down(e))
+        }
+        // A budget-reacting controller locks on the second consecutive
+        // breach epoch (two up-events); the violation is concrete when
+        // the trace's trailing breaches left the partition unlocked.
+        Property::BudgetReactivity => !cal.is_locked(0),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Certification
+// ---------------------------------------------------------------------
+
+fn violation(
+    g: &Explored,
+    auto: &Automaton,
+    property: Property,
+    detail: String,
+    trace: Vec<TelemetryInput>,
+    move_bound: usize,
+) -> Result<PropertyResult> {
+    let replayed = replay(
+        &auto.cfg,
+        auto.v_floor,
+        auto.v_ceil,
+        property,
+        &trace,
+        move_bound,
+    );
+    if !replayed {
+        return Err(Error::Prove(format!(
+            "{} counterexample failed to reproduce on the concrete \
+             Calibrator — abstraction bug, refusing to certify",
+            property.id()
+        )));
+    }
+    let _ = g;
+    Ok(PropertyResult {
+        id: property.id(),
+        name: property.name(),
+        certified: false,
+        detail,
+        counterexample: Some(Counterexample { trace, replayed }),
+    })
+}
+
+fn certified(property: Property, detail: String) -> PropertyResult {
+    PropertyResult {
+        id: property.id(),
+        name: property.name(),
+        certified: true,
+        detail,
+        counterexample: None,
+    }
+}
+
+/// Exhaustively certify one controller configuration against the clamp
+/// bounds `[v_floor, v_ceil]` **without validating it first** — the
+/// entry the broken-fixture tests use to demonstrate that pathological
+/// configs (a zero cooldown, a non-finite budget smuggled past
+/// `validate`) are refuted with replayable counterexamples. Production
+/// callers want [`certify_config`] / [`certify_cached`].
+pub fn certify_raw(
+    cfg: &CalibrateConfig,
+    tech_name: &str,
+    flow: &'static str,
+    v_floor: f64,
+    v_ceil: f64,
+    cap: usize,
+) -> Result<ProofCase> {
+    if !(v_floor.is_finite() && v_ceil.is_finite()) || v_floor > v_ceil {
+        return Err(Error::Prove(format!(
+            "prove bounds must be finite with floor {v_floor} <= ceil {v_ceil}"
+        )));
+    }
+    let auto = Automaton::new(cfg.clone(), v_floor, v_ceil);
+    let g = explore(&auto, cap)?;
+    let budget = cfg.recover.accuracy_budget;
+    let mut rails: Vec<u64> = g.nodes.iter().map(|n| n.key.v_bits).collect();
+    rails.sort_unstable();
+    rails.dedup();
+    let (cycle_edge, move_bound) = movement_analysis(&g);
+    let epoch_bound = move_bound * (cfg.cooldown_epochs as usize + 1) + 1;
+    let mut props = Vec::with_capacity(Property::ALL.len());
+
+    // PRV001 — rail-clamp-bounds.
+    let bad = g.nodes.iter().position(|n| {
+        let v = f64::from_bits(n.key.v_bits);
+        v < v_floor - BOUND_EPS || v > v_ceil + BOUND_EPS
+    });
+    props.push(match bad {
+        None => certified(
+            Property::RailClampBounds,
+            format!(
+                "all {} states hold {:.4} <= rail <= {:.4} ({} rail levels)",
+                g.nodes.len(),
+                v_floor,
+                v_ceil,
+                rails.len()
+            ),
+        ),
+        Some(node) => violation(
+            &g,
+            &auto,
+            Property::RailClampBounds,
+            format!(
+                "reachable rail {:.4} escapes [{:.4}, {:.4}]",
+                f64::from_bits(g.nodes[node].key.v_bits),
+                v_floor,
+                v_ceil
+            ),
+            path_to(&g, node),
+            move_bound,
+        )?,
+    });
+
+    // PRV002 — no-thrash: a strict down out of a node with a strict up
+    // in. Edges are BFS-ordered, so the first qualifying pair is the
+    // minimal counterexample.
+    let mut thrash: Option<(usize, usize)> = None;
+    'down: for (j, down) in g.edges.iter().enumerate() {
+        if down.dv != -1 {
+            continue;
+        }
+        for (i, up) in g.edges.iter().enumerate() {
+            if up.dv == 1 && up.to == down.from {
+                thrash = Some((i, j));
+                break 'down;
+            }
+        }
+    }
+    props.push(match thrash {
+        None => certified(
+            Property::NoThrash,
+            format!(
+                "no strict down follows a strict up across {} transitions \
+                 (cooldown hold {} epochs)",
+                g.edges.len(),
+                cfg.cooldown_epochs
+            ),
+        ),
+        Some((i, j)) => {
+            let mut trace = path_to(&g, g.edges[i].from);
+            trace.push(g.edges[i].input);
+            trace.push(g.edges[j].input);
+            violation(
+                &g,
+                &auto,
+                Property::NoThrash,
+                format!(
+                    "a strict step-down on {} immediately follows a strict \
+                     step-up on {} (cooldown_epochs = {} holds nothing)",
+                    g.edges[j].input.name(),
+                    g.edges[i].input.name(),
+                    cfg.cooldown_epochs
+                ),
+                trace,
+                move_bound,
+            )?
+        }
+    });
+
+    // PRV003 — bounded-convergence.
+    props.push(match cycle_edge {
+        None => certified(
+            Property::BoundedConvergence,
+            format!(
+                "every cycle is movement-free; at most {move_bound} rail \
+                 moves on any interleaving (last move by epoch {epoch_bound})"
+            ),
+        ),
+        Some(i) => {
+            let e = g.edges[i];
+            let mut trace = path_to(&g, e.from);
+            trace.push(e.input);
+            violation(
+                &g,
+                &auto,
+                Property::BoundedConvergence,
+                format!(
+                    "a reachable cycle moves the rail on {} — rail movement \
+                     is unbounded (livelock)",
+                    e.input.name()
+                ),
+                trace,
+                move_bound,
+            )?
+        }
+    });
+
+    // PRV004 — locked-absorbing.
+    let unlock = g
+        .edges
+        .iter()
+        .position(|e| e.dv == -1 && g.nodes[e.from].key.up_events >= 2);
+    props.push(match unlock {
+        None => certified(
+            Property::LockedAbsorbing,
+            "no input steps a locked rail down".into(),
+        ),
+        Some(i) => {
+            let e = g.edges[i];
+            let mut trace = path_to(&g, e.from);
+            trace.push(e.input);
+            violation(
+                &g,
+                &auto,
+                Property::LockedAbsorbing,
+                format!("{} steps a locked rail down", e.input.name()),
+                trace,
+                move_bound,
+            )?
+        }
+    });
+
+    // PRV005 — budget-reactivity (vacuous for non-recovering policies:
+    // their rate evidence carries no loss model — VST020 budget sanity
+    // lives in `check`).
+    // Prefer the canonical breach input as the witness (every evidence
+    // class can breach a pathological budget; BFS order already makes
+    // the prefix minimal either way).
+    let unreactive = g
+        .edges
+        .iter()
+        .position(|e| e.breach && !e.up_branch && e.input == TelemetryInput::BudgetBreach)
+        .or_else(|| g.edges.iter().position(|e| e.breach && !e.up_branch));
+    props.push(match unreactive {
+        None => certified(
+            Property::BudgetReactivity,
+            if auto.recovering() {
+                format!("every over-budget evidence takes the step-up branch (budget {budget})")
+            } else {
+                "vacuous: policy carries no loss model".into()
+            },
+        ),
+        Some(i) => {
+            let e = g.edges[i];
+            let mut trace = path_to(&g, e.from);
+            // Two trailing breach epochs make the failure-to-react
+            // concretely observable: a reacting controller locks.
+            trace.push(e.input);
+            trace.push(e.input);
+            violation(
+                &g,
+                &auto,
+                Property::BudgetReactivity,
+                format!(
+                    "loss {:.4} escapes budget {} yet the controller holds \
+                     (step-up branch never fires, frontier never locks)",
+                    e.loss, budget
+                ),
+                trace,
+                move_bound,
+            )?
+        }
+    });
+
+    let all_green = props.iter().all(|p| p.certified);
+    Ok(ProofCase {
+        tech: tech_name.to_string(),
+        flow,
+        policy: cfg.recover.policy.name(),
+        v_floor,
+        v_ceil,
+        states: g.nodes.len(),
+        transitions: g.edges.len(),
+        rail_levels: rails.len(),
+        move_bound,
+        epoch_bound,
+        certified: all_green,
+        properties: props,
+    })
+}
+
+/// Stable flow name of a technology's clamp regime.
+pub fn flow_name(tech: &Technology) -> &'static str {
+    match tech.flow {
+        FlowKind::Vivado => "vivado",
+        FlowKind::Vtr => "vtr",
+    }
+}
+
+/// Validate `cfg`, derive the FlowKind clamp bounds from `tech`
+/// ([`study::rail_bounds`] floor, nominal ceiling — the same bounds
+/// `run_calibrate` hands the live controller), and certify.
+pub fn certify_config(cfg: &CalibrateConfig, tech: &Technology) -> Result<ProofCase> {
+    cfg.validate()?;
+    let (_, v_floor) = study::rail_bounds(tech);
+    let mut resolved = cfg.clone();
+    resolved.step_v = cfg.resolved_step(tech);
+    certify_raw(
+        &resolved,
+        &tech.name,
+        flow_name(tech),
+        v_floor,
+        tech.v_nom,
+        max_states(),
+    )
+}
+
+/// Content key of one proof — every input [`certify_config`] depends on.
+pub fn proof_key(cfg: &CalibrateConfig, tech: &Technology) -> u64 {
+    Digest::new("vstpu/hotcache/prove/v1")
+        .tech(tech)
+        .f64(cfg.low_water)
+        .f64(cfg.high_water)
+        .usize(cfg.epoch_batches)
+        .u64(u64::from(cfg.cooldown_epochs))
+        .f64(cfg.step_v)
+        .str(cfg.recover.policy.name())
+        .f64(cfg.recover.accuracy_budget)
+        .usize(max_states())
+        .finish()
+}
+
+/// [`certify_config`] memoized through the S21 hotcache (proofs depend
+/// only on the controller config and the technology's clamp geometry —
+/// the sweep re-certifies the same few combinations hundreds of times).
+/// Errors are never cached.
+pub fn certify_cached(
+    cfg: &CalibrateConfig,
+    tech: &Technology,
+) -> Result<std::sync::Arc<ProofCase>> {
+    crate::hotcache::proof(proof_key(cfg, tech), || certify_config(cfg, tech))
+}
+
+// ---------------------------------------------------------------------
+// The `vstpu prove` harness
+// ---------------------------------------------------------------------
+
+/// Configuration of one [`run_prove`] suite.
+#[derive(Debug, Clone)]
+pub struct ProveRunConfig {
+    /// Technologies to certify, in order.
+    pub techs: Vec<Technology>,
+    /// Recovery policies per technology, in order.
+    pub policies: Vec<crate::recover::RecoveryPolicy>,
+    /// Base controller; `recover.policy` is overridden per case.
+    pub controller: CalibrateConfig,
+}
+
+impl Default for ProveRunConfig {
+    fn default() -> Self {
+        Self {
+            techs: vec![Technology::academic_22nm(), Technology::artix7_28nm()],
+            policies: crate::recover::RecoveryPolicy::all().to_vec(),
+            controller: CalibrateConfig::default(),
+        }
+    }
+}
+
+/// Certify the whole suite (every tech × policy). The report is
+/// byte-deterministic: no wall-time line, stable case order, stable
+/// counterexamples.
+pub fn run_prove(cfg: &ProveRunConfig) -> Result<ProveReport> {
+    if cfg.techs.is_empty() || cfg.policies.is_empty() {
+        return Err(Error::Prove(
+            "prove needs at least one technology and one policy".into(),
+        ));
+    }
+    let mut cases = Vec::with_capacity(cfg.techs.len() * cfg.policies.len());
+    for tech in &cfg.techs {
+        for &policy in &cfg.policies {
+            let mut c = cfg.controller.clone();
+            c.recover.policy = policy;
+            cases.push(certify_cached(&c, tech)?.as_ref().clone());
+        }
+    }
+    Ok(ProveReport {
+        schema: PROVE_SCHEMA,
+        max_states: max_states(),
+        certified: cases.iter().all(|c| c.certified),
+        cases,
+    })
+}
+
+/// Render the proof suite as aligned text (the CLI's human output).
+pub fn render(rep: &ProveReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "state-space certification ({} cases, max_states {}):",
+        rep.cases.len(),
+        rep.max_states
+    );
+    let _ = writeln!(
+        s,
+        "{:>14} {:>8} {:>8} {:>7} {:>11} {:>10} {:>10} {:>9}",
+        "tech", "flow", "policy", "states", "transitions", "move bound", "certified", "violated"
+    );
+    for c in &rep.cases {
+        let violated: Vec<&str> = c
+            .properties
+            .iter()
+            .filter(|p| !p.certified)
+            .map(|p| p.id)
+            .collect();
+        let _ = writeln!(
+            s,
+            "{:>14} {:>8} {:>8} {:>7} {:>11} {:>10} {:>10} {:>9}",
+            c.tech,
+            c.flow,
+            c.policy,
+            c.states,
+            c.transitions,
+            c.move_bound,
+            c.certified,
+            if violated.is_empty() {
+                "-".to_string()
+            } else {
+                violated.join(",")
+            }
+        );
+        for p in c.properties.iter().filter(|p| !p.certified) {
+            let _ = writeln!(s, "    {} {}: {}", p.id, p.name, p.detail);
+            if let Some(cex) = &p.counterexample {
+                let names: Vec<&str> = cex.trace.iter().map(|i| i.name()).collect();
+                let _ = writeln!(
+                    s,
+                    "      counterexample [{}] (replayed: {})",
+                    names.join(", "),
+                    cex.replayed
+                );
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recover::{RecoverConfig, RecoveryPolicy};
+
+    fn bounds_of(tech: &Technology) -> (f64, f64) {
+        let (_, floor) = study::rail_bounds(tech);
+        (floor, tech.v_nom)
+    }
+
+    #[test]
+    fn property_ids_are_stable_unique_and_sequential() {
+        let ids: Vec<&str> = Property::ALL.iter().map(|p| p.id()).collect();
+        assert_eq!(ids, ["PRV001", "PRV002", "PRV003", "PRV004", "PRV005"]);
+        for p in Property::ALL {
+            assert!(!p.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn default_suite_certifies_green() {
+        let rep = run_prove(&ProveRunConfig::default()).unwrap();
+        assert_eq!(rep.schema, PROVE_SCHEMA);
+        assert_eq!(rep.cases.len(), 6, "2 techs x 3 policies");
+        assert!(rep.certified, "default suite must be green");
+        for c in &rep.cases {
+            assert!(c.certified, "{} x {} not certified", c.tech, c.policy);
+            assert_eq!(c.properties.len(), Property::ALL.len());
+            assert!(c.states > 1, "trivial state space for {}", c.tech);
+            assert!(c.transitions >= c.states);
+            assert!(c.rail_levels >= 1);
+            assert!(c.move_bound >= 1, "no movement possible on {}", c.tech);
+            assert!(c.epoch_bound > c.move_bound);
+            assert!(c.failure_summary().is_empty());
+        }
+        // The vtr flow descends far further than the vivado guard band.
+        let vtr = rep.cases.iter().find(|c| c.flow == "vtr").unwrap();
+        let viv = rep.cases.iter().find(|c| c.flow == "vivado").unwrap();
+        assert!(vtr.rail_levels > viv.rail_levels);
+    }
+
+    #[test]
+    fn certification_is_deterministic() {
+        let tech = Technology::academic_22nm();
+        let cfg = CalibrateConfig::default();
+        let a = certify_config(&cfg, &tech).unwrap();
+        let b = certify_config(&cfg, &tech).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_cooldown_refutes_no_thrash_with_replayable_counterexample() {
+        // The pathology the satellite validate fix now rejects up front:
+        // cooldown_epochs = 0 disables the post-recovery hold entirely.
+        let cfg = CalibrateConfig {
+            cooldown_epochs: 0,
+            ..CalibrateConfig::default()
+        };
+        let tech = Technology::academic_22nm();
+        let (floor, ceil) = bounds_of(&tech);
+        let case =
+            certify_raw(&cfg, &tech.name, flow_name(&tech), floor, ceil, DEFAULT_MAX_STATES)
+                .unwrap();
+        assert!(!case.certified);
+        let thrash = &case.properties[1];
+        assert_eq!(thrash.id, "PRV002");
+        assert!(!thrash.certified);
+        let cex = thrash.counterexample.as_ref().expect("counterexample");
+        let names: Vec<&str> = cex.trace.iter().map(|i| i.name()).collect();
+        assert_eq!(names, ["rate-low", "rate-high", "rate-low"]);
+        assert!(cex.replayed, "counterexample must reproduce concretely");
+        // The clamp property still holds even on the broken config.
+        assert!(case.properties[0].certified);
+    }
+
+    #[test]
+    fn nan_budget_te_drop_refutes_budget_reactivity() {
+        // Smuggled past RecoverConfig::validate on purpose: a
+        // non-comparable budget makes `loss > budget` silently false, so
+        // the controller never reacts to breach evidence.
+        let mut cfg = CalibrateConfig::default();
+        cfg.recover = RecoverConfig {
+            policy: RecoveryPolicy::TeDrop,
+            accuracy_budget: f64::NAN,
+        };
+        let tech = Technology::academic_22nm();
+        let (floor, ceil) = bounds_of(&tech);
+        let case =
+            certify_raw(&cfg, &tech.name, flow_name(&tech), floor, ceil, DEFAULT_MAX_STATES)
+                .unwrap();
+        assert!(!case.certified);
+        let react = &case.properties[4];
+        assert_eq!(react.id, "PRV005");
+        assert!(!react.certified);
+        let cex = react.counterexample.as_ref().expect("counterexample");
+        let names: Vec<&str> = cex.trace.iter().map(|i| i.name()).collect();
+        assert_eq!(names, ["budget-breach", "budget-breach"]);
+        assert!(cex.replayed);
+        // The broken controller can never descend, so every other
+        // property is (vacuously) green — the refutation is precise.
+        for p in &case.properties[..4] {
+            assert!(p.certified, "{} should stay green", p.id);
+        }
+    }
+
+    #[test]
+    fn state_cap_fails_closed() {
+        let tech = Technology::academic_22nm();
+        let (floor, ceil) = bounds_of(&tech);
+        let err = certify_raw(
+            &CalibrateConfig::default(),
+            &tech.name,
+            flow_name(&tech),
+            floor,
+            ceil,
+            16,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("max_states"));
+    }
+
+    #[test]
+    fn certify_config_validates_first() {
+        let cfg = CalibrateConfig {
+            cooldown_epochs: 0,
+            ..CalibrateConfig::default()
+        };
+        assert!(certify_config(&cfg, &Technology::academic_22nm()).is_err());
+    }
+
+    #[test]
+    fn proof_keys_separate_policies_budgets_and_techs() {
+        let base = CalibrateConfig::default();
+        let mut drop = base.clone();
+        drop.recover.policy = RecoveryPolicy::TeDrop;
+        let mut tight = base.clone();
+        tight.recover.accuracy_budget = 0.01;
+        let t22 = Technology::academic_22nm();
+        let k0 = proof_key(&base, &t22);
+        assert_ne!(k0, proof_key(&drop, &t22));
+        assert_ne!(k0, proof_key(&tight, &t22));
+        assert_ne!(k0, proof_key(&base, &Technology::artix7_28nm()));
+        assert_eq!(k0, proof_key(&base, &t22));
+    }
+
+    #[test]
+    fn cached_certification_matches_uncached() {
+        let tech = Technology::artix7_28nm();
+        let cfg = CalibrateConfig::default();
+        let direct = certify_config(&cfg, &tech).unwrap();
+        let cached = certify_cached(&cfg, &tech).unwrap();
+        assert_eq!(*cached, direct);
+        let again = certify_cached(&cfg, &tech).unwrap();
+        assert_eq!(*again, direct);
+    }
+
+    #[test]
+    fn render_mentions_every_case_and_violation() {
+        let rep = run_prove(&ProveRunConfig::default()).unwrap();
+        let text = render(&rep);
+        assert!(text.contains("academic-22nm"));
+        assert!(text.contains("artix7-28nm"));
+        assert!(text.contains("te-drop"));
+    }
+}

@@ -9,6 +9,7 @@ use crate::calibrate::CalibrateReport;
 use crate::check::{CheckReport, Rule};
 use crate::cluster::{Clustering, NOISE};
 use crate::hotcache::bench::HotpathReport;
+use crate::prove::ProveReport;
 use crate::recover::RecoveryReport;
 use crate::serve::BenchReport;
 use crate::sweep::SweepReport;
@@ -619,6 +620,77 @@ pub fn check_json(rep: &CheckReport) -> String {
     s
 }
 
+/// Render `PROVE_report.json` — the machine-readable artifact the CI
+/// `prove-smoke` job uploads (schema `vstpu-prove/v1`; see
+/// docs/BENCH_SCHEMAS.md). Byte-deterministic for a fixed suite: the
+/// exploration itself is deterministic and no wall-clock field is
+/// emitted, so the whole artifact sits inside the byte contract.
+pub fn prove_json(rep: &ProveReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"schema\": \"{}\",", rep.schema);
+    let _ = writeln!(s, "  \"max_states\": {},", rep.max_states);
+    let _ = writeln!(s, "  \"certified\": {},", rep.certified);
+    let _ = writeln!(s, "  \"cases\": [");
+    let cells: Vec<String> = rep
+        .cases
+        .iter()
+        .map(|c| {
+            let props: Vec<String> = c
+                .properties
+                .iter()
+                .map(|p| {
+                    let cex = match &p.counterexample {
+                        None => "null".to_string(),
+                        Some(cx) => format!(
+                            "{{\"trace\": [{}], \"replayed\": {}}}",
+                            cx.trace
+                                .iter()
+                                .map(|i| json_str(i.name()))
+                                .collect::<Vec<_>>()
+                                .join(", "),
+                            cx.replayed
+                        ),
+                    };
+                    format!(
+                        "        {{\"id\": \"{}\", \"name\": \"{}\", \"certified\": {},\n          \
+                         \"detail\": {},\n          \
+                         \"counterexample\": {}}}",
+                        p.id,
+                        p.name,
+                        p.certified,
+                        json_str(&p.detail),
+                        cex
+                    )
+                })
+                .collect();
+            format!(
+                "    {{\n      \"tech\": {},\n      \"flow\": \"{}\",\n      \
+                 \"policy\": \"{}\",\n      \"v_floor\": {},\n      \"v_ceil\": {},\n      \
+                 \"states\": {},\n      \"transitions\": {},\n      \"rail_levels\": {},\n      \
+                 \"move_bound\": {},\n      \"epoch_bound\": {},\n      \
+                 \"certified\": {},\n      \"properties\": [\n{}\n      ]\n    }}",
+                json_str(&c.tech),
+                c.flow,
+                c.policy,
+                json_f64(c.v_floor),
+                json_f64(c.v_ceil),
+                c.states,
+                c.transitions,
+                c.rail_levels,
+                c.move_bound,
+                c.epoch_bound,
+                c.certified,
+                props.join(",\n")
+            )
+        })
+        .collect();
+    let _ = writeln!(s, "{}", cells.join(",\n"));
+    let _ = writeln!(s, "  ]");
+    let _ = writeln!(s, "}}");
+    s
+}
+
 /// Human summary of one flow run (the CLI's `flow` output).
 pub fn flow_summary(rep: &FlowReport) -> String {
     let mut s = String::new();
@@ -1101,7 +1173,7 @@ mod tests {
         let json = check_json(&rep);
         for needle in [
             "\"schema\": \"vstpu-check/v1\"",
-            "\"rules_checked\": 20",
+            "\"rules_checked\": 21",
             "\"configurations\": 2",
             "\"errors\": 1",
             "\"warnings\": 0",
@@ -1114,6 +1186,60 @@ mod tests {
             "\"location\": \"partition 1 epoch 7\"",
             "\"message\": \"silent failure: d_eff \\\"10.2\\\" ns\\nexceeds the window\"",
         ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn prove_json_is_well_formed_and_deterministic() {
+        let rep = crate::prove::run_prove(&crate::prove::ProveRunConfig::default()).unwrap();
+        let json = prove_json(&rep);
+        for needle in [
+            "\"schema\": \"vstpu-prove/v1\"",
+            "\"certified\": true",
+            "\"tech\": \"academic-22nm\"",
+            "\"policy\": \"te-drop\"",
+            "\"id\": \"PRV001\"",
+            "\"id\": \"PRV005\"",
+            "\"counterexample\": null",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert!(!json.contains("NaN"));
+        assert!(!json.contains("wall"), "prove artifact must carry no wall-time");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        // Byte determinism: a second run renders the identical artifact.
+        let again = prove_json(&crate::prove::run_prove(&crate::prove::ProveRunConfig::default()).unwrap());
+        assert_eq!(json, again);
+    }
+
+    #[test]
+    fn prove_json_renders_counterexamples() {
+        let mut cfg = crate::calibrate::CalibrateConfig::default();
+        cfg.cooldown_epochs = 0; // pathological: bypasses validate() on purpose
+        let tech = crate::tech::Technology::academic_22nm();
+        let (_, v_floor) = crate::study::rail_bounds(&tech);
+        let case = crate::prove::certify_raw(
+            &cfg,
+            &tech.name,
+            crate::prove::flow_name(&tech),
+            v_floor,
+            tech.v_nom,
+            crate::prove::DEFAULT_MAX_STATES,
+        )
+        .unwrap();
+        assert!(!case.certified);
+        let rep = ProveReport {
+            schema: crate::prove::PROVE_SCHEMA,
+            max_states: crate::prove::DEFAULT_MAX_STATES,
+            certified: false,
+            cases: vec![case],
+        };
+        let json = prove_json(&rep);
+        for needle in ["\"certified\": false", "\"trace\": [", "\"replayed\": true", "\"rate-high\""] {
             assert!(json.contains(needle), "missing {needle} in:\n{json}");
         }
         assert_eq!(json.matches('{').count(), json.matches('}').count());

@@ -24,7 +24,7 @@
 //! the paper anticipated.
 
 use crate::cluster::Clustering;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::floorplan;
 use crate::fpga::{Device, Partition};
 use crate::netlist::SystolicNetlist;
@@ -113,7 +113,7 @@ pub fn partitions_with_rails(
         p.vccint = rails
             .iter()
             .find(|r| r.partition == p.id)
-            .expect("rail per partition")
+            .ok_or_else(|| Error::Voltage(format!("no rail assigned to partition {}", p.id)))?
             .vccint;
     }
     if runtime {

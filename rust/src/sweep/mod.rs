@@ -723,18 +723,46 @@ fn run_scenario(
     });
     let parts: &[Partition] = faulted.as_deref().unwrap_or(&entry.partitions);
 
+    // S23 pre-flight gate: a runtime scenario's calibration controller
+    // must carry a green static certificate before its measurements can
+    // compete — an unprovable controller becomes a structured failure
+    // record, never a winner-table entry. Memoized per (controller,
+    // tech) in the hotcache, so the whole grid pays for each distinct
+    // policy x tech pair once.
+    let mut proof_certified = false;
+    if sc.rail_mode == RailMode::Runtime && crate::prove::enabled() {
+        let ctrl = crate::calibrate::CalibrateConfig {
+            recover: recover::RecoverConfig {
+                policy: sc.policy,
+                accuracy_budget: cfg.accuracy_budget,
+            },
+            ..Default::default()
+        };
+        let proof = crate::prove::certify_cached(&ctrl, tech)?;
+        if !proof.certified {
+            return Err(Error::Prove(format!(
+                "calibration controller refuted by static certification on {}: {}",
+                proof.tech,
+                proof.failure_summary()
+            )));
+        }
+        proof_certified = true;
+    }
+
     // S20 design-rule gate: a configuration that violates the catalog
     // becomes a structured failure record, never a winner-table entry.
     // Runs on the substrate a cache hit returns — byte-identical to the
     // uncached build, so the verdict (and every debug_assert predicate
     // underneath) sees identical values either way.
-    let verdict = check::check(
-        &check::CheckInput::new(&st.netlist, tech, &cfg.razor, parts)
-            .with_clustering(&entry.clustering)
-            .with_toggle(cfg.calib_toggle)
-            .with_calibrated(sc.rail_mode == RailMode::Runtime)
-            .with_recovery(sc.policy, cfg.accuracy_budget),
-    );
+    let mut input = check::CheckInput::new(&st.netlist, tech, &cfg.razor, parts)
+        .with_clustering(&entry.clustering)
+        .with_toggle(cfg.calib_toggle)
+        .with_calibrated(sc.rail_mode == RailMode::Runtime)
+        .with_recovery(sc.policy, cfg.accuracy_budget);
+    if proof_certified {
+        input = input.with_proof(true);
+    }
+    let verdict = check::check(&input);
     if !verdict.is_clean() {
         return Err(Error::Check(verdict.error_summary()));
     }
@@ -836,14 +864,14 @@ fn winner_tables(records: &[ScenarioRecord]) -> Vec<WinnerRow> {
         else {
             continue;
         };
-        let ba = ok
-            .iter()
-            .min_by(|a, b| {
-                a.1.accuracy_loss
-                    .total_cmp(&b.1.accuracy_loss)
-                    .then(a.1.power_mw.total_cmp(&b.1.power_mw))
-            })
-            .expect("non-empty ok set");
+        let Some(ba) = ok.iter().min_by(|a, b| {
+            a.1.accuracy_loss
+                .total_cmp(&b.1.accuracy_loss)
+                .then(a.1.power_mw.total_cmp(&b.1.power_mw))
+        }) else {
+            // Unreachable: `bp` above proves `ok` is non-empty.
+            continue;
+        };
         rows.push(WinnerRow {
             tech: key.0,
             array_size: key.1,

@@ -111,13 +111,23 @@ where
                     if i >= n {
                         break;
                     }
-                    let job = queue[i]
+                    // Poisoning is impossible by construction (the only
+                    // code holding a slot lock cannot panic), and the
+                    // cursor hands each index to exactly one worker —
+                    // but recover on both rather than panic: a poisoned
+                    // slot's data is still valid, an already-claimed
+                    // job is simply skipped.
+                    let Some(job) = queue[i]
                         .lock()
-                        .expect("job slot poisoned")
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
                         .take()
-                        .expect("job claimed exactly once");
+                    else {
+                        continue;
+                    };
                     let out = catch_unwind(AssertUnwindSafe(|| job(&mut arena)));
-                    *results[i].lock().expect("result slot poisoned") = Some(out);
+                    *results[i]
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner) = Some(out);
                 }
             });
         }
@@ -126,9 +136,15 @@ where
     results
         .into_iter()
         .map(|m| {
+            // A missing result (unreachable: every claimed job stores
+            // one) degrades to a caught-panic record, which the callers
+            // already turn into a structured scenario failure.
             m.into_inner()
-                .expect("result slot poisoned")
-                .expect("every claimed job stores a result")
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .unwrap_or_else(|| {
+                    Err(Box::new("job stored no result".to_string())
+                        as Box<dyn std::any::Any + Send>)
+                })
         })
         .collect()
 }

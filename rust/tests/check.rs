@@ -55,11 +55,16 @@ fn fixture(tech: Technology, k: usize, runtime: bool) -> Fixture {
 }
 
 fn check_of(f: &Fixture, calibrated: bool) -> CheckReport {
-    check::check(
-        &CheckInput::new(&f.netlist, &f.tech, &f.razor, &f.partitions)
-            .with_clustering(&f.clustering)
-            .with_calibrated(calibrated),
-    )
+    let mut input = CheckInput::new(&f.netlist, &f.tech, &f.razor, &f.partitions)
+        .with_clustering(&f.clustering)
+        .with_calibrated(calibrated);
+    if calibrated {
+        // Every production calibrated path (sweep, check --smoke, the
+        // calibrate pre-flight) arrives with a controller certificate;
+        // VST021's missing-certificate Warn has its own dedicated test.
+        input = input.with_proof(true);
+    }
+    check::check(&input)
 }
 
 fn fired(rep: &CheckReport, rule: Rule) -> Vec<Severity> {

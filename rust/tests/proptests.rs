@@ -314,3 +314,163 @@ fn prop_manifest_roundtrip_random_signatures() {
         }
     }
 }
+
+// --------------------------------------------------------------- prove
+
+#[test]
+fn prop_random_telemetry_never_violates_a_certified_property() {
+    use vstpu::calibrate::{CalibrateConfig, Calibrator};
+    use vstpu::fpga::{Partition, Rect};
+    use vstpu::recover::{RecoverConfig, RecoveryPolicy, SILENT_TOL};
+
+    let tech = Technology::academic_22nm();
+    for policy in RecoveryPolicy::all() {
+        let cfg = CalibrateConfig {
+            recover: RecoverConfig {
+                policy,
+                accuracy_budget: 0.05,
+            },
+            ..Default::default()
+        };
+        let case = vstpu::prove::certify_config(&cfg, &tech).unwrap();
+        assert!(
+            case.certified,
+            "{policy:?} must certify: {}",
+            case.failure_summary()
+        );
+        let (v_floor, v_ceil) = (case.v_floor, case.v_ceil);
+        let mut resolved = cfg.clone();
+        resolved.step_v = cfg.resolved_step(&tech);
+
+        for seed in 0..CASES {
+            let mut rng = SplitMix64::new(seed + 12_000);
+            let mut parts = vec![Partition {
+                id: 0,
+                rect: Rect::new(0, 0, 3, 3),
+                macs: vec![],
+                vccint: v_ceil,
+            }];
+            let mut cal = Calibrator::new(resolved.clone(), v_floor, v_ceil, &[v_ceil]);
+            let epochs = 20 + rng.below(60) as usize;
+            let mut locked_before = Vec::with_capacity(epochs);
+            for _ in 0..epochs {
+                locked_before.push(cal.is_locked(0));
+                if policy.recovers() {
+                    // Random (flagged, silent) evidence, biased to land
+                    // on both sides of the hysteresis band and of the
+                    // silent-corruption tolerance.
+                    let f = rng.next_f64();
+                    let s = match rng.below(3) {
+                        0 => 0.0,
+                        1 => rng.range_f64(0.0, SILENT_TOL),
+                        _ => rng.range_f64(0.0, 4.0 * SILENT_TOL),
+                    };
+                    cal.observe_batch(&[f > 0.0], &[0]);
+                    cal.observe_recovery(&[f], &[s], &[0]);
+                } else {
+                    let b = 1 + rng.below(8) as usize;
+                    let k = rng.below(b as u64 + 1) as usize;
+                    for j in 0..b {
+                        cal.observe_batch(&[j < k], &[0]);
+                    }
+                }
+                cal.end_epoch(&mut parts, &[0]);
+            }
+            let vt: Vec<f64> = cal.voltage_trace().iter().map(|v| v[0]).collect();
+            let strict_up = |e: usize| vt[e + 1] - vt[e] > 1e-15;
+            let strict_down = |e: usize| vt[e] - vt[e + 1] > 1e-15;
+            // PRV001: every voltage inside the clamp bounds.
+            for &v in &vt {
+                assert!(
+                    (v_floor - 1e-9..=v_ceil + 1e-9).contains(&v),
+                    "seed {seed} {policy:?}: rail {v} escaped [{v_floor}, {v_ceil}]"
+                );
+            }
+            // PRV002: no strict step-down immediately after a step-up.
+            for e in 0..vt.len().saturating_sub(2) {
+                assert!(
+                    !(strict_up(e) && strict_down(e + 1)),
+                    "seed {seed} {policy:?}: thrash at epoch {e}"
+                );
+            }
+            // PRV003: total strict movement within the certified bound.
+            let moves = (0..vt.len() - 1)
+                .filter(|&e| strict_up(e) || strict_down(e))
+                .count();
+            assert!(
+                moves <= case.move_bound,
+                "seed {seed} {policy:?}: {moves} moves exceed certified bound {}",
+                case.move_bound
+            );
+            // PRV004: locked is absorbing — no step-down once locked.
+            for e in 0..vt.len() - 1 {
+                if locked_before.get(e) == Some(&true) {
+                    assert!(
+                        !strict_down(e),
+                        "seed {seed} {policy:?}: locked rail stepped down at epoch {e}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_refuted_configs_carry_replaying_counterexamples() {
+    use vstpu::calibrate::CalibrateConfig;
+    use vstpu::recover::{RecoverConfig, RecoveryPolicy};
+
+    let tech = Technology::academic_22nm();
+    let (_, v_floor) = vstpu::study::rail_bounds(&tech);
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 13_000);
+        // Alternate randomly between the two pathology families
+        // `CalibrateConfig::validate` exists to keep out: a zero
+        // cooldown (thrash) and a non-finite te-drop budget (the
+        // controller can neither compare nor react to its loss).
+        let mut cfg = CalibrateConfig::default();
+        cfg.step_v = cfg.resolved_step(&tech);
+        let expect_id = if rng.below(2) == 0 {
+            cfg.cooldown_epochs = 0;
+            "PRV002"
+        } else {
+            cfg.recover = RecoverConfig {
+                policy: RecoveryPolicy::TeDrop,
+                accuracy_budget: f64::NAN,
+            };
+            "PRV005"
+        };
+        let case = vstpu::prove::certify_raw(
+            &cfg,
+            &tech.name,
+            vstpu::prove::flow_name(&tech),
+            v_floor,
+            tech.v_nom,
+            vstpu::prove::DEFAULT_MAX_STATES,
+        )
+        .unwrap();
+        assert!(!case.certified, "seed {seed}: pathological config certified");
+        let mut violated = Vec::new();
+        for p in &case.properties {
+            if p.certified {
+                assert!(p.counterexample.is_none(), "seed {seed} {}", p.id);
+                continue;
+            }
+            violated.push(p.id);
+            let cex = p
+                .counterexample
+                .as_ref()
+                .expect("refuted property must carry a counterexample");
+            assert!(!cex.trace.is_empty(), "seed {seed} {}: empty trace", p.id);
+            assert!(
+                cex.replayed,
+                "seed {seed} {}: counterexample did not replay",
+                p.id
+            );
+        }
+        assert!(
+            violated.contains(&expect_id),
+            "seed {seed}: expected {expect_id} among {violated:?}"
+        );
+    }
+}
