@@ -8,7 +8,7 @@
 
 PYTHON ?= python3
 
-.PHONY: all build test pytest bench bench-build bench-serve bench-hotpath bench-recovery sweep calibrate check prove trend doc artifacts fmt lint clean
+.PHONY: all build test pytest bench bench-build bench-serve bench-hotpath bench-recovery bench-bram sweep calibrate check prove trend doc artifacts fmt lint clean
 
 all: build
 
@@ -63,6 +63,12 @@ calibrate:
 bench-recovery:
 	cargo run --release -- bench-recovery --quick --json
 	python3 bench/check_regression.py BENCH_recovery.json bench/baseline.json
+
+# CI smoke form of the S24 memory-rail A/B: calibrate once, price both
+# memory arms; writes BENCH_bram.json and gates it like CI does.
+bench-bram:
+	cargo run --release -- bench-bram --quick --json
+	python3 bench/check_regression.py BENCH_bram.json bench/baseline.json
 
 # CI smoke form of the S20 design-rule checker: re-derive the sweep
 # smoke grid + quick calibration trajectory and run the full rule

@@ -31,6 +31,14 @@ Dispatches on the current artifact's schema:
   te-drop arm did not converge below the none arm's voltage floor by
   at least the baseline ``recovery`` block's ``min_v_headroom`` —
   recovery that buys no voltage is a wiring bug, not a frontier.
+* ``vstpu-bench-bram/v1`` — the S24 memory-rail A/B gate. Fails when
+  either arm ("logic-only" / "split") is missing or did not converge,
+  a loss/energy field is missing or non-numeric (a missing loss must
+  never read as lossless), the split arm's joint accuracy loss escapes
+  the declared budget or exceeds the logic-only arm's, or the split
+  rail does not save at least the baseline ``bram`` block's
+  ``min_memory_savings`` uJ per request over the logic-only arm — a
+  second rail that buys no energy is a wiring bug, not a win.
 * ``vstpu-prove/v1`` — the S23 controller-certification gate. Fails
   when any (tech, policy) case refutes a property, a case's property
   set is not exactly ``PRV001``..``PRV005`` in catalog order (a shrunk
@@ -73,6 +81,7 @@ FILENAME_SCHEMAS = {
     "BENCH_sweep": "vstpu-bench-sweep/v1",
     "BENCH_hotpath": "vstpu-bench-hotpath/v1",
     "BENCH_recovery": "vstpu-bench-recovery/v1",
+    "BENCH_bram": "vstpu-bench-bram/v1",
     "CHECK_report": "vstpu-check/v1",
     "PROVE_report": "vstpu-prove/v1",
 }
@@ -97,6 +106,15 @@ HOTPATH_REQUIRED = [
     "wall_ms",
 ]
 RECOVERY_REQUIRED = ["schema", "requests", "accuracy_budget", "policies", "wall_s"]
+BRAM_REQUIRED = [
+    "schema",
+    "requests",
+    "buffer_words",
+    "accuracy_budget",
+    "logic_converged",
+    "arms",
+    "wall_s",
+]
 PROVE_REQUIRED = ["schema", "max_states", "certified", "cases"]
 # The full S23 property catalog, catalog order. The gate pins the exact
 # list: a case missing (or reordering) a property must fail closed —
@@ -383,6 +401,91 @@ def check_recovery(current: dict, baseline: dict, current_path: str) -> None:
     )
 
 
+def check_bram(current: dict, baseline: dict, current_path: str) -> None:
+    """The S24 memory-rail A/B gate over BENCH_bram.json."""
+    for key in BRAM_REQUIRED:
+        if key not in current:
+            die(f"{current_path} is missing required field '{key}'")
+    # Like-for-like only, same as the other gates.
+    if "quick" in baseline and current.get("quick") != baseline["quick"]:
+        die(
+            f"configuration mismatch: quick={current.get('quick')!r} vs "
+            f"baseline quick={baseline['quick']!r}"
+        )
+    require_wall(current, "wall_s", current_path)
+    if current["logic_converged"] is not True:
+        die("the shared logic calibration did not converge — both memory "
+            "arms ride on it, so the comparison is meaningless")
+    budget = require_number(current, "accuracy_budget", current_path)
+    arms = current["arms"]
+    if not isinstance(arms, list) or not arms:
+        die(f"arms is not a non-empty list: {arms!r}")
+    by_name = {}
+    for i, arm in enumerate(arms):
+        if not isinstance(arm, dict) or not arm.get("arm"):
+            die(f"arms[{i}] is not a named memory arm: {arm!r}")
+        name = arm["arm"]
+        if arm.get("memory_converged") is not True:
+            die(f"memory arm '{name}' did not converge")
+        v_mem = require_number(arm, "v_mem_final", f"arms[{i}]")
+        # Fail closed on the loss telemetry: the Rust renderer writes
+        # non-finite values as 0, and a *missing* loss field must never
+        # be read as lossless — require the numbers explicitly.
+        mem_loss = require_number(arm, "memory_loss", f"arms[{i}]")
+        total_loss = require_number(arm, "total_loss", f"arms[{i}]")
+        mem_mw = require_number(arm, "memory_mw", f"arms[{i}]")
+        energy = require_number(arm, "energy_uj_per_request", f"arms[{i}]")
+        if v_mem <= 0 or mem_mw <= 0 or energy <= 0:
+            die(
+                f"memory arm '{name}' carries a non-positive "
+                f"voltage/power/energy ({v_mem!r} V, {mem_mw!r} mW, "
+                f"{energy!r} uJ) — corrupted run"
+            )
+        if mem_loss < 0 or total_loss < 0:
+            die(f"memory arm '{name}' carries negative loss telemetry")
+        if name != "logic-only" and total_loss > budget + 1e-9:
+            die(
+                f"memory arm '{name}' joint accuracy loss {total_loss:.4f} "
+                f"escaped the declared budget {budget:.4f}"
+            )
+        by_name[name] = arm
+    for want in ("logic-only", "split"):
+        if want not in by_name:
+            die(
+                f"{current_path} has no '{want}' memory arm — the A/B "
+                f"comparison needs both"
+            )
+    bram_base = baseline.get("bram", {})
+    if not isinstance(bram_base, dict):
+        die(f"baseline 'bram' block is not an object: {bram_base!r}")
+    min_savings = bram_base.get("min_memory_savings", 1e-6)
+    if not isinstance(min_savings, (int, float)) or isinstance(min_savings, bool) \
+            or min_savings <= 0:
+        die(f"baseline min_memory_savings must be a positive number: {min_savings!r}")
+    logic = by_name["logic-only"]
+    split = by_name["split"]
+    if split["total_loss"] > logic["total_loss"] + 1e-9:
+        die(
+            f"the split arm gives up accuracy: joint loss "
+            f"{split['total_loss']:.4f} vs logic-only "
+            f"{logic['total_loss']:.4f}"
+        )
+    saved = logic["energy_uj_per_request"] - split["energy_uj_per_request"]
+    if saved < min_savings:
+        die(
+            f"split rail saves {saved:.6f} uJ/request over logic-only, "
+            f"below the gate minimum {min_savings} — the memory rail "
+            f"bought no energy"
+        )
+    print(
+        f"bench-smoke gate: OK — memory rail holds: split "
+        f"{split['energy_uj_per_request']:.4f} vs logic-only "
+        f"{logic['energy_uj_per_request']:.4f} uJ/request "
+        f"(saves {saved:.4f}), joint loss {split['total_loss']:.4f} <= "
+        f"budget {budget:.4f}, {len(arms)} memory arm(s)"
+    )
+
+
 def check_prove(current: dict, current_path: str) -> None:
     """The S23 controller-certification gate over PROVE_report.json."""
     for key in PROVE_REQUIRED:
@@ -583,6 +686,8 @@ def main(argv: list) -> None:
         check_hotpath(current, baseline, argv[1])
     elif schema == "vstpu-bench-recovery/v1":
         check_recovery(current, baseline, argv[1])
+    elif schema == "vstpu-bench-bram/v1":
+        check_bram(current, baseline, argv[1])
     elif schema == "vstpu-prove/v1":
         check_prove(current, argv[1])
     else:
@@ -654,6 +759,32 @@ def _selftest() -> None:
         "wall_s": 2.0,
     }
     GOOD_REC_BASE = {"quick": True, "recovery": {"min_v_headroom": 0.000001}}
+    GOOD_BRAM = {
+        "schema": "vstpu-bench-bram/v1",
+        "quick": True,
+        "requests": 4096,
+        "buffer_words": 4096,
+        "banks": 8,
+        "knee_v": 0.95,
+        "accuracy_budget": 0.05,
+        "logic_loss": 0.012,
+        "logic_uj_per_request": 0.12,
+        "logic_converged": True,
+        "arms": [
+            {"arm": "logic-only", "v_mem_final": 1.0, "memory_epochs": 0,
+             "memory_converged": True, "fault_bits": 0, "memory_loss": 0.0,
+             "expected_memory_loss": 0.0, "total_loss": 0.012,
+             "memory_mw": 16.0, "memory_uj_per_request": 0.04,
+             "energy_uj_per_request": 0.16},
+            {"arm": "split", "v_mem_final": 0.95, "memory_epochs": 6,
+             "memory_converged": True, "fault_bits": 0, "memory_loss": 0.0,
+             "expected_memory_loss": 0.0, "total_loss": 0.012,
+             "memory_mw": 14.67, "memory_uj_per_request": 0.0367,
+             "energy_uj_per_request": 0.1567},
+        ],
+        "wall_s": 2.0,
+    }
+    GOOD_BRAM_BASE = {"quick": True, "bram": {"min_memory_savings": 0.000001}}
 
     PROVE_NAMES = [
         "rail-clamp-bounds",
@@ -704,6 +835,16 @@ def _selftest() -> None:
             else:
                 rows[1][k] = v
         return dict(GOOD_REC, policies=rows)
+
+    def bram_with(**target):
+        """GOOD_BRAM with the split arm's fields overridden (None deletes)."""
+        rows = [dict(a) for a in GOOD_BRAM["arms"]]
+        for k, v in target.items():
+            if v is None:
+                rows[1].pop(k, None)
+            else:
+                rows[1][k] = v
+        return dict(GOOD_BRAM, arms=rows)
 
     tmp = tempfile.mkdtemp(prefix="vstpu-gate-selftest-")
 
@@ -839,6 +980,33 @@ def _selftest() -> None:
                      needle="bought no voltage"))
     cases.append(run("recovery clean", GOOD_REC, GOOD_REC_BASE, False,
                      current_name="BENCH_recovery.json"))
+
+    # Bram-gate guards (S24).
+    logic_only_arm = dict(GOOD_BRAM, arms=[dict(GOOD_BRAM["arms"][0])])
+    cases.append(run("bram missing split arm", logic_only_arm, GOOD_BRAM_BASE,
+                     True, current_name="BENCH_bram.json", needle="no 'split'"))
+    cases.append(run("bram arm not converged", bram_with(memory_converged=False),
+                     GOOD_BRAM_BASE, True, current_name="BENCH_bram.json",
+                     needle="did not converge"))
+    # The fail-closed guard: a missing memory_loss must never be read as
+    # a lossless arm.
+    cases.append(run("bram missing memory loss", bram_with(memory_loss=None),
+                     GOOD_BRAM_BASE, True, current_name="BENCH_bram.json",
+                     needle="not a number"))
+    cases.append(run("bram loss over budget", bram_with(total_loss=0.2),
+                     GOOD_BRAM_BASE, True, current_name="BENCH_bram.json",
+                     needle="escaped the declared budget"))
+    # Inside the budget but above the logic-only arm: the split rail
+    # must not trade accuracy for its energy win.
+    cases.append(run("bram split gives up accuracy", bram_with(total_loss=0.03),
+                     GOOD_BRAM_BASE, True, current_name="BENCH_bram.json",
+                     needle="gives up accuracy"))
+    cases.append(run("bram no energy savings",
+                     bram_with(energy_uj_per_request=0.16), GOOD_BRAM_BASE,
+                     True, current_name="BENCH_bram.json",
+                     needle="bought no energy"))
+    cases.append(run("bram clean", GOOD_BRAM, GOOD_BRAM_BASE, False,
+                     current_name="BENCH_bram.json"))
 
     # Prove-gate guards (S23).
     refuted = dict(GOOD_PROVE, certified=False, cases=[prove_case(

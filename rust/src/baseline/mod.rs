@@ -14,6 +14,15 @@
 //!   the cluster count grows (the ablation bench measures exactly that
 //!   gap).
 //! * **No scaling**: everything at `v_nom` — [`no_scaling`].
+//!
+//! S24 makes the Salami comparison memory-aware:
+//! [`whole_fpga_underscale_with_memory`] prices the same single shared
+//! rail when it must also feed the accumulator BRAM buffers. A shared
+//! rail cannot drop below the BRAM guard knee without corrupting
+//! partial sums, so the memory clamps how far the logic may underscale
+//! — the quantitative form of the paper's "single Vccint ... might not
+//! be the most power efficient" critique, and the scenario arm the
+//! sweep's `--memory split` axis beats.
 
 
 use crate::netlist::SystolicNetlist;
@@ -60,6 +69,32 @@ pub fn whole_fpga_underscale(
         v_low: v,
         v_high: v,
         total_mw: model.baseline_mw(netlist.mac_count(), v),
+    }
+}
+
+/// Salami-style single shared rail that also feeds the accumulator BRAM
+/// buffers (`buffer_words` of i32 partial sums). The rail cannot drop
+/// below the technology's BRAM guard knee — below it the buffers flip
+/// bits — so the logic underscale is clamped at
+/// `max(worst-MAC safe voltage + vs, knee)` and the bank power is paid
+/// at the same shared voltage.
+pub fn whole_fpga_underscale_with_memory(
+    model: &PowerModel,
+    netlist: &SystolicNetlist,
+    vs: f64,
+    buffer_words: usize,
+) -> BaselineResult {
+    let macs: Vec<_> = netlist.macs().collect();
+    let knee = crate::bram::knee_voltage(&model.tech);
+    let v = (min_safe_voltage(netlist, &model.tech, &macs, DEFAULT_TOGGLE) + vs)
+        .max(knee)
+        .min(model.tech.v_nom);
+    let banks = crate::bram::banks_for(buffer_words);
+    BaselineResult {
+        name: "whole-fpga-underscale+memory".into(),
+        v_low: v,
+        v_high: v,
+        total_mw: model.baseline_mw(netlist.mac_count(), v) + model.bram_mw(banks, v),
     }
 }
 
@@ -113,6 +148,29 @@ mod tests {
         assert!((single.v_low - ideal.v_high).abs() < 1e-9);
         assert_eq!(single.v_low, single.v_high);
         assert!(ideal.v_low < ideal.v_high);
+    }
+
+    #[test]
+    fn shared_memory_rail_clamps_at_the_knee_and_split_beats_it() {
+        let (m, nl) = setup();
+        let words = 4096;
+        let shared = whole_fpga_underscale_with_memory(&m, &nl, 0.0125, words);
+        // The shared rail never undercuts the BRAM guard knee ...
+        let knee = crate::bram::knee_voltage(&m.tech);
+        assert!(shared.v_low >= knee - 1e-12);
+        // ... and the logic-only underscale it is built from never sits
+        // above it (the memory can only hold the rail up, not down).
+        let logic_only = whole_fpga_underscale(&m, &nl, 0.0125);
+        assert!(logic_only.v_low <= shared.v_low + 1e-12);
+        // Splitting the rails — logic at its own underscale, memory
+        // pinned exactly at the knee — costs no more than the shared
+        // rail, and strictly less whenever the shared rail is clamped.
+        let banks = crate::bram::banks_for(words);
+        let split_mw = logic_only.total_mw + m.bram_mw(banks, knee);
+        assert!(split_mw <= shared.total_mw + 1e-9);
+        if shared.v_low > logic_only.v_low + 1e-12 {
+            assert!(split_mw < shared.total_mw);
+        }
     }
 
     #[test]

@@ -1,0 +1,789 @@
+//! S24 — Reduced-voltage BRAM fault modeling: the memory rail.
+//!
+//! The paper scales only the MAC *logic* rails; the reduced-voltage
+//! FPGA study of Salami et al. shows the on-chip BRAMs (the
+//! accumulator/weight buffers of a systolic array) hold most of the
+//! remaining undervolting margin — and fail first, with
+//! spatially-clustered bit flips, well inside the region where logic
+//! still meets timing. This module gives the buffers their own rail:
+//!
+//! * a per-tech voltage→bit-error-rate curve ([`bit_error_rate`]) with
+//!   a guard-band knee at `v_min` — exactly zero faults at or above
+//!   the knee, a cubic ramp below it anchored at the crash voltage;
+//! * a deterministic, location-correlated fault map ([`fault_map`]):
+//!   clustered flips keyed on tech + voltage + seed through the same
+//!   FNV-1a tagging the sweep uses for scenario seeds;
+//! * fault injection through the int8 accumulate path ([`inject`]), so
+//!   an undervolted memory produces a *measurable* accuracy loss next
+//!   to the timing-flag loss the Razor model already charges;
+//! * a closed-loop [`MemoryCalibrator`] that treats silent-corruption
+//!   telemetry as a step-up signal (BRAM faults carry no Razor flag —
+//!   there is nothing to replay), converging on the knee;
+//! * the [`run_bram_bench`] A/B harness behind `vstpu bench-bram`: a
+//!   logic-only rail configuration (memory pinned at `v_nom`) against
+//!   the split logic+memory configuration, sharing one calibrated
+//!   logic trajectory — `BENCH_bram.json`
+//!   (schema [`BENCH_SCHEMA`]) is CI's memory-rail energy gate.
+//!
+//! Everything here is byte-deterministic at a fixed seed; the only
+//! wall-clock measurement in the report is the `wall_s` line.
+
+use std::time::Instant;
+
+use crate::calibrate::{batch_seconds, run_calibrate, CalibrateBenchConfig};
+use crate::error::{Error, Result};
+use crate::power::PowerModel;
+use crate::tech::{FlowKind, Technology};
+use crate::util::{hash3, SplitMix64};
+
+/// Schema identifier of `BENCH_bram.json`.
+pub const BENCH_SCHEMA: &str = "vstpu-bench-bram/v1";
+
+/// Bits per buffered accumulator word (int8 MACs accumulate in i32).
+pub const WORD_BITS: u32 = 32;
+
+/// Words per physical BRAM bank (the power-model granularity).
+pub const BANK_WORDS: usize = 512;
+
+/// Modeled per-bank BRAM power (mW) at `v_nom` and the paper clock.
+pub const BANK_MW: f64 = 2.0;
+
+/// Fraction of BRAM power on the memory rail (cell arrays + sense
+/// amps); the rest is periphery on the fixed logic supply.
+pub const BRAM_KAPPA: f64 = 0.85;
+
+/// Per-bit error probability at the crash voltage — the anchor of the
+/// cubic BER ramp below the knee (Salami et al. report ~1e-3 per-bit
+/// fault rates at the lowest operable V_ccbram).
+pub const BER_AT_CRASH: f64 = 1e-3;
+
+/// BER saturation ceiling (a bit cannot be "more than random").
+pub const BER_CEIL: f64 = 0.5;
+
+/// Faults per spatial cluster in the fault map (Salami et al.: flips
+/// concentrate in a few physical columns, not uniformly).
+pub const CLUSTER_SPAN: usize = 8;
+
+/// Word-index spread (std-dev, words) of one fault cluster.
+pub const CLUSTER_SIGMA: f64 = 3.0;
+
+/// Memory-rail calibration step (V) — one Algorithm-2 step, the same
+/// granularity as the logic calibrator.
+pub const MEMORY_STEP_V: f64 = 0.0125;
+
+/// Epochs the memory calibrator holds after a step-up.
+pub const MEMORY_COOLDOWN_EPOCHS: u32 = 2;
+
+/// The guard-band knee of the BER curve: at or above `v_min` the
+/// vendor guarantees storage integrity, so the error rate is exactly
+/// zero; below it the cells start flipping.
+pub fn knee_voltage(tech: &Technology) -> f64 {
+    tech.v_min
+}
+
+/// The memory rail's legal range `(floor, ceil)`. The ceiling is
+/// `v_nom`; the floor is FlowKind-aware like `study::rail_bounds` —
+/// Vivado techs may not leave the vendor guard band (the knee itself),
+/// VTR techs may descend to the NTC floor and trade faults for energy.
+pub fn memory_rail_bounds(tech: &Technology) -> (f64, f64) {
+    let floor = match tech.flow {
+        FlowKind::Vivado => tech.v_min,
+        FlowKind::Vtr => tech.v_th + 0.02,
+    };
+    (floor, tech.v_nom)
+}
+
+/// Per-bit error probability of a BRAM cell at memory-rail voltage
+/// `v_mem`: exactly `0.0` at or above the knee, then a cubic ramp
+/// normalised so the crash voltage sits at [`BER_AT_CRASH`], saturating
+/// at [`BER_CEIL`]. Deliberately defined for *every* finite voltage —
+/// unlike the alpha-power-law delay model it never touches the `v_th`
+/// singularity, so figure sweeps may drive it below threshold.
+pub fn bit_error_rate(tech: &Technology, v_mem: f64) -> f64 {
+    let knee = knee_voltage(tech);
+    if v_mem >= knee {
+        return 0.0;
+    }
+    let depth = (knee - v_mem) / (knee - tech.v_crash);
+    (BER_AT_CRASH * depth.powi(3)).min(BER_CEIL)
+}
+
+/// Analytic, seed-free expected accuracy-loss proxy of running a
+/// `words`-word accumulator buffer at `v_mem`: the expected fraction
+/// of corrupted words (each faulty bit poisons one i32 partial sum),
+/// capped at 1. Exactly `0.0` at or above the knee — the sweep and the
+/// check rules use this as the memory half of the joint budget.
+pub fn expected_loss(tech: &Technology, v_mem: f64, words: usize) -> f64 {
+    if words == 0 {
+        return 0.0;
+    }
+    (bit_error_rate(tech, v_mem) * WORD_BITS as f64).min(1.0)
+}
+
+/// Relative memory-rail power factor at `v_mem`: the cell-array share
+/// ([`BRAM_KAPPA`]) scales quadratically with the rail, the periphery
+/// share does not. `1.0` at `v_nom`, strictly positive for every
+/// finite voltage.
+pub fn memory_power_factor(tech: &Technology, v_mem: f64) -> f64 {
+    (1.0 - BRAM_KAPPA) + BRAM_KAPPA * (v_mem / tech.v_nom).powi(2)
+}
+
+/// BRAM banks needed for a `words`-word buffer.
+pub fn banks_for(words: usize) -> usize {
+    words.div_ceil(BANK_WORDS)
+}
+
+/// The deterministic fault-map seed: the tech name FNV-1a-tagged (the
+/// same tagging `sweep::axis_tag` uses, so maps are keyed on axis
+/// *values*, not positions) folded with the rail bits and the run seed.
+pub fn map_seed(tech: &Technology, v_mem: f64, seed: u64) -> u64 {
+    let mut h = crate::serve::Fnv1a::new();
+    h.eat(tech.name.as_bytes());
+    hash3(seed, h.0, v_mem.to_bits())
+}
+
+/// A deterministic set of stuck bit flips in a `words`-word buffer:
+/// sorted, deduplicated `(word, bit)` pairs. Byte-identical for the
+/// same (tech, voltage, seed, words); empty at or above the knee.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultMap {
+    /// Buffer capacity the map was drawn for.
+    pub words: usize,
+    /// Sorted, deduplicated `(word index, bit index)` flips.
+    pub flips: Vec<(u32, u8)>,
+}
+
+impl FaultMap {
+    /// No faults at all (the map of any at-knee rail).
+    pub fn empty(words: usize) -> Self {
+        Self {
+            words,
+            flips: Vec::new(),
+        }
+    }
+}
+
+/// Draw the location-correlated fault map of a `words`-word buffer at
+/// `v_mem`: the expected fault count is `BER * words * 32`, placed as
+/// [`CLUSTER_SPAN`]-sized clusters around uniformly drawn centres with
+/// gaussian spread [`CLUSTER_SIGMA`] — the spatial correlation Salami
+/// et al. observe, rather than uniform flips.
+pub fn fault_map(tech: &Technology, v_mem: f64, words: usize, seed: u64) -> FaultMap {
+    if words == 0 {
+        return FaultMap::empty(0);
+    }
+    let ber = bit_error_rate(tech, v_mem);
+    let n_bits = (ber * words as f64 * WORD_BITS as f64).round() as usize;
+    if n_bits == 0 {
+        return FaultMap::empty(words);
+    }
+    let mut rng = SplitMix64::new(map_seed(tech, v_mem, seed));
+    let n_clusters = n_bits.div_ceil(CLUSTER_SPAN).max(1);
+    let mut flips: Vec<(u32, u8)> = Vec::with_capacity(n_bits);
+    for _ in 0..n_clusters {
+        let center = rng.below(words as u64) as f64;
+        let span = CLUSTER_SPAN.min(n_bits - flips.len());
+        for _ in 0..span {
+            let w = (center + rng.gauss() * CLUSTER_SIGMA)
+                .round()
+                .rem_euclid(words as f64) as u32;
+            let bit = rng.below(u64::from(WORD_BITS)) as u8;
+            flips.push((w, bit));
+        }
+    }
+    flips.sort_unstable();
+    flips.dedup();
+    FaultMap { words, flips }
+}
+
+/// XOR the map's bit flips into an i32 accumulator buffer (the int8
+/// accumulate path between `matmul_i8` and `requantize_i32`). Returns
+/// the number of flips applied; flips addressing past the buffer are
+/// skipped (a map drawn for a larger buffer degrades gracefully).
+pub fn inject(map: &FaultMap, acc: &mut [i32]) -> usize {
+    let mut applied = 0;
+    for &(w, bit) in &map.flips {
+        if let Some(slot) = acc.get_mut(w as usize) {
+            *slot ^= 1i32 << bit;
+            applied += 1;
+        }
+    }
+    applied
+}
+
+// ---------------------------------------------------------------------------
+// The memory-rail calibrator.
+// ---------------------------------------------------------------------------
+
+/// Closed-loop hysteresis controller for the memory rail, the BRAM
+/// twin of `calibrate::Calibrator`. The crucial asymmetry: BRAM faults
+/// are *silent* — no Razor shadow register flags them, nothing can
+/// replay them — so any observed corruption (or an analytic expected
+/// loss past the declared memory-fault budget) is an immediate step-up
+/// signal. With a zero budget the controller provably converges on the
+/// guard-band knee; a positive budget lets VTR techs trade faults for
+/// energy below it.
+#[derive(Debug, Clone)]
+pub struct MemoryCalibrator {
+    v: f64,
+    floor: f64,
+    ceil: f64,
+    step: f64,
+    cooldown: u32,
+    up_events: u32,
+    locked: bool,
+}
+
+impl MemoryCalibrator {
+    /// Controller for `tech`, starting at `v_nom` with the default
+    /// step, clamped to [`memory_rail_bounds`].
+    pub fn new(tech: &Technology) -> Self {
+        let (floor, ceil) = memory_rail_bounds(tech);
+        Self {
+            v: tech.v_nom,
+            floor,
+            ceil,
+            step: MEMORY_STEP_V,
+            cooldown: 0,
+            up_events: 0,
+            locked: false,
+        }
+    }
+
+    /// Same controller with the step size overridden.
+    pub fn with_step(mut self, step_v: f64) -> Self {
+        self.step = step_v;
+        self
+    }
+
+    /// Current memory-rail voltage.
+    pub fn v_mem(&self) -> f64 {
+        self.v
+    }
+
+    /// True once the second step-up locked the rail (frontier found).
+    pub fn locked(&self) -> bool {
+        self.locked
+    }
+
+    /// True when the controller cannot move any further: locked, or
+    /// pinned at the clamp floor (the Vivado guard band leaves no
+    /// voltage to probe below the knee).
+    pub fn converged(&self) -> bool {
+        self.locked || (self.v - self.floor).abs() < 1e-12
+    }
+
+    /// One epoch decision from the memory telemetry: `corrupted` is
+    /// the measured fraction of corrupted buffer words this epoch,
+    /// `loss` the analytic expected loss at the current rail, `budget`
+    /// the declared memory-fault budget. Steps up on any corruption or
+    /// a budget breach (locking on the second event, mirroring the
+    /// logic calibrator), steps down otherwise once the cooldown has
+    /// drained. Returns true when the rail moved.
+    pub fn end_epoch(&mut self, corrupted: f64, loss: f64, budget: f64) -> bool {
+        if self.locked {
+            return false;
+        }
+        if corrupted > 0.0 || loss > budget {
+            let prev = self.v;
+            self.v = (self.v + self.step).min(self.ceil);
+            self.cooldown = MEMORY_COOLDOWN_EPOCHS;
+            self.up_events += 1;
+            if self.up_events >= 2 {
+                self.locked = true;
+            }
+            return self.v != prev;
+        }
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return false;
+        }
+        let prev = self.v;
+        self.v = (self.v - self.step).max(self.floor);
+        self.v != prev
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The bench-bram A/B harness.
+// ---------------------------------------------------------------------------
+
+/// Configuration of one [`run_bram_bench`] run.
+#[derive(Debug, Clone)]
+pub struct BramBenchConfig {
+    /// The shared logic-side calibration run (tech, requests, seed, …).
+    pub base: CalibrateBenchConfig,
+    /// Accumulator-buffer capacity, words (one i32 partial sum each).
+    pub buffer_words: usize,
+    /// Joint accuracy budget: logic loss + memory loss must stay here.
+    pub accuracy_budget: f64,
+    /// Memory-rail calibration step (V).
+    pub memory_step_v: f64,
+    /// Memory-calibration epoch cap.
+    pub max_memory_epochs: usize,
+}
+
+impl BramBenchConfig {
+    /// Default harness for `tech`: the paper-default logic calibration
+    /// plus a 4096-word accumulator buffer under a 5% joint budget.
+    pub fn paper_default(tech: Technology) -> Self {
+        Self {
+            base: CalibrateBenchConfig::paper_default(tech),
+            buffer_words: 4096,
+            accuracy_budget: 0.05,
+            memory_step_v: MEMORY_STEP_V,
+            max_memory_epochs: 48,
+        }
+    }
+
+    /// The CI smoke configuration (`vstpu bench-bram --quick`).
+    pub fn quick(tech: Technology) -> Self {
+        let mut cfg = Self::paper_default(tech.clone());
+        cfg.base = CalibrateBenchConfig::quick(tech);
+        cfg.max_memory_epochs = 24;
+        cfg
+    }
+
+    /// Reject configurations the harness cannot run deterministically.
+    pub fn validate(&self) -> Result<()> {
+        if self.buffer_words == 0 || self.buffer_words % 64 != 0 {
+            return Err(Error::Bram(format!(
+                "buffer_words {} must be a positive multiple of 64 \
+                 (the measurement tile width)",
+                self.buffer_words
+            )));
+        }
+        if !self.accuracy_budget.is_finite()
+            || self.accuracy_budget <= 0.0
+            || self.accuracy_budget >= 1.0
+        {
+            return Err(Error::Bram(format!(
+                "accuracy_budget {} outside (0, 1)",
+                self.accuracy_budget
+            )));
+        }
+        if !self.memory_step_v.is_finite()
+            || self.memory_step_v <= 0.0
+            || self.memory_step_v > 0.1
+        {
+            return Err(Error::Bram(format!(
+                "memory_step_v {} outside (0, 0.1]",
+                self.memory_step_v
+            )));
+        }
+        if self.max_memory_epochs == 0 {
+            return Err(Error::Bram("max_memory_epochs must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+/// One rail configuration of the A/B comparison.
+#[derive(Debug, Clone)]
+pub struct BramArm {
+    /// `"logic-only"` (memory pinned at `v_nom`) or `"split"`.
+    pub arm: &'static str,
+    /// Final memory-rail voltage.
+    pub v_mem_final: f64,
+    /// Memory-calibration epochs consumed (0 for the pinned arm).
+    pub memory_epochs: usize,
+    /// True when the memory rail locked or pinned at its clamp floor.
+    pub memory_converged: bool,
+    /// Bit flips in the final-rail fault map.
+    pub fault_bits: usize,
+    /// Measured accuracy loss through the int8 accumulate path
+    /// (fraction of requantized outputs the injected faults changed).
+    pub memory_loss: f64,
+    /// Analytic expected loss at the final rail.
+    pub expected_memory_loss: f64,
+    /// Logic loss + measured memory loss.
+    pub total_loss: f64,
+    /// Memory-rail power at the final voltage, mW.
+    pub memory_mw: f64,
+    /// Memory-rail energy share per request, microjoules.
+    pub memory_uj_per_request: f64,
+    /// Combined (logic + memory) energy per request, microjoules.
+    pub energy_uj_per_request: f64,
+}
+
+/// Everything one `bench-bram` run produces —
+/// `report::bench_bram_json` renders it as `BENCH_bram.json`.
+#[derive(Debug, Clone)]
+pub struct BramReport {
+    /// Schema identifier ([`BENCH_SCHEMA`]).
+    pub schema: &'static str,
+    /// CI smoke mode flag.
+    pub quick: bool,
+    /// Technology preset name.
+    pub tech: String,
+    /// Runtime backend the logic calibration served on.
+    pub backend: String,
+    /// Workload seed.
+    pub seed: u64,
+    /// Requests the logic calibration served.
+    pub requests: u64,
+    /// Accumulator-buffer capacity, words.
+    pub buffer_words: usize,
+    /// BRAM banks backing the buffer.
+    pub banks: usize,
+    /// The guard-band knee of the BER curve (V).
+    pub knee_v: f64,
+    /// Joint accuracy budget.
+    pub accuracy_budget: f64,
+    /// Accuracy loss of the shared logic calibration.
+    pub logic_loss: f64,
+    /// Energy per request of the shared logic rails, microjoules.
+    pub logic_uj_per_request: f64,
+    /// True when the logic calibration converged.
+    pub logic_converged: bool,
+    /// The two rail configurations, logic-only first.
+    pub arms: Vec<BramArm>,
+    /// Wall time (measurement; excluded from the determinism contract).
+    pub wall_s: f64,
+}
+
+/// Measured accuracy loss of the final-rail fault map through the int8
+/// accumulate path: a seeded `m x 64 . 64 x 64` tile is multiplied
+/// clean and with the map injected into the i32 accumulators, both are
+/// requantized, and the loss is the fraction of differing outputs. An
+/// empty map is exactly lossless by construction.
+fn measured_loss(tech: &Technology, map: &FaultMap, seed: u64) -> f64 {
+    if map.flips.is_empty() {
+        return 0.0;
+    }
+    let (k, n) = (64usize, 64usize);
+    let m = map.words / n;
+    let mut rng = SplitMix64::new(hash3(seed, map.words as u64, 0xB4A3));
+    let x: Vec<i8> = (0..m * k).map(|_| rng.next_i8()).collect();
+    let w: Vec<i8> = (0..k * n).map(|_| rng.next_i8()).collect();
+    let clean = crate::runtime::matmul_i8(&x, &w, m, k, n);
+    let mut faulty = clean.clone();
+    inject(map, &mut faulty);
+    let scale = (1.0 / (8.0 * (k as f64).sqrt() * 24.0)) as f32;
+    let clean_q = crate::runtime::requantize_i32(&clean, scale);
+    let faulty_q = crate::runtime::requantize_i32(&faulty, scale);
+    let differing = clean_q
+        .iter()
+        .zip(&faulty_q)
+        .filter(|(a, b)| a != b)
+        .count();
+    differing as f64 / clean_q.len() as f64
+}
+
+/// Run the memory-rail A/B harness: one shared logic calibration, then
+/// the `logic-only` arm (memory pinned at `v_nom`) against the `split`
+/// arm (memory rail walked to its frontier by the
+/// [`MemoryCalibrator`] under a zero memory-fault budget — the knee).
+/// Fails closed ([`Error::Bram`]) on any non-finite loss or energy, so
+/// the JSON gate never sees a silently-zeroed field.
+pub fn run_bram_bench(artifacts_dir: &std::path::Path, cfg: BramBenchConfig) -> Result<BramReport> {
+    cfg.validate()?;
+    let t0 = Instant::now();
+    let tech = cfg.base.coordinator.tech.clone();
+    let batch = cfg.base.coordinator.batch;
+    let clock_mhz = cfg.base.coordinator.clock_mhz;
+    let seed = cfg.base.seed;
+    let words = cfg.buffer_words;
+    let banks = banks_for(words);
+
+    // The logic side runs once and is shared by both arms: the memory
+    // rail never changes clustering, partitions or the timing physics
+    // (the same reasoning that keeps `rail_fault_v` out of the
+    // hotcache substrate key).
+    let logic = run_calibrate(artifacts_dir, cfg.base.clone())?;
+    if !logic.energy_uj_after.is_finite() || logic.energy_uj_after <= 0.0 {
+        return Err(Error::Bram(format!(
+            "logic calibration produced non-physical energy {}",
+            logic.energy_uj_after
+        )));
+    }
+    if !logic.accuracy_loss_final.is_finite() || logic.accuracy_loss_final < 0.0 {
+        return Err(Error::Bram(format!(
+            "logic calibration produced non-physical loss {}",
+            logic.accuracy_loss_final
+        )));
+    }
+
+    let model = PowerModel::new(tech.clone(), clock_mhz);
+    let request_s = batch_seconds(batch, clock_mhz) / batch as f64;
+    let mut arms = Vec::with_capacity(2);
+    for arm in ["logic-only", "split"] {
+        let (v_mem, epochs, converged) = if arm == "logic-only" {
+            (tech.v_nom, 0, true)
+        } else {
+            // Walk the memory rail down with silent-corruption
+            // telemetry: each epoch samples the fault map at the
+            // current rail (the measured corrupted-word fraction) and
+            // the analytic expected loss; a zero memory-fault budget
+            // makes the knee the provable convergence target.
+            let mut cal = MemoryCalibrator::new(&tech).with_step(cfg.memory_step_v);
+            let mut epochs = 0;
+            while epochs < cfg.max_memory_epochs && !cal.locked() {
+                let map = fault_map(&tech, cal.v_mem(), words, seed.wrapping_add(epochs as u64));
+                let corrupted = map.flips.len() as f64 / words as f64;
+                let loss = expected_loss(&tech, cal.v_mem(), words);
+                cal.end_epoch(corrupted, loss, 0.0);
+                epochs += 1;
+            }
+            (cal.v_mem(), epochs, cal.converged())
+        };
+        let map = fault_map(&tech, v_mem, words, seed);
+        let memory_loss = measured_loss(&tech, &map, seed);
+        let expected = expected_loss(&tech, v_mem, words);
+        let memory_mw = model.bram_mw(banks, v_mem);
+        let memory_uj = memory_mw * request_s * 1e3;
+        let energy_uj = logic.energy_uj_after + memory_uj;
+        let total_loss = logic.accuracy_loss_final + memory_loss;
+        for (name, value) in [
+            ("memory_loss", memory_loss),
+            ("total_loss", total_loss),
+            ("memory_mw", memory_mw),
+            ("energy_uj_per_request", energy_uj),
+        ] {
+            if !value.is_finite() || value < 0.0 {
+                return Err(Error::Bram(format!(
+                    "{arm} arm produced non-physical {name} = {value}"
+                )));
+            }
+        }
+        arms.push(BramArm {
+            arm,
+            v_mem_final: v_mem,
+            memory_epochs: epochs,
+            memory_converged: converged,
+            fault_bits: map.flips.len(),
+            memory_loss,
+            expected_memory_loss: expected,
+            total_loss,
+            memory_mw,
+            memory_uj_per_request: memory_uj,
+            energy_uj_per_request: energy_uj,
+        });
+    }
+
+    Ok(BramReport {
+        schema: BENCH_SCHEMA,
+        quick: cfg.base.quick,
+        tech: tech.name.clone(),
+        backend: logic.backend.clone(),
+        seed,
+        requests: logic.requests,
+        buffer_words: words,
+        banks,
+        knee_v: knee_voltage(&tech),
+        accuracy_budget: cfg.accuracy_budget,
+        logic_loss: logic.accuracy_loss_final,
+        logic_uj_per_request: logic.energy_uj_after,
+        logic_converged: logic.converged,
+        arms,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Human-readable rendering of a [`BramReport`].
+pub fn render(rep: &BramReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "bench-bram: {} — {} words / {} banks, knee {:.3} V, joint budget {:.3}\n",
+        rep.tech, rep.buffer_words, rep.banks, rep.knee_v, rep.accuracy_budget
+    ));
+    out.push_str(&format!(
+        "  logic rails: {:.3} uJ/req, loss {:.5}, converged {}\n",
+        rep.logic_uj_per_request, rep.logic_loss, rep.logic_converged
+    ));
+    out.push_str("  arm         v_mem   faults  mem-loss  total-loss  mem mW    uJ/req\n");
+    for a in &rep.arms {
+        out.push_str(&format!(
+            "  {:<10}  {:.4}  {:>6}  {:>8.5}  {:>10.5}  {:>6.3}  {:>8.4}\n",
+            a.arm,
+            a.v_mem_final,
+            a.fault_bits,
+            a.memory_loss,
+            a.total_loss,
+            a.memory_mw,
+            a.energy_uj_per_request
+        ));
+    }
+    if let [logic_only, split] = rep.arms.as_slice() {
+        let saved = logic_only.energy_uj_per_request - split.energy_uj_per_request;
+        out.push_str(&format!(
+            "  split saves {saved:.4} uJ/req ({:.2}% of the memory rail)\n",
+            100.0 * (logic_only.memory_uj_per_request - split.memory_uj_per_request)
+                / logic_only.memory_uj_per_request.max(f64::MIN_POSITIVE)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ber_is_zero_at_and_above_the_knee() {
+        for tech in Technology::paper_suite() {
+            let knee = knee_voltage(&tech);
+            for v in [knee, knee + 0.01, tech.v_nom, tech.v_nom + 0.2] {
+                assert_eq!(bit_error_rate(&tech, v), 0.0, "{} at {v}", tech.name);
+            }
+            assert!(bit_error_rate(&tech, knee - 1e-6) > 0.0, "{}", tech.name);
+        }
+    }
+
+    #[test]
+    fn ber_anchors_at_the_crash_voltage() {
+        for tech in Technology::paper_suite() {
+            let ber = bit_error_rate(&tech, tech.v_crash);
+            assert!(
+                (ber - BER_AT_CRASH).abs() < 1e-12,
+                "{}: {ber}",
+                tech.name
+            );
+        }
+    }
+
+    #[test]
+    fn ber_is_monotone_below_the_knee() {
+        for tech in Technology::paper_suite() {
+            let knee = knee_voltage(&tech);
+            let mut prev = 0.0;
+            let mut v = knee;
+            while v > 0.05 {
+                let ber = bit_error_rate(&tech, v);
+                assert!(ber >= prev, "{} at {v}: {ber} < {prev}", tech.name);
+                prev = ber;
+                v -= 0.01;
+            }
+            assert!(prev <= BER_CEIL);
+        }
+    }
+
+    #[test]
+    fn memory_bounds_follow_the_flow() {
+        let vivado = Technology::artix7_28nm();
+        let (floor, ceil) = memory_rail_bounds(&vivado);
+        assert_eq!(floor, vivado.v_min);
+        assert_eq!(ceil, vivado.v_nom);
+        let vtr = Technology::academic_22nm();
+        let (floor, _) = memory_rail_bounds(&vtr);
+        assert!((floor - (vtr.v_th + 0.02)).abs() < 1e-12);
+        assert!(floor < knee_voltage(&vtr));
+    }
+
+    #[test]
+    fn memory_power_factor_is_one_at_nominal_and_positive_everywhere() {
+        for tech in Technology::paper_suite() {
+            assert!((memory_power_factor(&tech, tech.v_nom) - 1.0).abs() < 1e-12);
+            for v in [0.0, 0.1, tech.v_th, tech.v_min, 1.3] {
+                assert!(memory_power_factor(&tech, v) > 0.0);
+            }
+            assert!(memory_power_factor(&tech, tech.v_min) < 1.0);
+        }
+    }
+
+    #[test]
+    fn fault_map_is_empty_at_the_knee_and_pure() {
+        let tech = Technology::academic_22nm();
+        let knee = knee_voltage(&tech);
+        assert_eq!(fault_map(&tech, knee, 4096, 7), FaultMap::empty(4096));
+        let a = fault_map(&tech, 0.90, 4096, 7);
+        let b = fault_map(&tech, 0.90, 4096, 7);
+        assert_eq!(a, b);
+        assert!(!a.flips.is_empty());
+        assert!(a.flips.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
+        assert!(a.flips.iter().all(|&(w, bit)| (w as usize) < 4096 && bit < 32));
+    }
+
+    #[test]
+    fn inject_is_an_involution() {
+        let tech = Technology::academic_45nm();
+        let map = fault_map(&tech, 0.89, 1024, 3);
+        assert!(!map.flips.is_empty());
+        let mut acc: Vec<i32> = (0..1024).map(|i| i * 17 - 9000).collect();
+        let orig = acc.clone();
+        inject(&map, &mut acc);
+        assert_ne!(acc, orig);
+        inject(&map, &mut acc);
+        assert_eq!(acc, orig, "deduped flips XOR back to the original");
+    }
+
+    #[test]
+    fn memory_calibrator_locks_on_the_knee_under_zero_budget() {
+        for tech in [Technology::academic_22nm(), Technology::academic_45nm()] {
+            let mut cal = MemoryCalibrator::new(&tech);
+            let knee = knee_voltage(&tech);
+            for _ in 0..48 {
+                if cal.locked() {
+                    break;
+                }
+                let loss = expected_loss(&tech, cal.v_mem(), 4096);
+                cal.end_epoch(0.0, loss, 0.0);
+            }
+            assert!(cal.locked(), "{}", tech.name);
+            assert!(
+                (cal.v_mem() - knee).abs() < 1e-12,
+                "{}: locked at {} not the knee {}",
+                tech.name,
+                cal.v_mem(),
+                knee
+            );
+        }
+    }
+
+    #[test]
+    fn memory_calibrator_pins_at_the_guard_band_on_vivado() {
+        let tech = Technology::artix7_28nm();
+        let mut cal = MemoryCalibrator::new(&tech);
+        for _ in 0..48 {
+            let loss = expected_loss(&tech, cal.v_mem(), 4096);
+            cal.end_epoch(0.0, loss, 0.0);
+        }
+        assert!(!cal.locked(), "the floor is the knee — nothing to probe");
+        assert!(cal.converged());
+        assert!((cal.v_mem() - tech.v_min).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_calibrator_descends_below_the_knee_under_a_real_budget() {
+        let tech = Technology::academic_22nm();
+        let mut cal = MemoryCalibrator::new(&tech);
+        let budget = 0.02;
+        for _ in 0..96 {
+            if cal.locked() {
+                break;
+            }
+            let loss = expected_loss(&tech, cal.v_mem(), 4096);
+            cal.end_epoch(0.0, loss, budget);
+        }
+        assert!(cal.locked());
+        assert!(cal.v_mem() < knee_voltage(&tech), "budget buys sub-knee margin");
+        assert!(expected_loss(&tech, cal.v_mem(), 4096) <= budget);
+    }
+
+    #[test]
+    fn bench_config_validation_rejects_broken_knobs() {
+        let ok = BramBenchConfig::quick(Technology::academic_22nm());
+        assert!(ok.validate().is_ok());
+        let mut c = ok.clone();
+        c.buffer_words = 100;
+        assert!(c.validate().is_err());
+        let mut c = ok.clone();
+        c.accuracy_budget = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ok.clone();
+        c.memory_step_v = -0.0125;
+        assert!(c.validate().is_err());
+        let mut c = ok;
+        c.max_memory_epochs = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn measured_loss_is_zero_for_an_empty_map_and_positive_under_deep_faults() {
+        let tech = Technology::academic_22nm();
+        assert_eq!(measured_loss(&tech, &FaultMap::empty(4096), 7), 0.0);
+        let map = fault_map(&tech, 0.88, 4096, 7);
+        assert!(!map.flips.is_empty());
+        assert!(measured_loss(&tech, &map, 7) > 0.0);
+    }
+}

@@ -615,8 +615,11 @@ pub fn batch_seconds(batch: usize, clock_mhz: f64) -> f64 {
 
 /// Energy per request (microjoules) at the given rails: model power at
 /// `DEFAULT_TOGGLE` activity times the batch service time, split across
-/// the batch. Purely model-based, hence byte-deterministic.
-fn energy_uj_per_request(
+/// the batch. Purely model-based, hence byte-deterministic. Public
+/// since S24 so memory-rail harnesses can price logic rails with the
+/// same recipe (`bench-bram` shares the [`batch_seconds`] denominator,
+/// keeping its logic and memory energy figures directly comparable).
+pub fn energy_uj_per_request(
     model: &PowerModel,
     template: &[Partition],
     rails: &[f64],

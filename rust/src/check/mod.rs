@@ -36,6 +36,11 @@
 //!   a runtime-calibrated configuration must carry a green
 //!   state-space certificate of its calibration controller
 //!   ([`crate::prove`]); refuted is an error, missing a warning.
+//! * **Memory rail** (`VST022`..`VST023`) — the S24 split-rail claims:
+//!   a declared memory rail must stay inside the technology's BRAM
+//!   bounds ([`crate::bram::memory_rail_bounds`]), and the joint
+//!   (timing + expected memory fault) accuracy loss of a calibrated
+//!   configuration must honour the declared joint budget.
 //!
 //! Severities are calibration-aware: a Razor flag (or silent MAC) on a
 //! *runtime-calibrated* rail contradicts the calibration claim and is a
@@ -155,11 +160,18 @@ pub enum Rule {
     /// green state-space certificate (`vstpu prove`, S23): refuted is
     /// an error, missing is a warning.
     ProofCertified,
+    /// VST022 — a declared memory rail is non-finite or outside the
+    /// technology's BRAM rail bounds.
+    MemoryRailBounds,
+    /// VST023 — the joint (timing + expected memory fault) accuracy
+    /// loss of a calibrated configuration exceeds its declared joint
+    /// budget.
+    JointAccuracyBudget,
 }
 
 impl Rule {
     /// Every rule, in id order.
-    pub const ALL: [Rule; 21] = [
+    pub const ALL: [Rule; 23] = [
         Rule::TimingSilent,
         Rule::TimingFlagged,
         Rule::RailOrdering,
@@ -181,9 +193,11 @@ impl Rule {
         Rule::RecoveryPolicyMissing,
         Rule::RecoveryBudget,
         Rule::ProofCertified,
+        Rule::MemoryRailBounds,
+        Rule::JointAccuracyBudget,
     ];
 
-    /// Stable rule id (`VST001`..`VST021`).
+    /// Stable rule id (`VST001`..`VST023`).
     pub fn id(self) -> &'static str {
         match self {
             Rule::TimingSilent => "VST001",
@@ -207,6 +221,8 @@ impl Rule {
             Rule::RecoveryPolicyMissing => "VST019",
             Rule::RecoveryBudget => "VST020",
             Rule::ProofCertified => "VST021",
+            Rule::MemoryRailBounds => "VST022",
+            Rule::JointAccuracyBudget => "VST023",
         }
     }
 
@@ -234,6 +250,8 @@ impl Rule {
             Rule::RecoveryPolicyMissing => "recovery-policy",
             Rule::RecoveryBudget => "recovery-budget",
             Rule::ProofCertified => "proof-certified",
+            Rule::MemoryRailBounds => "memory-rail-bounds",
+            Rule::JointAccuracyBudget => "joint-accuracy-budget",
         }
     }
 
@@ -278,6 +296,12 @@ impl Rule {
             }
             Rule::ProofCertified => {
                 "a calibrated configuration's controller carries a green state-space certificate"
+            }
+            Rule::MemoryRailBounds => {
+                "a declared memory rail stays inside the technology's BRAM rail bounds"
+            }
+            Rule::JointAccuracyBudget => {
+                "the joint timing + memory accuracy loss stays inside the declared joint budget"
             }
         }
     }
@@ -456,6 +480,23 @@ pub struct Trajectory {
     pub rails: Vec<RailTrace>,
 }
 
+/// The S24 memory-rail contract a producing pipeline declares: the
+/// buffers' rail, their size, the timing loss already measured and the
+/// joint budget both loss terms together must honour. Judged by
+/// `VST022`/`VST023` ([`check_memory`]).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryContract {
+    /// Declared memory-rail voltage (V).
+    pub v_mem: f64,
+    /// Accumulator/weight buffer size, i32 words.
+    pub buffer_words: usize,
+    /// Policy-weighted timing accuracy loss the configuration measured.
+    pub timing_loss: f64,
+    /// Budget the joint (timing + expected memory fault) loss must
+    /// stay inside.
+    pub joint_budget: f64,
+}
+
 /// Everything the checker inspects, borrowed from the producing
 /// pipeline. Built with [`CheckInput::new`] plus the `with_*` setters.
 #[derive(Debug)]
@@ -489,6 +530,10 @@ pub struct CheckInput<'a> {
     /// `None` = never certified (legacy caller or proving disabled).
     /// Judged by `VST021` on calibrated configurations only.
     pub proof: Option<bool>,
+    /// Declared S24 memory-rail contract, when the producing pipeline
+    /// split the buffers onto their own rail. `None` (legacy callers,
+    /// nominal-supply buffers) skips `VST022`/`VST023` entirely.
+    pub memory: Option<MemoryContract>,
     /// Context tag copied onto every diagnostic.
     pub scope: String,
 }
@@ -513,6 +558,7 @@ impl<'a> CheckInput<'a> {
             calibrated: true,
             recovery: None,
             proof: None,
+            memory: None,
             scope: String::new(),
         }
     }
@@ -557,6 +603,13 @@ impl<'a> CheckInput<'a> {
         self
     }
 
+    /// Declare the S24 memory-rail contract (enables
+    /// `VST022`/`VST023`).
+    pub fn with_memory(mut self, memory: MemoryContract) -> Self {
+        self.memory = Some(memory);
+        self
+    }
+
     /// Tag every diagnostic with a context string.
     pub fn with_scope(mut self, scope: impl Into<String>) -> Self {
         self.scope = scope.into();
@@ -581,6 +634,9 @@ pub fn check(input: &CheckInput<'_>) -> CheckReport {
         diags.extend(check_trajectory(t));
     }
     diags.extend(check_proof(input.calibrated, input.proof));
+    if let Some(m) = &input.memory {
+        diags.extend(check_memory(input.tech, m, input.calibrated));
+    }
     for d in &mut diags {
         d.scope.clone_from(&input.scope);
     }
@@ -616,6 +672,48 @@ pub fn check_proof(calibrated: bool, proof: Option<bool>) -> Vec<Diagnostic> {
             "calibrated configuration carries no static controller certificate".into(),
         )],
     }
+}
+
+/// `VST022`/`VST023`: the S24 memory-rail contract. The rail must be
+/// finite and inside [`crate::bram::memory_rail_bounds`] for the
+/// technology (`VST022`); on a *calibrated* configuration the joint
+/// timing + expected-memory-fault loss must honour the declared joint
+/// budget (`VST023` — on static Algorithm-1 rails the timing loss is
+/// not yet a claim, mirroring the `VST020` scoping).
+pub fn check_memory(tech: &Technology, m: &MemoryContract, calibrated: bool) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let (v_lo, v_hi) = crate::bram::memory_rail_bounds(tech);
+    if !m.v_mem.is_finite() || m.v_mem < v_lo - EPS_V || m.v_mem > v_hi + EPS_V {
+        out.push(diag(
+            Rule::MemoryRailBounds,
+            Severity::Error,
+            Location::Global,
+            format!(
+                "memory rail {} V outside the {} BRAM bounds [{:.3}, {:.3}] V",
+                m.v_mem, tech.name, v_lo, v_hi
+            ),
+        ));
+        // The BER curve is only meaningful inside the bounds; judging
+        // the joint budget on a non-physical rail would double-report.
+        return out;
+    }
+    if calibrated {
+        let mem_loss = crate::bram::expected_loss(tech, m.v_mem, m.buffer_words);
+        let joint = m.timing_loss + mem_loss;
+        if !joint.is_finite() || joint > m.joint_budget + EPS_V {
+            out.push(diag(
+                Rule::JointAccuracyBudget,
+                Severity::Error,
+                Location::Global,
+                format!(
+                    "joint accuracy loss {joint:.4} (timing {:.4} + expected memory {:.4} at \
+                     {:.3} V over {} words) exceeds the declared joint budget {:.4}",
+                    m.timing_loss, mem_loss, m.v_mem, m.buffer_words, m.joint_budget
+                ),
+            ));
+        }
+    }
+    out
 }
 
 // ---------------------------------------------------------------------
@@ -1417,7 +1515,7 @@ mod tests {
     #[test]
     fn rule_ids_are_stable_unique_and_sequential() {
         let ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
-        assert_eq!(ids.len(), 21);
+        assert_eq!(ids.len(), 23);
         for (i, id) in ids.iter().enumerate() {
             assert_eq!(*id, format!("VST{:03}", i + 1));
         }
@@ -1603,6 +1701,57 @@ mod tests {
         let d = check_proof(true, None);
         assert!(fires(&d, Rule::ProofCertified));
         assert_eq!(d[0].severity, Severity::Warn);
+    }
+
+    #[test]
+    fn memory_rules_judge_bounds_and_joint_budget() {
+        let vtr = Technology::academic_22nm();
+        let (lo, hi) = crate::bram::memory_rail_bounds(&vtr);
+        let ok = MemoryContract {
+            v_mem: crate::bram::knee_voltage(&vtr),
+            buffer_words: 4096,
+            timing_loss: 0.01,
+            joint_budget: 0.05,
+        };
+        assert!(check_memory(&vtr, &ok, true).is_empty());
+        // Rails exactly on either bound pass (EPS_V slack).
+        assert!(check_memory(&vtr, &MemoryContract { v_mem: lo, ..ok }, true).is_empty());
+        assert!(check_memory(&vtr, &MemoryContract { v_mem: hi, ..ok }, true).is_empty());
+        // VST022: outside the bounds, or non-finite.
+        for bad in [lo - 0.01, hi + 0.01, f64::NAN] {
+            let d = check_memory(&vtr, &MemoryContract { v_mem: bad, ..ok }, true);
+            assert!(fires(&d, Rule::MemoryRailBounds), "v_mem {bad}");
+            assert!(!fires(&d, Rule::JointAccuracyBudget), "no double-report");
+        }
+        // The Vivado flow pins the lower bound at the guard band.
+        let vivado = Technology::artix7_28nm();
+        let (vlo, _) = crate::bram::memory_rail_bounds(&vivado);
+        assert_eq!(vlo, vivado.v_min);
+        let d = check_memory(
+            &vivado,
+            &MemoryContract { v_mem: vivado.v_min - 0.02, ..ok },
+            true,
+        );
+        assert!(fires(&d, Rule::MemoryRailBounds));
+        // VST023: a sub-knee rail's expected fault loss joins the
+        // timing loss against the budget — calibrated only.
+        let deep = MemoryContract {
+            v_mem: lo,
+            buffer_words: 4096,
+            timing_loss: 0.0,
+            joint_budget: 1e-9,
+        };
+        assert!(crate::bram::expected_loss(&vtr, lo, 4096) > 0.0);
+        let d = check_memory(&vtr, &deep, true);
+        assert!(fires(&d, Rule::JointAccuracyBudget));
+        assert!(check_memory(&vtr, &deep, false).is_empty(), "static rails skip VST023");
+        // A blown timing loss alone also trips the joint budget.
+        let d = check_memory(
+            &vtr,
+            &MemoryContract { timing_loss: 0.06, ..ok },
+            true,
+        );
+        assert!(fires(&d, Rule::JointAccuracyBudget));
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+use vstpu::bram::{run_bram_bench, BramBenchConfig};
 use vstpu::cadflow::{CadFlow, FlowConfig, PartitionScheme};
 use vstpu::calibrate::{run_calibrate, CalibrateBenchConfig};
 use vstpu::cluster::{hierarchical, Algorithm};
@@ -13,7 +14,7 @@ use vstpu::netlist::SystolicNetlist;
 use vstpu::recover::{run_recovery_bench, RecoveryBenchConfig, RecoveryPolicy};
 use vstpu::report;
 use vstpu::serve::BenchConfig;
-use vstpu::sweep::{RailMode, SweepAlgo, SweepConfig};
+use vstpu::sweep::{MemoryRailMode, RailMode, SweepAlgo, SweepConfig};
 use vstpu::tech::Technology;
 use vstpu::timing;
 use vstpu::workload::{Batch, FluctuationProfile};
@@ -58,6 +59,17 @@ COMMANDS
                     --requests N (8192)  --seed N (7)
                     --policies none,replay,te-drop  --budget F (0.05)
                     --quick (CI smoke)  --json  --out FILE
+  bench-bram      S24 memory-rail A/B: run the logic calibration once,
+                    then price the accumulator BRAM buffers on a nominal
+                    supply against a split memory rail calibrated down
+                    to the guard-band knee (zero injected faults); the
+                    split arm must match the logic-only arm's joint
+                    accuracy at strictly lower energy per request; --json
+                    writes BENCH_bram.json (vstpu-bench-bram/v1)
+                    --tech NAME (academic-22nm)  --shards N (2)
+                    --requests N (8192)  --seed N (7)
+                    --buffer-words N (4096)  --budget F (0.05)
+                    --quick (CI smoke)  --json  --out FILE
   serve           serve synthetic requests through the runtime backend
                     (falls back to the built-in reference backend when
                     the artifacts directory is absent)
@@ -84,6 +96,9 @@ COMMANDS
                     --techs NAMES  --sizes 8,16,32,64  --shifts 0.25,0.45
                     --rails static,runtime (the rail-mode axis)
                     --policies none,replay,te-drop (the recovery axis)
+                    --memory nominal,split (the S24 memory-rail axis;
+                    the smoke grid stays nominal-only)
+                    --buffer-words N (4096, the priced BRAM capacity)
                     --budget F (0.05, the recovering arms' loss budget)
                     --k N (4)  --threads N (0 = cores)  --seed N (2021)
                     --max-trials N (200)  --json  --out FILE (BENCH_sweep.json)
@@ -352,6 +367,32 @@ pub fn run() -> Result<()> {
                 println!("wrote {}", out.display());
             }
         }
+        "bench-bram" => {
+            let o = Opts::parse(rest, &["quick", "json"])?;
+            let tech = tech_by_name(&o.str_or("tech", "academic-22nm"))?;
+            let mut bcfg = if o.flag("quick") {
+                BramBenchConfig::quick(tech)
+            } else {
+                BramBenchConfig::paper_default(tech)
+            };
+            bcfg.base.shards = o.num("shards", bcfg.base.shards)?;
+            bcfg.base.requests = o.num("requests", bcfg.base.requests)?;
+            bcfg.base.seed = o.num("seed", bcfg.base.seed)?;
+            bcfg.base.profile = profile_from(&o.str_or("fluctuation", "medium"))?;
+            // The [bram] config section seeds the buffer geometry and
+            // the joint budget; explicit flags still win.
+            bcfg.buffer_words = o.num("buffer-words", config.bram.buffer_words)?;
+            bcfg.accuracy_budget = o.num("budget", config.bram.accuracy_budget)?;
+            bcfg.validate()?;
+            let artifacts = PathBuf::from(o.str_or("artifacts", &config.serve.artifacts_dir));
+            let rep = run_bram_bench(&artifacts, bcfg)?;
+            print!("{}", vstpu::bram::render(&rep));
+            if o.flag("json") {
+                let out = PathBuf::from(o.str_or("out", "BENCH_bram.json"));
+                std::fs::write(&out, report::bench_bram_json(&rep))?;
+                println!("wrote {}", out.display());
+            }
+        }
         "serve" => {
             let o = Opts::parse(rest, &[])?;
             let profile = profile_from(&o.str_or("fluctuation", "medium"))?;
@@ -491,6 +532,13 @@ pub fn run() -> Result<()> {
                     .map(RecoveryPolicy::from_name)
                     .collect::<Result<_>>()?;
             }
+            if let Some(v) = o.get("memory") {
+                scfg.memory_rails = v
+                    .split(',')
+                    .map(MemoryRailMode::from_name)
+                    .collect::<Result<_>>()?;
+            }
+            scfg.buffer_words = o.num("buffer-words", scfg.buffer_words)?;
             scfg.accuracy_budget = o.num("budget", config.recover.accuracy_budget)?;
             let rep = vstpu::sweep::run_sweep(&scfg)?;
             print!("{}", vstpu::sweep::render(&rep));

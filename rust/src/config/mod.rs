@@ -38,6 +38,8 @@ pub struct Config {
     pub hotcache: HotcacheSection,
     /// `[prove]` — S23 static controller-certification parameters.
     pub prove: ProveSection,
+    /// `[bram]` — S24 memory-rail (BRAM buffer) parameters.
+    pub bram: BramSection,
 }
 
 /// `[flow]` — CAD-flow parameters.
@@ -283,6 +285,27 @@ impl ProveSection {
     }
 }
 
+/// `[bram]` — the S24 accumulator-buffer memory rail (`vstpu
+/// bench-bram` and the sweep's `--memory split` arm). The buffer
+/// geometry and the joint accuracy budget live here; the voltage curve
+/// itself is a per-technology model (`crate::bram`), not a knob.
+#[derive(Debug, Clone)]
+pub struct BramSection {
+    /// Accumulator-buffer capacity priced by the harness, words.
+    pub buffer_words: usize,
+    /// Joint budget: timing loss + expected memory loss must stay here.
+    pub accuracy_budget: f64,
+}
+
+impl Default for BramSection {
+    fn default() -> Self {
+        Self {
+            buffer_words: 4096,
+            accuracy_budget: 0.05,
+        }
+    }
+}
+
 /// Strip quotes from a TOML string value.
 fn unquote(v: &str) -> String {
     v.trim().trim_matches('"').to_string()
@@ -330,6 +353,7 @@ impl Config {
                         | "check"
                         | "hotcache"
                         | "prove"
+                        | "bram"
                 ) {
                     return Err(Error::Config(format!(
                         "line {}: unknown section [{section}]",
@@ -392,6 +416,8 @@ impl Config {
             ("hotcache", "max_entries") => self.hotcache.max_entries = parse_num(key, v)?,
             ("prove", "enabled") => self.prove.enabled = parse_bool(key, v)?,
             ("prove", "max_states") => self.prove.max_states = parse_num(key, v)?,
+            ("bram", "buffer_words") => self.bram.buffer_words = parse_num(key, v)?,
+            ("bram", "accuracy_budget") => self.bram.accuracy_budget = parse_num(key, v)?,
             _ => {
                 return Err(Error::Config(format!(
                     "unknown key '{key}' in section [{section}]"
@@ -452,7 +478,11 @@ impl Config {
              \n\
              [prove]\n\
              enabled = {}\n\
-             max_states = {}\n",
+             max_states = {}\n\
+             \n\
+             [bram]\n\
+             buffer_words = {}\n\
+             accuracy_budget = {}\n",
             self.flow.array_size,
             self.flow.tech,
             self.flow.clock_mhz,
@@ -487,6 +517,8 @@ impl Config {
             self.hotcache.max_entries,
             self.prove.enabled,
             self.prove.max_states,
+            self.bram.buffer_words,
+            self.bram.accuracy_budget,
         )
     }
 
@@ -567,6 +599,21 @@ mod tests {
         assert_eq!(back.hotcache.max_entries, cfg.hotcache.max_entries);
         assert_eq!(back.prove.enabled, cfg.prove.enabled);
         assert_eq!(back.prove.max_states, cfg.prove.max_states);
+        assert_eq!(back.bram.buffer_words, cfg.bram.buffer_words);
+        assert_eq!(back.bram.accuracy_budget, cfg.bram.accuracy_budget);
+    }
+
+    #[test]
+    fn bram_section_parses_and_rejects_typos() {
+        let cfg =
+            Config::parse("[bram]\nbuffer_words = 8192\naccuracy_budget = 0.02\n").unwrap();
+        assert_eq!(cfg.bram.buffer_words, 8192);
+        assert_eq!(cfg.bram.accuracy_budget, 0.02);
+        let def = Config::default();
+        assert_eq!(def.bram.buffer_words, 4096);
+        assert_eq!(def.bram.accuracy_budget, 0.05);
+        assert!(Config::parse("[bram]\nbuffre_words = 4096\n").is_err());
+        assert!(Config::parse("[bram]\nbuffer_words = roomy\n").is_err());
     }
 
     #[test]

@@ -47,6 +47,11 @@ pub enum Error {
     /// inconsistency.
     Prove(String),
 
+    /// Memory-rail / BRAM fault-model failure (`vstpu bench-bram`,
+    /// S24): a broken harness configuration or a non-physical loss or
+    /// energy figure the bench refuses to serialize.
+    Bram(String),
+
     /// I/O failure surfaced from the standard library.
     Io(std::io::Error),
 }
@@ -66,6 +71,7 @@ impl std::fmt::Display for Error {
             Error::Sweep(m) => write!(f, "sweep error: {m}"),
             Error::Check(m) => write!(f, "check error: {m}"),
             Error::Prove(m) => write!(f, "prove error: {m}"),
+            Error::Bram(m) => write!(f, "bram error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -100,6 +106,7 @@ mod tests {
         assert!(Error::Sweep("z".into()).to_string().starts_with("sweep error: z"));
         assert!(Error::Check("w".into()).to_string().starts_with("check error: w"));
         assert!(Error::Prove("p".into()).to_string().starts_with("prove error: p"));
+        assert!(Error::Bram("b".into()).to_string().starts_with("bram error: b"));
         assert!(Error::ShardFailed(3, "panicked".into())
             .to_string()
             .starts_with("shard 3 failed: panicked"));

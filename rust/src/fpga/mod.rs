@@ -159,6 +159,46 @@ impl Partition {
     }
 }
 
+/// One BRAM column bank on the fabric (S24): a slice-column-aligned
+/// block of on-chip memory words — the accumulator/weight buffers —
+/// fed by its own memory rail `v_mem`, separate from the logic islands'
+/// `Vccint_i`. Geometry only; the voltage→fault physics lives in
+/// [`crate::bram`].
+#[derive(Debug, Clone)]
+pub struct BramBank {
+    /// Bank index (column order, left to right).
+    pub id: usize,
+    /// Slice rectangle of the bank column.
+    pub rect: Rect,
+    /// Words the bank stores (one i32 accumulator each).
+    pub words: usize,
+    /// Memory-rail voltage (V).
+    pub v_mem: f64,
+}
+
+impl BramBank {
+    /// Lay `n_banks` banks of `words_per_bank` out as evenly spaced
+    /// single-slice-wide columns in the device's right routing margin
+    /// (the paper's Fig 8 fabric keeps BRAM columns outside the MAC
+    /// islands), all seeded at `v_mem`.
+    pub fn columns(device: &Device, n_banks: usize, words_per_bank: usize, v_mem: f64) -> Vec<Self> {
+        let x = device.slice_cols.saturating_sub(1);
+        (0..n_banks)
+            .map(|id| {
+                let h = device.slice_rows / (n_banks as u32).max(1);
+                let y0 = id as u32 * h;
+                let y1 = (y0 + h.max(1) - 1).min(device.slice_rows - 1);
+                Self {
+                    id,
+                    rect: Rect::new(x, y0.min(y1), x, y1),
+                    words: words_per_bank,
+                    v_mem,
+                }
+            })
+            .collect()
+    }
+}
+
 /// Validate a floorplan: partitions must be pairwise disjoint, on-fabric,
 /// and big enough for their MACs.
 pub fn validate_partitions(device: &Device, parts: &[Partition]) -> Result<()> {
@@ -270,6 +310,23 @@ mod tests {
             validate_partitions(&d, &[tiny]),
             Err(Error::Floorplan(_))
         ));
+    }
+
+    #[test]
+    fn bram_banks_sit_on_fabric_and_do_not_overlap() {
+        let d = Device::for_array(16);
+        let banks = BramBank::columns(&d, 8, 512, 0.95);
+        assert_eq!(banks.len(), 8);
+        for b in &banks {
+            assert!(d.fits(&b.rect), "bank {} off-fabric", b.id);
+            assert_eq!(b.words, 512);
+            assert_eq!(b.v_mem, 0.95);
+        }
+        for (i, a) in banks.iter().enumerate() {
+            for b in &banks[i + 1..] {
+                assert!(!a.rect.overlaps(&b.rect), "banks {} and {}", a.id, b.id);
+            }
+        }
     }
 
     #[test]

@@ -30,6 +30,11 @@
 //!   (paper Figs 1, 3, 9),
 //! * [`baseline`] — the paper's comparators (no scaling, whole-FPGA
 //!   underscaling after Salami et al., per-MAC boosting after GreenTPU),
+//! * [`bram`] — reduced-voltage BRAM fault modeling (S24): the memory
+//!   rail's voltage→bit-error-rate curve, deterministic clustered
+//!   fault maps, int8 accumulate-path injection, the memory-rail
+//!   calibrator and the `bench-bram` A/B harness
+//!   (`vstpu bench-bram`, `BENCH_bram.json`),
 //! * [`workload`] — synthetic int8 DNN workloads with controllable bit
 //!   fluctuation,
 //! * [`runtime`] — the pluggable runtime backends: the artifact-validated
@@ -85,7 +90,7 @@
 //! ```
 //!
 //! ARCHITECTURE.md holds the top-down tour (module map, request
-//! lifecycle, data flow); docs/BENCH_SCHEMAS.md documents the seven
+//! lifecycle, data flow); docs/BENCH_SCHEMAS.md documents the eight
 //! machine-readable bench artifacts.
 
 #![warn(missing_docs)]
@@ -95,6 +100,7 @@
 #![cfg_attr(not(test), deny(clippy::expect_used))]
 
 pub mod baseline;
+pub mod bram;
 pub mod cadflow;
 pub mod calibrate;
 pub mod check;

@@ -87,6 +87,28 @@ impl PowerModel {
                 .map(|p| self.macs_power_mw(p.mac_count(), p.vccint, toggle_of(p.id)))
                 .sum::<f64>()
     }
+
+    /// Memory-rail power (mW) of `banks` BRAM banks at rail voltage
+    /// `v_mem` (S24): the cell-array share scales quadratically with
+    /// the rail, the periphery share stays on the logic supply (see
+    /// [`crate::bram::memory_power_factor`]).
+    ///
+    /// Same weakest S20 predicate as [`Self::scaled_mw`], on purpose:
+    /// the BER curve and this power term stay defined below `v_th`
+    /// (memory-rail figure sweeps legitimately drive them there — the
+    /// alpha-power-law singularity belongs to the *logic* delay model
+    /// only), but a non-finite or non-positive rail is always a
+    /// pipeline bug.
+    pub fn bram_mw(&self, banks: usize, v_mem: f64) -> f64 {
+        debug_assert!(
+            crate::check::rail_is_finite_positive(v_mem),
+            "non-physical memory rail fed to the power model"
+        );
+        banks as f64
+            * crate::bram::BANK_MW
+            * crate::bram::memory_power_factor(&self.tech, v_mem)
+            * self.clock_scale()
+    }
 }
 
 /// The power comparison a flow run produces (one block of Table II).
@@ -249,6 +271,37 @@ mod tests {
         let r1 = PowerReport::build(&base, 64, 1.0, &parts, |_| DEFAULT_TOGGLE);
         let r2 = PowerReport::build(&arrayish, 64, 1.0, &parts, |_| DEFAULT_TOGGLE);
         assert!(r2.reduction_pct > 3.0 * r1.reduction_pct);
+    }
+
+    #[test]
+    fn bram_power_survives_sub_threshold_memory_rails() {
+        // Satellite regression (S24): the memory-rail figure sweeps
+        // drive v_mem below v_th, where the logic delay model panics —
+        // the power model must keep the weaker finite-positive
+        // predicate and stay defined (this is exactly the exemption
+        // S20 carved out for sub-threshold logic figure sweeps).
+        for tech in Technology::paper_suite() {
+            let name = tech.name.clone();
+            let v_th = tech.v_th;
+            let m = PowerModel::new(tech, 100.0);
+            for v in [v_th - 0.05, v_th, v_th + 0.05, 0.2] {
+                let p = m.bram_mw(8, v);
+                assert!(p.is_finite() && p > 0.0, "{name} at {v}: {p}");
+            }
+            // Monotone in the rail, nominal anchored at banks * BANK_MW.
+            assert!(m.bram_mw(8, 0.9) < m.bram_mw(8, 1.0));
+            let nominal = m.bram_mw(8, m.tech.v_nom);
+            assert!((nominal - 8.0 * crate::bram::BANK_MW).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bram_power_scales_with_banks_and_clock() {
+        let m100 = PowerModel::new(Technology::academic_22nm(), 100.0);
+        let m200 = PowerModel::new(Technology::academic_22nm(), 200.0);
+        assert_eq!(m100.bram_mw(0, 0.95), 0.0);
+        assert!((m100.bram_mw(16, 0.95) / m100.bram_mw(8, 0.95) - 2.0).abs() < 1e-9);
+        assert!((m200.bram_mw(8, 0.95) / m100.bram_mw(8, 0.95) - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 use std::fmt::Write as _;
 
+use crate::bram::BramReport;
 use crate::cadflow::FlowReport;
 use crate::calibrate::CalibrateReport;
 use crate::check::{CheckReport, Rule};
@@ -319,13 +320,14 @@ pub fn bench_sweep_json(rep: &SweepReport) -> String {
             let head = format!(
                 "    {{\n      \"algo\": \"{}\", \"tech\": \"{}\", \"array_size\": {}, \
                  \"shift_toggle\": {}, \"rail_mode\": \"{}\", \"policy\": \"{}\", \
-                 \"seed\": {},",
+                 \"memory_rail\": \"{}\", \"seed\": {},",
                 sc.algo.name(),
                 sc.tech,
                 sc.array_size,
                 json_f64(sc.shift_toggle),
                 sc.rail_mode.name(),
                 sc.policy.name(),
+                sc.memory_rail.name(),
                 sc.seed
             );
             match &r.outcome {
@@ -336,6 +338,8 @@ pub fn bench_sweep_json(rep: &SweepReport) -> String {
                      \"power_mw\": {}, \"baseline_mw\": {}, \"reduction_pct\": {}, \
                      \"silent_mac_fraction\": {},\n      \
                      \"accuracy_loss\": {}, \"replay_overhead\": {},\n      \
+                     \"memory_rail_v\": {}, \"memory_mw\": {}, \"total_power_mw\": {}, \
+                     \"total_loss\": {},\n      \
                      \"wall_ms\": {}\n    }}",
                     res.k,
                     res.noise_reassigned,
@@ -347,6 +351,10 @@ pub fn bench_sweep_json(rep: &SweepReport) -> String {
                     json_f64(res.silent_mac_fraction),
                     json_f64(res.accuracy_loss),
                     json_f64(res.replay_overhead),
+                    json_f64(res.memory_rail_v),
+                    json_f64(res.memory_mw),
+                    json_f64(res.total_power_mw),
+                    json_f64(res.total_loss),
                     json_f64(res.wall_ms)
                 ),
                 Err(e) => format!(
@@ -366,20 +374,26 @@ pub fn bench_sweep_json(rep: &SweepReport) -> String {
         .map(|w| {
             format!(
                 "    {{\"tech\": \"{}\", \"array_size\": {}, \"shift_toggle\": {}, \
-                 \"rail_mode\": \"{}\", \"policy\": \"{}\", \
+                 \"rail_mode\": \"{}\", \"policy\": \"{}\", \"memory_rail\": \"{}\", \
                  \"best_power_algo\": \"{}\", \"best_power_mw\": {}, \
                  \"best_accuracy_algo\": \"{}\", \"best_silent_fraction\": {}, \
-                 \"best_accuracy_loss\": {}}}",
+                 \"best_accuracy_loss\": {}, \
+                 \"best_total_algo\": \"{}\", \"best_total_mw\": {}, \
+                 \"best_total_loss\": {}}}",
                 w.tech,
                 w.array_size,
                 json_f64(w.shift_toggle),
                 w.rail_mode,
                 w.policy,
+                w.memory_rail,
                 w.best_power_algo,
                 json_f64(w.best_power_mw),
                 w.best_accuracy_algo,
                 json_f64(w.best_silent_fraction),
-                json_f64(w.best_accuracy_loss)
+                json_f64(w.best_accuracy_loss),
+                w.best_total_algo,
+                json_f64(w.best_total_mw),
+                json_f64(w.best_total_loss)
             )
         })
         .collect();
@@ -509,6 +523,75 @@ pub fn bench_recovery_json(rep: &RecoveryReport) -> String {
                 json_f64(p.accuracy_loss),
                 json_f64(p.replay_overhead),
                 json_f64(p.energy_uj_per_request)
+            )
+        })
+        .collect();
+    let _ = writeln!(s, "{}", cells.join(",\n"));
+    let _ = writeln!(s, "  ]");
+    let _ = writeln!(s, "}}");
+    s
+}
+
+/// Render `BENCH_bram.json` — the machine-readable artifact the CI
+/// `bram-smoke` job uploads (schema `vstpu-bench-bram/v1`; see
+/// docs/BENCH_SCHEMAS.md). One row per memory-rail arm of the same
+/// logic calibration run: the nominal-supply buffers against the split
+/// rail the memory calibrator locked at the BRAM guard knee. Everything
+/// except the `wall_s` line is byte-deterministic across runs at a
+/// fixed seed; `wall_s` sits alone on its own line so consumers (and
+/// the determinism test) can filter it out.
+pub fn bench_bram_json(rep: &BramReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"schema\": \"{}\",", rep.schema);
+    let _ = writeln!(s, "  \"quick\": {},", rep.quick);
+    let _ = writeln!(s, "  \"seed\": {},", rep.seed);
+    let _ = writeln!(s, "  \"tech\": \"{}\",", rep.tech);
+    let _ = writeln!(s, "  \"backend\": \"{}\",", rep.backend);
+    let _ = writeln!(s, "  \"requests\": {},", rep.requests);
+    let _ = writeln!(s, "  \"buffer_words\": {},", rep.buffer_words);
+    let _ = writeln!(s, "  \"banks\": {},", rep.banks);
+    let _ = writeln!(s, "  \"knee_v\": {},", json_f64(rep.knee_v));
+    let _ = writeln!(
+        s,
+        "  \"accuracy_budget\": {},",
+        json_f64(rep.accuracy_budget)
+    );
+    let _ = writeln!(s, "  \"logic_loss\": {},", json_f64(rep.logic_loss));
+    let _ = writeln!(
+        s,
+        "  \"logic_uj_per_request\": {},",
+        json_f64(rep.logic_uj_per_request)
+    );
+    let _ = writeln!(s, "  \"logic_converged\": {},", rep.logic_converged);
+    let _ = writeln!(s, "  \"wall_s\": {},", json_f64(rep.wall_s));
+    let _ = writeln!(s, "  \"arms\": [");
+    let cells: Vec<String> = rep
+        .arms
+        .iter()
+        .map(|a| {
+            format!(
+                "    {{\n      \"arm\": \"{}\",\n      \
+                 \"v_mem_final\": {},\n      \
+                 \"memory_epochs\": {}, \"memory_converged\": {},\n      \
+                 \"fault_bits\": {},\n      \
+                 \"memory_loss\": {},\n      \
+                 \"expected_memory_loss\": {},\n      \
+                 \"total_loss\": {},\n      \
+                 \"memory_mw\": {},\n      \
+                 \"memory_uj_per_request\": {},\n      \
+                 \"energy_uj_per_request\": {}\n    }}",
+                a.arm,
+                json_f64(a.v_mem_final),
+                a.memory_epochs,
+                a.memory_converged,
+                a.fault_bits,
+                json_f64(a.memory_loss),
+                json_f64(a.expected_memory_loss),
+                json_f64(a.total_loss),
+                json_f64(a.memory_mw),
+                json_f64(a.memory_uj_per_request),
+                json_f64(a.energy_uj_per_request)
             )
         })
         .collect();
@@ -869,8 +952,8 @@ mod tests {
     fn bench_sweep_json_is_well_formed() {
         use crate::recover::RecoveryPolicy;
         use crate::sweep::{
-            RailMode, Scenario, ScenarioRecord, ScenarioResult, SweepAlgo, SweepReport,
-            WinnerRow, SWEEP_SCHEMA,
+            MemoryRailMode, RailMode, Scenario, ScenarioRecord, ScenarioResult, SweepAlgo,
+            SweepReport, WinnerRow, SWEEP_SCHEMA,
         };
         let rep = SweepReport {
             schema: SWEEP_SCHEMA,
@@ -887,6 +970,7 @@ mod tests {
                         shift_toggle: 0.45,
                         rail_mode: RailMode::Runtime,
                         policy: RecoveryPolicy::TeDrop,
+                        memory_rail: MemoryRailMode::Split,
                         seed: 99,
                     },
                     outcome: Ok(ScenarioResult {
@@ -900,6 +984,10 @@ mod tests {
                         silent_mac_fraction: 0.01,
                         accuracy_loss: 0.014,
                         replay_overhead: 0.0,
+                        memory_rail_v: 0.85,
+                        memory_mw: 16.0,
+                        total_power_mw: 216.0,
+                        total_loss: 0.014,
                         wall_ms: 12.0,
                     }),
                 },
@@ -912,6 +1000,7 @@ mod tests {
                         shift_toggle: 0.45,
                         rail_mode: RailMode::Static,
                         policy: RecoveryPolicy::None,
+                        memory_rail: MemoryRailMode::Nominal,
                         seed: 100,
                     },
                     // Quotes and newlines in the message must be escaped.
@@ -924,11 +1013,15 @@ mod tests {
                 shift_toggle: 0.45,
                 rail_mode: "runtime",
                 policy: "te-drop",
+                memory_rail: "split",
                 best_power_algo: "dbscan".into(),
                 best_power_mw: 200.0,
                 best_accuracy_algo: "dbscan".into(),
                 best_silent_fraction: 0.01,
                 best_accuracy_loss: 0.014,
+                best_total_algo: "dbscan".into(),
+                best_total_mw: 216.0,
+                best_total_loss: 0.014,
             }],
             ok_count: 1,
             failed_count: 1,
@@ -949,6 +1042,12 @@ mod tests {
             "\"accuracy_loss\": 0.014000",
             "\"replay_overhead\": 0.000000",
             "\"best_accuracy_loss\": 0.014000",
+            "\"memory_rail\": \"split\"",
+            "\"memory_rail\": \"nominal\"",
+            "\"memory_rail_v\": 0.850000",
+            "\"total_power_mw\": 216.000000",
+            "\"best_total_mw\": 216.000000",
+            "\"best_total_loss\": 0.014000",
         ] {
             assert!(json.contains(needle), "missing {needle} in:\n{json}");
         }
@@ -1083,6 +1182,81 @@ mod tests {
     }
 
     #[test]
+    fn bench_bram_json_is_well_formed() {
+        use crate::bram::{BramArm, BramReport, BENCH_SCHEMA};
+        let rep = BramReport {
+            schema: BENCH_SCHEMA,
+            quick: true,
+            seed: 2021,
+            tech: "academic-22nm".into(),
+            backend: "reference".into(),
+            requests: 4096,
+            buffer_words: 4096,
+            banks: 8,
+            knee_v: 0.95,
+            accuracy_budget: 0.05,
+            logic_loss: 0.012,
+            logic_uj_per_request: 0.12,
+            logic_converged: true,
+            arms: vec![
+                BramArm {
+                    arm: "logic-only",
+                    v_mem_final: 1.0,
+                    memory_epochs: 0,
+                    memory_converged: true,
+                    fault_bits: 0,
+                    memory_loss: 0.0,
+                    expected_memory_loss: 0.0,
+                    total_loss: 0.012,
+                    memory_mw: 16.0,
+                    memory_uj_per_request: 0.04,
+                    energy_uj_per_request: 0.16,
+                },
+                BramArm {
+                    arm: "split",
+                    v_mem_final: 0.95,
+                    memory_epochs: 5,
+                    memory_converged: true,
+                    fault_bits: 0,
+                    memory_loss: f64::NAN, // must render as a valid number
+                    expected_memory_loss: 0.0,
+                    total_loss: 0.012,
+                    memory_mw: 14.7,
+                    memory_uj_per_request: 0.036,
+                    energy_uj_per_request: 0.156,
+                },
+            ],
+            wall_s: 1.25,
+        };
+        let json = bench_bram_json(&rep);
+        for needle in [
+            "\"schema\": \"vstpu-bench-bram/v1\"",
+            "\"buffer_words\": 4096",
+            "\"banks\": 8",
+            "\"knee_v\": 0.950000",
+            "\"accuracy_budget\": 0.050000",
+            "\"logic_uj_per_request\": 0.120000",
+            "\"logic_converged\": true",
+            "\"arm\": \"logic-only\"",
+            "\"arm\": \"split\"",
+            "\"v_mem_final\": 0.950000",
+            "\"memory_loss\": 0.000000", // the NaN arm renders as 0.000000
+            "\"memory_mw\": 14.700000",
+            "\"energy_uj_per_request\": 0.156000",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert!(!json.contains("NaN"));
+        // The wall-time measurement sits alone on its line so the
+        // determinism contract (strip wall_s, compare the rest) holds.
+        for line in json.lines().filter(|l| l.contains("\"wall_s\"")) {
+            assert_eq!(line.matches('"').count(), 2, "wall_s shares a line: {line}");
+        }
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
     fn bench_hotpath_json_is_well_formed() {
         use crate::hotcache::bench::{HotpathReport, StageTiming, HOTPATH_SCHEMA};
         use crate::hotcache::Stats;
@@ -1173,7 +1347,7 @@ mod tests {
         let json = check_json(&rep);
         for needle in [
             "\"schema\": \"vstpu-check/v1\"",
-            "\"rules_checked\": 21",
+            "\"rules_checked\": 23",
             "\"configurations\": 2",
             "\"errors\": 1",
             "\"warnings\": 0",

@@ -254,6 +254,26 @@ pub fn outcome_fractions_from_worst(
     (flagged as f64 / n, silent as f64 / n)
 }
 
+/// Combined logic+memory scenario measurement (S24): total power with
+/// the memory rail's BRAM term added, and the joint accuracy loss
+/// (timing loss plus the analytic expected memory loss at `v_mem`) the
+/// sweep ranks its winners on under the joint budget. With the memory
+/// rail at `v_nom` the loss term is exactly the timing loss and the
+/// power term is the full-rail BRAM power — the logic-only baseline.
+pub fn joint_power_and_loss(
+    model: &PowerModel,
+    partitions: &[Partition],
+    toggle: f64,
+    timing_loss: f64,
+    v_mem: f64,
+    buffer_words: usize,
+) -> (f64, f64) {
+    let banks = crate::bram::banks_for(buffer_words);
+    let power_mw = model.scaled_mw(partitions, |_| toggle) + model.bram_mw(banks, v_mem);
+    let loss = timing_loss + crate::bram::expected_loss(&model.tech, v_mem, buffer_words);
+    (power_mw, loss)
+}
+
 /// Configuration of the study.
 #[derive(Debug, Clone)]
 pub struct StudyConfig {
@@ -474,6 +494,41 @@ mod tests {
         );
         assert!((silent - silent_only).abs() < 1e-15);
         assert!(flagged >= 0.0 && flagged + silent <= 1.0 + 1e-15);
+    }
+
+    #[test]
+    fn joint_measurement_splits_cleanly_at_nominal_memory() {
+        // At v_mem = v_nom the joint recipe must reduce exactly to the
+        // logic measurement plus the full-rail BRAM term, and an
+        // undervolted-at-the-knee memory rail must strictly lower
+        // power without touching the loss.
+        let tech = Technology::academic_22nm();
+        let model = PowerModel::new(tech.clone(), 100.0);
+        let cfg = StudyConfig::paper_default(tech.clone());
+        let netlist =
+            SystolicNetlist::generate(cfg.array_size, &tech, cfg.clock_mhz, cfg.seed);
+        let slacks = timing::synthesize(&netlist).min_slack_values(cfg.array_size);
+        let clustering = equal_quantile_clustering(&slacks, 4);
+        let parts = calibrated_partitions(
+            &netlist,
+            &tech,
+            &cfg.razor,
+            &clustering,
+            &slacks,
+            400,
+            cfg.calib_toggle,
+        )
+        .unwrap();
+        let toggle = crate::razor::DEFAULT_TOGGLE;
+        let (p_nom, l_nom) = joint_power_and_loss(&model, &parts, toggle, 0.01, tech.v_nom, 4096);
+        let logic_mw = model.scaled_mw(&parts, |_| toggle);
+        let banks = crate::bram::banks_for(4096);
+        assert!((p_nom - (logic_mw + model.bram_mw(banks, tech.v_nom))).abs() < 1e-12);
+        assert!((l_nom - 0.01).abs() < 1e-15);
+        let knee = crate::bram::knee_voltage(&tech);
+        let (p_knee, l_knee) = joint_power_and_loss(&model, &parts, toggle, 0.01, knee, 4096);
+        assert!(p_knee < p_nom);
+        assert!((l_knee - l_nom).abs() < 1e-15, "knee memory is lossless");
     }
 
     #[test]

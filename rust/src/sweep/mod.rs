@@ -12,6 +12,7 @@
 //! {hierarchical, kmeans, meanshift, dbscan, equal-quantile}
 //!   x {22nm, 45nm, 130nm} x array sizes {8..64} x workload shifts
 //!   x rail modes {static, runtime} x recovery policies {none, replay, te-drop}
+//!   x memory rails {nominal, split}
 //! ```
 //!
 //! and executes it on the self-scheduling job pool in [`pool`], with:
@@ -149,6 +150,44 @@ impl RailMode {
     }
 }
 
+/// The memory-rail axis (S24): whether the accumulator/weight buffers
+/// stay on the logic supply or get their own undervolted rail. The
+/// `split` arm parks the memory rail at the technology's BRAM guard
+/// knee ([`crate::bram::knee_voltage`]) — the deepest analytically
+/// lossless point, exactly where the memory calibrator provably locks
+/// (`vstpu bench-bram` demonstrates the convergence; the sweep uses the
+/// converged figure directly so the grid stays cheap).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryRailMode {
+    /// Buffers ride the nominal supply — the paper's implicit baseline.
+    Nominal,
+    /// Buffers get their own rail, parked at the BRAM guard knee.
+    Split,
+}
+
+impl MemoryRailMode {
+    /// The full memory-rail axis, nominal first.
+    pub fn all() -> Vec<Self> {
+        vec![Self::Nominal, Self::Split]
+    }
+
+    /// Stable axis-value name (also the JSON field value).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Nominal => "nominal",
+            Self::Split => "split",
+        }
+    }
+
+    /// Parse a CLI `--memory` element.
+    pub fn from_name(name: &str) -> Result<Self> {
+        Self::all()
+            .into_iter()
+            .find(|m| m.name() == name.trim())
+            .ok_or_else(|| Error::Sweep(format!("unknown memory rail mode '{name}'")))
+    }
+}
+
 /// Sweep configuration: the grid axes plus the shared flow knobs.
 ///
 /// ```
@@ -180,6 +219,12 @@ pub struct SweepConfig {
     /// are tolerated once a recovering policy lets the calibrated rails
     /// descend below the flag frontier.
     pub policies: Vec<RecoveryPolicy>,
+    /// Memory-rail modes (the S24 axis): nominal-supply buffers vs a
+    /// split rail parked at the BRAM guard knee.
+    pub memory_rails: Vec<MemoryRailMode>,
+    /// On-chip accumulator/weight buffer size the memory-rail terms
+    /// model, in i32 words.
+    pub buffer_words: usize,
     /// Accuracy-loss budget every recovering policy must honour
     /// (enforced per scenario by the `VST020` design-rule gate).
     pub accuracy_budget: f64,
@@ -221,6 +266,8 @@ impl SweepConfig {
             shifts: vec![0.25, 0.45],
             rail_modes: RailMode::all(),
             policies: RecoveryPolicy::all().to_vec(),
+            memory_rails: MemoryRailMode::all(),
+            buffer_words: 4096,
             accuracy_budget: 0.05,
             k: 4,
             clock_mhz: 100.0,
@@ -235,8 +282,8 @@ impl SweepConfig {
     }
 
     /// The CI smoke grid (`vstpu sweep --smoke`): 2 algorithms x 2 techs
-    /// x 1 size x 1 shift x 2 rail modes x 2 recovery policies = 16
-    /// scenarios.
+    /// x 1 size x 1 shift x 2 rail modes x 2 recovery policies x 1
+    /// memory rail = 16 scenarios.
     pub fn smoke() -> Self {
         let mut cfg = Self::full_grid();
         cfg.quick = true;
@@ -245,6 +292,11 @@ impl SweepConfig {
         cfg.sizes = vec![16];
         cfg.shifts = vec![0.45];
         cfg.policies = vec![RecoveryPolicy::None, RecoveryPolicy::TeDrop];
+        // One memory arm keeps the smoke grid at 16 scenarios (the
+        // hotcache counter contract and the check-smoke configuration
+        // count both pin that number); the split arm is exercised by
+        // `bench-bram` and the full grid.
+        cfg.memory_rails = vec![MemoryRailMode::Nominal];
         cfg
     }
 }
@@ -267,6 +319,8 @@ pub struct Scenario {
     /// Timing-error recovery policy the scenario declares (and, on
     /// runtime rails, co-optimizes its rails against).
     pub policy: RecoveryPolicy,
+    /// Memory-rail mode (nominal-supply vs split-at-the-knee buffers).
+    pub memory_rail: MemoryRailMode,
     /// Deterministic per-scenario seed (k-means++ seeding etc.).
     pub seed: u64,
 }
@@ -298,6 +352,17 @@ pub struct ScenarioResult {
     /// Replay latency overhead fraction of the declared policy under
     /// the workload shift ([`recover::replay_overhead`]).
     pub replay_overhead: f64,
+    /// Memory-rail voltage the scenario measured under (V): `v_nom` on
+    /// the nominal arm, the BRAM guard knee on the split arm.
+    pub memory_rail_v: f64,
+    /// BRAM power of the buffers at that rail (mW).
+    pub memory_mw: f64,
+    /// Logic + memory power (mW) — the combined figure winner rows
+    /// rank on.
+    pub total_power_mw: f64,
+    /// Policy-weighted timing loss plus the memory rail's expected
+    /// fault loss — the joint figure the accuracy budget bounds.
+    pub total_loss: f64,
     /// Scenario wall time (measurement; excluded from determinism).
     pub wall_ms: f64,
 }
@@ -312,12 +377,14 @@ pub struct ScenarioRecord {
     pub outcome: std::result::Result<ScenarioResult, String>,
 }
 
-/// Per-`(tech, size, shift, rail-mode, policy)` cross-algorithm
-/// comparison — the sweep's analogue of the paper's Table II/III "which
-/// scheme wins" rows. With the recovery-policy axis in the key, the
-/// rows of one `(tech, size, shift, rail-mode)` cell read as an
-/// energy-vs-accuracy frontier: each policy's cheapest power against
-/// the accuracy loss it pays for it.
+/// Per-`(tech, size, shift, rail-mode, policy, memory-rail)`
+/// cross-algorithm comparison — the sweep's analogue of the paper's
+/// Table II/III "which scheme wins" rows. With the recovery-policy axis
+/// in the key, the rows of one `(tech, size, shift, rail-mode)` cell
+/// read as an energy-vs-accuracy frontier: each policy's cheapest power
+/// against the accuracy loss it pays for it. The S24 combined winner
+/// (`best_total_*`) ranks on logic + memory power among scenarios whose
+/// joint loss honours the accuracy budget.
 #[derive(Debug, Clone)]
 pub struct WinnerRow {
     /// Technology preset name.
@@ -330,6 +397,8 @@ pub struct WinnerRow {
     pub rail_mode: &'static str,
     /// Recovery policy of this comparison group.
     pub policy: &'static str,
+    /// Memory-rail mode of this comparison group.
+    pub memory_rail: &'static str,
     /// Algorithm with the lowest calibrated power.
     pub best_power_algo: String,
     /// That algorithm's power, mW.
@@ -341,6 +410,14 @@ pub struct WinnerRow {
     pub best_silent_fraction: f64,
     /// That algorithm's policy-weighted accuracy loss.
     pub best_accuracy_loss: f64,
+    /// Algorithm with the lowest combined logic + memory power among
+    /// scenarios whose joint loss meets the accuracy budget (the whole
+    /// group competes when none does).
+    pub best_total_algo: String,
+    /// That algorithm's combined power, mW.
+    pub best_total_mw: f64,
+    /// That algorithm's joint (timing + memory) accuracy loss.
+    pub best_total_loss: f64,
 }
 
 /// Everything one sweep run produces.
@@ -388,8 +465,9 @@ fn axis_tag(s: &str) -> u64 {
 }
 
 /// Enumerate the grid in canonical (tech, size, shift, algo, rail-mode,
-/// policy) order — scenarios of one `(tech, size)` pair are adjacent,
-/// which keeps the shared-STA working set warm on the pool.
+/// policy, memory-rail) order — scenarios of one `(tech, size)` pair
+/// are adjacent, which keeps the shared-STA working set warm on the
+/// pool.
 pub fn enumerate(cfg: &SweepConfig) -> Vec<Scenario> {
     let mut out = Vec::new();
     for tech in &cfg.techs {
@@ -398,34 +476,40 @@ pub fn enumerate(cfg: &SweepConfig) -> Vec<Scenario> {
                 for &algo in &cfg.algos {
                     for &mode in &cfg.rail_modes {
                         for &policy in &cfg.policies {
-                            let index = out.len();
-                            out.push(Scenario {
-                                index,
-                                algo,
-                                tech: tech.clone(),
-                                array_size: size,
-                                shift_toggle: shift,
-                                rail_mode: mode,
-                                policy,
-                                // Keyed on the grid coordinate *values*
-                                // (see `axis_tag`; full shift bits —
-                                // near-identical shifts must not
-                                // collide), never on indices.
-                                // Deliberately NOT keyed on the rail
-                                // mode or the recovery policy: every
-                                // arm of a cell must cluster the array
-                                // identically (same k-means seed) so
-                                // the static-vs-runtime and
-                                // policy-vs-policy deltas isolate the
-                                // rail/recovery stages, not clustering
-                                // variance.
-                                seed: hash3(
-                                    cfg.seed,
-                                    axis_tag(tech)
-                                        .wrapping_add(axis_tag(algo.name()).rotate_left(17)),
-                                    hash3(size as u64, shift.to_bits(), 0x5157),
-                                ),
-                            });
+                            for &memory in &cfg.memory_rails {
+                                let index = out.len();
+                                out.push(Scenario {
+                                    index,
+                                    algo,
+                                    tech: tech.clone(),
+                                    array_size: size,
+                                    shift_toggle: shift,
+                                    rail_mode: mode,
+                                    policy,
+                                    memory_rail: memory,
+                                    // Keyed on the grid coordinate
+                                    // *values* (see `axis_tag`; full
+                                    // shift bits — near-identical
+                                    // shifts must not collide), never
+                                    // on indices. Deliberately NOT
+                                    // keyed on the rail mode, the
+                                    // recovery policy or the memory
+                                    // rail: every arm of a cell must
+                                    // cluster the array identically
+                                    // (same k-means seed) so the
+                                    // static-vs-runtime,
+                                    // policy-vs-policy and
+                                    // nominal-vs-split deltas isolate
+                                    // the rail/recovery/memory stages,
+                                    // not clustering variance.
+                                    seed: hash3(
+                                        cfg.seed,
+                                        axis_tag(tech)
+                                            .wrapping_add(axis_tag(algo.name()).rotate_left(17)),
+                                        hash3(size as u64, shift.to_bits(), 0x5157),
+                                    ),
+                                });
+                            }
                         }
                     }
                 }
@@ -445,8 +529,12 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
         || cfg.shifts.is_empty()
         || cfg.rail_modes.is_empty()
         || cfg.policies.is_empty()
+        || cfg.memory_rails.is_empty()
     {
         return Err(Error::Sweep("every grid axis needs at least one value".into()));
+    }
+    if cfg.buffer_words == 0 {
+        return Err(Error::Sweep("buffer_words must be positive".into()));
     }
     for &policy in &cfg.policies {
         recover::RecoverConfig {
@@ -541,7 +629,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
         .collect();
 
     let ok_count = records.iter().filter(|r| r.outcome.is_ok()).count();
-    let winners = winner_tables(&records);
+    let winners = winner_tables(&records, cfg.accuracy_budget);
     Ok(SweepReport {
         schema: SWEEP_SCHEMA,
         quick: cfg.quick,
@@ -562,6 +650,10 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepReport> {
 /// cap, calibration toggle and the Razor shadow window. Deliberately
 /// NOT keyed on `cfg.rail_fault_v`: the fault is injected downstream of
 /// the cache so the cached substrate stays the clean configuration.
+/// Likewise NOT keyed on the memory-rail arm (`sc.memory_rail`): the
+/// BRAM terms are pure functions of `(tech, v_mem, buffer_words)`
+/// layered on top of the logic substrate in `run_scenario`, so both
+/// memory arms of a cell share one cached entry.
 pub fn substrate_key(sc: &Scenario, st: &SharedTiming, cfg: &SweepConfig) -> u64 {
     hotcache::Digest::new("vstpu/hotcache/config/v1")
         .u64(hotcache::sta_key(
@@ -787,6 +879,52 @@ fn run_scenario(
     );
     arena.reclaim(worst);
 
+    let accuracy_loss = recover::weighted_loss(sc.policy, flagged_frac, silent);
+
+    // S24 memory terms, layered downstream of the cached substrate: the
+    // split arm parks the buffers at the BRAM guard knee (the point the
+    // memory calibrator provably locks at — see `vstpu bench-bram`),
+    // the nominal arm keeps them on the logic supply.
+    let memory_rail_v = match sc.memory_rail {
+        MemoryRailMode::Nominal => tech.v_nom,
+        MemoryRailMode::Split => crate::bram::knee_voltage(tech),
+    };
+    let (total_power_mw, total_loss) = study::joint_power_and_loss(
+        &model,
+        parts,
+        DEFAULT_TOGGLE,
+        accuracy_loss,
+        memory_rail_v,
+        cfg.buffer_words,
+    );
+    let memory_mw = total_power_mw - power_mw;
+
+    // S24 design-rule gate: the split arm declares a memory contract,
+    // so VST022/VST023 judge the rail bounds and the joint budget (on
+    // runtime rails — the same scoping as VST020). A violation becomes
+    // a structured failure record, like the S20 gate above.
+    if sc.memory_rail == MemoryRailMode::Split {
+        let mem_diags = check::check_memory(
+            tech,
+            &check::MemoryContract {
+                v_mem: memory_rail_v,
+                buffer_words: cfg.buffer_words,
+                timing_loss: accuracy_loss,
+                joint_budget: cfg.accuracy_budget,
+            },
+            sc.rail_mode == RailMode::Runtime,
+        );
+        if !mem_diags.is_empty() {
+            let rep = check::CheckReport {
+                diagnostics: mem_diags,
+                configurations: 1,
+            };
+            if !rep.is_clean() {
+                return Err(Error::Check(rep.error_summary()));
+            }
+        }
+    }
+
     Ok(ScenarioResult {
         k: entry.clustering.k,
         noise_reassigned: entry.noise_reassigned,
@@ -796,8 +934,12 @@ fn run_scenario(
         baseline_mw,
         reduction_pct: 100.0 * (baseline_mw - power_mw) / baseline_mw,
         silent_mac_fraction: silent,
-        accuracy_loss: recover::weighted_loss(sc.policy, flagged_frac, silent),
+        accuracy_loss,
         replay_overhead: recover::replay_overhead(sc.policy, flagged_frac),
+        memory_rail_v,
+        memory_mw,
+        total_power_mw,
+        total_loss,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
     })
 }
@@ -833,10 +975,11 @@ fn cluster_scenario(sc: &Scenario, slacks: &[f64], cfg: &SweepConfig) -> Result<
 }
 
 /// Fold scenario records into per-`(tech, size, shift, rail-mode,
-/// policy)` winner rows, preserving grid order. Groups whose scenarios
-/// all failed are skipped.
-fn winner_tables(records: &[ScenarioRecord]) -> Vec<WinnerRow> {
-    type Key = (String, u32, u64, &'static str, &'static str);
+/// policy, memory-rail)` winner rows, preserving grid order. Groups
+/// whose scenarios all failed are skipped. `budget` bounds the joint
+/// loss the combined-energy winner may pay (the VST023 contract).
+fn winner_tables(records: &[ScenarioRecord], budget: f64) -> Vec<WinnerRow> {
+    type Key = (String, u32, u64, &'static str, &'static str, &'static str);
     let mut order: Vec<Key> = Vec::new();
     let mut groups: HashMap<Key, Vec<&ScenarioRecord>> = HashMap::new();
     for r in records {
@@ -846,6 +989,7 @@ fn winner_tables(records: &[ScenarioRecord]) -> Vec<WinnerRow> {
             r.scenario.shift_toggle.to_bits(),
             r.scenario.rail_mode.name(),
             r.scenario.policy.name(),
+            r.scenario.memory_rail.name(),
         );
         if !groups.contains_key(&key) {
             order.push(key.clone());
@@ -872,17 +1016,37 @@ fn winner_tables(records: &[ScenarioRecord]) -> Vec<WinnerRow> {
             // Unreachable: `bp` above proves `ok` is non-empty.
             continue;
         };
+        // The S24 combined ranking: only scenarios whose joint loss
+        // honours the budget compete on total power; if the whole group
+        // blows the budget (harsh shift, lossy policy) the comparison
+        // degrades to unfiltered so the row still reports a winner.
+        let in_budget: Vec<&(SweepAlgo, &ScenarioResult)> = ok
+            .iter()
+            .filter(|a| a.1.total_loss <= budget + 1e-12)
+            .collect();
+        let pool: Vec<&(SweepAlgo, &ScenarioResult)> =
+            if in_budget.is_empty() { ok.iter().collect() } else { in_budget };
+        let Some(bt) = pool
+            .iter()
+            .min_by(|a, b| a.1.total_power_mw.total_cmp(&b.1.total_power_mw))
+        else {
+            continue;
+        };
         rows.push(WinnerRow {
             tech: key.0,
             array_size: key.1,
             shift_toggle: f64::from_bits(key.2),
             rail_mode: key.3,
             policy: key.4,
+            memory_rail: key.5,
             best_power_algo: bp.0.name().to_string(),
             best_power_mw: bp.1.power_mw,
             best_accuracy_algo: ba.0.name().to_string(),
             best_silent_fraction: ba.1.silent_mac_fraction,
             best_accuracy_loss: ba.1.accuracy_loss,
+            best_total_algo: bt.0.name().to_string(),
+            best_total_mw: bt.1.total_power_mw,
+            best_total_loss: bt.1.total_loss,
         });
     }
     rows
@@ -903,9 +1067,9 @@ pub fn render(rep: &SweepReport) -> String {
     );
     let _ = writeln!(
         s,
-        "{:<15} {:<15} {:>5} {:>6} {:>8} {:>8} {:>3} {:>10} {:>7} {:>8} {:>7}",
-        "algo", "tech", "size", "shift", "rails", "policy", "k", "power mW", "red %", "silent %",
-        "loss"
+        "{:<15} {:<15} {:>5} {:>6} {:>8} {:>8} {:>8} {:>3} {:>10} {:>7} {:>8} {:>7} {:>10}",
+        "algo", "tech", "size", "shift", "rails", "policy", "memory", "k", "power mW", "red %",
+        "silent %", "loss", "total mW"
     );
     for r in &rep.scenarios {
         let sc = &r.scenario;
@@ -913,52 +1077,63 @@ pub fn render(rep: &SweepReport) -> String {
             Ok(res) => {
                 let _ = writeln!(
                     s,
-                    "{:<15} {:<15} {:>5} {:>6.2} {:>8} {:>8} {:>3} {:>10.1} {:>7.2} {:>8.2} {:>7.4}",
+                    "{:<15} {:<15} {:>5} {:>6.2} {:>8} {:>8} {:>8} {:>3} {:>10.1} {:>7.2} \
+                     {:>8.2} {:>7.4} {:>10.1}",
                     sc.algo.name(),
                     sc.tech,
                     sc.array_size,
                     sc.shift_toggle,
                     sc.rail_mode.name(),
                     sc.policy.name(),
+                    sc.memory_rail.name(),
                     res.k,
                     res.power_mw,
                     res.reduction_pct,
                     100.0 * res.silent_mac_fraction,
-                    res.accuracy_loss
+                    res.accuracy_loss,
+                    res.total_power_mw
                 );
             }
             Err(e) => {
                 let _ = writeln!(
                     s,
-                    "{:<15} {:<15} {:>5} {:>6.2} {:>8} {:>8} FAILED: {e}",
+                    "{:<15} {:<15} {:>5} {:>6.2} {:>8} {:>8} {:>8} FAILED: {e}",
                     sc.algo.name(),
                     sc.tech,
                     sc.array_size,
                     sc.shift_toggle,
                     sc.rail_mode.name(),
-                    sc.policy.name()
+                    sc.policy.name(),
+                    sc.memory_rail.name()
                 );
             }
         }
     }
     if !rep.winners.is_empty() {
-        let _ = writeln!(s, "\nwinners (per tech x size x shift x rail mode x policy):");
+        let _ = writeln!(
+            s,
+            "\nwinners (per tech x size x shift x rail mode x policy x memory rail):"
+        );
         for w in &rep.winners {
             let _ = writeln!(
                 s,
-                "  {} {}x{} shift {:.2} {} {}: power -> {} ({:.1} mW), accuracy -> {} \
-                 ({:.2}% silent, loss {:.4})",
+                "  {} {}x{} shift {:.2} {} {} {}: power -> {} ({:.1} mW), accuracy -> {} \
+                 ({:.2}% silent, loss {:.4}), total -> {} ({:.1} mW, joint loss {:.4})",
                 w.tech,
                 w.array_size,
                 w.array_size,
                 w.shift_toggle,
                 w.rail_mode,
                 w.policy,
+                w.memory_rail,
                 w.best_power_algo,
                 w.best_power_mw,
                 w.best_accuracy_algo,
                 100.0 * w.best_silent_fraction,
-                w.best_accuracy_loss
+                w.best_accuracy_loss,
+                w.best_total_algo,
+                w.best_total_mw,
+                w.best_total_loss
             );
         }
     }
@@ -981,12 +1156,14 @@ mod tests {
                 * cfg.shifts.len()
                 * cfg.rail_modes.len()
                 * cfg.policies.len()
+                * cfg.memory_rails.len()
         );
         // Indices are the enumeration order. Seeds are distinct per
         // (tech, algo, size, shift) cell, but deliberately *shared*
-        // across the rail-mode and recovery-policy arms of one cell:
-        // every arm must cluster identically for the static-vs-runtime
-        // and policy-vs-policy comparisons.
+        // across the rail-mode, recovery-policy and memory-rail arms of
+        // one cell: every arm must cluster identically for the
+        // static-vs-runtime, policy-vs-policy and nominal-vs-split
+        // comparisons.
         let mut cell_seeds = std::collections::HashMap::new();
         for (i, sc) in scenarios.iter().enumerate() {
             assert_eq!(sc.index, i);
@@ -1021,6 +1198,7 @@ mod tests {
         swapped.shifts.reverse();
         swapped.rail_modes.reverse();
         swapped.policies.reverse();
+        swapped.memory_rails.reverse();
         let a = enumerate(&cfg);
         let b = enumerate(&swapped);
         assert_eq!(a.len(), b.len());
@@ -1034,6 +1212,7 @@ mod tests {
                         && s.shift_toggle == sa.shift_toggle
                         && s.rail_mode == sa.rail_mode
                         && s.policy == sa.policy
+                        && s.memory_rail == sa.memory_rail
                 })
                 .unwrap();
             assert_eq!(sa.seed, sb.seed, "{sa:?} vs {sb:?}");
@@ -1058,6 +1237,12 @@ mod tests {
         cfg.policies.clear();
         assert!(run_sweep(&cfg).is_err());
         let mut cfg = SweepConfig::smoke();
+        cfg.memory_rails.clear();
+        assert!(run_sweep(&cfg).is_err());
+        let mut cfg = SweepConfig::smoke();
+        cfg.buffer_words = 0;
+        assert!(run_sweep(&cfg).is_err());
+        let mut cfg = SweepConfig::smoke();
         cfg.accuracy_budget = f64::NAN;
         assert!(run_sweep(&cfg).is_err());
     }
@@ -1076,5 +1261,23 @@ mod tests {
             assert_eq!(RailMode::from_name(m.name()).unwrap(), m);
         }
         assert!(RailMode::from_name("dynamic").is_err());
+    }
+
+    #[test]
+    fn memory_rail_mode_names_round_trip() {
+        for m in MemoryRailMode::all() {
+            assert_eq!(MemoryRailMode::from_name(m.name()).unwrap(), m);
+        }
+        assert!(MemoryRailMode::from_name("ldo").is_err());
+    }
+
+    #[test]
+    fn smoke_grid_keeps_a_single_memory_arm() {
+        // The 16-scenario smoke contract (hotcache counters, the
+        // check-smoke configuration count) pins one memory arm; the
+        // full grid carries both.
+        assert_eq!(SweepConfig::smoke().memory_rails, vec![MemoryRailMode::Nominal]);
+        assert_eq!(SweepConfig::full_grid().memory_rails, MemoryRailMode::all());
+        assert_eq!(enumerate(&SweepConfig::smoke()).len(), 16);
     }
 }

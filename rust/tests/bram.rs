@@ -1,0 +1,263 @@
+//! Integration tests for the S24 memory-rail (BRAM) subsystem: the
+//! deterministic, location-correlated fault map; the voltage → BER
+//! curve contract (zero at the knee, monotone below it); and the
+//! acceptance contract of `vstpu bench-bram` — the split memory rail
+//! converges on the guard knee within the joint accuracy budget and
+//! strictly beats the logic-only configuration on energy per request.
+//!
+//! Everything runs on the pure-Rust reference backend (the artifacts
+//! directory deliberately does not exist), so the suite is green on a
+//! fresh clone with no Python and no network.
+
+use std::path::Path;
+
+use vstpu::bram::{
+    banks_for, bit_error_rate, expected_loss, fault_map, inject, knee_voltage, run_bram_bench,
+    BramBenchConfig, FaultMap, BENCH_SCHEMA, WORD_BITS,
+};
+use vstpu::report::bench_bram_json;
+use vstpu::tech::Technology;
+
+const NO_ARTIFACTS: &str = "/nonexistent-vstpu-artifacts";
+
+/// The quick CI configuration with shorter epochs and a coarser logic
+/// step so the shared logic calibration converges inside the test's
+/// time budget (the same settings the calibrate suite proves settle
+/// within 2048 requests). The memory step stays at its default — its
+/// descent from `v_nom` to the knee is a handful of epochs.
+fn fast_cfg(tech: Technology) -> BramBenchConfig {
+    let mut cfg = BramBenchConfig::quick(tech);
+    cfg.base.requests = 2048;
+    cfg.base.controller.epoch_batches = 1;
+    cfg.base.controller.step_v = 0.025;
+    cfg
+}
+
+/// Drop the wall-time measurement line — everything else in
+/// `BENCH_bram.json` is part of the determinism contract.
+fn strip_wall(json: &str) -> String {
+    json.lines()
+        .filter(|l| !l.contains("\"wall_s\""))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// A voltage deep enough below the knee that the drawn map is dense
+/// (hundreds of flips) but still above the crash anchor's ceiling.
+fn dense_voltage(tech: &Technology) -> f64 {
+    tech.v_crash - 0.02
+}
+
+#[test]
+fn fault_map_is_byte_identical_for_the_same_key() {
+    let tech = Technology::academic_22nm();
+    let v = dense_voltage(&tech);
+    let a = fault_map(&tech, v, 8192, 2021);
+    let b = fault_map(&tech, v, 8192, 2021);
+    assert!(!a.flips.is_empty(), "dense voltage must draw faults");
+    assert_eq!(a, b, "same (tech, voltage, seed, words) must reproduce");
+    // Any key component flipping the hash produces a different map.
+    assert_ne!(a, fault_map(&tech, v, 8192, 2022), "seed must key the map");
+    assert_ne!(
+        a,
+        fault_map(&tech, v - 0.01, 8192, 2021),
+        "voltage must key the map"
+    );
+    assert_ne!(
+        a,
+        fault_map(&Technology::academic_45nm(), v, 8192, 2021),
+        "tech must key the map"
+    );
+    // The map is sorted and deduplicated — the injection contract.
+    let mut sorted = a.flips.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(a.flips, sorted);
+}
+
+#[test]
+fn fault_map_is_spatially_clustered_not_uniform() {
+    // Chi-square-style locality check: bucket the faulted word indices
+    // and compare the dispersion against a uniform draw of the same
+    // size. Clustered flips (CLUSTER_SPAN bits within a few words)
+    // concentrate whole clusters into single buckets, inflating the
+    // statistic by roughly the cluster size; a uniform map sits at
+    // ~(buckets - 1).
+    let tech = Technology::academic_130nm();
+    let words = 8192usize;
+    let map = fault_map(&tech, dense_voltage(&tech), words, 2021);
+    assert!(
+        map.flips.len() >= 200,
+        "need a dense map for the statistic, got {}",
+        map.flips.len()
+    );
+    const BUCKETS: usize = 128;
+    let chi2 = |word_indices: &[u32]| -> f64 {
+        let mut counts = [0usize; BUCKETS];
+        for &w in word_indices {
+            counts[w as usize * BUCKETS / words] += 1;
+        }
+        let expected = word_indices.len() as f64 / BUCKETS as f64;
+        counts
+            .iter()
+            .map(|&c| {
+                let d = c as f64 - expected;
+                d * d / expected
+            })
+            .sum()
+    };
+    let clustered: Vec<u32> = map.flips.iter().map(|&(w, _)| w).collect();
+    // The uniform reference: the same number of words spread evenly by
+    // a seeded LCG-free stride walk (deterministic, no RNG needed).
+    let uniform: Vec<u32> = (0..clustered.len())
+        .map(|i| ((i * words) / clustered.len()) as u32)
+        .collect();
+    let c_stat = chi2(&clustered);
+    let u_stat = chi2(&uniform);
+    assert!(
+        c_stat > 2.0 * BUCKETS as f64,
+        "clustered map reads as uniform: chi2 {c_stat:.1} over {BUCKETS} buckets"
+    );
+    assert!(
+        c_stat > 2.0 * (u_stat + BUCKETS as f64),
+        "clustered chi2 {c_stat:.1} must dominate the uniform reference {u_stat:.1}"
+    );
+}
+
+#[test]
+fn no_faults_at_or_above_the_knee_and_monotone_below() {
+    for tech in Technology::paper_suite() {
+        let knee = knee_voltage(&tech);
+        for v in [knee, knee + 0.0125, tech.v_nom, tech.v_nom + 0.1] {
+            assert_eq!(bit_error_rate(&tech, v), 0.0, "{} at {v}", tech.name);
+            assert_eq!(expected_loss(&tech, v, 65536), 0.0, "{} at {v}", tech.name);
+            let map = fault_map(&tech, v, 65536, 7);
+            assert!(map.flips.is_empty(), "{} at {v}: {:?}", tech.name, map.flips);
+        }
+        // Strictly monotone BER walking down from the knee to the crash.
+        let mut prev = 0.0;
+        let steps = 16;
+        for i in 1..=steps {
+            let v = knee - (knee - tech.v_crash) * i as f64 / steps as f64;
+            let ber = bit_error_rate(&tech, v);
+            assert!(
+                ber > prev,
+                "{}: BER must grow strictly below the knee ({ber} at {v})",
+                tech.name
+            );
+            prev = ber;
+        }
+        // The expected-loss proxy inherits the monotonicity and caps.
+        let l = expected_loss(&tech, tech.v_crash, 4096);
+        assert!(l > 0.0 && l <= 1.0);
+    }
+}
+
+#[test]
+fn inject_applies_every_in_range_flip_and_round_trips() {
+    let map = FaultMap {
+        words: 8,
+        flips: vec![(0, 0), (3, 31), (7, 15), (9, 1)], // (9, _) out of range
+    };
+    let clean: Vec<i32> = (0..8).map(|i| i * 1000 - 4000).collect();
+    let mut acc = clean.clone();
+    assert_eq!(inject(&map, &mut acc), 3, "out-of-range flips are skipped");
+    assert_ne!(acc, clean);
+    assert_eq!(acc[0], clean[0] ^ 1);
+    assert_eq!(acc[3], clean[3] ^ (1 << 31));
+    // XOR faults are involutive: stuck bits re-injected cancel out.
+    inject(&map, &mut acc);
+    assert_eq!(acc, clean);
+}
+
+#[test]
+fn bench_bram_split_arm_locks_the_knee_within_the_joint_budget() {
+    let tech = Technology::academic_22nm();
+    let knee = knee_voltage(&tech);
+    let rep = run_bram_bench(Path::new(NO_ARTIFACTS), fast_cfg(tech)).unwrap();
+    assert_eq!(rep.schema, BENCH_SCHEMA);
+    assert_eq!(rep.backend, "reference");
+    assert_eq!(rep.banks, banks_for(rep.buffer_words));
+    assert!(rep.logic_converged, "shared logic calibration must settle");
+    let [logic_only, split] = rep.arms.as_slice() else {
+        panic!("expected exactly two arms, got {}", rep.arms.len());
+    };
+    assert_eq!(logic_only.arm, "logic-only");
+    assert_eq!(split.arm, "split");
+    // The logic-only arm pins the memory at v_nom: zero epochs, zero
+    // faults, zero memory loss by the knee contract.
+    assert_eq!(logic_only.memory_epochs, 0);
+    assert_eq!(logic_only.fault_bits, 0);
+    assert_eq!(logic_only.memory_loss, 0.0);
+    // The split arm's calibrator walks down and locks exactly at the
+    // knee under the zero memory-fault budget.
+    assert!(split.memory_converged, "memory calibrator must converge");
+    assert!(split.memory_epochs > 0);
+    assert!(
+        (split.v_mem_final - knee).abs() < 1e-9,
+        "split rail {} must lock at the knee {knee}",
+        split.v_mem_final
+    );
+    assert_eq!(split.fault_bits, 0, "the knee is fault-free by contract");
+    assert_eq!(split.memory_loss, 0.0);
+    assert_eq!(split.expected_memory_loss, 0.0);
+    // Joint budget: both arms' total loss inside the declared budget,
+    // and the split arm gives up no accuracy at all.
+    assert!(split.total_loss <= rep.accuracy_budget + 1e-12);
+    assert!(split.total_loss <= logic_only.total_loss + 1e-12);
+    // The acceptance inequality: equal-or-lower loss at strictly lower
+    // modeled energy per request.
+    assert!(
+        split.memory_mw < logic_only.memory_mw,
+        "knee-parked buffers must draw less: {} vs {} mW",
+        split.memory_mw,
+        logic_only.memory_mw
+    );
+    assert!(
+        split.energy_uj_per_request < logic_only.energy_uj_per_request,
+        "split must win on energy: {} vs {} uJ/req",
+        split.energy_uj_per_request,
+        logic_only.energy_uj_per_request
+    );
+}
+
+#[test]
+fn bram_artifact_is_byte_deterministic_modulo_wall_time() {
+    let a = run_bram_bench(Path::new(NO_ARTIFACTS), fast_cfg(Technology::academic_22nm())).unwrap();
+    let b = run_bram_bench(Path::new(NO_ARTIFACTS), fast_cfg(Technology::academic_22nm())).unwrap();
+    let ja = bench_bram_json(&a);
+    let jb = bench_bram_json(&b);
+    assert!(ja.contains("\"schema\": \"vstpu-bench-bram/v1\""));
+    // Wall time sits alone on its line so consumers can strip it.
+    for line in ja.lines().filter(|l| l.contains("\"wall_s\"")) {
+        assert_eq!(line.matches('"').count(), 2, "wall_s shares a line: {line}");
+    }
+    assert_eq!(strip_wall(&ja), strip_wall(&jb));
+}
+
+#[test]
+fn bench_rejects_broken_configurations() {
+    let mut cfg = fast_cfg(Technology::academic_22nm());
+    cfg.buffer_words = 100; // not a multiple of the measurement tile
+    assert!(run_bram_bench(Path::new(NO_ARTIFACTS), cfg).is_err());
+    let mut cfg = fast_cfg(Technology::academic_22nm());
+    cfg.accuracy_budget = 0.0;
+    assert!(run_bram_bench(Path::new(NO_ARTIFACTS), cfg).is_err());
+    let mut cfg = fast_cfg(Technology::academic_22nm());
+    cfg.memory_step_v = -0.0125;
+    assert!(run_bram_bench(Path::new(NO_ARTIFACTS), cfg).is_err());
+    let mut cfg = fast_cfg(Technology::academic_22nm());
+    cfg.max_memory_epochs = 0;
+    assert!(run_bram_bench(Path::new(NO_ARTIFACTS), cfg).is_err());
+}
+
+#[test]
+fn expected_loss_scales_with_word_count_contract() {
+    let tech = Technology::academic_45nm();
+    // The proxy is per-word (a fraction), so it is words-independent
+    // once non-empty — but exactly zero for an empty buffer.
+    assert_eq!(expected_loss(&tech, tech.v_crash, 0), 0.0);
+    let l = expected_loss(&tech, tech.v_crash, 512);
+    assert_eq!(l, expected_loss(&tech, tech.v_crash, 4096));
+    assert!((l - bit_error_rate(&tech, tech.v_crash) * WORD_BITS as f64).abs() < 1e-15);
+}

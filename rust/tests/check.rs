@@ -5,7 +5,10 @@
 
 use std::path::Path;
 
-use vstpu::check::{self, CheckInput, CheckReport, PipelineConfig, Rule, Severity};
+use vstpu::bram::knee_voltage;
+use vstpu::check::{
+    self, CheckInput, CheckReport, MemoryContract, PipelineConfig, Rule, Severity,
+};
 use vstpu::cluster::{Clustering, NOISE};
 use vstpu::fpga::Partition;
 use vstpu::netlist::SystolicNetlist;
@@ -258,6 +261,109 @@ fn vst019_vst020_judge_the_recovery_contract() {
         "{:?}",
         rep.diagnostics
     );
+}
+
+// ------------------------------------------------------------------
+// Memory rail (VST022..VST023).
+// ------------------------------------------------------------------
+
+/// A legal memory contract: rail at the knee, nothing to lose.
+fn clean_memory(tech: &Technology) -> MemoryContract {
+    MemoryContract {
+        v_mem: knee_voltage(tech),
+        buffer_words: 4096,
+        timing_loss: 0.0,
+        joint_budget: 0.05,
+    }
+}
+
+#[test]
+fn vst022_fires_on_an_out_of_bounds_memory_rail() {
+    // Vivado: the memory rail may not leave the vendor guard band —
+    // anything below `v_min` is flow-illegal regardless of the BER.
+    let f = fixture(Technology::artix7_28nm(), 4, false);
+    let mut m = clean_memory(&f.tech);
+    m.v_mem = 0.90;
+    let rep = check::check(
+        &CheckInput::new(&f.netlist, &f.tech, &f.razor, &f.partitions)
+            .with_clustering(&f.clustering)
+            .with_memory(m),
+    );
+    assert!(
+        fired(&rep, Rule::MemoryRailBounds).contains(&Severity::Error),
+        "{:?}",
+        rep.diagnostics
+    );
+    // VTR: below the NTC floor and above v_nom are both out of bounds,
+    // and a non-finite rail can never pass.
+    let f = fixture(Technology::academic_22nm(), 4, true);
+    for bad in [0.40, f.tech.v_nom + 0.05, f64::NAN] {
+        let mut m = clean_memory(&f.tech);
+        m.v_mem = bad;
+        // A breached joint budget rides along; the bounds violation
+        // must preempt it (one actionable diagnostic, not two).
+        m.timing_loss = 10.0;
+        m.joint_budget = 0.0001;
+        let diags = check::check_memory(&f.tech, &m, true);
+        assert_eq!(diags.len(), 1, "v_mem {bad}: {diags:?}");
+        assert_eq!(diags[0].rule, Rule::MemoryRailBounds, "v_mem {bad}");
+        assert_eq!(diags[0].severity, Severity::Error, "v_mem {bad}");
+    }
+}
+
+#[test]
+fn vst023_fires_when_the_joint_loss_breaks_the_budget() {
+    // academic-22nm is VTR: the rail may legally descend below the
+    // knee, where the expected memory loss becomes nonzero and joins
+    // the timing loss against the declared joint budget.
+    let f = fixture(Technology::academic_22nm(), 4, true);
+    let mut m = clean_memory(&f.tech);
+    m.v_mem = 0.87; // legal (above the NTC floor) but below the knee
+    m.timing_loss = 0.04;
+    m.joint_budget = 0.05; // 0.04 + ~0.016 expected memory loss > 0.05
+    let rep = check::check(
+        &CheckInput::new(&f.netlist, &f.tech, &f.razor, &f.partitions)
+            .with_clustering(&f.clustering)
+            .with_calibrated(true)
+            .with_proof(true)
+            .with_memory(m),
+    );
+    assert!(
+        fired(&rep, Rule::JointAccuracyBudget).contains(&Severity::Error),
+        "{:?}",
+        rep.diagnostics
+    );
+    assert!(fired(&rep, Rule::MemoryRailBounds).is_empty());
+    // A roomier budget over the identical configuration is clean.
+    let mut roomy = m;
+    roomy.joint_budget = 0.10;
+    assert!(check::check_memory(&f.tech, &roomy, true).is_empty());
+    // VST023 judges calibrated trajectories only — a static scheme has
+    // no joint calibrator to hold to the budget (VST020 scoping).
+    assert!(check::check_memory(&f.tech, &m, false).is_empty());
+}
+
+#[test]
+fn clean_memory_contracts_stay_green_on_both_flows() {
+    // The knee-parked memory rail added to an otherwise clean check is
+    // invisible: zero errors, zero warnings, on Vivado and VTR alike.
+    for (tech, runtime) in [
+        (Technology::artix7_28nm(), false),
+        (Technology::academic_22nm(), true),
+    ] {
+        let name = tech.name.clone();
+        let f = fixture(tech, 4, runtime);
+        let mut input = CheckInput::new(&f.netlist, &f.tech, &f.razor, &f.partitions)
+            .with_clustering(&f.clustering)
+            .with_calibrated(runtime)
+            .with_memory(clean_memory(&f.tech));
+        if runtime {
+            input = input.with_proof(true);
+        }
+        let rep = check::check(&input);
+        assert_eq!(rep.errors(), 0, "{name}: {}", rep.error_summary());
+        assert_eq!(rep.warnings(), 0, "{name}: {:?}", rep.diagnostics);
+    }
 }
 
 // ------------------------------------------------------------------

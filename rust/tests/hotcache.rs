@@ -14,7 +14,9 @@ use std::sync::{Mutex, MutexGuard, OnceLock};
 use vstpu::hotcache::{self, bench::run_hotpath_bench, bench::HotpathConfig};
 use vstpu::recover::RecoveryPolicy;
 use vstpu::report::{bench_hotpath_json, bench_sweep_json, check_json};
-use vstpu::sweep::{self, pool, run_sweep, RailMode, Scenario, SweepAlgo, SweepConfig};
+use vstpu::sweep::{
+    self, pool, run_sweep, MemoryRailMode, RailMode, Scenario, SweepAlgo, SweepConfig,
+};
 use vstpu::tech::Technology;
 
 /// Serialize tests that flip the process-global cache state.
@@ -106,6 +108,7 @@ fn scenario(index: usize, shift_toggle: f64, seed: u64) -> Scenario {
         shift_toggle,
         rail_mode: RailMode::Runtime,
         policy: RecoveryPolicy::None,
+        memory_rail: MemoryRailMode::Nominal,
         seed,
     }
 }
@@ -138,6 +141,14 @@ fn changed_workload_shift_is_a_cache_miss() {
         sweep::substrate_key(&sc_a, &st, &cfg),
         sweep::substrate_key(&sc_d, &st, &cfg),
         "the recovery policy co-optimizes rails, so it must key the cache"
+    );
+    let mut sc_e = scenario(0, 0.45, 99);
+    sc_e.memory_rail = MemoryRailMode::Split;
+    assert_eq!(
+        sweep::substrate_key(&sc_a, &st, &cfg),
+        sweep::substrate_key(&sc_e, &st, &cfg),
+        "the memory arm is layered downstream of the logic substrate, \
+         so it must not key the cache"
     );
 
     hotcache::reset_stats();

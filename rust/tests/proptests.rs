@@ -415,6 +415,86 @@ fn prop_random_telemetry_never_violates_a_certified_property() {
     }
 }
 
+// ---------------------------------------------------------------- bram
+
+#[test]
+fn prop_memory_rail_physics_never_go_negative() {
+    // Any finite positive memory-rail voltage — including figure-sweep
+    // points far below threshold, where the alpha-power-law delay model
+    // would blow up — must price to non-negative, finite power, energy
+    // and loss. This is the S24 half of the sub-`v_th` audit that made
+    // `power::bram_mw` use `rail_is_finite_positive`.
+    use vstpu::bram::{bit_error_rate, expected_loss, memory_power_factor, BER_CEIL};
+    use vstpu::power::PowerModel;
+
+    let suite = Technology::paper_suite();
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 14_000);
+        let tech = suite[rng.below(suite.len() as u64) as usize].clone();
+        let v_mem = rng.range_f64(0.05, 1.3);
+        let words = 64 * (1 + rng.below(256)) as usize;
+        let ber = bit_error_rate(&tech, v_mem);
+        assert!(
+            (0.0..=BER_CEIL).contains(&ber),
+            "seed {seed} {} at {v_mem}: BER {ber}",
+            tech.name
+        );
+        let loss = expected_loss(&tech, v_mem, words);
+        assert!(
+            loss.is_finite() && (0.0..=1.0).contains(&loss),
+            "seed {seed} {} at {v_mem}: loss {loss}",
+            tech.name
+        );
+        let factor = memory_power_factor(&tech, v_mem);
+        assert!(
+            factor.is_finite() && factor > 0.0,
+            "seed {seed} {} at {v_mem}: factor {factor}",
+            tech.name
+        );
+        let model = PowerModel::new(tech.clone(), 100.0);
+        let mw = model.bram_mw(vstpu::bram::banks_for(words), v_mem);
+        assert!(
+            mw.is_finite() && mw > 0.0,
+            "seed {seed} {} at {v_mem}: {mw} mW",
+            tech.name
+        );
+        // Energy over any positive interval inherits the sign.
+        let uj = mw * rng.range_f64(1e-9, 1.0) * 1e3;
+        assert!(uj.is_finite() && uj > 0.0, "seed {seed}: {uj} uJ");
+    }
+}
+
+#[test]
+fn prop_fault_path_is_exactly_inert_at_or_above_the_knee() {
+    // Mirrors the `rail_fault_v` cache-exclusion contract: with the
+    // memory rail at (or anywhere above) the guard knee the whole fault
+    // path is a provable no-op — empty map, zero injected flips, a
+    // byte-identical accumulator — for every tech, seed and buffer.
+    use vstpu::bram::{expected_loss, fault_map, inject, knee_voltage};
+
+    let suite = Technology::paper_suite();
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed + 15_000);
+        let tech = suite[rng.below(suite.len() as u64) as usize].clone();
+        let knee = knee_voltage(&tech);
+        let v_mem = knee + rng.range_f64(0.0, 0.35);
+        let words = 64 * (1 + rng.below(256)) as usize;
+        let map_seed = rng.below(u64::MAX);
+        let map = fault_map(&tech, v_mem, words, map_seed);
+        assert!(
+            map.flips.is_empty(),
+            "seed {seed} {} at {v_mem}: {} flips above the knee",
+            tech.name,
+            map.flips.len()
+        );
+        assert_eq!(expected_loss(&tech, v_mem, words), 0.0, "seed {seed}");
+        let clean: Vec<i32> = (0..words).map(|_| rng.below(1 << 20) as i32 - (1 << 19)).collect();
+        let mut acc = clean.clone();
+        assert_eq!(inject(&map, &mut acc), 0, "seed {seed}");
+        assert_eq!(acc, clean, "seed {seed}: inert path mutated the buffer");
+    }
+}
+
 #[test]
 fn prop_refuted_configs_carry_replaying_counterexamples() {
     use vstpu::calibrate::CalibrateConfig;

@@ -5,7 +5,7 @@
 
 use vstpu::recover::RecoveryPolicy;
 use vstpu::report::bench_sweep_json;
-use vstpu::sweep::{pool, run_sweep, RailMode, SweepAlgo, SweepConfig};
+use vstpu::sweep::{pool, run_sweep, MemoryRailMode, RailMode, SweepAlgo, SweepConfig};
 
 /// Drop the wall-time measurement lines — everything else in
 /// `BENCH_sweep.json` is part of the determinism contract.
@@ -185,6 +185,57 @@ fn recovery_policy_axis_descends_below_the_frontier_on_45nm() {
     // frontier the report renders.
     assert!(rep.winners.iter().any(|w| w.policy == "none"));
     assert!(rep.winners.iter().any(|w| w.policy == "te-drop"));
+}
+
+#[test]
+fn memory_rail_axis_prices_the_split_arm_strictly_cheaper() {
+    // S24: the same scenario measured under both memory-rail arms. The
+    // logic-side measurement is shared (the substrate cache is not
+    // keyed on the memory arm), so the arms differ only in the BRAM
+    // terms — and the split arm, parked at the guard knee, must win on
+    // combined power at identical joint accuracy loss.
+    let mut cfg = SweepConfig::smoke();
+    cfg.algos = vec![SweepAlgo::EqualQuantile];
+    cfg.techs = vec!["academic-22nm".into()];
+    cfg.rail_modes = vec![RailMode::Runtime];
+    cfg.policies = vec![RecoveryPolicy::None];
+    cfg.memory_rails = MemoryRailMode::all();
+    let rep = run_sweep(&cfg).unwrap();
+    assert_eq!(rep.failed_count, 0, "both memory arms must complete");
+    assert_eq!(rep.scenarios.len(), 2);
+    let get = |m: MemoryRailMode| {
+        rep.scenarios
+            .iter()
+            .find(|r| r.scenario.memory_rail == m)
+            .unwrap()
+            .outcome
+            .as_ref()
+            .unwrap()
+    };
+    let nom = get(MemoryRailMode::Nominal);
+    let split = get(MemoryRailMode::Split);
+    // Identical logic-side measurement, different memory pricing.
+    assert_eq!(nom.power_mw, split.power_mw);
+    assert_eq!(nom.accuracy_loss, split.accuracy_loss);
+    assert!(split.memory_rail_v < nom.memory_rail_v);
+    assert!(
+        split.memory_mw < nom.memory_mw,
+        "knee-parked buffers must draw less: {} vs {} mW",
+        split.memory_mw,
+        nom.memory_mw
+    );
+    assert!(split.total_power_mw < nom.total_power_mw);
+    // At the knee the fault model is exactly inert, so the joint loss
+    // matches the nominal arm's bit for bit.
+    assert_eq!(split.total_loss, nom.total_loss);
+    // Each memory arm forms its own winner row carrying the combined
+    // (logic + memory) ranking.
+    for arm in ["nominal", "split"] {
+        let w = rep.winners.iter().find(|w| w.memory_rail == arm).unwrap();
+        assert_eq!(w.best_total_algo, "equal-quantile");
+        assert!(w.best_total_mw >= w.best_power_mw);
+        assert!(w.best_total_loss.is_finite());
+    }
 }
 
 #[test]
